@@ -1,0 +1,53 @@
+"""Paper Table 9: granularity tradeoff on the string-hash benchmark.
+
+Sweeps the block size g of the Rabin-Karp fingerprint: larger g means a
+smaller RSP tree (less memory, lower initial-run overhead) but more
+redundant recompute per update.  The paper observes the optimum for k=1
+updates at moderate g; this reproduces that curve (wall-clock and tree
+size) at CPU-feasible n.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import Engine
+from repro.apps import StringHashApp
+
+
+def run(quick: bool = False) -> List[dict]:
+    n = 1 << 14 if quick else 1 << 18
+    grains = [16, 32, 64, 128] if quick else [16, 32, 64, 128, 256, 512, 1024, 2048]
+    rows = []
+    for g in grains:
+        app = StringHashApp(n=n, grain=g)
+        eng = Engine()
+        app.build_input(eng)
+        t0 = time.perf_counter()
+        comp = app.run(eng)
+        t_run = time.perf_counter() - t0
+        assert app.output() == app.expected()
+        tree = eng.tree_size(comp)
+
+        # k=1 single-character updates, averaged
+        reps = 3 if quick else 10
+        t1 = time.perf_counter()
+        for _ in range(reps):
+            app.apply_update(eng, 1)
+            comp.propagate()
+        t_k1 = (time.perf_counter() - t1) / reps
+        assert app.output() == app.expected()
+
+        # k = n/64 characters (batch update)
+        kbig = max(n // 64, g)
+        t2 = time.perf_counter()
+        app.apply_update(eng, kbig)
+        comp.propagate()
+        t_kbig = time.perf_counter() - t2
+        assert app.output() == app.expected()
+
+        rows.append(dict(app="stringhash_granularity", grain=g, n=n,
+                         tree_nodes=tree, run_s=round(t_run, 4),
+                         update_k1_s=round(t_k1, 6),
+                         update_kbig_s=round(t_kbig, 5), kbig=kbig))
+    return rows

@@ -1,0 +1,141 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts.
+
+Reads ``results/dryrun/<mesh>/<arch>__<shape>[__tag].json`` (produced by
+``repro.launch.dryrun``) and derives the three roofline terms on TPU v5e:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bandwidth       (819 GB/s)
+    collective = wire_bytes_per_device / ICI_link_bandwidth (50 GB/s/link)
+
+plus MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) / 2·N·D_step (decode),
+N = active parameter count, and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs that exposes remat / padding / redundancy waste.
+
+Used by ``benchmarks.run`` (the §Roofline table) and the EXPERIMENTS.md
+generator.  All terms are *analytic* — this container has no TPU — but
+every input comes from the compiled HLO of the production-mesh lowering.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (conservative single-link)
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+_PARAM_CACHE: Dict[str, Dict[str, float]] = {}
+
+
+def _params(arch: str) -> Dict[str, float]:
+    if arch not in _PARAM_CACHE:
+        from repro.configs import get_config
+        from repro.models import build_model
+        model = build_model(get_config(arch))
+        _PARAM_CACHE[arch] = {
+            "total": float(model.param_count()),
+            "active": float(model.param_count(active_only=True)),
+        }
+    return _PARAM_CACHE[arch]
+
+
+def model_flops(arch: str, shape_name: str, kind: str) -> float:
+    """Useful model FLOPs per *device* per step (6ND train, 2ND serve)."""
+    from repro.models import shape_by_name
+    shape = shape_by_name(shape_name)
+    n_active = _params(arch)["active"]
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch
+
+
+def load_cell(arch: str, shape: str, mesh: str = "single",
+              tag: str = "") -> Optional[dict]:
+    suffix = f"__{tag}" if tag else ""
+    f = RESULTS / mesh / f"{arch}__{shape}{suffix}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def terms(rec: dict) -> Optional[dict]:
+    """The three roofline terms (seconds/step/device) for one dry-run cell."""
+    if rec.get("status") != "ok":
+        return None
+    hc = rec["hlo_costs"]
+    n_dev = rec["devices"]
+    t_compute = hc["flops_per_device"] / PEAK_FLOPS
+    t_memory = hc["bytes_per_device"] / HBM_BW
+    t_collective = hc["collective_wire_bytes_per_device"] / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory),
+        ("collective", t_collective), key=lambda kv: kv[1],
+    )[0]
+    mf_global = model_flops(rec["arch"].replace("-", "_").replace(".", "_"),
+                            rec["shape"], rec["kind"])
+    mf = mf_global / n_dev
+    hlo_flops = hc["flops_per_device"]
+    bound = max(t_compute, t_memory, t_collective)
+    # Fraction of the achievable roofline this step realizes: useful FLOPs
+    # at peak divided by the modeled execution time (the dominant term).
+    roofline_frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        tag=rec.get("tag", ""), kind=rec["kind"], devices=n_dev,
+        t_compute_s=t_compute, t_memory_s=t_memory,
+        t_collective_s=t_collective, dominant=dominant,
+        model_flops_per_dev=mf, hlo_flops_per_dev=hlo_flops,
+        useful_ratio=(mf / hlo_flops if hlo_flops else 0.0),
+        roofline_fraction=roofline_frac,
+        hbm_gib_per_dev=(rec["memory"]["argument_bytes"]
+                         + rec["memory"]["temp_bytes"]) / 2**30,
+    )
+
+
+def table(mesh: str = "single", tag: str = "") -> List[dict]:
+    rows = []
+    d = RESULTS / mesh
+    if not d.exists():
+        return rows
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if tag and rec.get("tag", "") != tag:
+            continue
+        if not tag and rec.get("tag", ""):
+            continue
+        t = terms(rec)
+        if t is None:
+            rows.append(dict(arch=rec["arch"], shape=rec["shape"],
+                             mesh=rec["mesh"], tag=rec.get("tag", ""),
+                             status=rec["status"],
+                             reason=rec.get("reason", rec.get("error", ""))[:60]))
+        else:
+            t["status"] = "ok"
+            rows.append(t)
+    return rows
+
+
+def format_table(rows: List[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dom':>10s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'HBM GiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} "
+                         f"-- {r['status']}: {r.get('reason','')}")
+            continue
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['t_compute_s']:9.4f} "
+            f"{r['t_memory_s']:9.4f} {r['t_collective_s']:9.4f} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+            f"{100*r['roofline_fraction']:6.1f}% {r['hbm_gib_per_dev']:8.1f}")
+    return "\n".join(lines)

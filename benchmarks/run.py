@@ -1,0 +1,100 @@
+"""Benchmark driver: one benchmark per paper table.
+
+  tables 1-8   per-app PSAC benchmarks (static / initial / updates / memory / GC)
+  table 9      string-hash granularity sweep
+  table 10     reader-set size microbenchmark
+  roofline     three-term roofline per (arch x shape) from the dry-run
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run                 # quick versions
+  PYTHONPATH=src python -m benchmarks.run --full          # paper-scale sizes
+  PYTHONPATH=src python -m benchmarks.run --only apps --app trees
+  PYTHONPATH=src python -m benchmarks.run --only roofline --mesh multi
+
+Results are printed and appended as CSV under results/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+
+def _write_csv(name: str, rows) -> None:
+    if not rows:
+        return
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    keys: list = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    out = RESULTS / f"{name}.csv"
+    with out.open("w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+    print(f"  -> {out}")
+
+
+def _print_rows(rows) -> None:
+    for r in rows:
+        print("  " + ", ".join(f"{k}={v}" for k, v in r.items()))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (several minutes)")
+    ap.add_argument("--only", default="all",
+                    choices=["all", "apps", "granularity", "readersets",
+                             "roofline"])
+    ap.add_argument("--app", default=None, help="restrict --only apps")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", default="", help="roofline variant tag")
+    args = ap.parse_args()
+    quick = not args.full
+
+    t0 = time.time()
+    if args.only in ("all", "apps"):
+        from . import psac_tables
+        print(f"== Tables 1-8: application benchmarks "
+              f"({'quick' if quick else 'full'}) ==")
+        rows = psac_tables.run(quick=quick,
+                               apps=[args.app] if args.app else None)
+        _print_rows(rows)
+        _write_csv("psac_tables", rows)
+
+    if args.only in ("all", "granularity"):
+        from . import granularity
+        print("== Table 9: granularity sweep ==")
+        rows = granularity.run(quick=quick)
+        _print_rows(rows)
+        _write_csv("granularity", rows)
+
+    if args.only in ("all", "readersets"):
+        from . import readersets
+        print("== Table 10: reader-set size ==")
+        rows = readersets.run(quick=quick)
+        _print_rows(rows)
+        _write_csv("readersets", rows)
+
+    if args.only in ("all", "roofline"):
+        from . import roofline
+        print(f"== Roofline ({args.mesh} mesh) ==")
+        rows = roofline.table(mesh=args.mesh, tag=args.tag)
+        if rows:
+            print(roofline.format_table(rows))
+            _write_csv(f"roofline_{args.mesh}" + (f"_{args.tag}" if args.tag else ""),
+                       rows)
+        else:
+            print("  (no dry-run results found — run repro.launch.dryrun first)")
+
+    print(f"benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Incremental serving: change propagation through the prefill path.
+
+Scenario: a long prompt is prefilled once; the user then edits a few
+late tokens (revised instruction, updated retrieval chunk).  Instead of
+re-running prefill from scratch, ``incremental_prefill`` re-executes only
+the positions the edit can affect and patches the KV cache in place —
+the serving-side realization of the paper's change propagation.
+
+  PYTHONPATH=src python examples/incremental_serving.py [--arch yi_6b]
+      [--seq 4096] [--edits 3]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.jaxsac import incremental_prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi_6b")
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--edits", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 1, args.seq
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, impl="blocked"))
+    print(f"arch={cfg.name} (smoke config)  prompt={S} tokens")
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, {"tokens": tokens})
+    jax.block_until_ready(cache)
+    print(f" full prefill (compile+run): {time.perf_counter()-t0:6.2f}s")
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, {"tokens": tokens})
+    jax.block_until_ready(cache)
+    t_full = time.perf_counter() - t0
+    print(f" full prefill (warm)       : {t_full:6.2f}s")
+
+    rng = np.random.default_rng(0)
+    cur = tokens
+    for edit in range(args.edits):
+        # edit a token in the last eighth of the prompt (the common case)
+        pos = int(rng.integers(S - S // 8, S))
+        new = cur.at[:, pos].set(int(rng.integers(cfg.vocab_size)))
+        t0 = time.perf_counter()
+        logits_inc, cache, info = incremental_prefill(
+            model, params, cur, new, cache, block=512, impl="blocked")
+        jax.block_until_ready(cache)
+        dt = time.perf_counter() - t0
+        cur = new
+        print(f" edit @{pos:5d}: recompute {info['recompute']:5d}/{S} "
+              f"positions ({info['savings']:5.1f}x fewer)  "
+              f"propagate: {dt:5.2f}s  vs full {t_full:5.2f}s  "
+              f"({t_full/dt:4.1f}x wall)")
+
+    # verify against from-scratch prefill on the final prompt
+    logits_full, cache_full = prefill(params, {"tokens": cur})
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        cache_full, cache)))
+    print(f" cache max|diff| vs from-scratch: {err:.2e}  "
+          f"({'exact' if err == 0 else 'cache-dtype rounding'})")
+
+
+if __name__ == "__main__":
+    main()

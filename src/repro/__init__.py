@@ -1,0 +1,11 @@
+"""repro: parallel self-adjusting computation, scaled to a multi-pod JAX
+training/serving framework.
+
+Layers:
+  * ``repro.core``    — the paper's algorithm (RSP trees, change propagation).
+  * ``repro.jaxsac``  — TPU-native compiled adaptation (block dataflow).
+  * ``repro.models``  — the 10 assigned architectures.
+  * ``repro.kernels`` — Pallas TPU kernels (+ jnp oracles).
+  * ``repro.launch``  — meshes, sharding, multi-pod dry-run, train/serve.
+"""
+__version__ = "0.1.0"

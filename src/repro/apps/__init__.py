@@ -1,0 +1,31 @@
+"""The paper's six benchmark applications, built on the PSAC engine.
+
+Each app implements the paper's benchmark with the same structure it
+describes (Section 6): a static program (runs under ``StaticEngine``), the
+self-adjusting program (runs under ``Engine``), batch dynamic updates, and
+a pure-python oracle for correctness checks.
+
+  * spellcheck — min edit distance of n strings to a target (Table 1)
+  * raytracer  — reflective-circle raycaster over a pixel grid (Table 2)
+  * stringhash — Rabin-Karp fingerprint of a long string (Table 3)
+  * sequence   — randomized list contraction (Table 4)
+  * trees      — tree contraction via rake/compress (Table 5)
+  * filter     — BST filter by predicate (Table 6)
+"""
+from .spellcheck import SpellcheckApp
+from .raytracer import RaytracerApp
+from .stringhash import StringHashApp
+from .sequence import ListContractionApp
+from .trees import TreeContractionApp
+from .filterbst import FilterApp
+
+APPS = {
+    "spellcheck": SpellcheckApp,
+    "raytracer": RaytracerApp,
+    "stringhash": StringHashApp,
+    "sequence": ListContractionApp,
+    "trees": TreeContractionApp,
+    "filter": FilterApp,
+}
+
+__all__ = ["APPS"] + [c.__name__ for c in APPS.values()]

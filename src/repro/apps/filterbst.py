@@ -1,0 +1,96 @@
+"""BST filter benchmark (paper Table 6).
+
+Filters the elements of a binary search tree with respect to a predicate,
+returning a new BST.  Nodes are modifiables holding (key, left, right);
+the filter recursion forks over children (par) and reads node mods, so
+updating a node's key re-runs only the readers on its root path.
+"""
+from __future__ import annotations
+
+import random
+from typing import Optional
+
+__all__ = ["FilterApp"]
+
+
+class FilterApp:
+    name = "filter"
+
+    def __init__(self, n: int = 4095, seed: int = 0, modulus: int = 3):
+        self.n = n
+        self.rng = random.Random(seed)
+        self.modulus = modulus  # predicate: value % modulus != 0
+
+    def pred(self, v: int) -> bool:
+        return v % self.modulus != 0
+
+    # Tree stored as arrays (implicit complete BST on keys 0..n-1, values
+    # random); node i has children 2i+1, 2i+2.
+    def build_input(self, eng):
+        self.values = [self.rng.randrange(1 << 20) for _ in range(self.n)]
+        self.mods = eng.alloc_array(self.n, "node")
+        for m, v in zip(self.mods, self.values):
+            eng.write(m, v)
+        self.result = eng.mod("filtered")
+        return self.mods
+
+    def program(self, eng):
+        def filt(i, res):
+            if i >= self.n:
+                eng.write(res, None)
+                return
+            lres, rres = eng.mod(), eng.mod()
+            eng.par(lambda: filt(2 * i + 1, lres),
+                    lambda: filt(2 * i + 2, rres))
+
+            def combine_node(v, l, r):
+                eng.charge(1)
+                if self.pred(v):
+                    eng.write(res, (v, l, r))
+                else:
+                    # merge children: attach right under rightmost of left
+                    eng.write(res, self._merge(l, r))
+
+            eng.read(
+                (self.mods[i], lres, rres),
+                lambda v, l, r: combine_node(v, l, r),
+            )
+
+        filt(0, self.result)
+
+    @staticmethod
+    def _merge(l, r):
+        if l is None:
+            return r
+        if r is None:
+            return l
+        v, ll, lr = l
+        return (v, ll, FilterApp._merge(lr, r))
+
+    def run(self, eng):
+        return eng.run(lambda: self.program(eng))
+
+    def apply_update(self, eng, k: int):
+        idx = self.rng.sample(range(self.n), min(k, self.n))
+        for i in idx:
+            self.values[i] = self.rng.randrange(1 << 20)
+            eng.write(self.mods[i], self.values[i])
+
+    # oracle: count of surviving values (tree shape is deterministic given
+    # the merge rule; compare the multiset of kept values)
+    def expected(self):
+        return sorted(v for v in self.values if self.pred(v))
+
+    def output(self):
+        out = []
+
+        def walk(node):
+            if node is None:
+                return
+            v, l, r = node
+            walk(l)
+            out.append(v)
+            walk(r)
+
+        walk(self.result.peek())
+        return sorted(out)

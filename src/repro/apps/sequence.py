@@ -1,0 +1,181 @@
+"""Dynamic sequence benchmark: randomized list contraction (paper Table 4).
+
+Computes an associative aggregate (sum) over a linked list by randomized
+mate contraction: in each round every live node flips a pregenerated coin;
+a Tail node (coin=0) whose successor is a Head (coin=1) absorbs it.
+O(log n) rounds w.h.p.  Randomness is pregenerated so re-execution is
+deterministic (paper, Section 2).
+
+Each round runs two phases with strictly single-hop reads so that change
+propagation under P nodes is race-free (no reader ever touches a mod
+written by a *sibling* strand of the same parallel phase):
+
+  decision phase: node i reads states[r][i] and decides
+      {dead, die (absorbed by pred), absorb (eat successor), survive},
+      publishing its (pred, next, acc) as the payload;
+  state phase:    node i reads its own and its neighbors' decisions and
+      writes states[r+1][i].
+
+The protocol maintains the doubly-linked invariant pred(next(i)) == i, and
+the sum of live accumulators is invariant across rounds, so the final
+divide-and-conquer reduction over live nodes is correct even in the
+(never observed; rounds are calibrated) event of incomplete contraction.
+
+Each round's mods are read by the next round, so a k-element batch update
+re-runs O(k log n) readers — this is the list-contraction stability bound
+of [2] carried into the RSP framework.
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import List
+
+__all__ = ["ListContractionApp"]
+
+DEAD = ("dead", None)
+
+
+class ListContractionApp:
+    name = "sequence"
+
+    def __init__(self, n: int = 1024, seed: int = 0):
+        self.n = n
+        self.rng = random.Random(seed)
+        # Contraction removes ~1/4 of live nodes per round in expectation;
+        # the live-acc-sum invariant keeps the result correct even if a few
+        # stragglers remain, so a fixed O(log n) round count suffices.
+        self.rounds = max(int(2.5 * math.log2(max(n, 2))) + 8, 9)
+        # Pregenerated randomness (paper: randomness must be fixed up front
+        # so re-execution is deterministic).
+        self.coins = [
+            [self.rng.random() < 0.5 for _ in range(n)]
+            for _ in range(self.rounds)
+        ]
+
+    # ------------------------------------------------------------------
+    def build_input(self, eng):
+        self.values = [self.rng.randrange(100) for _ in range(self.n)]
+        self.val_mods = eng.alloc_array(self.n, "val")
+        for m, v in zip(self.val_mods, self.values):
+            eng.write(m, v)
+        self.result = eng.mod("total")
+        return self.val_mods
+
+    def run(self, eng):
+        return eng.run(lambda: self.program(eng))
+
+    # ------------------------------------------------------------------
+    def program(self, eng):
+        n = self.n
+        states: List[List] = [eng.alloc_array(n, f"s{r}")
+                              for r in range(self.rounds + 1)]
+        decisions: List[List] = [eng.alloc_array(n, f"d{r}")
+                                 for r in range(self.rounds)]
+
+        def init_node(i):
+            eng.read(
+                self.val_mods[i],
+                lambda v: eng.write(
+                    states[0][i],
+                    (i - 1, i + 1 if i + 1 < n else -1, v),
+                ),
+            )
+
+        eng.parallel_for(0, n, init_node)
+
+        for r in range(self.rounds):
+            eng.parallel_for(0, n, lambda i, r=r: self._decide(eng, states,
+                                                               decisions, r, i))
+            eng.parallel_for(0, n, lambda i, r=r: self._advance(eng, states,
+                                                                decisions, r, i))
+
+        # Reduce the accumulators of live nodes (sum over live accs is
+        # invariant round to round, so this equals the total).
+        def finish(i, res):
+            eng.read(
+                states[self.rounds][i],
+                lambda st: eng.write(res, 0 if st is None else st[2]),
+            )
+
+        def sum_rec(lo, hi, res):
+            if hi - lo == 1:
+                finish(lo, res)
+                return
+            mid = (lo + hi) // 2
+            l, r_ = eng.mod(), eng.mod()
+            eng.par(lambda: sum_rec(lo, mid, l), lambda: sum_rec(mid, hi, r_))
+            eng.read((l, r_), lambda a, b: eng.write(res, a + b))
+
+        sum_rec(0, n, self.result)
+
+    # ---- decision phase ---------------------------------------------------
+    def _decide(self, eng, states, decisions, r, i):
+        coins = self.coins[r]
+
+        def body(st):
+            if st is None:
+                eng.write(decisions[r][i], DEAD)
+                return
+            eng.charge(1)
+            pred, nxt, acc = st
+            if coins[i] and pred != -1 and not coins[pred]:
+                # Head with a Tail predecessor: absorbed, die; the payload
+                # lets the absorber pick up my successor and accumulator.
+                eng.write(decisions[r][i], ("die", st))
+            elif not coins[i] and nxt != -1 and coins[nxt]:
+                eng.write(decisions[r][i], ("absorb", st))
+            else:
+                eng.write(decisions[r][i], ("survive", st))
+
+        eng.read(states[r][i], body)
+
+    # ---- state phase --------------------------------------------------------
+    def _advance(self, eng, states, decisions, r, i):
+        def body(dec):
+            kind, payload = dec
+            if kind in ("dead", "die"):
+                eng.write(states[r + 1][i], None)
+                return
+            pred, nxt, acc = payload
+            eng.charge(1)
+            mods, roles = [], []
+            if pred != -1:
+                mods.append(decisions[r][pred])
+                roles.append("pred")
+            if nxt != -1:
+                mods.append(decisions[r][nxt])
+                roles.append("next")
+            if not mods:
+                eng.write(states[r + 1][i], (pred, nxt, acc))
+                return
+
+            def combine(*ndecs):
+                new_pred, new_nxt, new_acc = pred, nxt, acc
+                for role, (nkind, npay) in zip(roles, ndecs):
+                    if role == "pred" and nkind == "die":
+                        # pred was absorbed by *its* pred, who becomes mine.
+                        new_pred = npay[0]
+                    elif role == "next" and nkind == "die":
+                        # my absorb: successor's links and value fold in.
+                        new_nxt = npay[1]
+                        new_acc = acc + npay[2]
+                eng.write(states[r + 1][i], (new_pred, new_nxt, new_acc))
+
+            eng.read(tuple(mods), combine)
+
+        eng.read(decisions[r][i], body)
+
+    # ---- dynamic updates ----------------------------------------------------
+    def apply_update(self, eng, k: int):
+        idx = self.rng.sample(range(self.n), min(k, self.n))
+        for i in idx:
+            self.values[i] = self.rng.randrange(100)
+            eng.write(self.val_mods[i], self.values[i])
+
+    # ---- oracle ---------------------------------------------------------------
+    def expected(self):
+        return sum(self.values)
+
+    def output(self):
+        return self.result.peek()

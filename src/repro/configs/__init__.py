@@ -1,0 +1,56 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full (paper-exact) config;
+``get_smoke_config(name)`` returns the reduced same-family config used by
+CPU smoke tests (small widths/depths/experts, real code paths).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from ..models.config import ModelConfig
+
+ARCHS: List[str] = [
+    "minicpm_2b",
+    "yi_6b",
+    "phi3_mini_3_8b",
+    "gemma_7b",
+    "recurrentgemma_9b",
+    "seamless_m4t_large_v2",
+    "mamba2_370m",
+    "deepseek_v3_671b",
+    "arctic_480b",
+    "internvl2_2b",
+]
+
+_ALIASES = {
+    "minicpm-2b": "minicpm_2b",
+    "yi-6b": "yi_6b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "gemma-7b": "gemma_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "mamba2-370m": "mamba2_370m",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "arctic-480b": "arctic_480b",
+    "internvl2-2b": "internvl2_2b",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name)
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f".{canonical(name)}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f".{canonical(name)}", __package__)
+    return mod.SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

@@ -1,0 +1,44 @@
+"""Snowflake Arctic 480B [hf Snowflake/snowflake-arctic-base].
+
+Dense-MoE hybrid: every layer combines a GQA attention block with a dense
+residual FFN *in parallel* with a 128-expert top-2 MoE FFN.  35 layers,
+d_model 7168, 56 heads (kv=8), expert d_ff 4864, vocab 32000.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32_000,
+    attention="gqa",
+    norm="rmsnorm",
+    moe_experts=128,
+    moe_top_k=2,
+    moe_dense_residual=True,
+    moe_router="softmax",
+    moe_capacity_factor=1.25,
+    rope_theta=10_000.0,
+    optimizer="adafactor",    # 480B: see deepseek note — factored moments
+    grad_accum=8,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=3,
+    d_model=128,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=96,
+    vocab_size=512,
+    moe_experts=8,
+    moe_top_k=2,
+    param_dtype="float32",
+    compute_dtype="float32",
+    cache_dtype="float32",
+    remat="none",
+    grad_accum=1,
+)

@@ -1,0 +1,68 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437; hf deepseek-ai/DeepSeek-V3].
+
+MoE decoder with MLA: 61 layers (first 3 dense with d_ff 18432), MoE
+layers use 256 routed experts (top-8, sigmoid router) + 1 shared expert,
+expert d_ff 2048, d_model 7168, 128 heads (MLA: q_lora 1536, kv_lora 512,
+qk_nope 128, qk_rope 64, v 128), vocab 129280, MTP depth 1.
+
+Training at this scale needs ZeRO-sharded optimizer state + activation
+remat + gradient accumulation; see EXPERIMENTS.md §Dry-run for the
+per-device memory budget.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,
+    d_ff=2048,            # routed-expert FFN width
+    d_ff_dense=18432,     # dense-layer FFN width
+    vocab_size=129_280,
+    attention="mla",
+    norm="rmsnorm",
+    moe_experts=256,
+    moe_top_k=8,
+    moe_shared_experts=1,
+    moe_dense_layers=3,
+    moe_router="sigmoid",
+    moe_capacity_factor=1.25,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    mtp_depth=1,
+    rope_theta=10_000.0,
+    optimizer="adafactor",    # 671B: even bf16 AdamW moments consume the
+                              # entire v5e HBM on one pod (6 B/param = 15.7
+                              # GiB/chip); factored second moment is the
+                              # only single-pod-trainable configuration.
+    grad_accum=16,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=5,          # 2 dense + 3 MoE
+    moe_dense_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=96,
+    d_ff_dense=384,
+    vocab_size=512,
+    moe_experts=8,
+    moe_top_k=2,
+    q_lora_rank=64,
+    kv_lora_rank=32,
+    qk_nope_dim=32,
+    qk_rope_dim=16,
+    v_head_dim=32,
+    mtp_depth=1,
+    param_dtype="float32",
+    compute_dtype="float32",
+    cache_dtype="float32",
+    remat="none",
+    grad_accum=1,
+)

@@ -1,0 +1,41 @@
+"""Gemma-7B [arXiv:2403.08295; hf google/gemma-7b].
+
+Dense decoder: 28L, d_model 3072, 16 heads with head_dim 256 (attention
+width 4096 != d_model), kv=16, GeGLU d_ff 24576, vocab 256000.  Gemma
+scales embeddings by sqrt(d_model) and uses (1+scale) RMSNorm; embeddings
+are tied.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab_size=256_000,
+    activation="gelu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    emb_scale_sqrt_dim=True,
+    rope_theta=10_000.0,
+    grad_accum=4,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=512,
+    param_dtype="float32",
+    compute_dtype="float32",
+    cache_dtype="float32",
+    remat="none",
+    grad_accum=1,
+)

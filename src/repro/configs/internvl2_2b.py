@@ -1,0 +1,38 @@
+"""InternVL2-2B [arXiv:2404.16821; hf OpenGVLab/InternVL2-2B].
+
+VLM: InternViT vision frontend (STUBBED — input_specs() provides
+precomputed patch embeddings [B, 256, 1024]) + InternLM2-1.8B language
+backbone: 24L, d_model 2048, 16 heads (kv=8), d_ff 8192, vocab 92553.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92_553,
+    attention="gqa",
+    norm="rmsnorm",
+    num_patches=256,
+    rope_theta=1_000_000.0,
+    grad_accum=2,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=384,
+    vocab_size=512,
+    num_patches=16,
+    param_dtype="float32",
+    compute_dtype="float32",
+    cache_dtype="float32",
+    remat="none",
+    grad_accum=1,
+)

@@ -1,0 +1,42 @@
+"""Mamba2-370M [arXiv:2405.21060].
+
+Attention-free SSM (SSD / state-space duality): 48 layers, d_model 1024,
+ssm_state 128, head_dim 64, expand 2 (d_inner 2048 => 32 heads),
+vocab 50280.  Sub-quadratic: runs the ``long_500k`` shape with an
+O(1)-per-token state.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    num_layers=48,
+    d_model=1024,
+    num_heads=32,       # d_inner / ssm_head_dim
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50_280,
+    attention="none",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    ssm_conv_width=4,
+    grad_accum=4,   # SSD intra-chunk (Q x Q) fp32 temps at 65k tok/dev don't fit
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4,
+    d_model=128,
+    num_heads=4,        # (128*2)/64
+    vocab_size=512,
+    ssm_state=32,
+    ssm_head_dim=64,
+    ssm_chunk=32,
+    param_dtype="float32",
+    compute_dtype="float32",
+    cache_dtype="float32",
+    remat="none",
+)

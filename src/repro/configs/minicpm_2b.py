@@ -1,0 +1,45 @@
+"""MiniCPM-2B [arXiv:2404.06395; hf openbmb/MiniCPM-2B].
+
+Dense llama-like decoder: 40L, d_model 2304, 36 heads (MHA: kv=36),
+d_ff 5760, vocab 122753.  MiniCPM specifics: mu-parameterized scaling
+(scale_emb=12, scale_depth=1.4 => residual scale 1.4/sqrt(40)), tied
+embeddings with logits divided by d_model/256, and the WSD learning-rate
+schedule (warmup-stable-decay) for training.
+"""
+import math
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    num_layers=40,
+    d_model=2304,
+    num_heads=36,
+    num_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122_753,
+    activation="silu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    emb_scale=12.0,
+    residual_scale=1.4 / math.sqrt(40),
+    rope_theta=10_000.0,
+    lr_schedule="wsd",
+    grad_accum=4,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=352,
+    vocab_size=512,
+    residual_scale=1.4 / math.sqrt(4),
+    param_dtype="float32",
+    compute_dtype="float32",
+    cache_dtype="float32",
+    remat="none",
+    grad_accum=1,
+)

@@ -1,0 +1,35 @@
+"""Phi-3-mini 3.8B [arXiv:2404.14219].
+
+Dense decoder: 32L, d_model 3072, 32 heads (MHA: kv=32), d_ff 8192,
+vocab 32064, RoPE + SwiGLU.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32_064,
+    activation="silu",
+    norm="rmsnorm",
+    rope_theta=10_000.0,
+    grad_accum=4,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=384,
+    vocab_size=512,
+    param_dtype="float32",
+    compute_dtype="float32",
+    cache_dtype="float32",
+    remat="none",
+    grad_accum=1,
+)

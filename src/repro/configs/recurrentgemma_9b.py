@@ -1,0 +1,48 @@
+"""RecurrentGemma-9B (Griffin) [arXiv:2402.19427].
+
+Hybrid: RG-LRU recurrent blocks and local (sliding-window 2048) MQA
+attention in a 2:1 pattern — block pattern (rec, rec, attn).  38 layers,
+d_model 4096, 16 heads with kv=1 (MQA), head_dim 256, d_ff 12288,
+vocab 256000.  38 = 12 * (rec,rec,attn) + 2 tail rec layers.
+
+Sub-quadratic: runs the ``long_500k`` shape (recurrent state + bounded
+attention window; memory does not grow with context).
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256_000,
+    activation="gelu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    emb_scale_sqrt_dim=True,
+    block_pattern=("rec", "rec", "attn"),
+    local_window=2048,
+    conv_width=4,
+    rope_theta=10_000.0,
+    grad_accum=4,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=8,  # 2 groups + 2 tail rec
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=32,
+    d_ff=384,
+    vocab_size=512,
+    local_window=64,
+    param_dtype="float32",
+    compute_dtype="float32",
+    cache_dtype="float32",
+    remat="none",
+    grad_accum=1,
+)

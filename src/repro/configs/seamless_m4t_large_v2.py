@@ -1,0 +1,40 @@
+"""SeamlessM4T-large-v2 backbone [arXiv:2308.11596; hf facebook/seamless-m4t-v2-large].
+
+Encoder-decoder transformer backbone: 24 encoder + 24 decoder layers,
+d_model 1024, 16 heads (kv=16), d_ff 8192, vocab 256206, LayerNorm.
+The speech/audio frontend is a STUB: input_specs() provides precomputed
+frame embeddings [B, S_enc, d_model] (assignment spec: modality frontends
+are out of scope).
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    num_layers=24,
+    enc_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256_206,
+    activation="gelu",
+    norm="layernorm",
+    rope_theta=10_000.0,
+    grad_accum=2,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=3,
+    enc_layers=3,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=384,
+    vocab_size=512,
+    param_dtype="float32",
+    compute_dtype="float32",
+    cache_dtype="float32",
+    remat="none",
+    grad_accum=1,
+)

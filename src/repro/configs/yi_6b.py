@@ -1,0 +1,35 @@
+"""Yi-6B [arXiv:2403.04652; hf 01-ai/Yi-6B].
+
+Llama-architecture GQA decoder: 32L, d_model 4096, 32 heads, 4 kv heads,
+d_ff 11008, vocab 64000, RoPE theta 5e6 (Yi uses long-base RoPE).
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64_000,
+    activation="silu",
+    norm="rmsnorm",
+    rope_theta=5_000_000.0,
+    grad_accum=4,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4,
+    d_model=128,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=344,
+    vocab_size=512,
+    param_dtype="float32",
+    compute_dtype="float32",
+    cache_dtype="float32",
+    remat="none",
+    grad_accum=1,
+)

@@ -1,0 +1,28 @@
+"""Parallel self-adjusting computation — the paper's core contribution.
+
+``Engine`` is the paper-faithful host engine (dynamic RSP tree, change
+propagation, Algorithms 2-5).  ``StaticEngine`` runs the same programs
+without dependency tracking (the static baselines of the paper's tables).
+``computation_distance`` implements Definition 4.2 for stability analysis.
+
+The TPU-native compiled adaptation is in ``repro.jaxsac``.
+"""
+from .engine import Computation, Engine, PhaseStats, StaticEngine
+from .modref import Mod, ReaderSet
+from .rsp import Node, PNode, RNode, SNode
+from .distance import Distance, computation_distance
+
+__all__ = [
+    "Computation",
+    "Engine",
+    "PhaseStats",
+    "StaticEngine",
+    "Mod",
+    "ReaderSet",
+    "Node",
+    "PNode",
+    "RNode",
+    "SNode",
+    "Distance",
+    "computation_distance",
+]

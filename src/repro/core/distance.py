@@ -1,0 +1,95 @@
+"""Computation distance between two RSP trees (Definition 4.2).
+
+Given two executions of the same deterministic algorithm on different
+inputs, the computation distance is the summed cost of the *affected*
+read nodes — cognate reads that observed different values and are not
+subsumed by another such read.  Because programs in the framework are
+deterministic, two cognate subtrees whose reads all observed equal values
+are structurally identical, so the recursion below only descends while
+structures agree.
+
+This module is used by tests and benchmarks to validate the stability
+bounds the paper proves (e.g. Theorem 4.2: O(k log(1 + n/k)) affected
+reads for the divide-and-conquer sum under k-element updates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from .rsp import Node, PNode, RNode, SNode
+
+__all__ = ["Distance", "computation_distance"]
+
+
+@dataclasses.dataclass
+class Distance:
+    work: int = 0             # W_delta: summed reader work over affected reads
+    affected_reads: int = 0   # R_delta (counted over both trees' frontiers)
+
+    def __iadd__(self, other: "Distance") -> "Distance":
+        self.work += other.work
+        self.affected_reads += other.affected_reads
+        return self
+
+
+def computation_distance(a: Optional[Node], b: Optional[Node]) -> Distance:
+    """delta(T, T') per Definition 4.2, computed over annotated RSP trees."""
+    d = Distance()
+    _walk(a, b, d)
+    return d
+
+
+def _walk(a: Optional[Node], b: Optional[Node], d: Distance) -> None:
+    if a is None and b is None:
+        return
+    if a is None or b is None or type(a) is not type(b):
+        # Structural divergence outside an affected read frontier can only
+        # happen for non-deterministic programs; charge conservatively.
+        d.work += _subtree_work(a) + _subtree_work(b)
+        d.affected_reads += _subtree_reads(a) + _subtree_reads(b)
+        return
+    if isinstance(a, RNode):
+        assert isinstance(b, RNode)
+        if a.last_values != b.last_values:
+            # Affected pair: charge both reader executions, do not descend
+            # (nested differing reads are subsumed, Definition 4.1).
+            d.work += a.last_work + b.last_work
+            d.affected_reads += 2
+            return
+        _walk(a.left, b.left, d)
+        _walk(a.right, b.right, d)
+        return
+    if isinstance(a, (SNode, PNode)):
+        _walk(a.left, b.left, d)  # type: ignore[union-attr]
+        _walk(a.right, b.right, d)  # type: ignore[union-attr]
+
+
+def _subtree_work(node: Optional[Node]) -> int:
+    total = 0
+    stack = [node] if node is not None else []
+    while stack:
+        n = stack.pop()
+        if isinstance(n, RNode):
+            total += n.last_work
+            continue  # reader work already includes nested work
+        if isinstance(n, (SNode, PNode)):
+            for c in (n.left, n.right):
+                if c is not None:
+                    stack.append(c)
+    return total
+
+
+def _subtree_reads(node: Optional[Node]) -> int:
+    total = 0
+    stack = [node] if node is not None else []
+    while stack:
+        n = stack.pop()
+        if isinstance(n, RNode):
+            total += 1
+            continue
+        if isinstance(n, (SNode, PNode)):
+            for c in (n.left, n.right):
+                if c is not None:
+                    stack.append(c)
+    return total

@@ -1,0 +1,460 @@
+"""The parallel self-adjusting computation engine (host reference engine).
+
+Implements the primitives of Figure 1 and the change-propagation algorithm
+of Algorithms 2-5 from Anderson et al. (2021).  This is the *paper-faithful*
+engine: a dynamic RSP tree with mod reader-sets, mark-walks, and a
+propagation traversal that re-executes affected readers.
+
+Because this container exposes a single CPU core, ``par`` executes its two
+thunks sequentially but the engine keeps exact *work/span* accounting
+through the RSP structure (span of a P node = max of children, span of an
+S node = sum).  Benchmarks report measured wall-clock work savings (real)
+plus simulated p-processor time via Brent's bound W/p + s, which is the
+model the paper's analysis is stated in (Section 1.3).
+
+The TPU-native adaptation of this algorithm lives in ``repro.jaxsac``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
+
+from .modref import Mod, _UNWRITTEN
+from .rsp import Node, PNode, RNode, SNode
+
+__all__ = ["Engine", "Computation", "PhaseStats", "StaticEngine"]
+
+sys.setrecursionlimit(200_000)
+
+
+@dataclasses.dataclass
+class PhaseStats:
+    """Work/span and event counters for one phase (a run or a propagate)."""
+
+    work: int = 0              # user + primitive work
+    span: int = 0              # critical-path length under the RSP structure
+    reads: int = 0             # reader executions
+    writes: int = 0
+    changed_writes: int = 0    # writes whose value differed (trigger marks)
+    mark_work: int = 0         # nodes marked by mark-walks
+    affected_readers: int = 0  # readers re-executed during propagation
+    traversed: int = 0         # RSP nodes visited by the propagation traversal
+    nodes_created: int = 0
+
+    def simulated_time(self, p: int) -> float:
+        """Brent's bound: time on p processors is O(W/p + s)."""
+        return self.work / p + self.span
+
+
+class Computation:
+    """Handle to a self-adjusting computation (the root of its RSP tree)."""
+
+    def __init__(self, engine: "Engine", root: SNode, stats: PhaseStats):
+        self.engine = engine
+        self.root = root
+        self.initial_stats = stats
+
+    def propagate(self) -> PhaseStats:
+        return self.engine.propagate(self)
+
+
+class Engine:
+    """A parallel self-adjusting computation engine instance.
+
+    Typical usage::
+
+        eng = Engine()
+        xs = [eng.mod(f"x{i}") for i in range(n)]
+        for x, v in zip(xs, values): eng.write(x, v)
+        res = eng.mod("res")
+        comp = eng.run(lambda: my_sum(eng, xs, res))
+        ...
+        eng.write(xs[3], 42)          # input update
+        comp.propagate()              # change propagation
+        print(res.peek())
+    """
+
+    def __init__(self):
+        self.epoch = 0
+        self.current_scope: Optional[SNode] = None
+        self.stats = PhaseStats()           # the *current* phase's stats
+        self.live_nodes = 0                 # RSP nodes alive (memory table)
+        self.live_mods = 0
+        self.garbage: List[Node] = []       # detached subtrees awaiting GC
+        self.garbage_mods: List[Mod] = []   # scope-owned mods awaiting GC
+        self._in_computation = False
+
+    # ------------------------------------------------------------------
+    # Allocation
+    # ------------------------------------------------------------------
+    def mod(self, name: str = "") -> Mod:
+        """Allocate a modifiable.  If called inside a computation, its
+        lifetime is tied to the allocating scope (paper, Section 2)."""
+        m = Mod(name)
+        self.live_mods += 1
+        if self._in_computation and self.current_scope is not None:
+            self.current_scope.own(m)
+        return m
+
+    def alloc_array(self, n: int, name: str = "") -> List[Mod]:
+        return [self.mod(f"{name}[{i}]") for i in range(n)]
+
+    # ------------------------------------------------------------------
+    # Work accounting
+    # ------------------------------------------------------------------
+    def charge(self, work: int, span: Optional[int] = None) -> None:
+        """Charge explicit user work (e.g. the inner loop of an edit-distance
+        reader) to the current phase."""
+        self.stats.work += work
+        self.stats.span += work if span is None else span
+
+    # ------------------------------------------------------------------
+    # write (Algorithm 2)
+    # ------------------------------------------------------------------
+    def write(self, dest: Mod, value: Any) -> None:
+        self.stats.writes += 1
+        self.stats.work += 1
+        self.stats.span += 1
+        unwritten = not dest.written
+        if unwritten or not _values_equal(dest.val, value):
+            if self._in_computation:
+                # Write-once restriction: at most one writer per execution.
+                if dest.write_epoch == self.epoch and dest.writer is not self.current_scope:
+                    raise RuntimeError(
+                        f"write-once violation on mod {dest.name or hex(id(dest))}"
+                    )
+                dest.writer = self.current_scope
+                dest.write_epoch = self.epoch
+            dest.val = value
+            if not unwritten:
+                self.stats.changed_writes += 1
+            # Mark all readers (and their ancestors) as pending re-execution.
+            for reader in dest.readers:
+                if reader.dead:
+                    dest.readers.discard(reader)  # lazy deletion (Section 5)
+                    continue
+                reader.affected = True
+                self.stats.mark_work += reader.mark()
+        elif self._in_computation:
+            dest.writer = self.current_scope
+            dest.write_epoch = self.epoch
+
+    # ------------------------------------------------------------------
+    # read (Algorithm 3)
+    # ------------------------------------------------------------------
+    def read(
+        self,
+        mods: Union[Mod, Sequence[Mod]],
+        reader_f: Callable[..., None],
+    ) -> None:
+        if isinstance(mods, Mod):
+            mods = (mods,)
+        else:
+            mods = tuple(mods)
+        cur = self._scope_slot()
+        r = RNode(cur, mods, reader_f)
+        self.live_nodes += 1
+        self.stats.nodes_created += 1
+        self._attach(cur, r)
+        for m in mods:
+            if not m.written:
+                raise RuntimeError(
+                    f"mod {m.name or hex(id(m))} read before written"
+                )
+            m.readers.add(r)
+        self._do_read(r)
+        # The continuation S node is created lazily by _scope_slot() only if
+        # the enclosing scope performs further operations (Section 3).
+
+    def _do_read(self, r: RNode) -> None:
+        """R::DO_READ — run the reader body in the scope of the R node."""
+        self.stats.reads += 1
+        values = tuple(m.val for m in r.mods)
+        r.last_values = values
+        saved_scope = self.current_scope
+        self.current_scope = r
+        w0, s0 = self.stats.work, self.stats.span
+        self.stats.work += 1
+        self.stats.span += 1
+        r.reader_f(*values)
+        r.last_work = self.stats.work - w0
+        r.last_span = self.stats.span - s0
+        self.current_scope = saved_scope
+
+    # ------------------------------------------------------------------
+    # par (Algorithm 4)
+    # ------------------------------------------------------------------
+    def par(self, left_f: Callable[[], None], right_f: Callable[[], None]) -> None:
+        cur = self._scope_slot()
+        p = PNode(cur)
+        p.left = SNode(p)
+        p.right = SNode(p)
+        self.live_nodes += 3
+        self.stats.nodes_created += 3
+        self._attach(cur, p)
+        saved_scope = self.current_scope
+        # Sequential execution with parallel span accounting: span of the P
+        # node is the max of the two branch spans.
+        s_before = self.stats.span
+        self.current_scope = p.left
+        left_f()
+        left_span = self.stats.span - s_before
+        self.stats.span = s_before
+        self.current_scope = p.right
+        right_f()
+        right_span = self.stats.span - s_before
+        self.stats.span = s_before + max(left_span, right_span) + 1
+        self.stats.work += 1
+        self.current_scope = saved_scope
+
+    def parallel_for(
+        self, lo: int, hi: int, body: Callable[[int], None], grain: int = 1
+    ) -> None:
+        """Binary divide-and-conquer parallel loop (paper, Section 2)."""
+        if hi - lo <= grain:
+            for i in range(lo, hi):
+                body(i)
+            return
+        mid = lo + (hi - lo) // 2
+        self.par(
+            lambda: self.parallel_for(lo, mid, body, grain),
+            lambda: self.parallel_for(mid, hi, body, grain),
+        )
+
+    # ------------------------------------------------------------------
+    # run (Algorithm 5)
+    # ------------------------------------------------------------------
+    def run(self, f: Callable[[], None]) -> Computation:
+        if self._in_computation:
+            raise RuntimeError("nested run() is not supported")
+        self.epoch += 1
+        self.stats = PhaseStats()
+        root = SNode(None)
+        self.live_nodes += 1
+        self.stats.nodes_created += 1
+        self.current_scope = root
+        self._in_computation = True
+        try:
+            f()
+        finally:
+            self._in_computation = False
+            self.current_scope = None
+        return Computation(self, root, self.stats)
+
+    # ------------------------------------------------------------------
+    # propagate (Algorithm 5)
+    # ------------------------------------------------------------------
+    def propagate(self, comp: Computation) -> PhaseStats:
+        self.epoch += 1
+        self.stats = PhaseStats()
+        self._in_computation = True
+        try:
+            if comp.root.marked:
+                self._propagate_node(comp.root)
+        finally:
+            self._in_computation = False
+            self.current_scope = None
+        return self.stats
+
+    def _propagate_node(self, node: Node) -> int:
+        """Propagate through one marked node; returns the span consumed."""
+        self.stats.traversed += 1
+        self.stats.work += 1
+        if isinstance(node, RNode):
+            span = self._propagate_r(node)
+        elif isinstance(node, PNode):
+            span = self._propagate_p(node)
+        else:
+            span = self._propagate_s(node)
+        node.marked = False
+        return span + 1
+
+    def _propagate_s(self, node: SNode) -> int:
+        # Sequential: left strictly before right; re-check right's mark after
+        # left runs, since left's re-execution may have marked it.
+        span = 0
+        if node.left is not None and node.left.marked:
+            span += self._propagate_node(node.left)
+        if node.right is not None and node.right.marked:
+            span += self._propagate_node(node.right)
+        return span
+
+    def _propagate_p(self, node: PNode) -> int:
+        # Parallel: both children may propagate simultaneously (no control
+        # or data dependence can cross a P node in a race-free program), so
+        # span is the max.  Executed sequentially here; span accounted.
+        left_m = node.left is not None and node.left.marked
+        right_m = node.right is not None and node.right.marked
+        if left_m and right_m:
+            ls = self._propagate_node(node.left)
+            rs = self._propagate_node(node.right)
+            return max(ls, rs)
+        if left_m:
+            return self._propagate_node(node.left)
+        if right_m:
+            return self._propagate_node(node.right)
+        return 0
+
+    def _propagate_r(self, r: RNode) -> int:
+        if r.affected:
+            self.stats.affected_readers += 1
+            # Discard the old body subtree to the garbage pile; sever parent
+            # pointers so marks on dead nodes cannot escape into the live
+            # tree (Section 5, garbage collection).
+            for child in (r.left, r.right):
+                if child is not None:
+                    child.detach()
+                    self.garbage.append(child)
+            if r.owned_mods:
+                self.garbage_mods.extend(r.owned_mods)
+                r.owned_mods = None
+            r.left = None
+            r.right = None
+            r.affected = False
+            s0 = self.stats.span
+            self._do_read(r)
+            return self.stats.span - s0
+        # Unaffected read node: behaves as a scope, recurse into marked
+        # children (some nested reader needs re-execution).
+        return self._propagate_s(r)
+
+    # ------------------------------------------------------------------
+    # Garbage collection (Section 5)
+    # ------------------------------------------------------------------
+    def collect(self) -> int:
+        """Destroy detached subtrees: unregister dead readers from reader
+        sets and free scope-owned modifiables.  Returns nodes collected."""
+        collected = 0
+        stack = list(self.garbage)
+        self.garbage.clear()
+        while stack:
+            node = stack.pop()
+            collected += 1
+            self.live_nodes -= 1
+            if isinstance(node, RNode):
+                node.dead = True
+                for m in node.mods:
+                    m.readers.discard(node)
+            if isinstance(node, (SNode, PNode)):
+                if isinstance(node, SNode) and node.owned_mods:
+                    self.live_mods -= len(node.owned_mods)
+                    node.owned_mods = None
+                for child in (node.left, node.right):
+                    if child is not None:
+                        stack.append(child)
+        self.live_mods -= len(self.garbage_mods)
+        self.garbage_mods.clear()
+        return collected
+
+    # ------------------------------------------------------------------
+    # Scope plumbing
+    # ------------------------------------------------------------------
+    def _scope_slot(self) -> SNode:
+        """Return the scope S node that has a free child slot, descending
+        into a (lazily created) continuation S node if needed."""
+        cur = self.current_scope
+        if cur is None:
+            raise RuntimeError("primitive used outside run()/propagate()")
+        while cur.left is not None:
+            if cur.right is None:
+                nxt = SNode(cur)
+                self.live_nodes += 1
+                self.stats.nodes_created += 1
+                cur.right = nxt
+                cur = nxt
+            else:
+                # Continuation scope already exists (shouldn't normally
+                # happen since scopes advance as ops occur), descend.
+                cur = cur.right  # pragma: no cover
+        self.current_scope = cur
+        return cur
+
+    @staticmethod
+    def _attach(scope: SNode, child: Node) -> None:
+        assert scope.left is None
+        scope.left = child
+
+    # ------------------------------------------------------------------
+    def tree_size(self, comp: Computation) -> int:
+        """Count live RSP nodes under a computation (Table 7 analogue)."""
+        n = 0
+        stack: List[Node] = [comp.root]
+        while stack:
+            node = stack.pop()
+            n += 1
+            if isinstance(node, (SNode, PNode)):
+                for child in (node.left, node.right):
+                    if child is not None:
+                        stack.append(child)
+        return n
+
+
+def _values_equal(a: Any, b: Any) -> bool:
+    if a is b:
+        return True
+    try:
+        return bool(a == b)
+    except Exception:
+        return False
+
+
+class StaticEngine:
+    """Duck-typed engine that runs the same program *without* building an
+    RSP tree or tracking dependencies — the "static algorithm" baseline of
+    the paper's benchmark tables.  Work/span are still counted so work
+    savings and self-speedup can be computed against it."""
+
+    def __init__(self):
+        self.stats = PhaseStats()
+        self._in_computation = False
+
+    def mod(self, name: str = "") -> Mod:
+        return Mod(name)
+
+    def alloc_array(self, n: int, name: str = "") -> List[Mod]:
+        return [Mod(f"{name}[{i}]") for i in range(n)]
+
+    def charge(self, work: int, span: Optional[int] = None) -> None:
+        self.stats.work += work
+        self.stats.span += work if span is None else span
+
+    def write(self, dest: Mod, value: Any) -> None:
+        self.stats.writes += 1
+        self.stats.work += 1
+        self.stats.span += 1
+        dest.val = value
+
+    def read(self, mods, reader_f) -> None:
+        if isinstance(mods, Mod):
+            mods = (mods,)
+        self.stats.reads += 1
+        self.stats.work += 1
+        self.stats.span += 1
+        reader_f(*(m.val for m in mods))
+
+    def par(self, left_f, right_f) -> None:
+        s_before = self.stats.span
+        left_f()
+        left_span = self.stats.span - s_before
+        self.stats.span = s_before
+        right_f()
+        right_span = self.stats.span - s_before
+        self.stats.span = s_before + max(left_span, right_span) + 1
+        self.stats.work += 1
+
+    def parallel_for(self, lo, hi, body, grain: int = 1) -> None:
+        if hi - lo <= grain:
+            for i in range(lo, hi):
+                body(i)
+            return
+        mid = lo + (hi - lo) // 2
+        self.par(
+            lambda: self.parallel_for(lo, mid, body, grain),
+            lambda: self.parallel_for(mid, hi, body, grain),
+        )
+
+    def run(self, f: Callable[[], None]) -> PhaseStats:
+        self.stats = PhaseStats()
+        f()
+        return self.stats

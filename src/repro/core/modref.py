@@ -1,0 +1,94 @@
+"""Modifiable references ("modifiables") and reader sets.
+
+A modifiable is a write-once-per-execution reference whose readers are
+tracked so that change propagation can find exactly the computations that
+depend on a changed value (paper, Section 2).
+
+Reader sets use the hybrid representation from Section 5 of the paper: a
+single reader is stored inline with no extra allocation; sets grow into a
+dict (standing in for the paper's concurrent hash table / treap — the
+asymptotics the analysis needs are expected O(1) insert/delete, which a
+dict provides).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator, Optional
+
+__all__ = ["Mod", "ReaderSet"]
+
+_UNWRITTEN = object()
+
+
+class ReaderSet:
+    """Hybrid inline-single-reader / hashed reader set."""
+
+    __slots__ = ("_single", "_many")
+
+    def __init__(self):
+        self._single = None
+        self._many: Optional[dict] = None
+
+    def add(self, reader) -> None:
+        if self._many is not None:
+            self._many[id(reader)] = reader
+        elif self._single is None:
+            self._single = reader
+        elif self._single is reader:
+            pass
+        else:
+            # Convert to the linked/hashed representation.
+            self._many = {id(self._single): self._single, id(reader): reader}
+            self._single = None
+
+    def discard(self, reader) -> None:
+        if self._many is not None:
+            self._many.pop(id(reader), None)
+        elif self._single is reader:
+            self._single = None
+
+    def __iter__(self) -> Iterator:
+        if self._many is not None:
+            # Snapshot: marking may trigger lazy cleanup of dead readers.
+            return iter(list(self._many.values()))
+        if self._single is not None:
+            return iter((self._single,))
+        return iter(())
+
+    def __len__(self) -> int:
+        if self._many is not None:
+            return len(self._many)
+        return 0 if self._single is None else 1
+
+
+class Mod:
+    """A modifiable reference.
+
+    Restrictions (paper, Section 2): written at most once per execution of
+    the computation; never read before written; only read/written inside the
+    dynamic scope of the computation that allocated it.
+    """
+
+    __slots__ = ("val", "readers", "writer", "write_epoch", "name")
+
+    def __init__(self, name: str = ""):
+        self.val: Any = _UNWRITTEN
+        self.readers = ReaderSet()
+        self.writer: Any = None      # R node (or root scope) that wrote it
+        self.write_epoch = -1        # engine epoch of the last write
+        self.name = name
+
+    # ------------------------------------------------------------------
+    @property
+    def written(self) -> bool:
+        return self.val is not _UNWRITTEN
+
+    def peek(self) -> Any:
+        """Read the value outside of tracked computation (e.g. to inspect
+        outputs after run/propagate).  Does not register a dependency."""
+        if not self.written:
+            raise RuntimeError(f"mod {self.name or id(self)} read before written")
+        return self.val
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        v = "?" if not self.written else repr(self.val)
+        return f"Mod({self.name or hex(id(self))}={v}, readers={len(self.readers)})"

@@ -1,0 +1,122 @@
+"""RSP-tree node types (Series, Parallel, Read nodes).
+
+The RSP tree records the control structure of a nested-parallel
+self-adjusting computation, per Anderson et al., "Efficient Parallel
+Self-Adjusting Computation" (2021):
+
+  * ``S`` nodes compose two computations sequentially (left before right).
+  * ``P`` nodes compose two computations in parallel (order irrelevant).
+  * ``R`` nodes record a read of one or more modifiables together with the
+    reader closure; the reader body executes in the scope of the R node
+    itself, so an R node behaves as an S node with extra fields.
+
+Change propagation marks paths from affected readers to the root and then
+re-traverses only marked paths, re-executing affected readers — in parallel
+below P nodes, sequentially below S nodes (Algorithms 2-5 of the paper).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+__all__ = ["Node", "SNode", "PNode", "RNode"]
+
+
+class Node:
+    """Base RSP node: parent pointer plus the propagation mark."""
+
+    __slots__ = ("parent", "marked")
+
+    def __init__(self, parent: Optional["Node"]):
+        self.parent = parent
+        self.marked = False
+
+    # ---- marking (Algorithm 5, Node::mark) --------------------------------
+    def mark(self) -> int:
+        """Mark this node and all unmarked ancestors.
+
+        Returns the number of nodes newly marked (used for work accounting:
+        the paper amortizes this against later traversal/destruction).
+        """
+        n = 0
+        node: Optional[Node] = self
+        while node is not None and not node.marked:
+            node.marked = True
+            n += 1
+            node = node.parent
+        return n
+
+    def detach(self) -> None:
+        """Sever this node from its parent (used when a subtree moves to the
+        garbage pile, so marks on dead nodes cannot escape into live tree)."""
+        self.parent = None
+
+
+class SNode(Node):
+    """Sequential composition node; also the unit of *scope*.
+
+    ``left`` runs strictly before ``right``.  Dynamically allocated
+    modifiables are owned by the scope that allocated them (``owned_mods``)
+    so their lifetime is tied to the subtree (paper, Section 2).
+    """
+
+    __slots__ = ("left", "right", "owned_mods")
+
+    def __init__(self, parent: Optional[Node]):
+        super().__init__(parent)
+        self.left: Optional[Node] = None
+        self.right: Optional[Node] = None
+        self.owned_mods: Optional[list] = None  # lazily allocated
+
+    def own(self, mod) -> None:
+        if self.owned_mods is None:
+            self.owned_mods = []
+        self.owned_mods.append(mod)
+
+
+class PNode(Node):
+    """Parallel composition node: two child S scopes, run in parallel."""
+
+    __slots__ = ("left", "right")
+
+    def __init__(self, parent: Optional[Node]):
+        super().__init__(parent)
+        self.left: Optional[SNode] = None
+        self.right: Optional[SNode] = None
+
+
+class RNode(SNode):
+    """Read node.
+
+    Reads ``mods`` and runs ``reader_f`` on their values; the reader body's
+    own RSP structure hangs off this node (it doubles as an S scope).  On
+    change propagation, if ``affected`` the old body subtree is discarded to
+    the garbage pile and ``reader_f`` re-executes in a fresh scope.
+
+    ``last_values``/``last_work``/``last_span`` annotate the node for
+    computation-distance analysis (Definition 4.2).
+    """
+
+    __slots__ = (
+        "mods",
+        "reader_f",
+        "affected",
+        "dead",
+        "last_values",
+        "last_work",
+        "last_span",
+    )
+
+    def __init__(
+        self,
+        parent: Optional[Node],
+        mods: Tuple[Any, ...],
+        reader_f: Callable[..., None],
+    ):
+        super().__init__(parent)
+        self.mods = mods
+        self.reader_f = reader_f
+        self.affected = False
+        self.dead = False  # set when subtree is moved to the garbage pile
+        self.last_values: Optional[Tuple[Any, ...]] = None
+        self.last_work = 0
+        self.last_span = 0

@@ -1,0 +1,107 @@
+"""Deterministic, sharded, resumable token pipeline.
+
+Design constraints at pod scale:
+
+  * **Determinism** — batch contents are a pure function of (seed, step,
+    shard), via a counter-mode PRNG over document indices.  No iterator
+    state lives anywhere but the integer ``step``, so checkpoint/restart
+    reproduces the exact batch sequence (the data-side requirement for
+    the paper's determinism restriction AND for elastic restart).
+  * **Sharding** — each data-parallel rank draws a disjoint slice of the
+    global batch; re-slicing under a different rank count is exact as
+    long as the global batch divides, so an elastic remesh (Section
+    repro.runtime.elastic) replays without sample loss or duplication.
+  * **Resumability** — ``state_dict()`` is just {'step': int}.
+
+The corpus here is a synthetic-but-structured token stream (mixture of
+Zipfian unigrams and repeated n-gram motifs so models have learnable
+signal); a production deployment swaps ``TokenSource`` for a tokenized
+corpus reader with the same (seed, index) -> document contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["TokenSource", "DataPipeline"]
+
+
+class TokenSource:
+    """(seed, doc_index) -> token document; stateless and O(1) seekable."""
+
+    def __init__(self, vocab_size: int, seed: int = 0, doc_len: int = 1024):
+        self.vocab_size = vocab_size
+        self.seed = seed
+        self.doc_len = doc_len
+        base = np.random.default_rng(seed)
+        # Zipfian unigram table + a bank of n-gram motifs shared corpus-wide.
+        ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+        self._probs = (1.0 / ranks) / np.sum(1.0 / ranks)
+        self._motifs = base.integers(0, vocab_size,
+                                     size=(64, 16)).astype(np.int32)
+
+    def document(self, index: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed << 32) ^ (index * 0x9E3779B9))
+        toks = rng.choice(self.vocab_size, size=self.doc_len,
+                          p=self._probs).astype(np.int32)
+        # plant motifs: repeated structure gives the LM something to learn
+        n_motifs = rng.integers(2, 8)
+        for _ in range(n_motifs):
+            m = self._motifs[rng.integers(0, len(self._motifs))]
+            at = rng.integers(0, self.doc_len - len(m))
+            toks[at:at + len(m)] = m
+        return toks
+
+
+@dataclasses.dataclass
+class DataPipeline:
+    """Deterministic global-batch pipeline with per-rank sharding."""
+
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    shard_id: int = 0
+    num_shards: int = 1
+    step: int = 0
+
+    def __post_init__(self):
+        assert self.global_batch % self.num_shards == 0, \
+            (self.global_batch, self.num_shards)
+        self.local_batch = self.global_batch // self.num_shards
+        self._source = TokenSource(self.vocab_size, self.seed,
+                                   doc_len=self.seq_len + 1)
+
+    # -- resumability ------------------------------------------------------
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self.step, "seed": self.seed}
+
+    def load_state_dict(self, state: Dict[str, int]) -> None:
+        assert state["seed"] == self.seed, "restoring a different stream"
+        self.step = int(state["step"])
+
+    def reshard(self, shard_id: int, num_shards: int) -> "DataPipeline":
+        """Same stream, new rank layout (elastic remesh): batches at any
+        step are globally identical, sliced differently."""
+        return DataPipeline(self.vocab_size, self.global_batch, self.seq_len,
+                            self.seed, shard_id, num_shards, self.step)
+
+    # -- batches ---------------------------------------------------------
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """The shard-local batch for an absolute step (pure function)."""
+        base = step * self.global_batch + self.shard_id * self.local_batch
+        docs = [self._source.document(base + i)
+                for i in range(self.local_batch)]
+        arr = np.stack(docs)
+        return {"tokens": arr[:, :self.seq_len],
+                "labels": arr[:, 1:self.seq_len + 1]}
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        b = self.batch_at(self.step)
+        self.step += 1
+        return b
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self

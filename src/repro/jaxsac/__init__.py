@@ -1,0 +1,40 @@
+"""jaxsac: TPU-native parallel self-adjusting computation.
+
+The host engine in ``repro.core`` is the paper-faithful implementation:
+dynamic RSP trees, per-read closures, reader sets.  None of that jits —
+XLA requires static structure.  This package is the *hardware adaptation*
+of the paper's idea (see DESIGN.md §Hardware-adaptation):
+
+  * Computations are restricted to **static-structure** RSP dags — the
+    paper itself singles this class out ("the RSP tree will always look
+    the same", Section 2, the sum example).  The control structure (S/P
+    composition) is compiled once; only values change.
+  * Dependencies are tracked at **block** granularity (tiles of tensors),
+    the tensor-program analogue of the paper's granularity knob
+    (Table 9).  A modifiable is a block; its "reader set" is the static
+    set of downstream blocks, encoded as an index map instead of a hash
+    table.
+  * Change propagation = dirty-mask propagation through the static dag +
+    masked recompute of exactly the dirty blocks, with the paper's
+    value-equality write cutoff (Algorithm 2: a write that does not
+    change the value marks no readers) implemented as a per-block
+    bitwise-equality check that stops propagation early.
+
+Modules:
+  * ``reduce``  — incremental balanced reductions (the paper's Algorithm 1
+    divide-and-conquer sum, O(k log(n/k)) dirty nodes per k-block update).
+  * ``prefill`` — incremental KV-cache prefill for the serving path: edit
+    k tokens of an S-token prompt and re-establish the exact cache while
+    recomputing only the affected positions per layer (dirty intervals).
+"""
+from .core import BlockTensor, dirty_from_diff
+from .reduce import IncrementalReduce
+from .prefill import incremental_prefill, prefill_distance
+
+__all__ = [
+    "BlockTensor",
+    "dirty_from_diff",
+    "IncrementalReduce",
+    "incremental_prefill",
+    "prefill_distance",
+]

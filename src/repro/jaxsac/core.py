@@ -1,0 +1,89 @@
+"""Block-granular modifiables for static-structure self-adjusting programs.
+
+A ``BlockTensor`` is the jaxsac analogue of an array of modifiables: a
+tensor whose leading axis is split into blocks of ``block`` elements, with
+a boolean dirty mask per block.  Writes compare against the previous value
+block-wise (the paper's Algorithm-2 cutoff: a write of an equal value
+marks no readers), so propagation distance is measured in *changed*
+blocks, not touched blocks.
+
+Everything here is shape-static and jit-compatible; masks are data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["BlockTensor", "dirty_from_diff", "blocks_of"]
+
+
+def blocks_of(n: int, block: int) -> int:
+    assert n % block == 0, f"size {n} not divisible by block {block}"
+    return n // block
+
+
+def dirty_from_diff(old: jax.Array, new: jax.Array, block: int) -> jax.Array:
+    """Per-block "value changed" mask along the leading axis.
+
+    Equality is bitwise; deterministic programs produce bitwise-equal
+    outputs for equal inputs, so a False here soundly stops propagation
+    (paper, Definition 4.1: unaffected cognate reads).
+    """
+    assert old.shape == new.shape, (old.shape, new.shape)
+    nb = blocks_of(old.shape[0], block)
+    diff = (old != new).reshape((nb, block) + old.shape[1:])
+    return jnp.any(diff, axis=tuple(range(1, diff.ndim)))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BlockTensor:
+    """A block-modifiable: values plus a per-block dirty mask."""
+
+    data: jax.Array          # [n, ...]
+    dirty: jax.Array         # [n // block] bool
+    block: int = dataclasses.field(metadata=dict(static=True), default=1)
+
+    @classmethod
+    def clean(cls, data: jax.Array, block: int = 1) -> "BlockTensor":
+        nb = blocks_of(data.shape[0], block)
+        return cls(data, jnp.zeros((nb,), bool), block)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.data.shape[0] // self.block
+
+    def write(self, new_data: jax.Array) -> "BlockTensor":
+        """Replace the contents; dirty = blocks whose value changed
+        (accumulates into the existing mask)."""
+        d = dirty_from_diff(self.data, new_data, self.block)
+        return BlockTensor(new_data, self.dirty | d, self.block)
+
+    def write_at(self, start: jax.Array, update: jax.Array) -> "BlockTensor":
+        """Write a contiguous slice (dynamic start, static length)."""
+        new_data = jax.lax.dynamic_update_slice_in_dim(
+            self.data, update.astype(self.data.dtype), start, axis=0)
+        d = dirty_from_diff(self.data, new_data, self.block)
+        return BlockTensor(new_data, self.dirty | d, self.block)
+
+    def clear(self) -> "BlockTensor":
+        return BlockTensor(self.data, jnp.zeros_like(self.dirty), self.block)
+
+    def dirty_count(self) -> jax.Array:
+        return jnp.sum(self.dirty.astype(jnp.int32))
+
+    def dirty_interval(self) -> tuple[jax.Array, jax.Array]:
+        """(lo, hi) block interval covering all dirty blocks; lo == hi == 0
+        when clean.  Interval form is what the serving path propagates —
+        every layer rule (causal attention, windowed attention, recurrence)
+        maps intervals to intervals (see prefill.py)."""
+        nb = self.num_blocks
+        idx = jnp.arange(nb)
+        any_dirty = jnp.any(self.dirty)
+        lo = jnp.min(jnp.where(self.dirty, idx, nb))
+        hi = jnp.max(jnp.where(self.dirty, idx + 1, 0))
+        return (jnp.where(any_dirty, lo, 0).astype(jnp.int32),
+                jnp.where(any_dirty, hi, 0).astype(jnp.int32))

@@ -1,0 +1,277 @@
+"""Incremental prefill: change propagation through the serving path.
+
+The serving-side integration of the paper's technique.  A prompt of S
+tokens was prefilled once (initial run, KV cache = the memoized trace).
+The prompt is then *edited* — k tokens change (typically late in the
+prompt: a revised instruction, an updated retrieval chunk).  Instead of
+re-running prefill from scratch, ``incremental_prefill`` re-establishes
+the exact cache by re-executing only the *affected* positions.
+
+Affected-position analysis per layer type (DESIGN.md §Adaptation):
+
+  * token-local ops (embed, norms, q/k/v projections, MLP, MoE routing —
+    MoE routing is per-token!): position p affected iff token p changed;
+  * causal global attention: position p reads all kv <= p, so the dirty
+    set is the suffix [p0, S), p0 = first changed position.  Suffixes are
+    a fixed point of every rule, so the whole network propagates the
+    single interval [p0, S) — the RSP-tree mark phase collapses to one
+    interval comparison;
+  * the value-equality write cutoff (paper Algorithm 2) applies at cache
+    granularity: unchanged prefix cache blocks are never touched.
+
+Work: O((S - p0) / S) of a full prefill per layer — for the common
+"edit near the end" case this is the same order of savings the paper
+reports for its dynamic-sequence benchmarks.  The continuation for the
+suffix queries attends over [0, S) using the cached prefix K/V, with the
+flash block-skip honoring the causal offset.
+
+``p0`` is static per compilation (bucketed to the attention block size),
+the standard shape-bucketing of production serving systems; the jit cache
+holds one executable per bucket.
+
+Supported families: dense, vlm (text edits), moe (GQA and MLA paths,
+dense-residual and dense-prefix layers included).  Not supported (see
+DESIGN.md §Arch-applicability): ssm/hybrid (recurrent state would need
+checkpointed per-interval states — the RSP-tree analogue for scans) and
+encdec (bidirectional encoder attention has unbounded propagation:
+every encoder position reads every other, so the computation distance of
+any edit is Θ(n) and from-scratch is optimal — the paper's own framework
+predicts this).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import mla as mla_mod
+from ..models import moe as moe_mod
+from ..models.attention import _blocked_attention, _naive_attention
+from ..models.layers import apply_norm, apply_rope, embed_tokens, lm_logits, mlp_fwd, rope
+from ..models.lm import _res
+
+__all__ = ["incremental_prefill", "continue_prefill", "prefill_distance"]
+
+SUPPORTED = ("dense", "vlm", "moe")
+
+
+# ---------------------------------------------------------------------------
+# Change analysis (host side — the mark phase)
+# ---------------------------------------------------------------------------
+def prefill_distance(old_tokens, new_tokens, *, block: int = 512,
+                     prefix_offset: int = 0) -> Dict[str, Any]:
+    """Computation distance of a prompt edit (Definition 4.2 analogue).
+
+    Returns the first changed position p0 (bucketed down to ``block``),
+    the number of recomputed positions, and the work-savings ratio
+    (positions saved / total) that the interval rule realizes.
+    """
+    import numpy as np
+
+    old = np.asarray(old_tokens)
+    new = np.asarray(new_tokens)
+    assert old.shape == new.shape
+    S = old.shape[-1] + prefix_offset
+    diff = (old != new).any(axis=0) if old.ndim == 2 else (old != new)
+    idx = np.nonzero(diff)[0]
+    if len(idx) == 0:
+        return dict(p0=S, p0_bucket=S, recompute=0, total=S, savings=float("inf"),
+                    changed_tokens=0)
+    p0 = int(idx[0]) + prefix_offset
+    p0_bucket = (p0 // block) * block
+    rec = S - p0_bucket
+    return dict(p0=p0, p0_bucket=p0_bucket, recompute=rec, total=S,
+                savings=S / rec, changed_tokens=int(diff.sum()))
+
+
+# ---------------------------------------------------------------------------
+# Continuation layers (the re-executed readers)
+# ---------------------------------------------------------------------------
+def _attn_continue(cfg, p, x, positions, cache_k, cache_v, p0: int,
+                   *, impl: str):
+    """GQA attention for suffix queries against (prefix cache + new kv).
+
+    x: [B, S-p0, D]; cache_k/v: [B, S, KV, hd] (prefix rows valid).
+    Returns (out, (k_full, v_full)) with suffix rows refreshed.
+    """
+    hd = p["wq"].shape[-1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_suf = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_suf = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    sin, cos = rope(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k_suf = apply_rope(k_suf, sin, cos)
+    k_full = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_suf.astype(cache_k.dtype), p0, axis=1)
+    v_full = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_suf.astype(cache_v.dtype), p0, axis=1)
+    # End-aligned attention: query i sits at absolute position p0 + i.
+    Sq = q.shape[1]
+    if impl == "blocked" and Sq >= 1024:
+        o = _blocked_attention(q, k_full.astype(q.dtype), v_full.astype(q.dtype),
+                               causal=True, window=0, q_block=512, kv_block=512)
+    else:
+        o = _naive_attention(q, k_full.astype(q.dtype), v_full.astype(q.dtype),
+                             causal=True, window=0)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (k_full, v_full)
+
+
+def _mla_continue(cfg, p, x, positions, cache_ckv, cache_krope, p0: int,
+                  *, impl: str):
+    """MLA (expanded form) for suffix queries against the latent cache."""
+    B = x.shape[0]
+    H = cfg.num_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q_nope, q_rope = mla_mod._project_q(cfg, p, x, positions)
+    c_suf, kr_suf = mla_mod._project_kv_latent(cfg, p, x, positions)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_suf.astype(cache_ckv.dtype), p0, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, kr_suf.astype(cache_krope.dtype), p0, axis=1)
+    S = ckv.shape[1]
+    # Expand keys/values for the full context from the latent cache (the
+    # same expansion full prefill performs; the *savings* are every other
+    # op on the prefix — norms, q path, MLP/MoE, and all later layers).
+    k_nope = jnp.einsum("bsc,chk->bshk", ckv.astype(x.dtype), p["wk_b"])
+    v = jnp.einsum("bsc,chk->bshk", ckv.astype(x.dtype), p["wv_b"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope.astype(x.dtype)[:, :, None, :],
+                                  (B, S, H, dr))], axis=-1)
+    Sq = q.shape[1]
+    if impl == "blocked" and Sq >= 1024:
+        o = _blocked_attention(q, k, v, causal=True, window=0,
+                               q_block=512, kv_block=512)
+    else:
+        o = _naive_attention(q, k, v, causal=True, window=0)
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    return out, (ckv, krope)
+
+
+def _block_continue(cfg, p, x, positions, cache_pair, p0, *, moe: bool,
+                    impl: str):
+    """One transformer block on the dirty suffix (mirrors lm._attn_*_block)."""
+    h = apply_norm(cfg, p["ln1"], x)
+    if cfg.attention == "mla":
+        a, upd = _mla_continue(cfg, p["attn"], h, positions,
+                               cache_pair[0], cache_pair[1], p0, impl=impl)
+    else:
+        a, upd = _attn_continue(cfg, p["attn"], h, positions,
+                                cache_pair[0], cache_pair[1], p0, impl=impl)
+    x = _res(cfg, x, a)
+    h = apply_norm(cfg, p["ln2"], x)
+    if moe:
+        mo, _aux = moe_mod.moe_fwd(cfg, p["moe"], h)
+        if cfg.moe_dense_residual:
+            mo = mo + mlp_fwd(cfg, p["mlp"], h)
+        x = _res(cfg, x, mo)
+    else:
+        x = _res(cfg, x, mlp_fwd(cfg, p["mlp"], h))
+    return x, upd
+
+
+# ---------------------------------------------------------------------------
+# Continuation backbone
+# ---------------------------------------------------------------------------
+def continue_prefill(cfg, params, batch, cache, p0: int, *,
+                     impl: str = "blocked"):
+    """Re-execute prefill for positions [p0, S) against an existing cache.
+
+    ``batch['tokens']`` is the FULL (edited) token array; the suffix is
+    sliced internally so the caller's shapes never depend on p0.  Returns
+    (last-token logits, refreshed cache) — bit-identical to
+    ``lm_prefill`` on the edited prompt when cache_dtype == activations.
+    """
+    fam = cfg.family
+    if fam not in SUPPORTED:
+        raise NotImplementedError(
+            f"incremental prefill not supported for family '{fam}' "
+            "(see DESIGN.md §Arch-applicability)")
+    from ..models.attention import inference_mode
+    from ..models.moe import dropless_moe
+
+    with inference_mode(), dropless_moe():
+        return _continue_prefill(cfg, params, batch, cache, p0, impl=impl)
+
+
+def _continue_prefill(cfg, params, batch, cache, p0: int, *, impl: str):
+    fam = cfg.family
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    prefix = 0
+    if fam == "vlm":
+        prefix = cfg.num_patches
+        assert p0 >= prefix, "edits inside the patch prefix need full prefill"
+    S = tokens.shape[1] + prefix
+    assert 0 <= p0 < S, (p0, S)
+
+    tok_suf = tokens[:, p0 - prefix:]
+    x = embed_tokens(cfg, params["tok"], tok_suf)
+    positions = jnp.broadcast_to(jnp.arange(p0, S)[None, :], (B, S - p0))
+
+    new_cache = dict(cache)
+    if fam == "moe" and cfg.moe_dense_layers:
+        cpair = ((cache["d_ckv"], cache["d_krope"]) if cfg.attention == "mla"
+                 else (cache["d_k"], cache["d_v"]))
+
+        def dblk(x, inp):
+            pl, ck, cv = inp
+            x, upd = _block_continue(cfg, pl, x, positions, (ck, cv), p0,
+                                     moe=False, impl=impl)
+            return x, upd
+
+        x, upd = jax.lax.scan(dblk, x, (params["dense_blocks"],) + cpair)
+        if cfg.attention == "mla":
+            new_cache["d_ckv"], new_cache["d_krope"] = upd
+        else:
+            new_cache["d_k"], new_cache["d_v"] = upd
+
+    cpair = ((cache["ckv"], cache["krope"]) if cfg.attention == "mla"
+             else (cache["k"], cache["v"]))
+
+    def blk(x, inp):
+        pl, ck, cv = inp
+        x, upd = _block_continue(cfg, pl, x, positions, (ck, cv), p0,
+                                 moe=(fam == "moe"), impl=impl)
+        return x, upd
+
+    x, upd = jax.lax.scan(blk, x, (params["blocks"],) + cpair)
+    if cfg.attention == "mla":
+        new_cache["ckv"], new_cache["krope"] = upd
+    else:
+        new_cache["k"], new_cache["v"] = upd
+
+    logits = lm_logits(cfg, params["tok"], x[:, -1:, :])
+    return logits, new_cache
+
+
+def incremental_prefill(model, params, old_tokens, new_tokens, cache,
+                        *, batch_extra: Optional[Dict] = None,
+                        block: int = 512, impl: str = "blocked"):
+    """Edit-and-propagate: diff the prompts, re-run only the dirty suffix.
+
+    Returns (logits, new_cache, distance_info).  Compiles one executable
+    per p0 bucket (standard serving shape-bucketing).
+    """
+    cfg = model.cfg
+    prefix = cfg.num_patches if cfg.family == "vlm" else 0
+    info = prefill_distance(old_tokens, new_tokens, block=block,
+                            prefix_offset=prefix)
+    if info["changed_tokens"] == 0:
+        return None, cache, info
+    p0 = info["p0_bucket"]
+    batch = dict(batch_extra or {})
+    batch["tokens"] = new_tokens
+    logits, new_cache = _jitted_continue(cfg, p0, impl)(params, batch, cache)
+    return logits, new_cache, info
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_continue(cfg, p0: int, impl: str):
+    def fn(params, batch, cache):
+        return continue_prefill(cfg, params, batch, cache, p0, impl=impl)
+
+    return jax.jit(fn)

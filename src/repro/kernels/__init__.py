@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots of the serving path.
+
+  * flash_attention — grouped-query streaming-softmax attention with
+    causal/window block skip and query offset (incremental prefill).
+  * dirty_reduce    — dirty-masked tree-reduction level: change
+    propagation's "skip unmarked subtrees" as BlockSpec machinery.
+  * grouped_matmul  — block-diagonal expert GEMM (dropless MoE tile map).
+
+Each kernel is written against TPU (pl.pallas_call + BlockSpec VMEM
+tiling) and validated on CPU via interpret mode against the pure-jnp
+oracles in ``ref.py`` (tests/test_kernels.py sweeps shapes and dtypes).
+"""
+from .ops import flash_attention, dirty_reduce_level, grouped_matmul
+
+__all__ = ["flash_attention", "dirty_reduce_level", "grouped_matmul"]

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: one level of dirty-masked tree reduction.
+
+The compute hot-spot of ``repro.jaxsac.reduce``: combining children into
+parents during change propagation, where most parents are *clean* (their
+children's aggregates did not change).  The kernel skips clean parent
+tiles entirely — the scalar-prefetched per-tile dirty flags steer
+``pl.when``, so a clean tile's body never executes.  Because a "clean"
+parent recomputes to a bitwise-identical value by determinism (paper,
+Definition 4.1), dirty tiles can recompute *all* their rows; no per-row
+select is needed.
+
+This is the paper's mark-guided traversal as BlockSpec machinery: the
+dirty flags are the marks, tiles are subtrees, skipped tiles are unmarked
+branches change propagation never descends.
+
+Layout: children [P, 2, W] (parent-major pairs), parents [P, W]; tiles of
+``block`` parents; W should be a multiple of 128 lanes on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["dirty_reduce_level_call"]
+
+
+def _kernel(tile_dirty_ref, kids_ref, old_ref, out_ref):
+    t = pl.program_id(0)
+
+    @pl.when(tile_dirty_ref[t] != 0)
+    def _recompute():
+        out_ref[...] = kids_ref[:, 0, :] + kids_ref[:, 1, :]
+
+    @pl.when(tile_dirty_ref[t] == 0)
+    def _keep():
+        out_ref[...] = old_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dirty_reduce_level_call(
+    children: jax.Array,     # [P, 2, W]
+    old_parents: jax.Array,  # [P, W]
+    dirty: jax.Array,        # [P] bool — parent-level marks
+    *,
+    block: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    P, two, W = children.shape
+    assert two == 2 and old_parents.shape == (P, W)
+    assert P % block == 0, (P, block)
+    tiles = P // block
+    tile_dirty = jnp.any(dirty.reshape(tiles, block), axis=1).astype(jnp.int32)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(tiles,),
+            in_specs=[
+                pl.BlockSpec((block, 2, W), lambda t, s: (t, 0, 0)),
+                pl.BlockSpec((block, W), lambda t, s: (t, 0)),
+            ],
+            out_specs=pl.BlockSpec((block, W), lambda t, s: (t, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((P, W), old_parents.dtype),
+        interpret=interpret,
+    )(tile_dirty, children, old_parents)

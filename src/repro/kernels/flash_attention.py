@@ -1,0 +1,142 @@
+"""Pallas TPU flash-attention forward kernel (grouped-query, causal/window).
+
+Mirrors the pure-JAX oracle in ``repro.models.flash`` block-for-block:
+streaming softmax over KV tiles with fp32 running (m, l, acc) carried in
+VMEM scratch across the innermost (sequential) grid dimension.  The
+causal/window *block skip* — tiles that the mask fully excludes perform
+no compute — is the kernel-level analogue of change propagation never
+descending unmarked RSP subtrees.
+
+Grid: (B*KV*G heads, query tiles, kv tiles); the kv axis iterates
+sequentially per TPU grid semantics, so scratch persists across it.
+BlockSpecs keep one (q_block, head_dim) query tile, one (kv_block,
+head_dim) KV tile and the fp32 accumulators resident in VMEM:
+
+    VMEM footprint ~ q_block*hd + 2*kv_block*hd + q_block*(hd+256) floats
+    (for the default 128/512 blocks and hd=128: ~0.6 MiB << 16 MiB/core)
+
+``offset`` places query row i at absolute position offset+i, which is how
+incremental prefill re-runs only suffix rows against the full cache.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel_call"]
+
+NEG_INF = -2.0e38
+LANES = 128  # TPU lane width: (q_block, LANES) layout for m/l scratch
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window: int, offset: int, scale: float,
+            q_block: int, kv_block: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Tile-level mask reach: absolute query rows [q_lo, q_lo + q_block),
+    # kv columns [k_lo, k_lo + kv_block).
+    q_lo = offset + qi * q_block
+    k_lo = kj * kv_block
+    relevant = True
+    if causal:
+        relevant = jnp.asarray(k_lo <= q_lo + q_block - 1)
+    if window:
+        relevant = jnp.logical_and(
+            relevant, k_lo + kv_block - 1 > q_lo - window)
+
+    @pl.when(relevant)
+    def _tile():
+        q = q_ref[0]                          # [qb, hd]
+        k = k_ref[0]                          # [kb, hd]
+        v = v_ref[0]                          # [kb, hv]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [qb, kb]
+        if causal or window:
+            iq = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            jk = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            mask = jnp.ones_like(s, dtype=jnp.bool_)
+            if causal:
+                mask = jnp.logical_and(mask, jk <= iq)
+            if window:
+                mask = jnp.logical_and(mask, jk > iq - window)
+            s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                  # [qb]
+        l_prev = l_ref[:, 0]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])       # [qb, kb] f32
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(kj == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "offset", "q_block", "kv_block",
+                     "g", "interpret"),
+)
+def flash_attention_kernel_call(
+    qh: jax.Array,      # [BH, Sq, hd]  (BH = B * KV * G)
+    kh: jax.Array,      # [BKV, Skv, hd]
+    vh: jax.Array,      # [BKV, Skv, hv]
+    *,
+    g: int,             # query heads per kv head (BH = BKV * g)
+    causal: bool,
+    window: int = 0,
+    offset: int = 0,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    BH, Sq, hd = qh.shape
+    BKV, Skv, hv = vh.shape
+    assert BH == BKV * g, (BH, BKV, g)
+    assert Sq % q_block == 0 and Skv % kv_block == 0
+    nq, nk = Sq // q_block, Skv // kv_block
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, offset=offset, scale=scale,
+        q_block=q_block, kv_block=kv_block)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda bh, qi, kj, g=g: (bh // g, kj, 0)),
+            pl.BlockSpec((1, kv_block, hv), lambda bh, qi, kj, g=g: (bh // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hv), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hv), qh.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, LANES), jnp.float32),   # running max m
+            pltpu.VMEM((q_block, LANES), jnp.float32),   # running sum l
+            pltpu.VMEM((q_block, hv), jnp.float32),      # output accumulator
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)

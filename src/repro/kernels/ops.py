@@ -1,0 +1,63 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op validates shapes, reshapes model-layout tensors into kernel
+layout, and picks interpret mode automatically (Pallas interprets the
+kernel body in Python off-TPU; on TPU hardware it compiles via Mosaic).
+Every op has a pure-jnp oracle in ``ref.py`` and an allclose sweep in
+``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_kernel_call
+from .dirty_reduce import dirty_reduce_level_call
+from .grouped_matmul import grouped_matmul_call
+
+__all__ = ["flash_attention", "dirty_reduce_level", "grouped_matmul"]
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, offset: int = 0,
+                    q_block: int = 128, kv_block: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """Grouped-query flash attention (model layout).
+
+    q: [B, Sq, KV, G, hd]; k: [B, Skv, KV, hd]; v: [B, Skv, KV, hv]
+    -> [B, Sq, KV, G, hv].
+    """
+    B, Sq, KV, G, hd = q.shape
+    Skv = k.shape[1]
+    hv = v.shape[-1]
+    qh = jnp.transpose(q, (0, 2, 3, 1, 4)).reshape(B * KV * G, Sq, hd)
+    kh = jnp.transpose(k, (0, 2, 1, 3)).reshape(B * KV, Skv, hd)
+    vh = jnp.transpose(v, (0, 2, 1, 3)).reshape(B * KV, Skv, hv)
+    oh = flash_attention_kernel_call(
+        qh, kh, vh, g=G, causal=causal, window=window, offset=offset,
+        q_block=q_block, kv_block=kv_block,
+        interpret=_default_interpret() if interpret is None else interpret)
+    o = oh.reshape(B, KV, G, Sq, hv)
+    return jnp.transpose(o, (0, 3, 1, 2, 4))
+
+
+def dirty_reduce_level(children: jax.Array, old_parents: jax.Array,
+                       dirty: jax.Array, *, block: int = 8,
+                       interpret: bool | None = None) -> jax.Array:
+    """One dirty-masked reduction level: children [P,2,W] -> parents [P,W]."""
+    return dirty_reduce_level_call(
+        children, old_parents, dirty, block=block,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
+                   mb: int = 128, fb: int = 128,
+                   interpret: bool | None = None) -> jax.Array:
+    """Dropless-MoE grouped matmul, ragged_dot semantics."""
+    return grouped_matmul_call(
+        x, w, group_sizes, mb=mb, fb=fb,
+        interpret=_default_interpret() if interpret is None else interpret)

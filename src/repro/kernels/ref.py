@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "dirty_reduce_level_ref",
+           "grouped_matmul_ref"]
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, window: int = 0,
+                        offset: int = 0) -> jax.Array:
+    """Grouped-query attention, materialized scores, fp32 softmax.
+
+    q: [B, Sq, KV, G, hd]; k: [B, Skv, KV, hd]; v: [B, Skv, KV, hv]
+    -> [B, Sq, KV, G, hv].  Query row i sits at absolute position
+    offset + i; kv row j at position j.
+    """
+    B, Sq, KV, G, hd = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    iq = offset + jnp.arange(Sq)[:, None]
+    jk = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= jk <= iq
+    if window:
+        mask &= jk > iq - window
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return o.astype(q.dtype)
+
+
+def dirty_reduce_level_ref(children: jax.Array, old_parents: jax.Array,
+                           dirty: jax.Array) -> jax.Array:
+    """children: [P, 2, W]; dirty parents recompute, clean keep old."""
+    new = children[:, 0, :] + children[:, 1, :]
+    return jnp.where(dirty[:, None], new.astype(old_parents.dtype),
+                     old_parents)
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array,
+                       group_sizes: jax.Array) -> jax.Array:
+    """x: [M, D] grouped by expert; w: [E, D, F]; -> [M, F].
+
+    Row m belongs to group g iff sum(group_sizes[:g]) <= m <
+    sum(group_sizes[:g+1]); rows past sum(group_sizes) produce zeros.
+    """
+    M, D = x.shape
+    E, _, F = w.shape
+    bounds = jnp.cumsum(group_sizes)
+    gid = jnp.searchsorted(bounds, jnp.arange(M), side="right")
+    valid = jnp.arange(M) < bounds[-1]
+    w_rows = w[jnp.minimum(gid, E - 1)]               # [M, D, F]
+    out = jnp.einsum("md,mdf->mf", x, w_rows)
+    return jnp.where(valid[:, None], out, 0).astype(x.dtype)

@@ -1,0 +1,8 @@
+"""Launch layer: meshes, partitioning, dry-run, train/serve entry points.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS at import (512 host devices)
+and must only be imported as a __main__ script, never from library code.
+"""
+from .mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh"]

@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+# ^^ MUST run before any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell against the production meshes and record memory / cost / collective
+analyses.
+
+For each cell this driver:
+  1. builds the exact assigned config and ShapeDtypeStruct inputs,
+  2. resolves parameter/optimizer/input shardings for the mode
+     (train_step for train shapes, prefill/serve_step for serving shapes),
+  3. ``jax.jit(...).lower(...).compile()`` on the 16x16 single-pod mesh
+     and the 2x16x16 multi-pod mesh,
+  4. records ``memory_analysis()`` (proves the cell fits per-device HBM),
+    ``cost_analysis()`` and the HLO-derived roofline inputs (FLOPs, bytes,
+    per-collective bytes with loop trip counts applied) into
+    ``results/dryrun/<mesh>/<arch>__<shape>.json``.
+
+Runs are resumable: existing result files are skipped unless --force.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, canonical, get_config
+from ..models import SHAPES, build_model, shape_by_name
+from ..models.api import input_axes as input_axes_fn
+from ..optim import make_optimizer, make_schedule
+from ..shardlib import rules_for_mode, shard_ctx
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+from .partition import fsdp_axes_tree, tree_to_shardings
+from .train import abstract_train_state, make_train_step
+from .serve import make_decode_step, make_prefill_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+def skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("full-attention architecture: 512k-token KV cache/attention is "
+                "quadratic — shape skipped per assignment (see DESIGN.md "
+                "§Arch-applicability)")
+    return None
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_cell(cfg, shape, mesh, *, impl_overrides=None):
+    """Return (fn, example_args, in_shardings, out_shardings) for one cell."""
+    from ..models import params as params_mod
+    from ..models.api import model_specs
+
+    impl_overrides = impl_overrides or {}
+    mode = shape.kind
+    rules = rules_for_mode(mode)
+    if shape.name == "long_500k":
+        rules = [(k, None if k == "batch" else v) for k, v in rules]
+
+    with shard_ctx(mesh, rules) as ctx:
+        model = build_model(cfg)
+        specs = model_specs(cfg)
+        in_specs = model.input_specs(shape)
+        in_ax = input_axes_fn(cfg, shape)
+        from .partition import tree_to_shardings
+
+        input_shardings = tree_to_shardings(in_ax, ctx, in_specs)
+
+        if mode == "train":
+            optimizer = make_optimizer(cfg)
+            schedule = make_schedule(cfg.lr_schedule, 3e-4, 10_000)
+            step_fn = make_train_step(model, optimizer, schedule)
+            state_abs = abstract_train_state(model, optimizer)
+            p_axes = fsdp_axes_tree(specs, ctx)
+            p_shard = tree_to_shardings(p_axes, ctx, state_abs["params"])
+            from .partition import state_shardings
+
+            opt_shard = state_shardings(cfg, ctx, state_abs["opt"], p_axes,
+                                        state_abs["params"])
+            state_shard = {"params": p_shard, "opt": opt_shard,
+                           "step": _replicated(mesh)}
+            metrics_shard = None  # let XLA replicate scalars
+            fn = step_fn
+            args = (state_abs, in_specs)
+            in_sh = (state_shard, input_shardings)
+            out_sh = (state_shard, None)
+            return fn, args, in_sh, out_sh, ctx
+
+        # serving modes: parameters TP-sharded (no FSDP overlay)
+        p_axes = params_mod.axes_tree(specs)
+        p_shard = tree_to_shardings(p_axes, ctx, model.abstract_params())
+        if mode == "prefill":
+            fn = make_prefill_step(model, impl=impl_overrides.get("impl", "blocked"))
+            args = (jax.tree.map(lambda s: s, model.abstract_params()), in_specs)
+            in_sh = (p_shard, input_shardings)
+            out_sh = None
+            return fn, args, in_sh, out_sh, ctx
+
+        # decode
+        fn = make_decode_step(
+            model, decode_impl=impl_overrides.get("decode_impl", "naive"))
+        cache_abs = in_specs["cache"]
+        args = (model.abstract_params(), cache_abs,
+                in_specs["tokens"], in_specs["pos"])
+        in_sh = (p_shard, input_shardings["cache"],
+                 input_shardings["tokens"], input_shardings["pos"])
+        out_sh = (None, None, input_shardings["cache"])
+        return fn, args, in_sh, out_sh, ctx
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             force: bool = False, impl_overrides=None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    outdir = RESULTS_DIR / mesh_kind
+    outdir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    outfile = outdir / f"{canonical(arch)}__{shape_name}{suffix}.json"
+    if outfile.exists() and not force:
+        return json.loads(outfile.read_text())
+
+    record: dict = {
+        "arch": cfg.name, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+        "kind": shape.kind, "timestamp": time.time(),
+    }
+    reason = skip_reason(cfg, shape)
+    if reason:
+        record["status"] = "skipped"
+        record["reason"] = reason
+        outfile.write_text(json.dumps(record, indent=2))
+        return record
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_dev = mesh.devices.size
+    try:
+        t0 = time.time()
+        fn, args, in_sh, out_sh, ctx = build_cell(
+            cfg, shape, mesh, impl_overrides=impl_overrides)
+        with shard_ctx(mesh, ctx.rules.items()):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo_text = compiled.as_text()
+        costs = analyze_hlo(hlo_text, n_dev)
+        record.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "devices": int(n_dev),
+            "memory": {
+                "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+                "generated_code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+            },
+            "xla_cost_analysis": {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            },
+            "hlo_costs": {
+                "flops_per_device": costs.flops,
+                "dot_flops_per_device": costs.dot_flops,
+                "conv_flops_per_device": costs.conv_flops,
+                "bytes_per_device": costs.bytes,
+                "collective_bytes_per_device": costs.collective_bytes,
+                "collective_wire_bytes_per_device": costs.collective_wire_bytes,
+                "unparsed_whiles": costs.unparsed_whiles,
+                "collectives": {
+                    k: {"count": v.count, "bytes": v.bytes,
+                        "wire_bytes": v.wire_bytes}
+                    for k, v in costs.collectives.items()
+                },
+            },
+            "hlo_len": len(hlo_text),
+        })
+        del compiled, lowered, jitted
+    except Exception as e:  # record failures — they are dry-run bugs
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        gc.collect()
+        jax.clear_caches()
+
+    outfile.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--decode-impl", default="naive")
+    ap.add_argument("--impl", default="blocked")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-head-pad", action="store_true",
+                    help="disable runtime head padding (hillclimb-A baseline)")
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="shard_map expert-parallel MoE dispatch (hillclimb B)")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((args.arch, args.shape))
+
+    overrides = {"decode_impl": args.decode_impl, "impl": args.impl}
+    if args.no_head_pad:
+        from ..models.attention import head_padding
+        head_padding(False).__enter__()
+    if args.moe_ep:
+        from ..models.moe import ep_moe
+        ep_moe(True).__enter__()
+    n_ok = n_skip = n_err = 0
+    for mesh_kind in meshes:
+        for arch, shape_name in cells:
+            t0 = time.time()
+            rec = run_cell(arch, shape_name, mesh_kind, force=args.force,
+                           impl_overrides=overrides, tag=args.tag)
+            dt = time.time() - t0
+            status = rec.get("status")
+            n_ok += status == "ok"
+            n_skip += status == "skipped"
+            n_err += status == "error"
+            mem = rec.get("memory", {})
+            tot = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)) / 2**30
+            print(f"[{mesh_kind}] {arch:24s} {shape_name:12s} {status:8s} "
+                  f"{dt:6.1f}s  mem/dev={tot:6.2f}GiB  "
+                  f"{rec.get('error', '')[:80]}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+
+
+if __name__ == "__main__":
+    main()

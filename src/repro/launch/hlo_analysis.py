@@ -1,0 +1,481 @@
+"""Static analysis of compiled (post-SPMD) HLO for roofline accounting.
+
+``compiled.cost_analysis()`` on XLA:CPU counts a ``while`` body ONCE —
+lax.scan-stacked layers would be undercounted by a factor of L.  This
+module re-derives FLOPs / HBM bytes / collective bytes from the optimized
+HLO text, multiplying loop bodies by their trip counts (parsed from the
+loop-condition constants), so the roofline terms reflect what a TPU would
+actually execute per step.
+
+Cost model:
+  * FLOPs — 2 * prod(result_dims) * prod(lhs_contracting_dims) for every
+    ``dot``; convolutions analogously.  Elementwise FLOPs are excluded
+    (sub-2% for these workloads; dominated by matmuls).
+  * bytes — for every substantive instruction: sum of operand sizes plus
+    result size (the standard HLO bytes-accessed model: every operand is
+    read once from HBM, every result written once; fusions count as one
+    instruction so fused intermediates are free, matching TPU behaviour).
+  * collectives — operand bytes per device, recorded per collective type
+    with the participating group size, plus estimated wire bytes using
+    ring-algorithm factors (all-reduce 2(n-1)/n, gather/scatter (n-1)/n).
+
+Shapes in post-SPMD HLO are per-device, so every term is per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCosts", "CollectiveStats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id",
+    "replica-id", "iota",
+}
+
+
+@dataclasses.dataclass
+class Shape:
+    dtype: str
+    dims: Tuple[int, ...]
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return self.elems * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    shapes: List[Shape]            # result shapes (tuple flattened)
+    operands: List[str]
+    attrs: str
+    raw_operands: str = ""
+
+    @property
+    def out_bytes(self) -> int:
+        return sum(s.bytes for s in self.shapes)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: int = 0
+    bytes: int = 0            # operand bytes per device (x trip counts)
+    wire_bytes: float = 0.0   # estimated per-device wire traffic
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, CollectiveStats] = dataclasses.field(default_factory=dict)
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    unparsed_whiles: int = 0
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(c.bytes for c in self.collectives.values())
+
+    @property
+    def collective_wire_bytes(self) -> float:
+        return sum(c.wire_bytes for c in self.collectives.values())
+
+    def add(self, other: "HloCosts", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.dot_flops += other.dot_flops * mult
+        self.conv_flops += other.conv_flops * mult
+        self.unparsed_whiles += other.unparsed_whiles
+        for k, v in other.collectives.items():
+            c = self.collectives.setdefault(k, CollectiveStats())
+            c.count += int(v.count * mult)
+            c.bytes += int(v.bytes * mult)
+            c.wire_bytes += v.wire_bytes * mult
+
+
+# ---------------------------------------------------------------------------
+# Parsing
+# ---------------------------------------------------------------------------
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*?)\)(.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->\s+.+\s*\{\s*$")
+
+
+def _parse_shapes(type_str: str) -> List[Shape]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype = m.group(1)
+        if dtype not in _DTYPE_BYTES and dtype != "token":
+            # e.g. 'f32' without brackets won't match; scalars appear as
+            # f32[] with empty dims.
+            pass
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        if dtype in _DTYPE_BYTES:
+            out.append(Shape(dtype, dims))
+    if not out and "[]" in type_str:
+        dt = type_str.split("[")[0].strip().lstrip("(")
+        if dt in _DTYPE_BYTES:
+            out.append(Shape(dt, ()))
+    return out
+
+
+def _parse_operands(s: str) -> List[str]:
+    ops = []
+    for part in s.split(","):
+        part = part.strip()
+        if part.startswith("%"):
+            ops.append(part[1:])
+        else:
+            # typed operand like "f32[8,16] %name" or a literal
+            m = re.search(r"%([\w\.\-]+)", part)
+            if m:
+                ops.append(m.group(1))
+    return ops
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        # name -> result shapes, across all computations (names are unique
+        # module-wide in optimized HLO).
+        self.shape_of: Dict[str, List[Shape]] = {}
+        for comp in self.computations.values():
+            for ins in comp:
+                self.shape_of[ins.name] = ins.shapes
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            hdr = _COMP_HDR_RE.match(line.strip())
+            if hdr and line.strip().endswith("{"):
+                cur = hdr.group(1)
+                self.computations[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, type_str, op, operands, attrs = m.groups()
+            self.computations[cur].append(
+                Instr(name, op, _parse_shapes(type_str),
+                      _parse_operands(operands), attrs, raw_operands=operands)
+            )
+
+
+# ---------------------------------------------------------------------------
+# Cost walking
+# ---------------------------------------------------------------------------
+def _attr_called(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w\.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _group_size(attrs: str, total_devices: int) -> int:
+    # replica_groups=[2,4]<=[8]  -> groups of 4
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    # explicit groups {{0,1,2,3},{...}}
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+class _Walker:
+    def __init__(self, module: HloModule, total_devices: int):
+        self.module = module
+        self.n = total_devices
+
+    def comp_cost(self, comp_name: str, _depth=0) -> HloCosts:
+        costs = HloCosts()
+        comp = self.module.computations.get(comp_name)
+        if comp is None or _depth > 12:
+            return costs
+        for ins in comp:
+            if ins.op == "while":
+                cond = _attr_called(ins.attrs, "condition")
+                body = _attr_called(ins.attrs, "body")
+                trips = self._trip_count(cond)
+                if trips is None:
+                    trips = 1
+                    costs.unparsed_whiles += 1
+                if body:
+                    costs.add(self.comp_cost(body, _depth + 1), trips)
+                if cond:
+                    costs.add(self.comp_cost(cond, _depth + 1), trips)
+                continue
+            if ins.op in ("call", "async-start"):
+                tgt = _attr_called(ins.attrs, "to_apply") or _attr_called(ins.attrs, "called_computation")
+                if tgt:
+                    costs.add(self.comp_cost(tgt, _depth + 1))
+                continue
+            if ins.op == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    tgt = _attr_called(ins.attrs, key)
+                    if tgt:
+                        costs.add(self.comp_cost(tgt, _depth + 1))
+                m = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+                if m:
+                    for t in m.group(1).split(","):
+                        costs.add(self.comp_cost(t.strip().lstrip("%"), _depth + 1))
+                continue
+            if ins.op == "fusion":
+                tgt = _attr_called(ins.attrs, "calls")
+                if tgt:
+                    sub = self.comp_cost(tgt, _depth + 1)
+                    # fused intermediates are registers: count only flops
+                    costs.flops += sub.flops
+                    costs.dot_flops += sub.dot_flops
+                    costs.conv_flops += sub.conv_flops
+                # fusion bytes: operands + result
+                costs.bytes += self._io_bytes(ins)
+                continue
+            if ins.op in COLLECTIVE_OPS or (
+                ins.op == "custom-call" and any(c in ins.attrs for c in COLLECTIVE_OPS)
+            ):
+                opname = ins.op if ins.op in COLLECTIVE_OPS else "custom-collective"
+                b = self._operand_bytes(ins)
+                g = _group_size(ins.attrs, self.n)
+                st = costs.collectives.setdefault(opname, CollectiveStats())
+                st.count += 1
+                st.bytes += b
+                st.wire_bytes += _wire_factor(opname, g) * _wire_base(opname, ins, b)
+                costs.bytes += self._io_bytes(ins)
+                continue
+            if ins.op == "dot":
+                f = self._dot_flops(ins)
+                costs.flops += f
+                costs.dot_flops += f
+                costs.bytes += self._io_bytes(ins)
+                continue
+            if ins.op == "convolution":
+                f = self._conv_flops(ins)
+                costs.flops += f
+                costs.conv_flops += f
+                costs.bytes += self._io_bytes(ins)
+                continue
+            if ins.op == "custom-call" and "matmul" in ins.attrs:
+                f = self._custom_matmul_flops(ins)
+                costs.flops += f
+                costs.dot_flops += f
+                costs.bytes += self._io_bytes(ins)
+                continue
+            if ins.op in _SKIP_BYTES_OPS:
+                continue
+            costs.bytes += self._io_bytes(ins)
+        return costs
+
+    # -- helpers ---------------------------------------------------------
+    def _trip_count(self, cond_name: Optional[str]) -> Optional[int]:
+        if cond_name is None:
+            return None
+        comp = self.module.computations.get(cond_name)
+        if comp is None:
+            return None
+        best: Optional[int] = None
+        for ins in comp:
+            if ins.op == "constant" and ins.shapes and ins.shapes[0].dims == ():
+                m = re.fullmatch(r"\s*(\d+)\s*", ins.raw_operands or "")
+                if m:
+                    v = int(m.group(1))
+                    best = v if best is None else max(best, v)
+        return best
+
+    def _operand_bytes(self, ins: Instr) -> int:
+        total = 0
+        for op in ins.operands:
+            shapes = self.module.shape_of.get(op)
+            if shapes:
+                total += sum(s.bytes for s in shapes)
+        return total
+
+    def _io_bytes(self, ins: Instr) -> int:
+        # In-place slice semantics (TPU DMA reality): a dynamic-slice reads
+        # only the slice, a dynamic-update-slice read-modify-writes only the
+        # update region, a gather reads only the gathered rows.  Counting
+        # their full operands would charge a lax.scan over stacked layer
+        # parameters the whole stack per iteration — a 40x overcount
+        # observed on every scanned LM (EXPERIMENTS.md §Perf, hillclimb A).
+        if ins.op in ("dynamic-slice", "gather"):
+            return 2 * ins.out_bytes
+        if ins.op in ("dynamic-update-slice", "scatter"):
+            upd = 0
+            if len(ins.operands) >= 2:
+                shapes = self.module.shape_of.get(ins.operands[1])
+                if shapes:
+                    upd = sum(s.bytes for s in shapes)
+            return max(2 * upd, 1)
+        if ins.op == "fusion":
+            return self._fusion_bytes(ins)
+        return self._operand_bytes(ins) + ins.out_bytes
+
+    def _fusion_bytes(self, ins: Instr) -> int:
+        """Fusion bytes with slice-aware parameter accounting.
+
+        A fused computation's parameter that is consumed *only* by
+        dynamic-slice/gather ops is streamed at slice granularity; the
+        fusion output, when rooted at dynamic-update-slice, writes only
+        the update region (XLA aliases the buffer in place)."""
+        tgt = _attr_called(ins.attrs, "calls")
+        comp = self.module.computations.get(tgt) if tgt else None
+        if comp is None:
+            return self._operand_bytes(ins) + ins.out_bytes
+        # Parameters are matched to fusion operands by their declared index
+        # (``parameter(4)``), NOT by order of appearance in the body.
+        params_with_idx = []
+        for pos, i in enumerate(p for p in comp if p.op == "parameter"):
+            m = re.fullmatch(r"\s*(\d+)\s*", i.raw_operands or "")
+            params_with_idx.append((int(m.group(1)) if m else pos, i.name))
+        params_with_idx.sort()
+        param_order: List[str] = [name for _, name in params_with_idx]
+        # Layout/dtype plumbing between a parameter and its slice must not
+        # hide the slice: follow single-operand transparent chains.
+        _TRANSPARENT = {"bitcast", "copy", "reshape", "transpose", "convert",
+                        "bitcast-convert"}
+        alias: Dict[str, str] = {p: p for p in param_order}
+        for inner in comp:
+            if inner.op in _TRANSPARENT and inner.operands and \
+                    inner.operands[0] in alias:
+                alias[inner.name] = alias[inner.operands[0]]
+        sliced_reads: Dict[str, int] = {}
+        full_params: set = set()
+        for inner in comp:
+            if inner.op == "parameter" or inner.name in alias and \
+                    inner.op in _TRANSPARENT:
+                continue
+            for opnd in inner.operands:
+                src = alias.get(opnd)
+                if src is None:
+                    continue
+                if inner.op in ("dynamic-slice", "gather") and \
+                        opnd == inner.operands[0]:
+                    sliced_reads[src] = sliced_reads.get(src, 0) + \
+                        inner.out_bytes
+                elif inner.op == "dynamic-update-slice" and \
+                        opnd == inner.operands[0]:
+                    pass  # written through in place; charged at the root
+                else:
+                    full_params.add(src)
+        total = 0
+        for i, pname in enumerate(param_order):
+            if i >= len(ins.operands):
+                break
+            shapes = self.module.shape_of.get(ins.operands[i])
+            full = sum(s.bytes for s in shapes) if shapes else 0
+            if pname in full_params:
+                total += full
+            else:
+                total += min(sliced_reads.get(pname, 0), full)
+        root = comp[-1] if comp else None
+        if root is not None and root.op == "dynamic-update-slice" and \
+                len(root.operands) >= 2:
+            upd_shapes = self.module.shape_of.get(root.operands[1])
+            total += 2 * (sum(s.bytes for s in upd_shapes)
+                          if upd_shapes else 0)
+        else:
+            total += ins.out_bytes
+        return total
+
+    def _dot_flops(self, ins: Instr) -> float:
+        if not ins.shapes or not ins.operands:
+            return 0.0
+        out_elems = ins.shapes[0].elems
+        lhs = self.module.shape_of.get(ins.operands[0])
+        if not lhs:
+            return 0.0
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        k = 1
+        if m and m.group(1):
+            for d in m.group(1).split(","):
+                di = int(d)
+                if di < len(lhs[0].dims):
+                    k *= lhs[0].dims[di]
+        return 2.0 * out_elems * k
+
+    def _conv_flops(self, ins: Instr) -> float:
+        if not ins.shapes or len(ins.operands) < 2:
+            return 0.0
+        out_elems = ins.shapes[0].elems
+        ker = self.module.shape_of.get(ins.operands[1])
+        if not ker:
+            return 0.0
+        ker_elems = ker[0].elems
+        # per output element: kernel_elems / output_features MACs
+        m = re.search(r"dim_labels=\S*->\S*", ins.attrs)
+        out_feat = ins.shapes[0].dims[-1] if ins.shapes[0].dims else 1
+        fg = 1
+        g = re.search(r"feature_group_count=(\d+)", ins.attrs)
+        if g:
+            fg = int(g.group(1))
+        return 2.0 * out_elems * max(ker_elems // max(out_feat, 1), 1) / max(fg, 1) * fg
+
+    def _custom_matmul_flops(self, ins: Instr) -> float:
+        if not ins.shapes or len(ins.operands) < 2:
+            return 0.0
+        out = ins.shapes[0]
+        lhs = self.module.shape_of.get(ins.operands[0])
+        if not lhs:
+            return 0.0
+        k = lhs[0].dims[-1] if lhs[0].dims else 1
+        return 2.0 * out.elems * k
+
+
+def _wire_factor(op: str, group: int) -> float:
+    if group <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (group - 1) / group
+    if op in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (group - 1) / group
+    return 1.0  # collective-permute
+
+
+def _wire_base(op: str, ins: Instr, operand_bytes: int) -> float:
+    # all-gather wire volume scales with the *output* (gathered) size.
+    if op == "all-gather":
+        return float(ins.out_bytes)
+    return float(operand_bytes)
+
+
+def analyze_hlo(text: str, total_devices: int) -> HloCosts:
+    module = HloModule(text)
+    walker = _Walker(module, total_devices)
+    if module.entry is None:
+        return HloCosts()
+    return walker.comp_cost(module.entry)

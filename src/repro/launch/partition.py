@@ -1,0 +1,172 @@
+"""Parameter / optimizer-state partitioning: TP rules + ZeRO/FSDP overlay.
+
+Base sharding comes from each ParamSpec's logical axes resolved through
+the mode's rule table (repro.shardlib).  In training mode we additionally
+apply a ZeRO-3/FSDP overlay: every parameter's largest still-unsharded,
+divisible dimension is sharded over the 'zero' (== 'data', and 'pod' when
+present) axis.  GSPMD then materializes the classic FSDP schedule:
+all-gather params per layer on use, reduce-scatter grads, and a fully
+sharded optimizer update.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from ..models import params as params_mod
+from ..shardlib import ShardCtx
+
+__all__ = [
+    "fsdp_axes",
+    "fsdp_axes_tree",
+    "param_shardings",
+    "state_shardings",
+    "tree_to_shardings",
+]
+
+
+def fsdp_axes(
+    axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    ctx: ShardCtx,
+    zero_size: int,
+) -> Tuple[Optional[str], ...]:
+    """Overlay 'zero' onto the largest unsharded dim divisible by zero_size."""
+    if zero_size <= 1:
+        return axes
+    resolved = ctx.resolve(axes, shape)
+    best = -1
+    best_size = 0
+    for i, (ax, dim) in enumerate(zip(axes, shape)):
+        spec_entry = resolved[i] if i < len(resolved) else None
+        if spec_entry is not None:
+            continue  # already sharded by TP rules
+        if ax == "conv":
+            continue  # tiny
+        if dim % zero_size == 0 and dim > best_size:
+            best, best_size = i, dim
+    if best < 0:
+        return axes
+    new = list(axes)
+    new[best] = "zero"
+    return tuple(new)
+
+
+def fsdp_axes_tree(specs, ctx: ShardCtx) -> Any:
+    zero_size = 1
+    for ax in ("pod", "data"):
+        zero_size *= ctx.axis_sizes.get(ax, 1)
+    # 'zero' maps to ('pod','data')? rules map 'zero'->'data'; extend to pod
+    # by resolving through the rule table (rules define the target axes).
+    zero_target = ctx.rules.get("zero")
+    if zero_target is None:
+        return params_mod.axes_tree(specs)
+    if isinstance(zero_target, str):
+        zero_target = (zero_target,)
+    zero_size = 1
+    for ax in zero_target:
+        zero_size *= ctx.axis_sizes.get(ax, 1)
+
+    def leaf(s):
+        return fsdp_axes(s.axes, s.shape, ctx, zero_size)
+
+    return jax.tree.map(leaf, specs, is_leaf=lambda x: isinstance(x, params_mod.ParamSpec))
+
+
+def tree_to_shardings(axes_tree: Any, ctx: ShardCtx, shapes_tree: Any = None) -> Any:
+    """axes_tree of logical-axes tuples -> NamedShardings.  When
+    ``shapes_tree`` (same structure, leaves with .shape) is given, the
+    resolution drops mesh axes that don't divide the concrete dims."""
+    def is_axes(x):
+        return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(ctx.mesh, ctx.resolve(axes)),
+            axes_tree,
+            is_leaf=is_axes,
+        )
+    flat_axes, treedef = jax.tree.flatten(axes_tree, is_leaf=is_axes)
+    flat_shapes = jax.tree.leaves(shapes_tree)
+    assert len(flat_axes) == len(flat_shapes), (len(flat_axes), len(flat_shapes))
+    out = [
+        NamedSharding(ctx.mesh, ctx.resolve(a, s.shape))
+        for a, s in zip(flat_axes, flat_shapes)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_shardings(cfg, ctx: ShardCtx, *, fsdp: bool) -> Any:
+    from ..models.api import model_specs
+
+    specs = model_specs(cfg)
+    axes = fsdp_axes_tree(specs, ctx) if fsdp else params_mod.axes_tree(specs)
+    shapes = params_mod.abstract_tree(specs)
+    return tree_to_shardings(axes, ctx, shapes)
+
+
+def state_shardings(cfg, ctx: ShardCtx, opt_state_abstract, param_axes_tree,
+                    params_abstract) -> Any:
+    """Optimizer states mirror their parameter's sharding; factored
+    (reduced-rank) leaves drop the sharded dims they no longer have."""
+    pshard = tree_to_shardings(param_axes_tree, ctx, params_abstract)
+
+    def match(path_shard, leaf):
+        # leaf shapes may differ (factored second moments); fall back to
+        # replicated when dims don't line up.
+        return path_shard
+
+    # AdamW states mirror params exactly (same treedef under m/v).
+    import jax.tree_util as jtu
+
+    def map_state(state):
+        # state is a NamedTuple of pytrees shaped like params (or reduced).
+        out = []
+        for field in state:
+            try:
+                jtu.tree_structure(field)
+                mapped = jax.tree.map(
+                    lambda p_sh, leaf: _fit_sharding(p_sh, leaf, ctx),
+                    pshard,
+                    field,
+                )
+            except Exception:
+                mapped = jax.tree.map(lambda l: NamedSharding(ctx.mesh, jax.sharding.PartitionSpec()), field)
+            out.append(mapped)
+        return type(state)(*out)
+
+    return map_state(opt_state_abstract)
+
+
+def _fit_sharding(param_sharding: NamedSharding, leaf, ctx: ShardCtx) -> NamedSharding:
+    from jax.sharding import PartitionSpec as P
+
+    spec = param_sharding.spec
+    shape = leaf.shape
+    if len(spec) == len(shape):
+        # verify divisibility; drop axes that no longer divide
+        entries = []
+        for ax, dim in zip(spec, shape):
+            if ax is None:
+                entries.append(None)
+                continue
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= ctx.axis_sizes.get(a, 1)
+            entries.append(ax if dim % size == 0 else None)
+        return NamedSharding(ctx.mesh, P(*entries))
+    # factored leaf (fewer dims): keep the prefix entries that still divide
+    entries = []
+    for i, dim in enumerate(shape):
+        ax = spec[i] if i < len(spec) else None
+        if ax is None:
+            entries.append(None)
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= ctx.axis_sizes.get(a, 1)
+        entries.append(ax if dim % size == 0 else None)
+    return NamedSharding(ctx.mesh, P(*entries))

@@ -1,0 +1,33 @@
+"""Serving steps: prefill and decode wrappers used by the dry-run and the
+serving example.  Pure functions over (params, batch/cache)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_prefill_step", "make_decode_step"]
+
+
+def make_prefill_step(model, *, impl: str = "blocked") -> Callable:
+    from ..models.attention import inference_mode
+
+    def prefill_step(params, batch):
+        with inference_mode():
+            logits, cache = model.prefill(params, batch, impl=impl)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(model, *, decode_impl: str = "naive") -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = model.decode_step(
+            params, cache, tokens, pos, decode_impl=decode_impl
+        )
+        # Greedy next-token (serving returns token ids + updated cache).
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return serve_step

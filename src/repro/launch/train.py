@@ -1,0 +1,95 @@
+"""Training step: grad accumulation, clipping, optimizer update, metrics.
+
+``make_train_step(model, optimizer, schedule)`` builds a pure function
+``train_step(state, batch) -> (state, metrics)`` suitable for jit with
+explicit in/out shardings.  Gradient accumulation runs as a lax.scan over
+microbatches with fp32 accumulators (sharded like the FSDP'd parameters,
+so accumulation memory is ZeRO-partitioned too).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import Optimizer, clip_by_global_norm
+
+__all__ = ["TrainState", "make_train_step", "init_train_state", "abstract_train_state"]
+
+TrainState = Dict[str, Any]  # {'params', 'opt', 'step'}
+
+
+def init_train_state(model, optimizer: Optimizer, key) -> TrainState:
+    params = model.init_params(key)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(model, optimizer: Optimizer) -> TrainState:
+    params_abs = model.abstract_params()
+
+    def mk():
+        params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_abs)
+        return {"params": params, "opt": optimizer.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    return jax.eval_shape(mk)
+
+
+def make_train_step(
+    model,
+    optimizer: Optimizer,
+    schedule: Callable,
+    *,
+    max_grad_norm: float = 1.0,
+    grad_compression: Any = None,
+) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    cfg = model.cfg
+    accum = max(cfg.grad_accum, 1)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        params = state["params"]
+        if accum > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch,
+            )
+
+            def micro(g_acc, mb):
+                (loss, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return g_acc, metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, metrics_seq = jax.lax.scan(micro, g0, mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_seq)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        if grad_compression is not None:
+            grads = grad_compression(grads)
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(state["step"])
+        new_params, new_opt = optimizer.update(
+            grads, state["opt"], params, state["step"], lr
+        )
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return new_state, metrics
+
+    return train_step

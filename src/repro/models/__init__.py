@@ -1,0 +1,14 @@
+"""Model zoo: the 10 assigned architectures in pure JAX."""
+from .api import Model, build_model, input_specs, model_specs
+from .config import ModelConfig, ShapeSpec, SHAPES, shape_by_name
+
+__all__ = [
+    "Model",
+    "build_model",
+    "input_specs",
+    "model_specs",
+    "ModelConfig",
+    "ShapeSpec",
+    "SHAPES",
+    "shape_by_name",
+]

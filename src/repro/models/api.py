@@ -1,0 +1,194 @@
+"""Unified model API: specs, losses, serving steps, and input specs.
+
+``build_model(cfg)`` returns a ``Model`` facade used by the launcher, the
+dry-run, smoke tests and examples.  All functions are pure; parameters and
+caches are explicit pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, ShapeSpec
+from . import encdec as encdec_mod
+from . import lm as lm_mod
+from . import params as params_mod
+
+__all__ = ["Model", "build_model", "model_specs", "input_specs"]
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_specs(cfg)
+    return lm_mod.lm_specs(cfg)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ---- parameters ---------------------------------------------------
+    def specs(self) -> dict:
+        return model_specs(self.cfg)
+
+    def abstract_params(self):
+        return params_mod.abstract_tree(self.specs())
+
+    def param_axes(self):
+        return params_mod.axes_tree(self.specs())
+
+    def init_params(self, key: jax.Array):
+        return params_mod.init_tree(self.specs(), key)
+
+    def param_count(self, active_only: bool = False) -> int:
+        return params_mod.count_params(self.cfg, active_only=active_only)
+
+    # ---- training -----------------------------------------------------
+    def loss(self, params, batch, *, impl: str = "blocked"):
+        if self.cfg.family == "encdec":
+            return encdec_mod.encdec_loss(self.cfg, params, batch)
+        return lm_mod.lm_loss(self.cfg, params, batch, impl=impl)
+
+    # ---- serving ------------------------------------------------------
+    def prefill(self, params, batch, *, impl: str = "blocked"):
+        if self.cfg.family == "encdec":
+            return encdec_mod.encdec_prefill(self.cfg, params, batch)
+        return lm_mod.lm_prefill(self.cfg, params, batch, impl=impl)
+
+    def decode_step(self, params, cache, tokens, pos, *, decode_impl="naive"):
+        if self.cfg.family == "encdec":
+            return encdec_mod.encdec_decode_step(
+                self.cfg, params, cache, tokens, pos, decode_impl=decode_impl)
+        return lm_mod.lm_decode_step(
+            self.cfg, params, cache, tokens, pos, decode_impl=decode_impl)
+
+    def cache_shapes(self, batch: int, cache_len: int):
+        if self.cfg.family == "encdec":
+            return encdec_mod.encdec_cache_shapes(self.cfg, batch, cache_len)
+        return lm_mod.init_cache_shapes(self.cfg, batch, cache_len)
+
+    def init_cache(self, batch: int, cache_len: int):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_shapes(batch, cache_len),
+        )
+
+    # ---- inputs ---------------------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        return input_specs(self.cfg, shape)
+
+    def input_axes(self, shape: ShapeSpec) -> Dict[str, Any]:
+        return input_axes(self.cfg, shape)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (family x shape kind): ShapeDtypeStruct stand-ins, no
+# device allocation — the dry-run contract.
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    fam = cfg.family
+
+    if shape.kind in ("train", "prefill"):
+        if fam == "encdec":
+            half = S // 2
+            out = {
+                "frames": sd((B, half, cfg.d_model), jnp.bfloat16),
+                "tokens": sd((B, half), i32),
+            }
+            if shape.kind == "train":
+                out["labels"] = sd((B, half), i32)
+            return out
+        if fam == "vlm":
+            text = S - cfg.num_patches
+            out = {
+                "patches": sd((B, cfg.num_patches, 1024), jnp.bfloat16),
+                "tokens": sd((B, text), i32),
+            }
+            if shape.kind == "train":
+                out["labels"] = sd((B, text), i32)
+            return out
+        out = {"tokens": sd((B, S), i32)}
+        if shape.kind == "train":
+            out["labels"] = sd((B, S), i32)
+        return out
+
+    # decode: one token against a cache of length S
+    model = build_model(cfg)
+    cache_len = S // 2 if fam == "encdec" else S
+    return {
+        "cache": model.cache_shapes(B, cache_len),
+        "tokens": sd((B, 1), i32),
+        "pos": sd((B,), i32),
+    }
+
+
+def input_axes(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Logical axes for each input leaf (same structure as input_specs)."""
+    fam = cfg.family
+    if shape.kind in ("train", "prefill"):
+        out: Dict[str, Any] = {"tokens": ("batch", "seq")}
+        if shape.kind == "train":
+            out["labels"] = ("batch", "seq")
+        if fam == "encdec":
+            out["frames"] = ("batch", "seq", "embed")
+        if fam == "vlm":
+            out["patches"] = ("batch", "patches", None)
+        return out
+
+    cache_axes = _cache_axes(cfg)
+    return {
+        "cache": cache_axes,
+        "tokens": ("batch", None),
+        "pos": ("batch",),
+    }
+
+
+def _cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    fam = cfg.family
+    if fam == "encdec":
+        kv = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+        return {"k": kv, "v": kv, "xk": kv, "xv": kv}
+    if fam in ("dense", "vlm", "moe"):
+        out: Dict[str, Any] = {}
+        if cfg.attention == "mla":
+            out["ckv"] = ("layers", "batch", "cache_seq", "kvlora")
+            out["krope"] = ("layers", "batch", "cache_seq", "head_dim")
+            if fam == "moe" and cfg.moe_dense_layers:
+                out["d_ckv"] = out["ckv"]
+                out["d_krope"] = out["krope"]
+        else:
+            kv = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+            out["k"] = kv
+            out["v"] = kv
+            if fam == "moe" and cfg.moe_dense_layers:
+                out["d_k"] = kv
+                out["d_v"] = kv
+        return out
+    if fam == "ssm":
+        return {
+            "ssm": ("layers", "batch", "q_heads", None, "state"),
+            "conv": ("layers", "batch", "conv", "rnn"),
+        }
+    if fam == "hybrid":
+        out = {
+            "rnn": ("layers", None, "batch", "rnn"),
+            "rnn_conv": ("layers", None, "batch", "conv", "rnn"),
+            "k": ("layers", None, "batch", None, "kv_heads", "head_dim"),
+            "v": ("layers", None, "batch", None, "kv_heads", "head_dim"),
+        }
+        n_groups, tail = lm_mod._hybrid_layout(cfg)
+        if tail:
+            out["tail_rnn"] = ("layers", "batch", "rnn")
+            out["tail_rnn_conv"] = ("layers", "batch", "conv", "rnn")
+        return out
+    raise ValueError(fam)

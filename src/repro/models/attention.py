@@ -1,0 +1,393 @@
+"""Attention: GQA/MQA/MHA, local (sliding-window), cross-attention, decode.
+
+Three execution paths:
+
+* ``naive``   — materializes the [Sq, Skv] score matrix.  Used for smoke
+  tests and short sequences; the numerical oracle for everything else.
+* ``blocked`` — flash-attention-style streaming softmax over KV blocks in
+  pure JAX (lax.scan).  Bounded VMEM/temp footprint; this is what the
+  multi-pod dry-run lowers, and it mirrors the Pallas kernel in
+  ``repro.kernels.flash_attention`` op-for-op.
+* decode      — single-token step against a long KV cache.  The baseline
+  keeps the cache sharded along sequence and lets GSPMD insert the
+  all-gather (paper-faithful naive propagation); the optimized path
+  (``decode_impl='flash_sharded'``) computes per-shard partial softmax
+  and combines with log-sum-exp via shard_map — flash-decoding on TPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..shardlib import constrain, current_ctx
+from .layers import apply_rope, residual_out_scale as _residual_out_scale, rope
+from .params import ParamSpec
+
+__all__ = [
+    "attn_specs",
+    "attention_fwd",
+    "decode_attention",
+    "cross_attention_fwd",
+    "cross_kv",
+    "inference_mode",
+]
+
+NEG_INF = -2.0e38
+
+# Inference mode enables the dynamically-bounded causal block-skip in
+# blocked attention (lax.fori_loop with a data-dependent trip count is not
+# reverse-differentiable, so training uses the masked full sweep — the 2x
+# causal FLOP waste it causes is tracked in EXPERIMENTS.md §Perf).
+_INFERENCE = [False]
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def inference_mode(on: bool = True):
+    prev = _INFERENCE[0]
+    _INFERENCE[0] = on
+    try:
+        yield
+    finally:
+        _INFERENCE[0] = prev
+
+
+def attn_specs(
+    cfg,
+    L: int,
+    heads: Optional[int] = None,
+    kv_heads: Optional[int] = None,
+    head_dim: Optional[int] = None,
+) -> dict:
+    H = heads or cfg.num_heads
+    KV = kv_heads or cfg.num_kv_heads
+    hd = head_dim or cfg.resolved_head_dim
+    D = cfg.d_model
+    lead: Tuple[int, ...] = (L,) if L else ()
+    lax: Tuple[str, ...] = ("layers",) if L else ()
+    dt = cfg.pdtype
+    return {
+        "wq": ParamSpec(lead + (D, H, hd), lax + ("embed", "q_heads", "head_dim"), dt, fan=D),
+        "wk": ParamSpec(lead + (D, KV, hd), lax + ("embed", "kv_heads", "head_dim"), dt, fan=D),
+        "wv": ParamSpec(lead + (D, KV, hd), lax + ("embed", "kv_heads", "head_dim"), dt, fan=D),
+        "wo": ParamSpec(lead + (H, hd, D), lax + ("q_heads", "head_dim", "embed"), dt,
+                        scale=_residual_out_scale(cfg), fan=H * hd),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention (training / prefill)
+# ---------------------------------------------------------------------------
+# Runtime head padding: when the (assigned, immutable) head count does not
+# divide the 'model' mesh axis, the sharding rules fall back to replicating
+# the whole attention block — observed 12x excess attention FLOPs/bytes per
+# device for minicpm-2b (36 heads on a 16-way axis; EXPERIMENTS.md §Perf,
+# hillclimb A).  Padding Q/K/V/O with zero heads up to the next multiple
+# restores even sharding and is exact: zero keys give uniform softmax over
+# zero values -> zero head output -> zero O-projection rows contribute
+# nothing.  Applies to MHA (H == KV) layers; GQA with non-dividing KV
+# groups cannot pad this way (reshape resharding, see DESIGN.md).
+_PAD_HEADS = [True]
+
+
+@contextlib.contextmanager
+def head_padding(on: bool = True):
+    prev = _PAD_HEADS[0]
+    _PAD_HEADS[0] = on
+    try:
+        yield
+    finally:
+        _PAD_HEADS[0] = prev
+
+
+def _pad_axis(w: jax.Array, axis: int, to: int) -> jax.Array:
+    pad = [(0, 0)] * w.ndim
+    pad[axis] = (0, to - w.shape[axis])
+    return jnp.pad(w, pad)
+
+
+def attention_fwd(
+    cfg,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    impl: str = "blocked",
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Self-attention over a full sequence.
+
+    Returns (output, (k, v)) — k/v are returned so prefill can populate the
+    decode cache (always at the architecture's true head count, even when
+    compute ran head-padded).  ``kv_override`` makes it cross-attention.
+    """
+    B, S, D = x.shape
+    H = p["wq"].shape[-2]
+    KV0 = p["wk"].shape[-2]
+    hd = p["wq"].shape[-1]
+
+    wq, wk, wv, wo = p["wq"], p["wk"], p["wv"], p["wo"]
+    ctx = current_ctx()
+    tp = ctx.axis_sizes.get("model", 1) if ctx is not None else 1
+    padded = False
+    if (_PAD_HEADS[0] and kv_override is None and tp > 1 and H % tp
+            and H == KV0):
+        Hp = -(-H // tp) * tp
+        wq = _pad_axis(wq, wq.ndim - 2, Hp)
+        wk = _pad_axis(wk, wk.ndim - 2, Hp)
+        wv = _pad_axis(wv, wv.ndim - 2, Hp)
+        wo = _pad_axis(wo, wo.ndim - 3, Hp)
+        padded = True
+
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, wk)
+        v = jnp.einsum("bsd,dhk->bshk", x, wv)
+        sin, cos = rope(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    else:
+        k, v = kv_override
+    q = constrain(q, ("batch", "seq", "q_heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+
+    if impl == "blocked" and q.shape[1] >= 2 * q_block:
+        o = _blocked_attention(q, k, v, causal=causal, window=window,
+                               q_block=q_block, kv_block=kv_block)
+    else:
+        o = _naive_attention(q, k, v, causal=causal, window=window)
+    o = constrain(o, ("batch", "seq", "q_heads", "head_dim"))
+    out = jnp.einsum("bshk,hkd->bsd", o, wo)
+    if padded:
+        k = k[:, :, :KV0]       # decode cache keeps the true head count
+        v = v[:, :, :KV0]
+    return constrain(out, ("batch", "seq", "embed")), (k, v)
+
+
+def _group(q: jax.Array, KV: int) -> jax.Array:
+    """[B,S,H,hd] -> [B,S,KV,G,hd] grouping query heads by kv head."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, KV, H // KV, hd)
+
+
+def _naive_attention(q, k, v, *, causal: bool, window: int) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    hv = v.shape[-1]
+    qg = _group(q, KV)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    Skv = k.shape[1]
+    iq = jnp.arange(Sq)[:, None] + (Skv - Sq)  # align ends (prefill offset)
+    jk = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= jk <= iq
+    if window:
+        mask &= jk > iq - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return o.reshape(B, Sq, H, hv)
+
+
+def _blocked_attention(q, k, v, *, causal: bool, window: int,
+                       q_block: int, kv_block: int) -> jax.Array:
+    """Flash attention (streaming softmax, custom VJP, block-skip).
+
+    The block-skip — only visiting KV blocks the causal/window mask can
+    reach — is the compiled-HLO analogue of change propagation's "do not
+    descend unmarked subtrees".  See repro.models.flash for the VJP."""
+    from .flash import flash_attention_grouped
+
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    KV = k.shape[2]
+    hv = v.shape[-1]
+    if Sq % q_block or Skv % kv_block:
+        return _naive_attention(q, k, v, causal=causal, window=window)
+    qg = _group(q, KV)
+    o = flash_attention_grouped(
+        qg, k, v, causal=causal, window=window, offset=Skv - Sq,
+        q_block=q_block, kv_block=kv_block, skip=True,
+    )
+    return o.reshape(B, Sq, H, hv)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one new token against a cached context)
+# ---------------------------------------------------------------------------
+def decode_attention(
+    cfg,
+    p: dict,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int = 0,
+    impl: str = "naive",
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One decode step.
+
+    x: [B, 1, D]; cache_k/v: [B, S, KV, hd]; pos: [B] next position.
+    Returns (out [B,1,D], updated cache).
+    """
+    B, _, D = x.shape
+    H = p["wq"].shape[-2]
+    hd = p["wq"].shape[-1]
+    KV = cache_k.shape[2]
+    S = cache_k.shape[1]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    sin, cos = rope(pos[:, None], hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k_new = apply_rope(k_new, sin, cos)
+
+    if window:
+        # Ring-buffer cache for sliding-window attention.
+        slot = (pos % S)[:, None]
+    else:
+        slot = pos[:, None]
+    upd = lambda c, n, s: jax.vmap(
+        lambda cb, nb, sb: jax.lax.dynamic_update_slice(cb, nb, (sb, 0, 0))
+    )(c, n, s[:, 0])
+    cache_k = upd(cache_k, k_new, slot)
+    cache_v = upd(cache_v, v_new, slot)
+    cache_k = constrain(cache_k, ("batch", "cache_seq", "kv_heads", "head_dim"))
+    cache_v = constrain(cache_v, ("batch", "cache_seq", "kv_heads", "head_dim"))
+
+    if impl == "flash_sharded" and current_ctx() is not None:
+        o = _flash_decode_sharded(q, cache_k, cache_v, pos, window=window, ring=bool(window))
+    else:
+        o = _decode_ref(q, cache_k, cache_v, pos, window=window, ring=bool(window))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return constrain(out, ("batch", None, "embed")), (cache_k, cache_v)
+
+
+def _decode_mask(S: int, pos: jax.Array, window: int, ring: bool) -> jax.Array:
+    """[B, S] validity mask of cache entries for the current token."""
+    idx = jnp.arange(S)[None, :]
+    if not window:
+        return idx <= pos[:, None]
+    if not ring:
+        return (idx <= pos[:, None]) & (idx > pos[:, None] - window)
+    # Ring buffer: entries wrap; slots hold positions within `window` of pos
+    # by construction once warm; before warm-up only slots <= pos are valid.
+    return (idx <= pos[:, None]) | (pos[:, None] >= S)
+
+
+def _decode_ref(q, ck, cv, pos, *, window: int, ring: bool) -> jax.Array:
+    B, one, H, hd = q.shape
+    KV = ck.shape[2]
+    S = ck.shape[1]
+    qg = _group(q, KV)  # [B,1,KV,G,hd]
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, ck).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    mask = _decode_mask(S, pos, window, ring)[:, None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w, cv)
+    return o.reshape(B, one, H, hd)
+
+
+def _flash_decode_sharded(q, ck, cv, pos, *, window: int, ring: bool) -> jax.Array:
+    """Flash-decoding: per-shard partial softmax over the sequence-sharded
+    cache, combined across 'model' with a log-sum-exp reduction.
+
+    This replaces GSPMD's all-gather of the whole KV cache (O(S) bytes on
+    the wire per token) with an O(heads * head_dim) psum — the decode
+    analogue of propagating only the affected frontier."""
+    ctx = current_ctx()
+    mesh = ctx.mesh
+    axis = "model"
+    if axis not in mesh.axis_names:
+        return _decode_ref(q, ck, cv, pos, window=window, ring=ring)
+    n_shards = ctx.axis_sizes[axis]
+    S = ck.shape[1]
+    if S % n_shards != 0:
+        return _decode_ref(q, ck, cv, pos, window=window, ring=ring)
+    B, one, H, hd = q.shape
+    KV = ck.shape[2]
+    G = H // KV
+    other = tuple(a for a in mesh.axis_names if a != axis)
+
+    def shard_fn(q_, ck_, cv_, pos_):
+        # ck_/cv_: [B', S/n, KV, hd] local shard; q_ replicated over 'model'.
+        i = jax.lax.axis_index(axis)
+        S_loc = ck_.shape[1]
+        base = i * S_loc
+        idx = base + jnp.arange(S_loc)[None, :]
+        if not window:
+            mask = idx <= pos_[:, None]
+        elif not ring:
+            mask = (idx <= pos_[:, None]) & (idx > pos_[:, None] - window)
+        else:
+            mask = (idx <= pos_[:, None]) | (pos_[:, None] >= S)
+        qg = _group(q_, KV)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, ck_).astype(jnp.float32)
+        s = s / math.sqrt(hd)
+        s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+        m = s.max(axis=-1)
+        pe = jnp.exp(s - m[..., None])
+        l = pe.sum(axis=-1)
+        acc = jnp.einsum("bkgqs,bskh->bkgqh", pe.astype(cv_.dtype), cv_)
+        acc = acc.astype(jnp.float32)
+        # LSE-combine across shards.
+        m_all = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - m_all)
+        l_c = jax.lax.psum(l * corr, axis)
+        acc_c = jax.lax.psum(acc * corr[..., None], axis)
+        o = acc_c / jnp.maximum(l_c[..., None], 1e-30)
+        o = jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(q_.shape[0], one, H, hd)
+        return o.astype(q_.dtype)
+
+    bspec = other if other else None  # batch dim shards over non-model axes
+    out = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None, None),
+            P(bspec, axis, None, None),
+            P(bspec, axis, None, None),
+            P(bspec),
+        ),
+        out_specs=P(bspec, None, None, None),
+        check_vma=False,
+    )(q, ck, cv, pos)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+def cross_kv(cfg, p: dict, enc_out: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V from encoder output (no RoPE)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+def cross_attention_fwd(cfg, p: dict, x: jax.Array, kv: Tuple[jax.Array, jax.Array]):
+    """Cross-attention: queries from x, keys/values precomputed."""
+    B, Sq, D = x.shape
+    hd = p["wq"].shape[-1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k, v = kv
+    o = _naive_attention(q, k, v, causal=False, window=0)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return constrain(out, ("batch", None, "embed"))

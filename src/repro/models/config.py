@@ -1,0 +1,165 @@
+"""Model and input-shape configuration for the assigned architectures.
+
+Every architecture in the assigned pool is expressed as a ``ModelConfig``.
+The configs are intentionally explicit (no "auto" fields): a config fully
+determines parameter shapes, the layer pattern, and the serving cache
+layout, so the multi-pod dry-run can build exact ``ShapeDtypeStruct``
+stand-ins without touching device memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "shape_by_name"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One (input-shape) cell of the assigned architecture x shape grid."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec("train_4k", 4_096, 256, "train"),
+    ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    ShapeSpec("long_500k", 524_288, 1, "decode"),
+)
+
+
+def shape_by_name(name: str) -> ShapeSpec:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; have {[s.name for s in SHAPES]}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.
+
+    ``family`` selects the assembly path:
+      * ``dense``   — decoder-only transformer (GQA/MQA/MHA attention).
+      * ``moe``     — decoder-only with mixture-of-experts FFNs.
+      * ``hybrid``  — RG-LRU recurrent blocks + local attention (Griffin).
+      * ``ssm``     — attention-free state-space model (Mamba-2 / SSD).
+      * ``encdec``  — encoder-decoder (audio frontend stubbed).
+      * ``vlm``     — decoder-only LM backbone with a stubbed ViT frontend
+                      (patch embeddings arrive precomputed).
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 => d_model // num_heads
+    # --- attention flavour -------------------------------------------------
+    attention: str = "gqa"          # 'gqa' | 'mla' | 'local' | 'none'
+    local_window: int = 2048        # for local attention layers
+    rope_theta: float = 10_000.0
+    # --- FFN ---------------------------------------------------------------
+    activation: str = "silu"        # 'silu' (SwiGLU) | 'gelu' (GeGLU) | 'gelu_mlp'
+    # --- norms / embeddings ------------------------------------------------
+    norm: str = "rmsnorm"           # 'rmsnorm' | 'layernorm'
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    emb_scale: float = 1.0          # MiniCPM scale_emb; Gemma uses sqrt(d)
+    emb_scale_sqrt_dim: bool = False
+    residual_scale: float = 1.0     # MiniCPM scale_depth / sqrt(L)
+    logit_softcap: float = 0.0      # Gemma-style final-logit soft capping
+    # --- MoE ---------------------------------------------------------------
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_shared_experts: int = 0     # DeepSeek shared expert(s)
+    moe_dense_layers: int = 0       # leading dense layers (DeepSeek: 3)
+    moe_capacity_factor: float = 1.25
+    moe_router: str = "softmax"     # 'softmax' | 'sigmoid' (DeepSeek v3)
+    moe_dense_residual: bool = False  # Arctic: dense FFN residual in parallel
+    d_ff_dense: int = 0             # FFN width for non-MoE layers in MoE archs
+                                    # (DeepSeek-V3 dense layers: 18432)
+    # --- MLA (DeepSeek) ----------------------------------------------------
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # --- MTP (DeepSeek multi-token prediction) -----------------------------
+    mtp_depth: int = 0
+    mtp_loss_weight: float = 0.3
+    # --- hybrid (RecurrentGemma / Griffin) ---------------------------------
+    # layer pattern repeats: e.g. ('rec', 'rec', 'attn')
+    block_pattern: Tuple[str, ...] = ()
+    rglru_width: int = 0            # 0 => d_model
+    conv_width: int = 4
+    # --- SSM (Mamba-2) ------------------------------------------------------
+    ssm_state: int = 128
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    # --- enc-dec ------------------------------------------------------------
+    enc_layers: int = 0             # encoder layers (decoder = num_layers)
+    # --- VLM ----------------------------------------------------------------
+    num_patches: int = 0            # stubbed ViT patch embeddings per example
+    # --- numerics ----------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # --- training-time policies (overridable per run) -----------------------
+    remat: str = "full"             # 'none' | 'full' | 'dots'
+    grad_accum: int = 1             # microbatch count for train_step
+    optimizer: str = "adamw"        # 'adamw' | 'adamw_bf16' | 'adafactor'
+    lr_schedule: str = "cosine"     # 'cosine' | 'wsd'
+    # --- serving ------------------------------------------------------------
+    cache_dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def q_heads_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True for sub-quadratic architectures: SSM / hybrid local-attn.
+
+        Pure full-attention architectures skip the ``long_500k`` shape (the
+        skip is recorded in DESIGN.md as required)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # every assigned arch has an autoregressive decoder
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Parameter count (analytic), used for 6*N*D roofline terms.
+    def param_count(self, active_only: bool = False) -> int:
+        from . import params as _p  # local import to avoid cycles
+        return _p.count_params(self, active_only=active_only)

@@ -1,0 +1,162 @@
+"""Encoder-decoder transformer (SeamlessM4T-large-v2 text/speech backbone).
+
+The speech frontend (conformer feature encoder) is a STUB per the
+assignment: ``input_specs()`` provides precomputed frame embeddings of
+shape [B, S_enc, d_model].  This module implements the transformer
+backbone: a bidirectional encoder over frames and a causal decoder with
+cross-attention, sharing the layer building blocks with ``lm.py``.
+
+Sequence budget: a shape cell with seq_len S is split S/2 encoder frames +
+S/2 decoder tokens so each cell processes exactly S positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..shardlib import constrain
+from . import attention as attn
+from .layers import (
+    apply_norm,
+    chunked_cross_entropy,
+    cross_entropy,
+    embed_specs,
+    embed_tokens,
+    lm_logits,
+    mlp_fwd,
+    mlp_specs,
+    norm_spec,
+)
+
+__all__ = ["encdec_specs", "encdec_loss", "encdec_prefill",
+           "encdec_decode_step", "encdec_cache_shapes"]
+
+
+def encdec_specs(cfg) -> dict:
+    Le = cfg.enc_layers or cfg.num_layers
+    Ld = cfg.num_layers
+    return {
+        "tok": embed_specs(cfg),
+        "enc_blocks": {
+            "ln1": norm_spec(cfg, (Le,)),
+            "attn": attn.attn_specs(cfg, Le),
+            "ln2": norm_spec(cfg, (Le,)),
+            "mlp": mlp_specs(cfg, Le),
+        },
+        "enc_norm": norm_spec(cfg),
+        "dec_blocks": {
+            "ln1": norm_spec(cfg, (Ld,)),
+            "self_attn": attn.attn_specs(cfg, Ld),
+            "ln_x": norm_spec(cfg, (Ld,)),
+            "cross_attn": attn.attn_specs(cfg, Ld),
+            "ln2": norm_spec(cfg, (Ld,)),
+            "mlp": mlp_specs(cfg, Ld),
+        },
+    }
+
+
+def _encode(cfg, params, frames: jax.Array) -> jax.Array:
+    """frames: [B, S_enc, D] (stubbed frontend output)."""
+    x = frames.astype(cfg.cdtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :], x.shape[:2])
+
+    def blk(x, p):
+        h = apply_norm(cfg, p["ln1"], x)
+        a, _ = attn.attention_fwd(cfg, p["attn"], h, positions,
+                                  causal=False, impl="blocked")
+        x = x + a
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + mlp_fwd(cfg, p["mlp"], h)
+        return x, None
+
+    f = jax.checkpoint(blk) if cfg.remat != "none" else blk
+    x, _ = jax.lax.scan(f, x, params["enc_blocks"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _decode_blocks(cfg, params, x, positions, enc_out, *, collect_cache=False):
+    def blk(x, p):
+        h = apply_norm(cfg, p["ln1"], x)
+        a, kv = attn.attention_fwd(cfg, p["self_attn"], h, positions,
+                                   causal=True, impl="blocked")
+        x = x + a
+        h = apply_norm(cfg, p["ln_x"], x)
+        ckv = attn.cross_kv(cfg, p["cross_attn"], enc_out)
+        x = x + attn.cross_attention_fwd(cfg, p["cross_attn"], h, ckv)
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + mlp_fwd(cfg, p["mlp"], h)
+        return x, (kv, ckv) if collect_cache else None
+
+    f = jax.checkpoint(blk) if cfg.remat != "none" else blk
+    x, caches = jax.lax.scan(f, x, params["dec_blocks"])
+    return x, caches
+
+
+def encdec_loss(cfg, params, batch, **_) -> Tuple[jax.Array, Dict]:
+    """batch: {'frames': [B,Se,D], 'tokens': [B,Sd], 'labels': [B,Sd]}."""
+    enc_out = _encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params["tok"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :], x.shape[:2])
+    h, _ = _decode_blocks(cfg, params, x, positions, enc_out)
+    loss = chunked_cross_entropy(cfg, params["tok"], h, batch["labels"])
+    return loss, {"loss": loss, "ce": loss}
+
+
+def encdec_cache_shapes(cfg, batch: int, cache_len: int):
+    Ld = cfg.num_layers
+    KV = cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    cdt = jnp.dtype(cfg.cache_dtype)
+    enc_len = cache_len  # encoder length mirrors the decoder budget
+    return {
+        "k": jax.ShapeDtypeStruct((Ld, batch, cache_len, KV, hd), cdt),
+        "v": jax.ShapeDtypeStruct((Ld, batch, cache_len, KV, hd), cdt),
+        "xk": jax.ShapeDtypeStruct((Ld, batch, enc_len, KV, hd), cdt),
+        "xv": jax.ShapeDtypeStruct((Ld, batch, enc_len, KV, hd), cdt),
+    }
+
+
+def encdec_prefill(cfg, params, batch, **_):
+    """Encoder pass + decoder prefill.  Returns (last logits, cache)."""
+    enc_out = _encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params["tok"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :], x.shape[:2])
+    h, caches = _decode_blocks(cfg, params, x, positions, enc_out,
+                               collect_cache=True)
+    (k, v), (xk, xv) = caches
+    cdt = jnp.dtype(cfg.cache_dtype)
+    cache = {"k": k.astype(cdt), "v": v.astype(cdt),
+             "xk": xk.astype(cdt), "xv": xv.astype(cdt)}
+    logits = lm_logits(cfg, params["tok"], h[:, -1:, :])
+    return logits, cache
+
+
+def encdec_decode_step(cfg, params, cache, tokens, pos, *, decode_impl="naive"):
+    """One decoder step with cached self/cross KV."""
+    x = embed_tokens(cfg, params["tok"], tokens)
+
+    def blk(carry, inp):
+        x = carry
+        p, k, v, xk, xv = inp
+        h = apply_norm(cfg, p["ln1"], x)
+        a, (k2, v2) = attn.decode_attention(cfg, p["self_attn"], h, k, v, pos,
+                                            impl=decode_impl)
+        x = x + a
+        h = apply_norm(cfg, p["ln_x"], x)
+        x = x + attn.cross_attention_fwd(cfg, p["cross_attn"], h, (xk, xv))
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + mlp_fwd(cfg, p["mlp"], h)
+        return x, (k2, v2)
+
+    x, (k2, v2) = jax.lax.scan(
+        blk, x, (params["dec_blocks"], cache["k"], cache["v"],
+                 cache["xk"], cache["xv"]))
+    logits = lm_logits(cfg, params["tok"], x)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = k2, v2
+    return logits, new_cache

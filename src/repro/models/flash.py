@@ -1,0 +1,234 @@
+"""Flash attention in pure JAX with a custom VJP.
+
+Forward: streaming-softmax over KV blocks (saves only O(S * head_dim)
+output + log-sum-exp, never the S x S score matrix).  Backward: two
+block-sparse passes that *recompute* scores per block — dq in q-major
+order, dk/dv in kv-major order.  Because the VJP is hand-written, the
+causal/windowed block-skip (dynamic fori_loop bounds) is legal in both
+directions; plain ``jax.grad`` over a lax.scan attention would instead
+stack every block's probabilities (observed: 9 GiB fp32 per layer for a
+4k sequence — see EXPERIMENTS.md §Perf, minicpm train_4k iteration 1).
+
+This module is also the numerical oracle mirrored by the Pallas TPU
+kernel in ``repro.kernels.flash_attention`` (same blocking, same
+streaming-softmax algebra).
+
+Layout: q [B, Sq, KV, G, hd] (grouped query heads), k/v [B, Skv, KV, hd].
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_grouped"]
+
+NEG_INF = -2.0e38
+
+
+def _mask(iq, jk, causal: bool, window: int):
+    m = jnp.ones(jnp.broadcast_shapes(iq.shape, jk.shape), bool)
+    if causal:
+        m &= jk <= iq
+    if window:
+        m &= jk > iq - window
+    return m
+
+
+@functools.lru_cache(maxsize=64)
+def _make_flash(causal: bool, window: int, offset: int,
+                q_block: int, kv_block: int, skip: bool):
+    """Build a custom-VJP flash attention for a static configuration."""
+
+    def _bounds_q(qi, nk):
+        """KV block range [lo, hi) visible to query block qi."""
+        if not (causal or window):
+            return 0, nk
+        hi = ((offset + (qi + 1) * q_block + kv_block - 1) // kv_block) if causal else nk
+        hi = jnp.minimum(hi, nk)
+        lo = jnp.maximum((offset + qi * q_block - window) // kv_block, 0) if window else 0
+        return lo, hi
+
+    def _bounds_kv(kj, nq):
+        """Q block range [lo, hi) that sees kv block kj."""
+        lo = jnp.maximum((kj * kv_block - offset) // q_block, 0) if causal else 0
+        if window:
+            hi = ((kj + 1) * kv_block + window - offset + q_block - 1) // q_block
+            hi = jnp.minimum(hi, nq)
+        else:
+            hi = nq
+        return lo, hi
+
+    def _scores(qblk, kblk, qi, kj, scale):
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qblk, kblk).astype(jnp.float32)
+        s = s * scale
+        iq = offset + qi * q_block + jnp.arange(q_block)[:, None]
+        jk = kj * kv_block + jnp.arange(kv_block)[None, :]
+        return jnp.where(_mask(iq, jk, causal, window), s, NEG_INF)
+
+    def fwd(q, k, v):
+        B, Sq, KV, G, hd = q.shape
+        Skv = k.shape[1]
+        hv = v.shape[-1]
+        nq, nk = Sq // q_block, Skv // kv_block
+        scale = 1.0 / math.sqrt(hd)
+        qb = q.reshape(B, nq, q_block, KV, G, hd)
+        kb = k.reshape(B, nk, kv_block, KV, hd)
+        vb = v.reshape(B, nk, kv_block, KV, hv)
+
+        def q_step(_, qi):
+            qblk = qb[:, qi]
+
+            def kv_body(kj, carry):
+                m, l, acc = carry
+                s = _scores(qblk, kb[:, kj], qi, kj, scale)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                alpha = jnp.exp(m - m_new)
+                pe = jnp.exp(s - m_new[..., None])
+                l_new = l * alpha + pe.sum(axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bkgqs,bskh->bkgqh", pe.astype(v.dtype), vb[:, kj]
+                ).astype(jnp.float32)
+                return m_new, l_new, acc_new
+
+            m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+            a0 = jnp.zeros((B, KV, G, q_block, hv), jnp.float32)
+            if skip:
+                lo, hi = _bounds_q(qi, nk)
+                m, l, acc = jax.lax.fori_loop(lo, hi, kv_body, (m0, l0, a0))
+            else:
+                def body(c, kj):
+                    return kv_body(kj, c), None
+                (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nk))
+            l = jnp.maximum(l, 1e-30)
+            o = (acc / l[..., None]).astype(q.dtype)   # [B,KV,G,qb,hv]
+            lse = m + jnp.log(l)                       # [B,KV,G,qb]
+            return None, (o, lse)
+
+        _, (ob, lseb) = jax.lax.scan(q_step, None, jnp.arange(nq))
+        # ob: [nq,B,KV,G,qb,hv] -> [B,Sq,KV,G,hv]
+        o = jnp.transpose(ob, (1, 0, 4, 2, 3, 5)).reshape(B, Sq, KV, G, hv)
+        lse = jnp.transpose(lseb, (1, 0, 4, 2, 3)).reshape(B, Sq, KV, G)
+        return o, lse
+
+    def flash(q, k, v):
+        o, _ = fwd(q, k, v)
+        return o
+
+    def flash_fwd(q, k, v):
+        o, lse = fwd(q, k, v)
+        return o, (q, k, v, o, lse)
+
+    def flash_bwd(res, do):
+        q, k, v, o, lse = res
+        B, Sq, KV, G, hd = q.shape
+        Skv = k.shape[1]
+        hv = v.shape[-1]
+        nq, nk = Sq // q_block, Skv // kv_block
+        scale = 1.0 / math.sqrt(hd)
+        qb = q.reshape(B, nq, q_block, KV, G, hd)
+        kb = k.reshape(B, nk, kv_block, KV, hd)
+        vb = v.reshape(B, nk, kv_block, KV, hv)
+        dob = do.reshape(B, nq, q_block, KV, G, hv)
+        lseb = lse.reshape(B, nq, q_block, KV, G)
+        # D_i = rowsum(do * o)  [B,nq,qb,KV,G]
+        Dfull = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+        Db = Dfull.reshape(B, nq, q_block, KV, G)
+
+        # ---- pass 1: dq (q-major) ----------------------------------------
+        def dq_step(_, qi):
+            qblk = qb[:, qi]
+            doblk = dob[:, qi]        # [B,qb,KV,G,hv]
+            lse_q = lseb[:, qi]       # [B,qb,KV,G]
+            D_q = Db[:, qi]
+
+            def kv_body(kj, dq_acc):
+                s = _scores(qblk, kb[:, kj], qi, kj, scale)
+                p = jnp.exp(s - jnp.transpose(lse_q, (0, 2, 3, 1))[..., None])
+                dp = jnp.einsum("bqkgh,bskh->bkgqs", doblk, vb[:, kj]).astype(jnp.float32)
+                ds = p * (dp - jnp.transpose(D_q, (0, 2, 3, 1))[..., None])
+                dq_acc = dq_acc + jnp.einsum(
+                    "bkgqs,bskh->bqkgh", ds.astype(q.dtype), kb[:, kj]
+                ).astype(jnp.float32)
+                return dq_acc
+
+            dq0 = jnp.zeros((B, q_block, KV, G, hd), jnp.float32)
+            if skip:
+                lo, hi = _bounds_q(qi, nk)
+                dq = jax.lax.fori_loop(lo, hi, kv_body, dq0)
+            else:
+                def body(c, kj):
+                    return kv_body(kj, c), None
+                dq, _ = jax.lax.scan(body, dq0, jnp.arange(nk))
+            return None, (dq * scale).astype(q.dtype)
+
+        _, dqb = jax.lax.scan(dq_step, None, jnp.arange(nq))
+        dq = jnp.transpose(dqb, (1, 0, 2, 3, 4, 5)).reshape(B, Sq, KV, G, hd)
+
+        # ---- pass 2: dk/dv (kv-major) -------------------------------------
+        def dkv_step(_, kj):
+            kblk = kb[:, kj]
+            vblk = vb[:, kj]
+
+            def q_body(qi, carry):
+                dk_acc, dv_acc = carry
+                qblk = qb[:, qi]
+                doblk = dob[:, qi]
+                lse_q = lseb[:, qi]
+                D_q = Db[:, qi]
+                s = _scores(qblk, kblk, qi, kj, scale)
+                p = jnp.exp(s - jnp.transpose(lse_q, (0, 2, 3, 1))[..., None])
+                dv_acc = dv_acc + jnp.einsum(
+                    "bkgqs,bqkgh->bskh", p.astype(do.dtype), doblk
+                ).astype(jnp.float32)
+                dp = jnp.einsum("bqkgh,bskh->bkgqs", doblk, vblk).astype(jnp.float32)
+                ds = p * (dp - jnp.transpose(D_q, (0, 2, 3, 1))[..., None])
+                dk_acc = dk_acc + jnp.einsum(
+                    "bkgqs,bqkgh->bskh", ds.astype(q.dtype), qblk
+                ).astype(jnp.float32)
+                return dk_acc, dv_acc
+
+            dk0 = jnp.zeros((B, kv_block, KV, hd), jnp.float32)
+            dv0 = jnp.zeros((B, kv_block, KV, hv), jnp.float32)
+            if skip:
+                lo, hi = _bounds_kv(kj, nq)
+                dk, dv = jax.lax.fori_loop(lo, hi, q_body, (dk0, dv0))
+            else:
+                def body(c, qi):
+                    return q_body(qi, c), None
+                (dk, dv), _ = jax.lax.scan(body, (dk0, dv0), jnp.arange(nq))
+            return None, ((dk * scale).astype(k.dtype), dv.astype(v.dtype))
+
+        _, (dkb, dvb) = jax.lax.scan(dkv_step, None, jnp.arange(nk))
+        dk = jnp.transpose(dkb, (1, 0, 2, 3, 4)).reshape(B, Skv, KV, hd)
+        dv = jnp.transpose(dvb, (1, 0, 2, 3, 4)).reshape(B, Skv, KV, hv)
+        return dq, dk, dv
+
+    flash_vjp = jax.custom_vjp(flash)
+    flash_vjp.defvjp(flash_fwd, flash_bwd)
+    return flash_vjp
+
+
+def flash_attention_grouped(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    offset: int = 0,
+    q_block: int = 512,
+    kv_block: int = 512,
+    skip: bool = True,
+) -> jax.Array:
+    """q: [B,Sq,KV,G,hd]; k/v: [B,Skv,KV,hd(v)] -> o: [B,Sq,KV,G,hv].
+
+    ``offset`` places query i at absolute position offset+i (prefill
+    continuation); ``skip`` enables dynamic block-skip bounds."""
+    fn = _make_flash(causal, int(window), int(offset),
+                     int(q_block), int(kv_block), bool(skip))
+    return fn(q, k, v)

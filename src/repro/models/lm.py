@@ -1,0 +1,607 @@
+"""Decoder-only language model assembly for all LM families.
+
+One spec-builder + three entry points (loss / prefill / decode) cover the
+``dense``, ``moe``, ``ssm``, ``hybrid`` and ``vlm`` families.  Layers are
+stacked with ``jax.lax.scan`` over stacked parameter pytrees (compile time
+stays flat in depth); activation checkpointing wraps the scanned block
+according to ``cfg.remat``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..shardlib import constrain
+from . import attention as attn
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import (
+    apply_norm,
+    chunked_cross_entropy,
+    cross_entropy,
+    embed_specs,
+    embed_tokens,
+    lm_logits,
+    mlp_fwd,
+    mlp_specs,
+    norm_spec,
+)
+from .params import ParamSpec
+
+__all__ = [
+    "lm_specs",
+    "lm_loss",
+    "lm_prefill",
+    "lm_decode_step",
+    "init_cache_shapes",
+]
+
+AUX_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+def _block_specs(cfg, L: int, kind: str) -> dict:
+    """Specs for a stack of L identical blocks of the given kind."""
+    if kind == "attn_dense":
+        d_ff = cfg.d_ff_dense or cfg.d_ff
+        s = {
+            "ln1": norm_spec(cfg, (L,) if L else ()),
+            "attn": (mla_mod.mla_specs(cfg, L) if cfg.attention == "mla"
+                     else attn.attn_specs(cfg, L)),
+            "ln2": norm_spec(cfg, (L,) if L else ()),
+            "mlp": mlp_specs(cfg, L, d_ff=d_ff if cfg.moe_experts else cfg.d_ff),
+        }
+        return s
+    if kind == "attn_moe":
+        s = {
+            "ln1": norm_spec(cfg, (L,) if L else ()),
+            "attn": (mla_mod.mla_specs(cfg, L) if cfg.attention == "mla"
+                     else attn.attn_specs(cfg, L)),
+            "ln2": norm_spec(cfg, (L,) if L else ()),
+            "moe": moe_mod.moe_specs(cfg, L),
+        }
+        if cfg.moe_dense_residual:
+            s["mlp"] = mlp_specs(cfg, L, d_ff=cfg.d_ff_dense or cfg.d_ff)
+        return s
+    if kind == "ssm":
+        return {"ln1": norm_spec(cfg, (L,) if L else ()), "ssm": ssm_mod.ssm_specs(cfg, L)}
+    if kind == "rec":
+        return {
+            "ln1": norm_spec(cfg, (L,) if L else ()),
+            "rec": rglru_mod.rglru_specs(cfg, L),
+            "ln2": norm_spec(cfg, (L,) if L else ()),
+            "mlp": mlp_specs(cfg, L),
+        }
+    if kind == "attn_local":
+        return {
+            "ln1": norm_spec(cfg, (L,) if L else ()),
+            "attn": attn.attn_specs(cfg, L),
+            "ln2": norm_spec(cfg, (L,) if L else ()),
+            "mlp": mlp_specs(cfg, L),
+        }
+    raise ValueError(kind)
+
+
+def _hybrid_layout(cfg) -> Tuple[int, Tuple[str, ...]]:
+    """(#groups scanned, tail kinds) for hybrid pattern archs."""
+    pat = cfg.block_pattern
+    n_groups = cfg.num_layers // len(pat)
+    tail = cfg.num_layers - n_groups * len(pat)
+    return n_groups, pat[:tail]
+
+
+def lm_specs(cfg) -> dict:
+    specs: Dict[str, Any] = {"tok": embed_specs(cfg)}
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        specs["blocks"] = _block_specs(cfg, cfg.num_layers, "attn_dense")
+    elif fam == "moe":
+        nd = cfg.moe_dense_layers
+        if nd:
+            specs["dense_blocks"] = _block_specs(cfg, nd, "attn_dense")
+        specs["blocks"] = _block_specs(cfg, cfg.num_layers - nd, "attn_moe")
+        if cfg.mtp_depth:
+            specs["mtp"] = {
+                "proj": ParamSpec((2 * cfg.d_model, cfg.d_model),
+                                  ("embed", "embed"), cfg.pdtype),
+                "block": _block_specs(cfg, 0, "attn_dense"),
+            }
+    elif fam == "ssm":
+        specs["blocks"] = _block_specs(cfg, cfg.num_layers, "ssm")
+    elif fam == "hybrid":
+        n_groups, tail = _hybrid_layout(cfg)
+        group = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            group[f"p{i}_{kind}"] = _block_specs(
+                cfg, n_groups, "rec" if kind == "rec" else "attn_local"
+            )
+        specs["groups"] = group
+        for i, kind in enumerate(tail):
+            specs[f"tail{i}_{kind}"] = _block_specs(
+                cfg, 0, "rec" if kind == "rec" else "attn_local"
+            )
+    else:
+        raise ValueError(fam)
+    if fam == "vlm":
+        # Stubbed modality frontend: precomputed ViT patch embeddings are
+        # projected into the LM embedding space (the frontend itself is out
+        # of scope per the assignment; see DESIGN.md).
+        specs["patch_proj"] = ParamSpec((1024, cfg.d_model), (None, "embed"), cfg.pdtype)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Block forward functions (single layer; scanned over stacked params)
+# ---------------------------------------------------------------------------
+def _res(cfg, x, delta):
+    if cfg.residual_scale != 1.0:
+        delta = (delta.astype(jnp.float32) * cfg.residual_scale).astype(delta.dtype)
+    return x + delta
+
+
+def _attn_dense_block(cfg, p, x, positions, *, window=0, impl="blocked"):
+    h = apply_norm(cfg, p["ln1"], x)
+    if cfg.attention == "mla":
+        a, kv = mla_mod.mla_fwd(cfg, p["attn"], h, positions, impl=impl)
+    else:
+        a, kv = attn.attention_fwd(cfg, p["attn"], h, positions,
+                                   causal=True, window=window, impl=impl)
+    x = _res(cfg, x, a)
+    h = apply_norm(cfg, p["ln2"], x)
+    x = _res(cfg, x, mlp_fwd(cfg, p["mlp"], h))
+    return x, kv
+
+
+def _attn_moe_block(cfg, p, x, positions, *, impl="blocked"):
+    h = apply_norm(cfg, p["ln1"], x)
+    if cfg.attention == "mla":
+        a, kv = mla_mod.mla_fwd(cfg, p["attn"], h, positions, impl=impl)
+    else:
+        a, kv = attn.attention_fwd(cfg, p["attn"], h, positions,
+                                   causal=True, impl=impl)
+    x = _res(cfg, x, a)
+    h = apply_norm(cfg, p["ln2"], x)
+    mo, aux = moe_mod.moe_fwd(cfg, p["moe"], h)
+    if cfg.moe_dense_residual:
+        mo = mo + mlp_fwd(cfg, p["mlp"], h)
+    x = _res(cfg, x, mo)
+    return x, kv, aux
+
+
+def _ssm_block(cfg, p, x, init_state=None):
+    h = apply_norm(cfg, p["ln1"], x)
+    o, state = ssm_mod.ssm_fwd(cfg, p["ssm"], h, init_state)
+    return x + o, state
+
+
+def _rec_block(cfg, p, x, init_state=None):
+    h = apply_norm(cfg, p["ln1"], x)
+    o, state = rglru_mod.rglru_fwd(cfg, p["rec"], h, init_state)
+    x = x + o
+    h = apply_norm(cfg, p["ln2"], x)
+    x = x + mlp_fwd(cfg, p["mlp"], h)
+    return x, state
+
+
+def _local_attn_block(cfg, p, x, positions, *, impl="blocked"):
+    h = apply_norm(cfg, p["ln1"], x)
+    a, kv = attn.attention_fwd(cfg, p["attn"], h, positions, causal=True,
+                               window=cfg.local_window, impl=impl)
+    x = x + a
+    h = apply_norm(cfg, p["ln2"], x)
+    x = x + mlp_fwd(cfg, p["mlp"], h)
+    return x, kv
+
+
+def _maybe_remat(cfg, f):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(f, policy=policy)
+    return jax.checkpoint(f)
+
+
+# ---------------------------------------------------------------------------
+# Backbone forward (training/prefill), returns hidden states and aux
+# ---------------------------------------------------------------------------
+def lm_backbone(cfg, params, x, positions, *, impl="blocked", collect_cache=False):
+    """x: [B,S,D] embedded input.  Returns (hidden, aux_losses, caches)."""
+    fam = cfg.family
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: Dict[str, Any] = {}
+
+    if fam in ("dense", "vlm"):
+        def blk(x, p):
+            x, kv = _attn_dense_block(cfg, p, x, positions, impl=impl)
+            return x, kv if collect_cache else None
+
+        x, kvs = jax.lax.scan(_maybe_remat(cfg, blk), x, params["blocks"])
+        if collect_cache:
+            caches["kv"] = kvs
+    elif fam == "moe":
+        if cfg.moe_dense_layers:
+            def dblk(x, p):
+                x, kv = _attn_dense_block(cfg, p, x, positions, impl=impl)
+                return x, kv if collect_cache else None
+
+            x, dkvs = jax.lax.scan(_maybe_remat(cfg, dblk), x, params["dense_blocks"])
+            if collect_cache:
+                caches["dense_kv"] = dkvs
+
+        def mblk(x, p):
+            x, kv, aux = _attn_moe_block(cfg, p, x, positions, impl=impl)
+            return x, (kv if collect_cache else None, aux)
+
+        x, (kvs, auxs) = jax.lax.scan(_maybe_remat(cfg, mblk), x, params["blocks"])
+        aux_total = aux_total + jnp.sum(auxs)
+        if collect_cache:
+            caches["kv"] = kvs
+    elif fam == "ssm":
+        def sblk(x, p):
+            x, st = _ssm_block(cfg, p, x)
+            return x, st if collect_cache else None
+
+        x, states = jax.lax.scan(_maybe_remat(cfg, sblk), x, params["blocks"])
+        if collect_cache:
+            caches["ssm_state"] = states
+    elif fam == "hybrid":
+        n_groups, tail = _hybrid_layout(cfg)
+
+        def gblk(x, p):
+            outs = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                key = f"p{i}_{kind}"
+                if kind == "rec":
+                    x, fin = _rec_block(cfg, p[key], x)
+                    outs[key] = fin if collect_cache else None
+                else:
+                    x, kv = _local_attn_block(cfg, p[key], x, positions, impl=impl)
+                    outs[key] = kv if collect_cache else None
+            return x, outs
+
+        x, gouts = jax.lax.scan(_maybe_remat(cfg, gblk), x, params["groups"])
+        if collect_cache:
+            caches["groups"] = gouts
+        for i, kind in enumerate(tail):
+            key = f"tail{i}_{kind}"
+            if kind == "rec":
+                x, fin = _rec_block(cfg, params[key], x)
+                if collect_cache:
+                    caches[key] = fin
+            else:
+                x, kv = _local_attn_block(cfg, params[key], x, positions, impl=impl)
+                if collect_cache:
+                    caches[key] = kv
+    else:
+        raise ValueError(fam)
+    return x, aux_total, caches
+
+
+# ---------------------------------------------------------------------------
+# Loss (training)
+# ---------------------------------------------------------------------------
+def lm_loss(cfg, params, batch, *, impl: str = "blocked") -> Tuple[jax.Array, Dict]:
+    """batch: {'tokens': [B,S], 'labels': [B,S]} (+ 'patches' for vlm)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params["tok"], tokens)
+    if cfg.family == "vlm":
+        pe = batch["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+        labels = jnp.concatenate(
+            [jnp.full((B, pe.shape[1]), -1, labels.dtype), labels], axis=1
+        )
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :], x.shape[:2])
+    h, aux, _ = lm_backbone(cfg, params, x, positions, impl=impl)
+    loss = chunked_cross_entropy(cfg, params["tok"], h, labels)
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.family == "moe" and cfg.moe_experts:
+        loss = loss + AUX_WEIGHT * aux
+    if cfg.mtp_depth:
+        # DeepSeek-style multi-token prediction: one extra block predicts
+        # token t+2 from [h_t ; emb(t_{t+1})] (simplified single-depth MTP).
+        # Kept at full sequence length (labels masked at the boundary) so
+        # the flash-attention path applies — a 4095-length naive attention
+        # would materialize S^2 scores (observed 10 GiB, §Perf).
+        emb_next = embed_tokens(cfg, params["tok"], tokens)
+        mtp_in = jnp.concatenate([h, jnp.roll(emb_next, -1, axis=1)], axis=-1)
+        mtp_h = mtp_in @ params["mtp"]["proj"]
+        mtp_h, _ = _attn_dense_block(cfg, params["mtp"]["block"],
+                                     mtp_h, positions, impl=impl)
+        mtp_labels = jnp.roll(labels, -1, axis=1).at[:, -1].set(-1)
+        mtp_loss = chunked_cross_entropy(cfg, params["tok"], mtp_h, mtp_labels)
+        metrics["mtp"] = mtp_loss
+        loss = loss + cfg.mtp_loss_weight * mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+def init_cache_shapes(cfg, batch: int, cache_len: int):
+    """Abstract cache pytree (shape/dtype) for decode at a given length."""
+    fam = cfg.family
+    hd = cfg.resolved_head_dim
+    KV = cfg.num_kv_heads
+    cdt = jnp.dtype(cfg.cache_dtype)
+    if fam in ("dense", "vlm"):
+        L = cfg.num_layers
+        if cfg.attention == "mla":
+            return {
+                "ckv": jax.ShapeDtypeStruct((L, batch, cache_len, cfg.kv_lora_rank), cdt),
+                "krope": jax.ShapeDtypeStruct((L, batch, cache_len, cfg.qk_rope_dim), cdt),
+            }
+        return {
+            "k": jax.ShapeDtypeStruct((L, batch, cache_len, KV, hd), cdt),
+            "v": jax.ShapeDtypeStruct((L, batch, cache_len, KV, hd), cdt),
+        }
+    if fam == "moe":
+        nd = cfg.moe_dense_layers
+        Lm = cfg.num_layers - nd
+        out = {}
+        if cfg.attention == "mla":
+            out["ckv"] = jax.ShapeDtypeStruct((Lm, batch, cache_len, cfg.kv_lora_rank), cdt)
+            out["krope"] = jax.ShapeDtypeStruct((Lm, batch, cache_len, cfg.qk_rope_dim), cdt)
+            if nd:
+                out["d_ckv"] = jax.ShapeDtypeStruct((nd, batch, cache_len, cfg.kv_lora_rank), cdt)
+                out["d_krope"] = jax.ShapeDtypeStruct((nd, batch, cache_len, cfg.qk_rope_dim), cdt)
+        else:
+            out["k"] = jax.ShapeDtypeStruct((Lm, batch, cache_len, KV, hd), cdt)
+            out["v"] = jax.ShapeDtypeStruct((Lm, batch, cache_len, KV, hd), cdt)
+            if nd:
+                out["d_k"] = jax.ShapeDtypeStruct((nd, batch, cache_len, KV, hd), cdt)
+                out["d_v"] = jax.ShapeDtypeStruct((nd, batch, cache_len, KV, hd), cdt)
+        return out
+    if fam == "ssm":
+        L = cfg.num_layers
+        shapes = ssm_mod.ssm_state_shapes(cfg, batch)
+        return {
+            "ssm": jax.ShapeDtypeStruct((L,) + shapes["ssm"][0], shapes["ssm"][1]),
+            "conv": jax.ShapeDtypeStruct((L,) + shapes["conv"][0], shapes["conv"][1]),
+        }
+    if fam == "hybrid":
+        n_groups, tail = _hybrid_layout(cfg)
+        W = cfg.rglru_width or cfg.d_model
+        K = cfg.conv_width
+        win = min(cfg.local_window, cache_len)
+        out = {}
+        n_rec = sum(1 for k in cfg.block_pattern if k == "rec")
+        n_att = len(cfg.block_pattern) - n_rec
+        out["rnn"] = jax.ShapeDtypeStruct((n_groups, n_rec, batch, W), jnp.float32)
+        out["rnn_conv"] = jax.ShapeDtypeStruct((n_groups, n_rec, batch, K - 1, W), cdt)
+        out["k"] = jax.ShapeDtypeStruct((n_groups, n_att, batch, win, KV, hd), cdt)
+        out["v"] = jax.ShapeDtypeStruct((n_groups, n_att, batch, win, KV, hd), cdt)
+        n_rec_t = sum(1 for k in tail if k == "rec")
+        if n_rec_t:
+            out["tail_rnn"] = jax.ShapeDtypeStruct((n_rec_t, batch, W), jnp.float32)
+            out["tail_rnn_conv"] = jax.ShapeDtypeStruct((n_rec_t, batch, K - 1, W), cdt)
+        return out
+    raise ValueError(fam)
+
+
+def lm_prefill(cfg, params, batch, *, impl: str = "blocked"):
+    """Prefill: run the full prompt, return (last-token logits, cache)."""
+    from .attention import inference_mode
+
+    with inference_mode():
+        return _lm_prefill(cfg, params, batch, impl=impl)
+
+
+def _lm_prefill(cfg, params, batch, *, impl: str = "blocked"):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params["tok"], tokens)
+    if cfg.family == "vlm":
+        pe = batch["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :], x.shape[:2])
+    h, _, caches = lm_backbone(cfg, params, x, positions, impl=impl,
+                               collect_cache=True)
+    logits = lm_logits(cfg, params["tok"], h[:, -1:, :])
+    cache = _caches_to_decode_layout(cfg, caches, cache_len=x.shape[1])
+    return logits, cache
+
+
+def _caches_to_decode_layout(cfg, caches, cache_len: int):
+    """Convert scan-collected prefill caches into the decode cache pytree."""
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.attention == "mla":
+            out = {}
+            if "dense_kv" in caches:
+                c, kr = caches["dense_kv"]
+                out["d_ckv"], out["d_krope"] = c, kr
+            c, kr = caches["kv"]
+            out["ckv"], out["krope"] = c, kr
+            return jax.tree.map(lambda a: a.astype(jnp.dtype(cfg.cache_dtype)), out)
+        out = {}
+        if "dense_kv" in caches:
+            k, v = caches["dense_kv"]
+            out["d_k"], out["d_v"] = k, v
+        k, v = caches["kv"]
+        out["k"], out["v"] = k, v
+        return jax.tree.map(lambda a: a.astype(jnp.dtype(cfg.cache_dtype)), out)
+    if fam == "ssm":
+        st = caches["ssm_state"]
+        return {"ssm": st["ssm"], "conv": st["conv"]}
+    if fam == "hybrid":
+        n_groups, tail = _hybrid_layout(cfg)
+        win = cfg.local_window
+        rnn, rconv, ks, vs = [], [], [], []
+        g = caches["groups"]
+        for i, kind in enumerate(cfg.block_pattern):
+            key = f"p{i}_{kind}"
+            if kind == "rec":
+                rnn.append(g[key]["rnn"])
+                rconv.append(g[key]["conv"])
+            else:
+                k, v = g[key]
+                ks.append(_ring_slice(k, win, cache_len))
+                vs.append(_ring_slice(v, win, cache_len))
+        out = {
+            "rnn": jnp.stack(rnn, axis=1),
+            "rnn_conv": jnp.stack(rconv, axis=1).astype(jnp.dtype(cfg.cache_dtype)),
+            "k": jnp.stack(ks, axis=1).astype(jnp.dtype(cfg.cache_dtype)),
+            "v": jnp.stack(vs, axis=1).astype(jnp.dtype(cfg.cache_dtype)),
+        }
+        t_rnn, t_conv = [], []
+        for i, kind in enumerate(tail):
+            st = caches[f"tail{i}_{kind}"]
+            t_rnn.append(st["rnn"])
+            t_conv.append(st["conv"])
+        if t_rnn:
+            out["tail_rnn"] = jnp.stack(t_rnn)
+            out["tail_rnn_conv"] = jnp.stack(t_conv).astype(jnp.dtype(cfg.cache_dtype))
+        return out
+    raise NotImplementedError(f"prefill cache layout for {fam}")
+
+
+def _ring_slice(k: jax.Array, window: int, cache_len: int) -> jax.Array:
+    """Take the last `window` positions of [G,B,S,KV,hd] into ring layout
+    (ring slot i holds absolute position p with p % window == i)."""
+    S = k.shape[2]
+    if S <= window:
+        return k
+    tail = k[:, :, -window:]
+    shift = (S - window) % window
+    return jnp.roll(tail, shift, axis=2)
+
+
+def lm_decode_step(cfg, params, cache, tokens, pos, *, decode_impl: str = "naive"):
+    """One decode step.  tokens: [B,1]; pos: [B].  Returns (logits, cache)."""
+    fam = cfg.family
+    x = embed_tokens(cfg, params["tok"], tokens)
+    new_cache = dict(cache)
+
+    if fam in ("dense", "vlm", "moe"):
+        aux = None
+        if fam == "moe" and cfg.moe_dense_layers:
+            def dblk(carry, inp):
+                x = carry
+                p, ck = inp
+                h = apply_norm(cfg, p["ln1"], x)
+                if cfg.attention == "mla":
+                    a, upd = mla_mod.mla_decode(cfg, p["attn"], h, ck[0], ck[1], pos)
+                else:
+                    a, upd = attn.decode_attention(cfg, p["attn"], h, ck[0], ck[1],
+                                                   pos, impl=decode_impl)
+                x = _res(cfg, x, a)
+                h = apply_norm(cfg, p["ln2"], x)
+                x = _res(cfg, x, mlp_fwd(cfg, p["mlp"], h))
+                return x, upd
+
+            cpair = ((cache["d_ckv"], cache["d_krope"]) if cfg.attention == "mla"
+                     else (cache["d_k"], cache["d_v"]))
+            x, upd = jax.lax.scan(dblk, x, (params["dense_blocks"], cpair))
+            if cfg.attention == "mla":
+                new_cache["d_ckv"], new_cache["d_krope"] = upd
+            else:
+                new_cache["d_k"], new_cache["d_v"] = upd
+
+        def blk(carry, inp):
+            x = carry
+            p, ck = inp
+            h = apply_norm(cfg, p["ln1"], x)
+            if cfg.attention == "mla":
+                a, upd = mla_mod.mla_decode(cfg, p["attn"], h, ck[0], ck[1], pos)
+            else:
+                a, upd = attn.decode_attention(cfg, p["attn"], h, ck[0], ck[1],
+                                               pos, impl=decode_impl)
+            x = _res(cfg, x, a)
+            h = apply_norm(cfg, p["ln2"], x)
+            if fam == "moe":
+                mo, _aux = moe_mod.moe_fwd(cfg, p["moe"], h)
+                if cfg.moe_dense_residual:
+                    mo = mo + mlp_fwd(cfg, p["mlp"], h)
+                x = _res(cfg, x, mo)
+            else:
+                x = _res(cfg, x, mlp_fwd(cfg, p["mlp"], h))
+            return x, upd
+
+        cpair = ((cache["ckv"], cache["krope"]) if cfg.attention == "mla"
+                 else (cache["k"], cache["v"]))
+        x, upd = jax.lax.scan(blk, x, (params["blocks"], cpair))
+        if cfg.attention == "mla":
+            new_cache["ckv"], new_cache["krope"] = upd
+        else:
+            new_cache["k"], new_cache["v"] = upd
+
+    elif fam == "ssm":
+        def blk(carry, inp):
+            x = carry
+            p, s, cv = inp
+            h = apply_norm(cfg, p["ln1"], x)
+            o, (s2, cv2) = ssm_mod.ssm_decode(cfg, p["ssm"], h, s, cv)
+            return x + o, (s2, cv2)
+
+        x, (s2, cv2) = jax.lax.scan(blk, x, (params["blocks"], cache["ssm"], cache["conv"]))
+        new_cache["ssm"], new_cache["conv"] = s2, cv2
+
+    elif fam == "hybrid":
+        n_groups, tail = _hybrid_layout(cfg)
+
+        def gblk(carry, inp):
+            x = carry
+            p, rnn, rnn_conv, ck, cv = inp
+            ri = ai = 0
+            rnn_o, conv_o, k_o, v_o = [], [], [], []
+            for i, kind in enumerate(cfg.block_pattern):
+                key = f"p{i}_{kind}"
+                if kind == "rec":
+                    h = apply_norm(cfg, p[key]["ln1"], x)
+                    o, (s2, w2) = rglru_mod.rglru_decode(
+                        cfg, p[key]["rec"], h, rnn[ri], rnn_conv[ri])
+                    x = x + o
+                    h = apply_norm(cfg, p[key]["ln2"], x)
+                    x = x + mlp_fwd(cfg, p[key]["mlp"], h)
+                    rnn_o.append(s2); conv_o.append(w2)
+                    ri += 1
+                else:
+                    h = apply_norm(cfg, p[key]["ln1"], x)
+                    a, (k2, v2) = attn.decode_attention(
+                        cfg, p[key]["attn"], h, ck[ai], cv[ai], pos,
+                        window=cfg.local_window, impl=decode_impl)
+                    x = x + a
+                    h = apply_norm(cfg, p[key]["ln2"], x)
+                    x = x + mlp_fwd(cfg, p[key]["mlp"], h)
+                    k_o.append(k2); v_o.append(v2)
+                    ai += 1
+            return x, (jnp.stack(rnn_o), jnp.stack(conv_o),
+                       jnp.stack(k_o), jnp.stack(v_o))
+
+        x, (rnn2, rconv2, k2, v2) = jax.lax.scan(
+            gblk, x,
+            (params["groups"], cache["rnn"], cache["rnn_conv"],
+             cache["k"], cache["v"]))
+        new_cache.update({"rnn": rnn2, "rnn_conv": rconv2, "k": k2, "v": v2})
+        ti = 0
+        t_rnn, t_conv = [], []
+        for i, kind in enumerate(tail):
+            key = f"tail{i}_{kind}"
+            h = apply_norm(cfg, params[key]["ln1"], x)
+            o, (s2, w2) = rglru_mod.rglru_decode(
+                cfg, params[key]["rec"], h, cache["tail_rnn"][ti],
+                cache["tail_rnn_conv"][ti])
+            x = x + o
+            h = apply_norm(cfg, params[key]["ln2"], x)
+            x = x + mlp_fwd(cfg, params[key]["mlp"], h)
+            t_rnn.append(s2); t_conv.append(w2)
+            ti += 1
+        if t_rnn:
+            new_cache["tail_rnn"] = jnp.stack(t_rnn)
+            new_cache["tail_rnn_conv"] = jnp.stack(t_conv)
+    else:
+        raise ValueError(fam)
+
+    logits = lm_logits(cfg, params["tok"], x)
+    return logits, new_cache

@@ -1,0 +1,147 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and keys/values are projected through low-rank bottlenecks; the
+decode cache stores only the compressed latent ``c_kv`` (kv_lora_rank) plus
+the shared RoPE key (qk_rope_dim) per token — 576 values/token for V3
+instead of 2 * 128 heads * 128 dims.  Decode uses the *absorbed* form:
+q_nope is folded through W_UK so scores contract directly against the
+latent cache, and attention output is expanded through W_UV afterwards.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..shardlib import constrain
+from .attention import _blocked_attention, _naive_attention, NEG_INF
+from .layers import apply_rope, rope
+from .params import ParamSpec
+
+__all__ = ["mla_specs", "mla_fwd", "mla_decode", "mla_cache_width"]
+
+
+def mla_specs(cfg, L: int) -> dict:
+    D = cfg.d_model
+    H = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = cfg.pdtype
+    lead: Tuple[int, ...] = (L,) if L else ()
+    lax: Tuple[str, ...] = ("layers",) if L else ()
+    return {
+        "wq_a": ParamSpec(lead + (D, qr), lax + ("embed", "qlora"), dt),
+        "q_norm": ParamSpec(lead + (qr,), lax + ("qlora",), dt, "ones"),
+        "wq_b": ParamSpec(lead + (qr, H, dn + dr), lax + ("qlora", "q_heads", "head_dim"), dt, fan=qr),
+        "wkv_a": ParamSpec(lead + (D, kvr), lax + ("embed", "kvlora"), dt),
+        "kv_norm": ParamSpec(lead + (kvr,), lax + ("kvlora",), dt, "ones"),
+        "wkr": ParamSpec(lead + (D, dr), lax + ("embed", "head_dim"), dt),
+        "wk_b": ParamSpec(lead + (kvr, H, dn), lax + ("kvlora", "q_heads", "head_dim"), dt, fan=kvr),
+        "wv_b": ParamSpec(lead + (kvr, H, dv), lax + ("kvlora", "q_heads", "head_dim"), dt, fan=kvr),
+        "wo": ParamSpec(lead + (H, dv, D), lax + ("q_heads", "head_dim", "embed"), dt, fan=H * dv),
+    }
+
+
+def mla_cache_width(cfg) -> int:
+    return cfg.kv_lora_rank + cfg.qk_rope_dim
+
+
+def _project_q(cfg, p, x, positions):
+    """x -> q_nope [B,S,H,dn], q_rope [B,S,H,dr] (RoPE applied)."""
+    from .layers import rmsnorm
+
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rmsnorm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsq,qhk->bshk", cq, p["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    sin, cos = rope(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(cfg, p, x, positions):
+    """x -> c_kv [B,S,kvr] (normed latent), k_rope [B,S,dr] (RoPE applied)."""
+    from .layers import rmsnorm
+
+    dr = cfg.qk_rope_dim
+    c_kv = rmsnorm(x @ p["wkv_a"], p["kv_norm"], cfg.norm_eps)
+    k_rope = x @ p["wkr"]
+    sin, cos = rope(positions, dr, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], sin, cos)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_fwd(
+    cfg,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    impl: str = "blocked",
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Training/prefill MLA in the expanded form.
+
+    Returns (out, (c_kv, k_rope)) — the compressed decode cache."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    c_kv, k_rope = _project_kv_latent(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsc,chk->bshk", c_kv, p["wk_b"])
+    v = jnp.einsum("bsc,chk->bshk", c_kv, p["wv_b"])
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], axis=-1
+    )
+    q = constrain(q, ("batch", "seq", "q_heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "q_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "q_heads", "head_dim"))
+    if impl == "blocked" and S >= 1024:
+        o = _blocked_attention(q, k, v, causal=True, window=0, q_block=512, kv_block=512)
+    else:
+        o = _naive_attention(q, k, v, causal=True, window=0)
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    return constrain(out, ("batch", "seq", "embed")), (c_kv, k_rope)
+
+
+def mla_decode(
+    cfg,
+    p: dict,
+    x: jax.Array,
+    cache_ckv: jax.Array,
+    cache_krope: jax.Array,
+    pos: jax.Array,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Absorbed-form MLA decode step.
+
+    x: [B,1,D]; cache_ckv: [B,S,kvr]; cache_krope: [B,S,dr]; pos: [B].
+    """
+    B = x.shape[0]
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    S = cache_ckv.shape[1]
+
+    q_nope, q_rope = _project_q(cfg, p, x, pos[:, None])
+    c_new, kr_new = _project_kv_latent(cfg, p, x, pos[:, None])
+
+    upd2 = jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice(c, n, (s, 0)))
+    cache_ckv = upd2(cache_ckv, c_new, pos)
+    cache_krope = upd2(cache_krope, kr_new, pos)
+    cache_ckv = constrain(cache_ckv, ("batch", "cache_seq", "kvlora"))
+    cache_krope = constrain(cache_krope, ("batch", "cache_seq", "head_dim"))
+
+    # Absorb W_UK into the query: scores contract against the latent cache.
+    q_abs = jnp.einsum("bqhn,chn->bqhc", q_nope, p["wk_b"])
+    scores = jnp.einsum("bqhc,bsc->bhqs", q_abs, cache_ckv).astype(jnp.float32)
+    scores += jnp.einsum("bqhr,bsr->bhqs", q_rope, cache_krope).astype(jnp.float32)
+    scores = scores / math.sqrt(dn + dr)
+    mask = (jnp.arange(S)[None, :] <= pos[:, None])[:, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_c = jnp.einsum("bhqs,bsc->bqhc", w, cache_ckv)
+    o = jnp.einsum("bqhc,chv->bqhv", o_c, p["wv_b"])
+    out = jnp.einsum("bqhv,hvd->bqd", o, p["wo"])
+    return constrain(out, ("batch", None, "embed")), (cache_ckv, cache_krope)

@@ -1,0 +1,338 @@
+"""Mixture-of-experts FFN with expert parallelism.
+
+Baseline dispatch is capacity-based (GShard-style) expressed with
+scatter/gather so XLA/GSPMD shards the expert buffer over the 'model' mesh
+axis.  Routing:
+
+* ``softmax`` — classic top-k softmax router (Arctic).
+* ``sigmoid`` — DeepSeek-V3: sigmoid affinities, top-k selection, combine
+  weights are the selected affinities renormalized to sum to 1.
+
+An auxiliary load-balance loss (Switch-style) is returned alongside the
+output.  The optimized shard_map expert-parallel path lives in
+``moe_fwd_ep`` (see EXPERIMENTS.md §Perf hillclimb B for the before/after).
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..shardlib import constrain, current_ctx
+from .layers import residual_out_scale
+from .params import ParamSpec
+
+__all__ = ["moe_specs", "moe_fwd", "moe_fwd_ref", "moe_fwd_dropless",
+           "moe_fwd_ep", "dropless_moe", "ep_moe"]
+
+# Trace-time switch for the dropless token-local MoE path.  Capacity
+# dispatch is not token-local (tokens compete for capacity slots), so
+# change propagation through a capacity-dispatch MoE is unsound; the
+# incremental-prefill path and its full-prefill oracle both run under
+# this context.  At 512-device scale dropless needs a grouped-GEMM
+# (MegaBlocks-style) kernel to shard; see DESIGN.md §Arch-applicability.
+_DROPLESS = [False]
+
+# Trace-time switch for the shard_map expert-parallel dispatch (hillclimb
+# B): identical routing, per-shard capacity quotas, one psum/layer instead
+# of GSPMD's replicate-and-all-reduce resharding.
+_EP = [False]
+
+
+@contextlib.contextmanager
+def dropless_moe(on: bool = True):
+    prev = _DROPLESS[0]
+    _DROPLESS[0] = on
+    try:
+        yield
+    finally:
+        _DROPLESS[0] = prev
+
+
+@contextlib.contextmanager
+def ep_moe(on: bool = True):
+    prev = _EP[0]
+    _EP[0] = on
+    try:
+        yield
+    finally:
+        _EP[0] = prev
+
+
+def moe_specs(cfg, L: int) -> dict:
+    D = cfg.d_model
+    E = cfg.moe_experts
+    Fe = cfg.d_ff
+    dt = cfg.pdtype
+    lead: Tuple[int, ...] = (L,) if L else ()
+    lax: Tuple[str, ...] = ("layers",) if L else ()
+    specs = {
+        "router": ParamSpec(lead + (D, E), lax + ("embed", "experts"),
+                            jnp.float32, "normal", scale=0.006),
+        "gate": ParamSpec(lead + (E, D, Fe), lax + ("experts", "embed", "expert_mlp"), dt),
+        "up": ParamSpec(lead + (E, D, Fe), lax + ("experts", "embed", "expert_mlp"), dt),
+        "down": ParamSpec(lead + (E, Fe, D), lax + ("experts", "expert_mlp", "embed"), dt,
+                          scale=residual_out_scale(cfg)),
+    }
+    if cfg.moe_shared_experts:
+        f_sh = Fe * cfg.moe_shared_experts
+        specs["shared"] = {
+            "gate": ParamSpec(lead + (D, f_sh), lax + ("embed", "mlp"), dt),
+            "up": ParamSpec(lead + (D, f_sh), lax + ("embed", "mlp"), dt),
+            "down": ParamSpec(lead + (f_sh, D), lax + ("mlp", "embed"), dt,
+                              scale=residual_out_scale(cfg)),
+        }
+    return specs
+
+
+def _route(cfg, scores: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """scores [N,E] -> (weights [N,k], ids [N,k], probs-for-aux [N,E])."""
+    k = cfg.moe_top_k
+    if cfg.moe_router == "sigmoid":
+        aff = jax.nn.sigmoid(scores)
+        topw, topi = jax.lax.top_k(aff, k)
+        topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+        probs = aff / jnp.maximum(aff.sum(-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(scores, axis=-1)
+        topw, topi = jax.lax.top_k(probs, k)
+        topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    return topw, topi, probs
+
+
+def _aux_loss(cfg, probs: jax.Array, topi: jax.Array) -> jax.Array:
+    """Switch-style load balance: E * mean(frac_tokens_e * mean_prob_e)."""
+    E = cfg.moe_experts
+    counts = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    frac = counts / jnp.maximum(counts.sum(), 1.0)
+    mean_prob = probs.mean(axis=0)
+    return E * jnp.sum(frac * mean_prob)
+
+
+def moe_fwd(cfg, p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """MoE FFN.  x: [B,S,D] -> (out [B,S,D], aux_loss).
+
+    Default is capacity dispatch (GShard buffers, shardable over the
+    expert axis — what the production dry-run lowers).  Inside a
+    ``dropless_moe()`` context the token-local grouped path is used
+    instead, which incremental prefill requires (see moe_fwd_dropless)."""
+    if _DROPLESS[0]:
+        return moe_fwd_dropless(cfg, p, x)
+    if _EP[0] or os.environ.get("REPRO_MOE_EP", "") not in ("", "0"):
+        return moe_fwd_ep(cfg, p, x)
+    B, S, D = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    N = B * S
+    xf = x.reshape(N, D)
+
+    scores = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    topw, topi, probs = _route(cfg, scores)
+    aux = _aux_loss(cfg, probs, topi)
+
+    # Capacity per expert over the *global* token count; each device sees a
+    # data shard, so dispatch below operates on global-logical arrays and
+    # GSPMD partitions token dims over ('pod','data') and experts/buffers
+    # over 'model'.
+    C = max(int(N * k * cfg.moe_capacity_factor) // E, 8)
+
+    # Flat assignments (token-major so earlier tokens win capacity slots).
+    e_f = topi.reshape(-1)                      # [N*k]
+    w_f = topw.reshape(-1)
+    oh = jax.nn.one_hot(e_f, E, dtype=jnp.int32)           # [N*k, E]
+    pos = jnp.cumsum(oh, axis=0) - oh                      # exclusive cumsum
+    pos_f = jnp.take_along_axis(pos, e_f[:, None], axis=1)[:, 0]
+    keep = pos_f < C
+    slot = e_f * C + jnp.where(keep, pos_f, 0)
+
+    x_rep = jnp.repeat(xf, k, axis=0)                      # [N*k, D]
+    contrib = jnp.where(keep[:, None], x_rep, 0).astype(x.dtype)
+    buf = jnp.zeros((E * C, D), x.dtype).at[slot].add(contrib)
+    buf = buf.reshape(E, C, D)
+    buf = constrain(buf, ("experts", None, "embed"))
+
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["up"]
+    )
+    h = constrain(h, ("experts", None, "expert_mlp"))
+    y = jnp.einsum("ecf,efd->ecd", h, p["down"])
+    y = constrain(y, ("experts", None, "embed"))
+
+    y_f = y.reshape(E * C, D)[slot]                        # [N*k, D]
+    y_f = y_f * (w_f * keep.astype(jnp.float32))[:, None].astype(y_f.dtype)
+    out = y_f.reshape(N, k, D).sum(axis=1).reshape(B, S, D)
+
+    if cfg.moe_shared_experts:
+        from .layers import mlp_fwd
+
+        out = out + mlp_fwd(cfg, p["shared"], x.reshape(B, S, D))
+    return constrain(out, ("batch", "seq", "embed")), aux
+
+
+def moe_fwd_ep(cfg, p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE via shard_map — the optimized dispatch.
+
+    The einsum/scatter formulation above leaves GSPMD to reshard tokens
+    (sharded over pod/data) against expert buffers (sharded over model);
+    it gives up and replicates ("involuntary full rematerialization"),
+    costing ~16 TB/device/step of all-reduce wire on deepseek train_4k
+    (EXPERIMENTS.md §Perf, hillclimb B).  Here the dispatch never crosses
+    the boundary: activations are replicated over 'model' within a data
+    row, so each (data, model) device *locally* selects the tokens routed
+    to its own E/TP experts, runs the FFN, and one psum over 'model'
+    combines the k expert contributions per token — the same wire pattern
+    as a Megatron TP matmul (2(g-1)/g x N_local x D per layer).
+
+    Identical routing/capacity semantics to ``moe_fwd`` (token-major
+    capacity, same C), numerics equal up to reduction order.
+    """
+    from ..shardlib import current_ctx
+
+    ctx = current_ctx()
+    if ctx is None or "model" not in ctx.axis_sizes \
+            or ctx.axis_sizes["model"] <= 1 \
+            or cfg.moe_experts % ctx.axis_sizes["model"] != 0:
+        with ep_moe(False):
+            return moe_fwd(cfg, p, x)
+    mesh = ctx.mesh
+    tp = ctx.axis_sizes["model"]
+    B, S, D = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    N = B * S
+    E_loc = E // tp
+    batch_axes = tuple(a for a in ("pod", "data") if a in ctx.axis_sizes)
+    n_data = 1
+    for a in batch_axes:
+        n_data *= ctx.axis_sizes[a]
+    # Capacity is a *per-dispatch-group* quota (each data shard dispatches
+    # its own tokens): size it from the shard-local token count, or the
+    # expert buffers carry n_data x zero rows (measured: +53 s compute on
+    # deepseek train_4k when sized globally — §Perf hillclimb B iter 2).
+    C = max(int(max(N // n_data, 1) * k * cfg.moe_capacity_factor) // E, 8)
+
+    def shard_fn(xf, router, gate, up, down):
+        # xf: [N_loc, D] (data shard, replicated over model);
+        # gate/up/down: [E_loc, ...] local experts; router replicated.
+        m = jax.lax.axis_index("model")
+        e0 = m * E_loc
+        scores = (xf.astype(jnp.float32) @ router).astype(jnp.float32)
+        topw, topi, probs = _route(cfg, scores)
+        aux = _aux_loss(cfg, probs, topi) / tp     # psum'd below
+
+        e_f = topi.reshape(-1)
+        w_f = topw.reshape(-1)
+        # token-major capacity positions computed over ALL experts (same
+        # keep-set as the global dispatch), then restricted to local ones.
+        oh = jax.nn.one_hot(e_f, E, dtype=jnp.int32)
+        pos = jnp.cumsum(oh, axis=0) - oh
+        pos_f = jnp.take_along_axis(pos, e_f[:, None], axis=1)[:, 0]
+        keep = pos_f < C
+        local = (e_f >= e0) & (e_f < e0 + E_loc) & keep
+        slot = (e_f - e0) * C + jnp.where(local, pos_f, 0)
+        slot = jnp.where(local, slot, E_loc * C)   # OOB drop lane
+
+        x_rep = jnp.repeat(xf, k, axis=0)
+        contrib = jnp.where(local[:, None], x_rep, 0).astype(x.dtype)
+        buf = jnp.zeros((E_loc * C + 1, D), x.dtype).at[slot].add(
+            contrib, mode="drop").at[E_loc * C].set(0.0)
+        buf = buf[:E_loc * C].reshape(E_loc, C, D)
+
+        act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", buf, gate)) * jnp.einsum(
+            "ecd,edf->ecf", buf, up)
+        y = jnp.einsum("ecf,efd->ecd", h, down).reshape(E_loc * C, D)
+        y = jnp.concatenate([y, jnp.zeros((1, D), y.dtype)])
+        y_f = y.at[slot].get(mode="fill", fill_value=0)
+        y_f = y_f * (w_f * local.astype(jnp.float32))[:, None].astype(y.dtype)
+        out = y_f.reshape(-1, k, D).sum(axis=1)
+        # combine expert contributions across model columns
+        out = jax.lax.psum(out, "model")
+        aux = jax.lax.psum(aux, "model")
+        return out, aux
+
+    xf = x.reshape(N, D)
+    bspec = batch_axes if batch_axes else None
+    out, aux = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(P(bspec, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(bspec, None), P()),
+        check_vma=False,
+    )(xf, p["router"], p["gate"], p["up"], p["down"])
+    out = out.reshape(B, S, D)
+    if cfg.moe_shared_experts:
+        from .layers import mlp_fwd
+
+        out = out + mlp_fwd(cfg, p["shared"], x)
+    return constrain(out, ("batch", "seq", "embed")), aux
+
+
+def moe_fwd_dropless(cfg, p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dropless MoE: sort tokens by expert, grouped-GEMM via ragged_dot.
+
+    Unlike capacity dispatch, every token reaches all of its top-k experts
+    — no competition for capacity slots — so the op is *token-local*: a
+    token's output depends only on its own hidden state.  This is what
+    makes MoE layers compatible with incremental prefill (change
+    propagation), and it is the quality-preserving choice for serving.
+    Used automatically in inference mode; training keeps capacity
+    dispatch (fixed buffers shard cleanly over the expert axis).
+    """
+    B, S, D = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    N = B * S
+    xf = x.reshape(N, D)
+
+    scores = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    topw, topi, probs = _route(cfg, scores)
+    aux = _aux_loss(cfg, probs, topi)
+
+    e_f = topi.reshape(-1)                        # [N*k] expert of each copy
+    w_f = topw.reshape(-1)
+    order = jnp.argsort(e_f)                      # stable: groups tokens by expert
+    x_sorted = jnp.repeat(xf, k, axis=0)[order]
+    group_sizes = jnp.bincount(e_f, length=E).astype(jnp.int32)
+
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    h = act(jax.lax.ragged_dot(x_sorted, p["gate"], group_sizes)) * \
+        jax.lax.ragged_dot(x_sorted, p["up"], group_sizes)
+    y_sorted = jax.lax.ragged_dot(h.astype(x.dtype), p["down"], group_sizes)
+
+    inv = jnp.argsort(order)                      # unsort back to token order
+    y_f = y_sorted[inv] * w_f[:, None].astype(y_sorted.dtype)
+    out = y_f.reshape(N, k, D).sum(axis=1).reshape(B, S, D)
+
+    if cfg.moe_shared_experts:
+        from .layers import mlp_fwd
+
+        out = out + mlp_fwd(cfg, p["shared"], x)
+    return constrain(out, ("batch", "seq", "embed")), aux
+
+
+def moe_fwd_ref(cfg, p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Oracle: loop over experts, no capacity drops.  Small shapes only."""
+    B, S, D = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    xf = x.reshape(-1, D)
+    scores = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    topw, topi, probs = _route(cfg, scores)
+    aux = _aux_loss(cfg, probs, topi)
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    out = jnp.zeros_like(xf)
+    for e in range(E):
+        h = act(xf @ p["gate"][e]) * (xf @ p["up"][e])
+        ye = h @ p["down"][e]
+        w_e = jnp.sum(jnp.where(topi == e, topw, 0.0), axis=-1)
+        out = out + ye * w_e[:, None].astype(ye.dtype)
+    out = out.reshape(B, S, D)
+    if cfg.moe_shared_experts:
+        from .layers import mlp_fwd
+
+        out = out + mlp_fwd(cfg, p["shared"], x)
+    return out, aux

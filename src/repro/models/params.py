@@ -1,0 +1,126 @@
+"""Parameter declaration: one source of truth for shape/axes/init.
+
+Model modules declare nested dicts of ``ParamSpec``; this module turns a
+spec tree into (a) abstract ShapeDtypeStructs for the dry-run, (b) real
+initialized arrays for smoke tests / training, (c) logical-axes trees for
+sharding, and (d) analytic parameter counts for roofline math.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ParamSpec",
+    "abstract_tree",
+    "init_tree",
+    "axes_tree",
+    "count_tree",
+    "count_params",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "fan_in"     # 'fan_in' | 'normal' | 'zeros' | 'ones' | 'embed'
+    scale: float = 1.0
+    fan_axis: int = -2       # which axis is fan-in for 'fan_in' init
+    fan: Optional[int] = None  # explicit fan-in override (3D projections:
+                               # (D,H,hd) contracts D, (H,hd,D) contracts
+                               # H*hd — a single axis cannot express either)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_tree(specs) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+def axes_tree(specs) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def init_tree(specs, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "embed":
+        std = spec.scale
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dt)
+    # fan_in (truncated-normal / sqrt(fan_in)); 'layers' leading axes are
+    # excluded from fan-in by convention (fan_axis counts from the right).
+    if spec.fan is not None:
+        fan = spec.fan
+    else:
+        fan = spec.shape[spec.fan_axis] if len(spec.shape) >= 2 else spec.shape[0]
+    std = spec.scale / math.sqrt(max(fan, 1))
+    x = jax.random.truncated_normal(key, -2.0, 2.0, spec.shape, jnp.float32)
+    return (x * std).astype(dt)
+
+
+def count_tree(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    """Analytic parameter count; with ``active_only`` MoE experts count only
+    top_k (+shared) of the routed experts — the 6*N_active*D roofline N."""
+    from .api import model_specs  # late import to avoid cycles
+
+    specs = model_specs(cfg)
+    total = count_tree(specs)
+    if active_only and cfg.moe_experts:
+        # Subtract the inactive routed-expert fraction analytically.
+        expert_leaves = jax.tree.leaves(
+            _filter_experts(specs), is_leaf=_is_spec
+        )
+        routed = int(sum(np.prod(s.shape) for s in expert_leaves))
+        active_frac = cfg.moe_top_k / cfg.moe_experts
+        total -= int(routed * (1.0 - active_frac))
+    return total
+
+
+def _filter_experts(specs):
+    """Sub-tree of specs whose logical axes include 'experts' with size>1."""
+    out = {}
+    def rec(node, path):
+        if _is_spec(node):
+            if "experts" in node.axes:
+                i = node.axes.index("experts")
+                if node.shape[i] > 1:
+                    out["/".join(path)] = node
+            return
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(v, path + [str(k)])
+    rec(specs, [])
+    return out

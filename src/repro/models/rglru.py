@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) is a
+first-order linear recurrence, so training computes it with
+``jax.lax.associative_scan`` (log-depth — the RSP-tree-friendly shape: a
+balanced reduction tree, exactly the structure the paper's change
+propagation exploits).  Decode carries a [B, rnn_width] state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..shardlib import constrain
+from .layers import residual_out_scale
+from .params import ParamSpec
+
+__all__ = ["rglru_specs", "rglru_fwd", "rglru_decode", "rglru_state_shapes"]
+
+_C = 8.0  # Griffin's fixed gate temperature
+
+
+def _width(cfg) -> int:
+    return cfg.rglru_width or cfg.d_model
+
+
+def rglru_specs(cfg, L: int) -> dict:
+    D = cfg.d_model
+    W = _width(cfg)
+    K = cfg.conv_width
+    dt = cfg.pdtype
+    lead: Tuple[int, ...] = (L,) if L else ()
+    lax: Tuple[str, ...] = ("layers",) if L else ()
+    return {
+        "w_x": ParamSpec(lead + (D, W), lax + ("embed", "rnn"), dt),
+        "w_y": ParamSpec(lead + (D, W), lax + ("embed", "rnn"), dt),
+        "conv_w": ParamSpec(lead + (K, W), lax + ("conv", "rnn"), dt, "normal", scale=0.5),
+        "conv_b": ParamSpec(lead + (W,), lax + ("rnn",), dt, "zeros"),
+        "w_rgate": ParamSpec(lead + (W, W), lax + ("rnn", "state"), dt),
+        "b_rgate": ParamSpec(lead + (W,), lax + ("rnn",), dt, "zeros"),
+        "w_igate": ParamSpec(lead + (W, W), lax + ("rnn", "state"), dt),
+        "b_igate": ParamSpec(lead + (W,), lax + ("rnn",), dt, "zeros"),
+        "lam": ParamSpec(lead + (W,), lax + ("rnn",), jnp.float32, "normal", scale=0.6),
+        "w_out": ParamSpec(lead + (W, D), lax + ("rnn", "embed"), dt,
+                           scale=residual_out_scale(cfg)),
+    }
+
+
+def rglru_state_shapes(cfg, batch: int):
+    W = _width(cfg)
+    return {
+        "rnn": ((batch, W), jnp.float32),
+        "conv": ((batch, cfg.conv_width - 1, W), jnp.bfloat16),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return (out + b).astype(x.dtype)
+
+
+def _gates(cfg, p, xr: jax.Array):
+    """log_a [.., W] (<=0) and gated input u."""
+    r = jax.nn.sigmoid((xr @ p["w_rgate"] + p["b_rgate"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xr @ p["w_igate"] + p["b_igate"]).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lam"])  # log a_t  (a in (0,1))
+    a2 = jnp.exp(2.0 * log_a)
+    u = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * xr.astype(jnp.float32))
+    return log_a, u
+
+
+def rglru_fwd(cfg, p: dict, x: jax.Array, init_state=None):
+    """x: [B,S,D] -> (out [B,S,D], {'rnn','conv'} carried state)."""
+    B, S, D = x.shape
+    xw = x @ p["w_x"]
+    conv_tail = xw[:, -(cfg.conv_width - 1):, :]
+    xr = _causal_conv(xw, p["conv_w"], p["conv_b"])
+    xr = constrain(xr, ("batch", "seq", "rnn"))
+    log_a, u = _gates(cfg, p, xr)
+    if init_state is not None:
+        # Fold the carried state in as a virtual step 0.
+        u = jnp.concatenate([init_state.astype(jnp.float32)[:, None], u], axis=1)
+        log_a = jnp.concatenate([jnp.zeros_like(log_a[:, :1]), log_a], axis=1)
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 + a2, u1 * jnp.exp(a2) + u2
+
+    la, h = jax.lax.associative_scan(combine, (log_a, u), axis=1)
+    if init_state is not None:
+        h = h[:, 1:]
+    final = h[:, -1]
+    y = jax.nn.gelu((x @ p["w_y"]).astype(jnp.float32))
+    out = (h * y).astype(x.dtype) @ p["w_out"]
+    state = {"rnn": final, "conv": conv_tail}
+    return constrain(out, ("batch", "seq", "embed")), state
+
+
+def rglru_decode(cfg, p: dict, x: jax.Array, rnn_state: jax.Array, conv_state: jax.Array):
+    """x: [B,1,D]; rnn_state: [B,W]; conv_state: [B,K-1,W]."""
+    K = cfg.conv_width
+    xw = x @ p["w_x"]                                     # [B,1,W]
+    window = jnp.concatenate([conv_state, xw.astype(conv_state.dtype)], axis=1)
+    xr = (
+        jnp.einsum("bkw,kw->bw", window.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    ).astype(x.dtype)                                      # [B,W]
+    log_a, u = _gates(cfg, p, xr)
+    h = rnn_state * jnp.exp(log_a) + u
+    y = jax.nn.gelu((x[:, 0] @ p["w_y"]).astype(jnp.float32))
+    out = ((h * y).astype(x.dtype) @ p["w_out"])[:, None]
+    return constrain(out, ("batch", None, "embed")), (h, window[:, 1:])

@@ -1,0 +1,203 @@
+"""Mamba-2 blocks via SSD (state-space duality), chunked matmul form.
+
+The SSD algorithm splits the sequence into chunks; within a chunk the
+recurrence is computed as dense (Q x Q) attention-like matmuls (MXU
+friendly), and across chunks a first-order linear recurrence carries the
+[H, P, N] state.  This is the TPU-native adaptation of Mamba's selective
+scan: the hardware wants matmuls, not a length-S sequential scan
+(DESIGN.md, hardware-adaptation notes).
+
+Decode keeps an O(1)-per-token state: [B, H, P, N] SSM state plus a
+(conv_width-1)-deep convolution window — no KV cache, which is why the
+``long_500k`` shape runs on this family.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..shardlib import constrain
+from .layers import residual_out_scale
+from .params import ParamSpec
+
+__all__ = ["ssm_specs", "ssm_fwd", "ssm_decode", "ssm_state_shapes"]
+
+
+def _dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    H = di // cfg.ssm_head_dim
+    return di, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssm_specs(cfg, L: int) -> dict:
+    D = cfg.d_model
+    di, H, Pd, N = _dims(cfg)
+    conv_ch = di + 2 * N
+    dt = cfg.pdtype
+    lead: Tuple[int, ...] = (L,) if L else ()
+    lax: Tuple[str, ...] = ("layers",) if L else ()
+    return {
+        # order: [z (di), x (di), B (N), C (N), dt (H)]
+        "in_proj": ParamSpec(lead + (D, 2 * di + 2 * N + H), lax + ("embed", "rnn"), dt),
+        "conv_w": ParamSpec(lead + (cfg.ssm_conv_width, conv_ch), lax + ("conv", "rnn"), dt, "normal", scale=0.5),
+        "conv_b": ParamSpec(lead + (conv_ch,), lax + ("rnn",), dt, "zeros"),
+        "A_log": ParamSpec(lead + (H,), lax + ("q_heads",), jnp.float32, "zeros"),
+        "D": ParamSpec(lead + (H,), lax + ("q_heads",), jnp.float32, "ones"),
+        "dt_bias": ParamSpec(lead + (H,), lax + ("q_heads",), jnp.float32, "zeros"),
+        "gate_norm": ParamSpec(lead + (di,), lax + ("rnn",), dt, "ones"),
+        "out_proj": ParamSpec(lead + (di, D), lax + ("rnn", "embed"), dt,
+                              scale=residual_out_scale(cfg)),
+    }
+
+
+def ssm_state_shapes(cfg, batch: int):
+    di, H, Pd, N = _dims(cfg)
+    return {
+        "ssm": ((batch, H, Pd, N), jnp.float32),
+        "conv": ((batch, cfg.ssm_conv_width - 1, di + 2 * N), jnp.bfloat16),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d as shift-multiply-adds. xbc: [B,S,C]."""
+    K = w.shape[0]
+    out = xbc * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: [..., Q] -> [..., Q, Q]; out[i,j] = sum_{j<t<=i} x[t], -inf above."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _split_proj(cfg, zxbcdt: jax.Array):
+    di, H, Pd, N = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N :]
+    return z, xbc, dt
+
+
+def _ssd_scan(cfg, xh, dt, A, Bm, Cm, init_state=None):
+    """Chunked SSD.  xh: [B,S,H,P]; dt: [B,S,H] (softplus'd); A: [H] (<0);
+    Bm/Cm: [B,S,N].  Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    Bb, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    nc = S // Q
+    xc = xh.reshape(Bb, nc, Q, H, Pd)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    Bc = Bm.reshape(Bb, nc, Q, N)
+    Cc = Cm.reshape(Bb, nc, Q, N)
+
+    dA = dtc * A  # [B,c,Q,H]
+    dAh = jnp.moveaxis(dA, -1, 2)          # [B,c,H,Q]
+    A_cs = jnp.cumsum(dAh, axis=-1)        # [B,c,H,Q]
+    xdt = xc * dtc[..., None]              # [B,c,Q,H,P] (x weighted by dt)
+
+    # 1) intra-chunk: (C B^T ∘ L) X
+    L = jnp.exp(_segsum(dAh))              # [B,c,H,Q,Q]
+    cb = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)            # [B,c,Q,Q]
+    y_diag = jnp.einsum("bcls,bchls,bcshp->bclhp",
+                        cb.astype(jnp.float32), L,
+                        xdt.astype(jnp.float32))
+
+    # 2) per-chunk end states
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)         # [B,c,H,Q]
+    states = jnp.einsum("bcsn,bchs,bcshp->bchpn",
+                        Bc.astype(jnp.float32), decay_states,
+                        xdt.astype(jnp.float32))          # [B,c,H,P,N]
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(A_cs[..., -1])                  # [B,c,H]
+    s0 = (
+        jnp.zeros((Bb, H, Pd, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(s, inp):
+        dec, st = inp  # dec: [B,H], st: [B,H,P,N]
+        s_new = s * dec[..., None, None] + st
+        return s_new, s
+
+    decs = jnp.moveaxis(chunk_decay, 1, 0)                # [c,B,H]
+    sts = jnp.moveaxis(states, 1, 0)                      # [c,B,H,P,N]
+    final_state, prev_states = jax.lax.scan(step, s0, (decs, sts))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # [B,c,H,P,N]
+
+    # 4) contribution of carried state to each position
+    state_decay = jnp.exp(A_cs)                           # [B,c,H,Q]
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp",
+                       Cc.astype(jnp.float32), prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bb, S, H, Pd)
+    return y.astype(xh.dtype), final_state
+
+
+def ssm_fwd(cfg, p: dict, x: jax.Array, init_state=None):
+    """Full-sequence Mamba-2 block core (post-norm residual handled by
+    caller).  x: [B,S,D].  Returns (out [B,S,D], {'ssm','conv'} state)."""
+    from .layers import rmsnorm
+
+    di, H, Pd, N = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
+    conv_tail = xbc_raw[:, -(cfg.ssm_conv_width - 1):, :].astype(
+        jnp.dtype(cfg.cache_dtype))
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di]
+    Bm = xbc[..., di : di + N]
+    Cm = xbc[..., di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(*xs.shape[:-1], H, Pd)
+    xh = constrain(xh, ("batch", "seq", "q_heads", None))
+    y, fin = _ssd_scan(cfg, xh, dt, A, Bm, Cm, init_state)
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(*x.shape[:-1], di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype),
+                p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return constrain(out, ("batch", "seq", "embed")), {"ssm": fin, "conv": conv_tail}
+
+
+def ssm_decode(cfg, p: dict, x: jax.Array, ssm_state: jax.Array, conv_state: jax.Array):
+    """One-token step.  x: [B,1,D]; ssm_state: [B,H,P,N];
+    conv_state: [B,K-1,C].  Returns (out, (ssm_state, conv_state))."""
+    from .layers import rmsnorm
+
+    di, H, Pd, N = _dims(cfg)
+    K = cfg.ssm_conv_width
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    window = jnp.concatenate([conv_state, xbc[:, 0:1, :].astype(conv_state.dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc1 = jax.nn.silu(conv_out).astype(x.dtype)           # [B,C]
+    xs = xbc1[..., :di]
+    Bm = xbc1[..., di : di + N]
+    Cm = xbc1[..., di + N :]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(-1, H, Pd).astype(jnp.float32)
+    dA = jnp.exp(dt1 * A)                                  # [B,H]
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt1, Bm.astype(jnp.float32), xh)
+    new_state = ssm_state * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), new_state)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype),
+                p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_conv = window[:, 1:]
+    return constrain(out, ("batch", None, "embed")), (new_state, new_conv)

@@ -1,0 +1,16 @@
+"""Optimizers and LR schedules (pure JAX, shard-friendly pytree states)."""
+from .adamw import AdamWState, make_adamw
+from .adafactor import AdafactorState, make_adafactor
+from .schedules import make_schedule
+from .base import Optimizer, clip_by_global_norm, make_optimizer
+
+__all__ = [
+    "Optimizer",
+    "make_optimizer",
+    "make_adamw",
+    "make_adafactor",
+    "make_schedule",
+    "clip_by_global_norm",
+    "AdamWState",
+    "AdafactorState",
+]

@@ -1,0 +1,86 @@
+"""Adafactor-style optimizer: factored second moment, optional first moment.
+
+For the largest assigned models (deepseek-v3-671b, arctic-480b) full fp32
+AdamW moments do not fit a single v5e pod; the factored second moment
+reduces optimizer state from 2x fp32 to ~(row+col) fp32 + bf16 momentum.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer
+
+__all__ = ["AdafactorState", "make_adafactor"]
+
+
+class AdafactorState(NamedTuple):
+    m: Any        # bf16 momentum (or None-like zeros when disabled)
+    v_row: Any    # factored second moment (rows)  — fp32
+    v_col: Any    # factored second moment (cols)  — fp32
+    v_full: Any   # unfactored fallback for ndim<2 leaves
+
+
+def make_adafactor(
+    b1: float = 0.9,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def rows(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                    else jnp.zeros((1,), jnp.float32))
+
+        def cols(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p) else jnp.zeros((1,), jnp.float32))
+
+        def full(p):
+            return (jnp.zeros((1,), jnp.float32) if _factored(p)
+                    else jnp.zeros(p.shape, jnp.float32))
+
+        return AdafactorState(
+            m=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+            v_row=jax.tree.map(rows, params),
+            v_col=jax.tree.map(cols, params),
+            v_full=jax.tree.map(full, params),
+        )
+
+    def update(grads, state, params, step, lr):
+        def leaf(g, m, vr, vc, vf, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(p):
+                vr2 = decay * vr + (1 - decay) * g2.mean(axis=-1)
+                vc2 = decay * vc + (1 - decay) * g2.mean(axis=-2)
+                r = vr2 / jnp.maximum(vr2.mean(axis=-1, keepdims=True), eps)
+                upd = g32 / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc2)[..., None, :] + 1e-8)
+                vf2 = vf
+            else:
+                vf2 = decay * vf + (1 - decay) * g2
+                upd = g32 / (jnp.sqrt(vf2) + 1e-8)
+                vr2, vc2 = vr, vc
+            # Update clipping (RMS <= clip_threshold).
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-12)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            m2 = (b1 * m.astype(jnp.float32) + (1 - b1) * upd)
+            if p.ndim >= 2 and weight_decay:
+                m2 = m2 + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * m2).astype(p.dtype)
+            return new_p, m2.astype(jnp.bfloat16), vr2, vc2, vf2
+
+        out = jax.tree.map(leaf, grads, state.m, state.v_row, state.v_col,
+                           state.v_full, params)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), AdafactorState(m=pick(1), v_row=pick(2),
+                                       v_col=pick(3), v_full=pick(4))
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,52 @@
+"""AdamW with decoupled weight decay and configurable moment dtype."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer
+
+__all__ = ["AdamWState", "make_adamw"]
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def make_adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return AdamWState(m=jax.tree.map(zeros, params), v=jax.tree.map(zeros, params))
+
+    def update(grads, state, params, step, lr):
+        step_f = (step + 1).astype(jnp.float32)
+        c1 = 1.0 - b1 ** step_f
+        c2 = 1.0 - b2 ** step_f
+
+        def leaf(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+            upd = (m32 / c1) / (jnp.sqrt(v32 / c2) + eps)
+            # Decoupled weight decay on matrices only (ndim >= 2).
+            if p.ndim >= 2 and weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return new_p, m32.astype(state_dtype), v32.astype(state_dtype)
+
+        out = jax.tree.map(leaf, grads, state.m, state.v, params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdamWState(m=new_m, v=new_v)
+
+    return Optimizer(init=init, update=update)

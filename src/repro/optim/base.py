@@ -1,0 +1,49 @@
+"""Optimizer interface + gradient utilities."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "clip_by_global_norm", "make_optimizer", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """init(params) -> state;  update(grads, state, params, step, lr) ->
+    (new_params, new_state).  All pure; states are pytrees mirroring params
+    so sharding rules apply leaf-wise."""
+
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array, jax.Array], Tuple[Any, Any]]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def make_optimizer(cfg) -> Optimizer:
+    """Build the optimizer named by a ModelConfig."""
+    from .adamw import make_adamw
+    from .adafactor import make_adafactor
+
+    name = cfg.optimizer
+    if name == "adamw":
+        return make_adamw(state_dtype=jnp.float32)
+    if name == "adamw_bf16":
+        # bf16 moments: halves optimizer memory; the update math stays fp32.
+        return make_adamw(state_dtype=jnp.bfloat16)
+    if name == "adafactor":
+        return make_adafactor()
+    raise ValueError(f"unknown optimizer {name!r}")

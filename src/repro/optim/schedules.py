@@ -1,0 +1,57 @@
+"""Learning-rate schedules: cosine and WSD (warmup-stable-decay).
+
+WSD (MiniCPM, arXiv:2404.06395): linear warmup, long stable plateau, then
+a short sharp decay — the schedule the minicpm-2b assignment calls for.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["make_schedule"]
+
+
+def make_schedule(
+    kind: str,
+    peak_lr: float,
+    total_steps: int,
+    warmup_steps: int = 0,
+    final_frac: float = 0.1,
+    decay_frac: float = 0.1,
+):
+    warmup_steps = warmup_steps or max(total_steps // 100, 10)
+
+    if kind == "cosine":
+        def sched(step):
+            step = jnp.minimum(step, total_steps).astype(jnp.float32)
+            warm = peak_lr * (step + 1.0) / warmup_steps
+            t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+            cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+            return jnp.where(step < warmup_steps, warm, cos)
+
+        return sched
+
+    if kind == "wsd":
+        decay_steps = max(int(total_steps * decay_frac), 1)
+        stable_end = total_steps - decay_steps
+
+        def sched(step):
+            step = jnp.minimum(step, total_steps).astype(jnp.float32)
+            warm = peak_lr * (step + 1.0) / warmup_steps
+            t = jnp.clip((step - stable_end) / decay_steps, 0, 1)
+            # Exponential-style decay to final_frac over the decay window.
+            dec = peak_lr * (final_frac ** t)
+            out = jnp.where(step < warmup_steps, warm,
+                            jnp.where(step < stable_end, peak_lr, dec))
+            return out
+
+        return sched
+
+    if kind == "constant":
+        def sched(step):
+            step = jnp.asarray(step).astype(jnp.float32)
+            warm = peak_lr * (step + 1.0) / warmup_steps
+            return jnp.where(step < warmup_steps, warm, peak_lr)
+
+        return sched
+
+    raise ValueError(f"unknown schedule {kind!r}")

@@ -1,0 +1,17 @@
+"""Distributed-runtime services: supervision, elasticity, compression.
+
+  * ``supervisor``  — checkpoint/restart training supervisor with fault
+    injection hooks, step-time straggler tracking, and periodic async
+    checkpoints.  The restart path is exactly what a pod-level launcher
+    executes after a node failure.
+  * ``elastic``     — reshard a training state + data pipeline onto a new
+    mesh (scale down after failures / scale up after repair).
+  * ``compression`` — gradient compression hooks for the cross-pod
+    all-reduce (top-k with error feedback, int8 quantization).
+"""
+from .supervisor import Supervisor, FaultInjector, StepTimer
+from .elastic import reshard_state, remesh_plan
+from .compression import make_compressor
+
+__all__ = ["Supervisor", "FaultInjector", "StepTimer", "reshard_state",
+           "remesh_plan", "make_compressor"]

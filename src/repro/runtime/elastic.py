@@ -1,0 +1,61 @@
+"""Elastic scaling: reshard training state onto a new mesh.
+
+After a node failure the launcher restarts with fewer (or, post-repair,
+more) hosts.  Two paths re-establish the run:
+
+  * **checkpoint path** — ``ckpt.restore`` with shardings resolved on the
+    new mesh (each process reads its new shard range from the committed
+    checkpoint).  Works across any topology change; costs a disk read.
+  * **live path** — ``reshard_state``: device-to-device redistribution of
+    a live state via ``jax.device_put`` with the new NamedShardings (XLA
+    inserts the minimal collective-permute/all-gather schedule).  Used
+    for planned elasticity (scale-up) where the old devices still exist.
+
+``remesh_plan`` picks the largest (data, model)-factorization that the
+surviving chip count supports while keeping the model axis unchanged —
+TP degree is baked into layout/kernels, while the data axis is freely
+re-divisible as long as it divides the global batch (the deterministic
+pipeline re-slices exactly; see repro.data.DataPipeline.reshard).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from ..shardlib import ShardCtx, rules_for_mode
+
+__all__ = ["remesh_plan", "reshard_state"]
+
+
+def remesh_plan(surviving_chips: int, model_parallel: int,
+                global_batch: int) -> Tuple[int, int]:
+    """(data, model) for the new mesh.  Keeps TP fixed; maximizes DP.
+
+    Drops chips that don't fit the factorization (a 255-chip survivor
+    set runs as 15x16 with one idle chip, etc.)."""
+    assert surviving_chips >= model_parallel, "cannot keep TP degree"
+    data = surviving_chips // model_parallel
+    while data > 1 and global_batch % data != 0:
+        data -= 1
+    return data, model_parallel
+
+
+def reshard_state(state: Any, axes_tree: Any, new_mesh: Mesh,
+                  mode: str = "train") -> Any:
+    """device_put every leaf with its sharding resolved on ``new_mesh``.
+
+    ``axes_tree`` carries logical axes per leaf (same structure as state;
+    None leaves replicate).  XLA emits the redistribution collectives.
+    """
+    ctx = ShardCtx(new_mesh, rules_for_mode(mode))
+
+    def put(leaf, axes):
+        if axes is None:
+            return jax.device_put(leaf, NamedSharding(new_mesh, ctx.resolve(())))
+        spec = ctx.resolve(axes, getattr(leaf, "shape", None))
+        return jax.device_put(leaf, NamedSharding(new_mesh, spec))
+
+    return jax.tree.map(put, state, axes_tree,
+                        is_leaf=lambda x: x is None or not isinstance(x, (dict, list, tuple)))

@@ -1,0 +1,132 @@
+"""Training supervisor: checkpoint/restart fault tolerance + stragglers.
+
+The supervisor owns the train loop.  Every ``ckpt_every`` steps it saves
+asynchronously (device->host copy on the loop thread, disk I/O off it).
+When a step raises — a real XLA/runtime error on hardware, or an injected
+fault in tests — it rebuilds state from the newest committed checkpoint
+and replays.  Determinism of the data pipeline (batch = f(seed, step))
+makes the replay exact: the loss curve after a crash is bitwise the curve
+without one, which tests assert.
+
+Straggler mitigation: on real pods, a slow host shows up as a slow
+*step* (SPMD barriers).  ``StepTimer`` keeps an EWMA and flags steps
+slower than ``straggler_factor`` x the mean; the supervisor records the
+event and (configurably) triggers a checkpoint so the launcher can evict
+the slow host and resume elastically — the remesh itself is
+``repro.runtime.elastic``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from .. import ckpt as ckpt_lib
+
+__all__ = ["Supervisor", "FaultInjector", "StepTimer"]
+
+
+class FaultInjector:
+    """Raise at given steps (once each) — the test stand-in for node loss."""
+
+    def __init__(self, fail_at: Optional[List[int]] = None):
+        self.fail_at = set(fail_at or [])
+        self.fired: List[int] = []
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            self.fired.append(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+class StepTimer:
+    """EWMA step timer; flags stragglers."""
+
+    def __init__(self, alpha: float = 0.2, straggler_factor: float = 3.0,
+                 warmup: int = 3):
+        self.alpha = alpha
+        self.factor = straggler_factor
+        self.warmup = warmup
+        self.mean: Optional[float] = None
+        self.count = 0
+        self.straggler_steps: List[int] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.count += 1
+        if self.mean is None:
+            self.mean = dt
+            return False
+        is_straggler = (self.count > self.warmup
+                        and dt > self.factor * self.mean)
+        if is_straggler:
+            self.straggler_steps.append(step)
+        else:
+            # stragglers don't pollute the baseline
+            self.mean = (1 - self.alpha) * self.mean + self.alpha * dt
+        return is_straggler
+
+
+@dataclasses.dataclass
+class Supervisor:
+    """Run ``total_steps`` of ``step_fn`` with checkpoint/restart."""
+
+    step_fn: Callable[[Any, Dict], tuple]     # (state, batch) -> (state, metrics)
+    pipeline: Any                             # repro.data.DataPipeline
+    ckpt_dir: str
+    init_state: Callable[[], Any]             # build step-0 state
+    ckpt_every: int = 50
+    keep: int = 3
+    fault_injector: Optional[FaultInjector] = None
+    max_restarts: int = 10
+    on_straggler: Optional[Callable[[int], None]] = None
+
+    def __post_init__(self):
+        self.timer = StepTimer()
+        self.restarts = 0
+        self.metrics_log: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def _restore_or_init(self):
+        step = ckpt_lib.latest_step(self.ckpt_dir)
+        if step is None:
+            state = self.init_state()
+            return state, 0
+        abstract = jax.eval_shape(self.init_state)
+        state = ckpt_lib.restore(self.ckpt_dir, abstract, step=step)
+        return state, step
+
+    def run(self, total_steps: int) -> Any:
+        state, start = self._restore_or_init()
+        self.pipeline.step = start
+        step = start
+        while step < total_steps:
+            try:
+                batch = self.pipeline.batch_at(step)
+                if self.fault_injector is not None:
+                    self.fault_injector.maybe_fail(step)
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batch)
+                jax.block_until_ready(metrics)
+                dt = time.perf_counter() - t0
+                if self.timer.observe(step, dt) and self.on_straggler:
+                    self.on_straggler(step)
+                self.metrics_log.append(
+                    {"step": step,
+                     **{k: float(v) for k, v in metrics.items()}})
+                step += 1
+                if step % self.ckpt_every == 0:
+                    ckpt_lib.save_async(self.ckpt_dir, state, step)
+                    ckpt_lib.gc_old(self.ckpt_dir, keep=self.keep)
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                ckpt_lib.wait_for_async_saves()
+                state, step = self._restore_or_init()
+        ckpt_lib.wait_for_async_saves()
+        ckpt_lib.save(self.ckpt_dir, state, total_steps)
+        return state

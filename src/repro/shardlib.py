@@ -1,0 +1,223 @@
+"""Logical-axis sharding: the glue between model code and meshes.
+
+Model code annotates parameters and activations with *logical* axis names
+('batch', 'embed', 'q_heads', 'experts', ...).  A rule table maps logical
+axes to mesh axes per execution mode (train / prefill / decode / long
+context).  This keeps every model definition mesh-agnostic: the same
+forward function runs on 1 CPU device in smoke tests, a 16x16 pod, or the
+2x16x16 multi-pod mesh, differing only in the active ``ShardCtx``.
+
+Rules are *lists* so a logical axis may map to a tuple of mesh axes
+(e.g. ``('batch', ('pod', 'data'))`` for cross-pod data parallelism).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardCtx",
+    "shard_ctx",
+    "current_ctx",
+    "constrain",
+    "logical_to_pspec",
+    "sharding_for",
+    "tree_shardings",
+    "RULES_TRAIN",
+    "RULES_PREFILL",
+    "RULES_DECODE",
+    "rules_for_mode",
+]
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+Rules = List[Tuple[str, MeshAxes]]
+
+# ---------------------------------------------------------------------------
+# Rule tables.  'pod' only exists on the multi-pod mesh; axes not present in
+# the active mesh are dropped at resolution time, so one table serves both.
+# ---------------------------------------------------------------------------
+
+# Training / prefill: data parallelism over ('pod','data'); tensor
+# parallelism over 'model' for heads / mlp / vocab / experts; parameters
+# additionally ZeRO-sharded over 'data' on their longest replicated axis
+# (handled by the optimizer partitioner, not these rules).
+RULES_TRAIN: Rules = [
+    ("batch", ("pod", "data")),
+    ("seq", None),
+    ("embed", None),
+    ("q_heads", "model"),
+    ("kv_heads", None),        # replicated: kv head counts < 16 for most archs
+    ("head_dim", None),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("experts", "model"),
+    ("expert_mlp", None),
+    ("layers", None),
+    ("qlora", None),
+    ("kvlora", None),
+    ("rnn", "model"),
+    ("state", None),
+    ("conv", None),
+    ("frames", None),
+    ("patches", None),
+    ("zero", ("pod", "data")),  # ZeRO/FSDP shard axis (param/opt storage)
+]
+
+# Prefill shares training rules but hands the produced KV cache off in the
+# decode layout (sequence-sharded over 'model').
+RULES_PREFILL: Rules = RULES_TRAIN + [("cache_seq", "model")]
+
+# Decode: KV caches are sharded along *sequence* over 'model'
+# (flash-decoding with log-sum-exp combining), batch over ('pod','data').
+RULES_DECODE: Rules = [
+    ("batch", ("pod", "data")),
+    ("seq", None),
+    ("cache_seq", "model"),
+    ("embed", None),
+    ("q_heads", "model"),
+    ("kv_heads", None),
+    ("head_dim", None),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("experts", "model"),
+    ("expert_mlp", None),
+    ("layers", None),
+    ("qlora", None),
+    ("kvlora", None),
+    ("rnn", "model"),
+    ("state", None),
+    ("conv", None),
+    ("frames", None),
+    ("patches", None),
+    ("zero", ("pod", "data")),
+]
+
+
+def rules_for_mode(mode: str) -> Rules:
+    return {
+        "train": RULES_TRAIN,
+        "prefill": RULES_PREFILL,
+        "decode": RULES_DECODE,
+    }[mode]
+
+
+# ---------------------------------------------------------------------------
+# Context
+# ---------------------------------------------------------------------------
+class ShardCtx:
+    def __init__(self, mesh: Mesh, rules: Rules):
+        self.mesh = mesh
+        self.rules = dict(rules)
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def resolve(
+        self,
+        logical: Sequence[Optional[str]],
+        shape: Optional[Sequence[int]] = None,
+    ) -> P:
+        """Map logical axis names to a PartitionSpec under this mesh.
+
+        When ``shape`` is given, mesh axes that do not evenly divide the
+        corresponding dimension are dropped (longest dividing prefix of the
+        target tuple wins) — explicit jit shardings must divide evenly, and
+        this is where awkward head counts (36, 56) fall back to replication
+        (recorded as a roofline finding, see EXPERIMENTS.md §Perf)."""
+        spec = []
+        used: set = set()
+        for i, ax in enumerate(logical):
+            if ax is None:
+                spec.append(None)
+                continue
+            target = self.rules.get(ax, None)
+            if target is None:
+                spec.append(None)
+                continue
+            if isinstance(target, str):
+                target = (target,)
+            # Drop mesh axes that don't exist on this mesh (e.g. 'pod' on the
+            # single-pod mesh) or were already consumed by an earlier dim.
+            kept = tuple(
+                t for t in target if t in self.axis_sizes and t not in used
+            )
+            if shape is not None and kept:
+                dim = shape[i]
+                while kept:
+                    size = 1
+                    for t in kept:
+                        size *= self.axis_sizes[t]
+                    if dim % size == 0:
+                        break
+                    kept = kept[:-1]  # try shorter prefix
+            used.update(kept)
+            if not kept:
+                spec.append(None)
+            elif len(kept) == 1:
+                spec.append(kept[0])
+            else:
+                spec.append(kept)
+        return P(*spec)
+
+
+_tls = threading.local()
+
+
+@contextlib.contextmanager
+def shard_ctx(mesh: Mesh, rules: Rules):
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = ShardCtx(mesh, rules)
+    try:
+        yield _tls.ctx
+    finally:
+        _tls.ctx = prev
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    return getattr(_tls, "ctx", None)
+
+
+# ---------------------------------------------------------------------------
+# Annotation helpers
+# ---------------------------------------------------------------------------
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a sharding constraint given logical axes; no-op w/o context."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = ctx.resolve(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def logical_to_pspec(logical: Sequence[Optional[str]], ctx: Optional[ShardCtx] = None) -> P:
+    ctx = ctx or current_ctx()
+    if ctx is None:
+        return P()
+    return ctx.resolve(logical)
+
+
+def sharding_for(logical: Sequence[Optional[str]], ctx: Optional[ShardCtx] = None) -> Optional[NamedSharding]:
+    ctx = ctx or current_ctx()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, ctx.resolve(logical))
+
+
+def tree_shardings(axes_tree: Any, ctx: Optional[ShardCtx] = None) -> Any:
+    """Map a pytree of logical-axes tuples to a pytree of NamedShardings."""
+    ctx = ctx or current_ctx()
+    if ctx is None:
+        raise RuntimeError("tree_shardings requires an active ShardCtx")
+    return jax.tree.map(
+        lambda axes: NamedSharding(ctx.mesh, ctx.resolve(axes)),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m

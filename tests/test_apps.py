@@ -1,0 +1,121 @@
+"""All six paper applications: correctness vs oracle across batch updates."""
+import pytest
+
+from repro.core import Engine, StaticEngine
+from repro.apps import APPS
+
+SMALL = {
+    "spellcheck": dict(n=48),
+    "raytracer": dict(width=64, n_circles=5, n_tiles=4),
+    "stringhash": dict(n=1024, grain=32),
+    "sequence": dict(n=96),
+    "trees": dict(n=96),
+    "filter": dict(n=127),
+}
+
+
+@pytest.mark.parametrize("name", list(APPS))
+def test_initial_run_correct(name):
+    app = APPS[name](**SMALL[name])
+    eng = Engine()
+    app.build_input(eng)
+    app.run(eng)
+    assert app.output() == app.expected()
+
+
+@pytest.mark.parametrize("name", list(APPS))
+@pytest.mark.parametrize("k", [1, 3, 10])
+def test_updates_correct(name, k):
+    app = APPS[name](**SMALL[name])
+    eng = Engine()
+    app.build_input(eng)
+    comp = app.run(eng)
+    for _ in range(3):
+        app.apply_update(eng, k)
+        comp.propagate()
+        assert app.output() == app.expected(), (name, k)
+
+
+@pytest.mark.parametrize("name", list(APPS))
+def test_update_saves_work(name):
+    # raytracer needs a proportionate scene: one circle of few in a tiny
+    # scene dirties most tiles (the paper's "many readers per mod" case),
+    # so give it enough pixels for locality to pay off.
+    kwargs = dict(width=512, n_circles=12, n_tiles=16) \
+        if name == "raytracer" else SMALL[name]
+    app = APPS[name](**kwargs)
+    eng = Engine()
+    app.build_input(eng)
+    comp = app.run(eng)
+    app.apply_update(eng, 1)
+    st = comp.propagate()
+    assert app.output() == app.expected()
+    # raytracer: the conservative tile index re-traces ~half the rays per
+    # moved circle at CI scene sizes (the paper's 26x WS needs 4M-pixel
+    # frames where per-ray work dwarfs index overhead) — hold it to 1.7x.
+    factor = 1.7 if name == "raytracer" else 2.0
+    assert st.work < comp.initial_stats.work / factor, (
+        name, st.work, comp.initial_stats.work)
+
+
+@pytest.mark.parametrize("name", list(APPS))
+def test_static_engine_agrees(name):
+    app = APPS[name](**SMALL[name])
+    seng = StaticEngine()
+    app.build_input(seng)
+    app.run(seng)
+    assert app.output() == app.expected()
+
+
+def test_trees_structural_updates():
+    from repro.apps import TreeContractionApp
+
+    app = TreeContractionApp(n=96, seed=3)
+    eng = Engine()
+    app.build_input(eng)
+    comp = app.run(eng)
+    for _ in range(4):
+        moved = app.apply_structure_update(eng, 2)
+        assert moved > 0
+        comp.propagate()
+        assert app.output() == app.expected()
+
+
+def test_trees_mixed_value_and_structure():
+    from repro.apps import TreeContractionApp
+
+    app = TreeContractionApp(n=64, seed=9)
+    eng = Engine()
+    app.build_input(eng)
+    comp = app.run(eng)
+    app.apply_update(eng, 5)
+    app.apply_structure_update(eng, 1)
+    comp.propagate()
+    assert app.output() == app.expected()
+
+
+@pytest.mark.parametrize("grain", [16, 64, 256])
+def test_stringhash_granularities(grain):
+    from repro.apps import StringHashApp
+
+    app = StringHashApp(n=1024, grain=grain)
+    eng = Engine()
+    app.build_input(eng)
+    comp = app.run(eng)
+    assert app.output() == app.expected()
+    app.apply_update(eng, grain)
+    comp.propagate()
+    assert app.output() == app.expected()
+
+
+def test_sequence_full_contraction_invariant():
+    """Sum over live accumulators is round-invariant, so the result is
+    right even for adversarial coin sequences (short round budget)."""
+    from repro.apps import ListContractionApp
+
+    for seed in range(5):
+        app = ListContractionApp(n=33, seed=seed)
+        eng = Engine()
+        app.build_input(eng)
+        app.run(eng)
+        assert app.output() == app.expected()

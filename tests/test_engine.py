@@ -1,0 +1,234 @@
+"""Unit tests for the PSAC engine primitives (paper Algorithms 2-5)."""
+import pytest
+
+from repro.core import Engine, StaticEngine
+from repro.core.engine import Computation
+
+
+def sum_program(eng, mods, res):
+    """The paper's Algorithm 1 divide-and-conquer sum."""
+    def rec(lo, hi, out):
+        if hi - lo == 1:
+            eng.read(mods[lo], lambda v: eng.write(out, v))
+            return
+        mid = (lo + hi) // 2
+        l, r = eng.mod(), eng.mod()
+        eng.par(lambda: rec(lo, mid, l), lambda: rec(mid, hi, r))
+        eng.read((l, r), lambda a, b: eng.write(out, a + b))
+
+    rec(0, len(mods), res)
+
+
+@pytest.fixture
+def summed():
+    eng = Engine()
+    mods = eng.alloc_array(16, "x")
+    for i, m in enumerate(mods):
+        eng.write(m, i)
+    res = eng.mod("res")
+    comp = eng.run(lambda: sum_program(eng, mods, res))
+    return eng, mods, res, comp
+
+
+def test_initial_run(summed):
+    eng, mods, res, comp = summed
+    assert res.peek() == sum(range(16))
+    assert comp.initial_stats.reads == 31      # 16 leaves + 15 combines
+    assert comp.initial_stats.span < comp.initial_stats.work
+
+
+def test_propagate_single_update(summed):
+    eng, mods, res, comp = summed
+    eng.write(mods[3], 100)
+    st = comp.propagate()
+    assert res.peek() == sum(range(16)) - 3 + 100
+    # one leaf + log2(16) combines re-execute
+    assert st.affected_readers == 5
+    assert st.work < comp.initial_stats.work
+
+
+def test_propagate_batch_update(summed):
+    eng, mods, res, comp = summed
+    for i in (0, 5, 9, 15):
+        eng.write(mods[i], 0)
+    comp.propagate()
+    assert res.peek() == sum(range(16)) - (0 + 5 + 9 + 15)
+
+
+def test_equal_value_write_no_marks(summed):
+    eng, mods, res, comp = summed
+    eng.write(mods[3], 3)          # same value: Algorithm 2 cutoff
+    st = comp.propagate()
+    assert st.affected_readers == 0
+    assert st.traversed == 0
+
+
+def test_value_cutoff_stops_midway():
+    # min-reduction: changing a non-minimal leaf to another non-minimal
+    # value re-runs the leaf reader but the combine chain stops as soon
+    # as a recomputed min is unchanged.
+    eng = Engine()
+    mods = eng.alloc_array(8, "x")
+    vals = [50, 60, 70, 80, 10, 90, 95, 99]
+    for m, v in zip(mods, vals):
+        eng.write(m, v)
+    res = eng.mod()
+
+    def rec(lo, hi, out):
+        if hi - lo == 1:
+            eng.read(mods[lo], lambda v: eng.write(out, v))
+            return
+        mid = (lo + hi) // 2
+        l, r = eng.mod(), eng.mod()
+        eng.par(lambda: rec(lo, mid, l), lambda: rec(mid, hi, r))
+        eng.read((l, r), lambda a, b: eng.write(out, min(a, b)))
+
+    comp = eng.run(lambda: rec(0, 8, res))
+    assert res.peek() == 10
+    eng.write(mods[1], 55)         # still loses to 50 at the first combine
+    st = comp.propagate()
+    assert res.peek() == 10
+    assert st.affected_readers == 2  # leaf + one combine; then values equal
+
+
+def test_write_once_violation():
+    eng = Engine()
+    m = eng.mod()
+    eng.write(m, 1)
+    a, b = eng.mod(), eng.mod()
+    eng.write(a, 1)
+    eng.write(b, 2)
+
+    def prog():
+        eng.read(a, lambda v: eng.write(m, v + 10))
+        eng.read(b, lambda v: eng.write(m, v + 20))
+
+    with pytest.raises(RuntimeError, match="write-once"):
+        eng.run(prog)
+
+
+def test_read_before_write():
+    eng = Engine()
+    m = eng.mod()
+    with pytest.raises(RuntimeError, match="before .*written|read before"):
+        eng.run(lambda: eng.read(m, lambda v: None))
+
+
+def test_dynamic_structure_change():
+    """Propagation may build an entirely different subtree (Section 3)."""
+    eng = Engine()
+    sel = eng.mod("sel")
+    xs = eng.alloc_array(4, "x")
+    for i, m in enumerate(xs):
+        eng.write(m, 10 * (i + 1))
+    eng.write(sel, 0)
+    res = eng.mod()
+
+    def prog():
+        def body(s):
+            if s == 0:
+                eng.read(xs[0], lambda v: eng.write(res, v))
+            else:
+                # different shape: a nested combine of three reads
+                t = eng.mod()
+                eng.read((xs[1], xs[2]), lambda a, b: eng.write(t, a + b))
+                eng.read((t, xs[3]), lambda u, c: eng.write(res, u + c))
+        eng.read(sel, body)
+
+    comp = eng.run(prog)
+    assert res.peek() == 10
+    eng.write(sel, 1)
+    comp.propagate()
+    assert res.peek() == 20 + 30 + 40
+    # old subtree is garbage; updates to xs[0] no longer propagate
+    eng.collect()
+    eng.write(xs[0], 999)
+    st = comp.propagate()
+    assert res.peek() == 90
+    assert st.affected_readers == 0
+    # but updates to the new reads do
+    eng.write(xs[2], 1)
+    comp.propagate()
+    assert res.peek() == 20 + 1 + 40
+
+
+def test_cascading_propagation_order():
+    """A chain a -> b -> c re-runs in control order during propagation."""
+    eng = Engine()
+    a = eng.mod("a")
+    eng.write(a, 1)
+    b, c = eng.mod("b"), eng.mod("c")
+    order = []
+
+    def prog():
+        eng.read(a, lambda v: (order.append("rb"), eng.write(b, v * 2))[-1])
+        eng.read(b, lambda v: (order.append("rc"), eng.write(c, v + 1))[-1])
+
+    comp = eng.run(prog)
+    assert c.peek() == 3
+    order.clear()
+    eng.write(a, 5)
+    comp.propagate()
+    assert c.peek() == 11
+    assert order == ["rb", "rc"]
+
+
+def test_gc_collects_detached_subtrees():
+    eng = Engine()
+    sel = eng.mod()
+    eng.write(sel, 0)
+    xs = eng.alloc_array(8, "x")
+    for m in xs:
+        eng.write(m, 1)
+    res = eng.mod()
+
+    def prog():
+        def body(s):
+            out = eng.mod()          # dynamically allocated: scope-owned
+            def rec(lo, hi, o):
+                if hi - lo == 1:
+                    eng.read(xs[lo], lambda v: eng.write(o, v + s))
+                    return
+                mid = (lo + hi) // 2
+                l, r = eng.mod(), eng.mod()
+                eng.par(lambda: rec(lo, mid, l), lambda: rec(mid, hi, r))
+                eng.read((l, r), lambda p, q: eng.write(o, p + q))
+            rec(0, 8, out)
+            eng.read(out, lambda v: eng.write(res, v))
+        eng.read(sel, body)
+
+    comp = eng.run(prog)
+    live_before = eng.live_nodes
+    eng.write(sel, 1)
+    comp.propagate()
+    collected = eng.collect()
+    assert collected > 0
+    assert eng.live_nodes <= live_before + 4
+
+
+def test_static_engine_matches():
+    """The static baseline computes the same result with no RSP tree."""
+    seng = StaticEngine()
+    mods = seng.alloc_array(16, "x")
+    for i, m in enumerate(mods):
+        seng.write(m, i * i)
+    res = seng.mod()
+    seng.run(lambda: sum_program(seng, mods, res))
+    assert res.peek() == sum(i * i for i in range(16))
+
+
+def test_parallel_for_span_is_logarithmic():
+    eng = Engine()
+    xs = eng.alloc_array(256, "x")
+    for m in xs:
+        eng.write(m, 1)
+    outs = eng.alloc_array(256, "o")
+
+    def prog():
+        eng.parallel_for(0, 256, lambda i: eng.read(
+            xs[i], lambda v: eng.write(outs[i], v)))
+
+    comp = eng.run(prog)
+    st = comp.initial_stats
+    assert st.work >= 512
+    assert st.span <= 80           # ~2*log2(256) levels of par + leaf work

@@ -1,0 +1,205 @@
+"""jaxsac: the TPU-native adaptation of parallel self-adjusting computation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.jaxsac import (BlockTensor, IncrementalReduce, dirty_from_diff,
+                          incremental_prefill, prefill_distance)
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.models.moe import dropless_moe
+
+
+# ---------------------------------------------------------------------------
+# BlockTensor
+# ---------------------------------------------------------------------------
+def test_blocktensor_write_marks_changed_blocks():
+    bt = BlockTensor.clean(jnp.zeros(64), block=8)
+    new = jnp.zeros(64).at[17].set(1.0).at[50].set(2.0)
+    bt2 = bt.write(new)
+    want = np.zeros(8, bool)
+    want[17 // 8] = want[50 // 8] = True
+    np.testing.assert_array_equal(np.asarray(bt2.dirty), want)
+    lo, hi = bt2.dirty_interval()
+    assert (int(lo), int(hi)) == (2, 7)
+
+
+def test_blocktensor_equal_write_is_clean():
+    x = jnp.arange(32.0)
+    bt = BlockTensor.clean(x, block=4)
+    bt2 = bt.write(x + 0.0)
+    assert not bool(jnp.any(bt2.dirty))
+    lo, hi = bt2.dirty_interval()
+    assert (int(lo), int(hi)) == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# IncrementalReduce (Algorithm 1 / Theorem 4.2 on TPU)
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_reduce_update_matches_oracle(seed, k):
+    rng = np.random.default_rng(seed)
+    r = IncrementalReduce(n=512, block=4, op=jnp.add, identity=0.0,
+                          max_sparse=32)
+    x = jnp.asarray(rng.integers(0, 100, 512), jnp.int32)
+    state = r.init(x)
+    upd = jax.jit(r.update)
+    idx = rng.choice(512, size=k, replace=False)
+    y = x.at[jnp.asarray(idx)].set(jnp.asarray(rng.integers(0, 100, k), jnp.int32))
+    state, stats = upd(state, y)
+    assert int(r.result(state)) == int(y.sum())
+    # Theorem 4.2: recompute is O(k log(1 + n/k)) tree nodes
+    import math
+    bound = 6 * k * (1 + math.log2(1 + 128 / min(k, 128))) + 16
+    assert int(stats["recomputed"]) <= bound
+
+
+def test_reduce_noop_update_zero_work():
+    r = IncrementalReduce(n=128, block=2)
+    x = jnp.arange(128.0)
+    state = r.init(x)
+    state, stats = jax.jit(r.update)(state, x + 0.0)
+    assert int(stats["recomputed"]) == 0
+
+
+def test_reduce_value_cutoff_max():
+    r = IncrementalReduce(n=256, block=4, op=jnp.maximum, identity=-1e30,
+                          max_sparse=8)
+    x = jnp.zeros(256).at[100].set(50.0)
+    state = r.init(x)
+    y = x.at[7].set(1.0)   # below the global max
+    state, stats = jax.jit(r.update)(state, y)
+    assert float(r.result(state)) == 50.0
+    assert int(stats["recomputed"]) <= 8    # propagation dies early
+
+
+def test_reduce_sparse_dense_agree():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(256), jnp.float32)  # all dirty
+    for ms in (4, 1024):
+        r = IncrementalReduce(n=256, block=2, max_sparse=ms)
+        state = r.init(x)
+        state, _ = r.update(state, y)
+        np.testing.assert_allclose(float(r.result(state)), float(y.sum()),
+                                   rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Incremental prefill (serving-path change propagation)
+# ---------------------------------------------------------------------------
+SUPPORTED_ARCHS = ["minicpm_2b", "yi_6b", "phi3_mini_3_8b", "gemma_7b",
+                   "deepseek_v3_671b", "arctic_480b", "internvl2_2b"]
+
+
+def _setup(arch, B=2, S=64, seed=0):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    tok = jax.random.randint(jax.random.PRNGKey(seed + 1), (B, S), 0,
+                             cfg.vocab_size)
+    batch = {"tokens": tok}
+    extra = {}
+    if cfg.family == "vlm":
+        patches = jax.random.normal(jax.random.PRNGKey(seed + 2),
+                                    (B, cfg.num_patches, 1024), jnp.bfloat16)
+        batch["patches"] = patches
+        extra["patches"] = patches
+    return cfg, model, params, tok, batch, extra
+
+
+def _full_prefill(cfg, model, params, batch):
+    if cfg.family == "moe":
+        with dropless_moe():
+            return model.prefill(params, batch, impl="naive")
+    return model.prefill(params, batch, impl="naive")
+
+
+@pytest.mark.parametrize("arch", SUPPORTED_ARCHS)
+def test_incremental_prefill_matches_full(arch):
+    cfg, model, params, tok, batch, extra = _setup(arch)
+    _, cache0 = _full_prefill(cfg, model, params, batch)
+    new_tok = tok.at[:, 40].set((tok[:, 40] + 1) % cfg.vocab_size)
+    nb = dict(batch)
+    nb["tokens"] = new_tok
+    logits_full, cache_full = _full_prefill(cfg, model, params, nb)
+    logits_inc, cache_inc, info = incremental_prefill(
+        model, params, tok, new_tok, cache0, batch_extra=extra,
+        block=16, impl="naive")
+    assert info["savings"] > 1.0
+    np.testing.assert_allclose(
+        np.asarray(logits_full, np.float32), np.asarray(logits_inc, np.float32),
+        rtol=3e-2, atol=3e-2)
+    for a, b in zip(jax.tree.leaves(cache_full), jax.tree.leaves(cache_inc)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+def test_incremental_prefill_noop():
+    cfg, model, params, tok, batch, extra = _setup("yi_6b")
+    _, cache0 = _full_prefill(cfg, model, params, batch)
+    logits, cache, info = incremental_prefill(
+        model, params, tok, tok, cache0, block=16, impl="naive")
+    assert info["changed_tokens"] == 0 and logits is None
+    for a, b in zip(jax.tree.leaves(cache0), jax.tree.leaves(cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_incremental_prefill_multiple_rounds():
+    """Chained edits: propagate on top of propagated caches."""
+    cfg, model, params, tok, batch, extra = _setup("yi_6b")
+    _, cache = _full_prefill(cfg, model, params, batch)
+    cur = tok
+    for pos in (60, 45, 33):
+        new = cur.at[:, pos].set(5)
+        _, cache, info = incremental_prefill(
+            model, params, cur, new, cache, block=16, impl="naive")
+        cur = new
+    logits_full, cache_full = _full_prefill(cfg, model, params,
+                                            {"tokens": cur})
+    for a, b in zip(jax.tree.leaves(cache_full), jax.tree.leaves(cache)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+def test_incremental_prefill_unsupported_families():
+    for arch in ("mamba2_370m", "recurrentgemma_9b", "seamless_m4t_large_v2"):
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        from repro.jaxsac.prefill import continue_prefill
+        with pytest.raises(NotImplementedError):
+            continue_prefill(cfg, None, {"tokens": jnp.zeros((1, 8), jnp.int32)},
+                             None, 0)
+
+
+def test_prefill_distance():
+    old = np.zeros((1, 64), np.int32)
+    new = old.copy()
+    new[0, 40] = 1
+    new[0, 50] = 2
+    info = prefill_distance(old, new, block=16)
+    assert info["p0"] == 40
+    assert info["p0_bucket"] == 32
+    assert info["recompute"] == 32
+    assert info["changed_tokens"] == 2
+    assert info["savings"] == 2.0
+
+
+@given(st.integers(0, 63), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_prefill_distance_properties(first, extra):
+    old = np.zeros((1, 64), np.int32)
+    new = old.copy()
+    new[0, first] = 1
+    for j in range(extra):
+        new[0, min(first + j, 63)] = j + 1
+    info = prefill_distance(old, new, block=8)
+    assert info["p0"] == first
+    assert info["p0_bucket"] <= first
+    assert info["p0_bucket"] % 8 == 0
+    assert info["recompute"] + info["p0_bucket"] == 64

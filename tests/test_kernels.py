@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def randn(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+FLASH_CASES = [
+    # B, Sq, Skv, KV, G, hd, hv, causal, window, offset, dtype
+    (1, 256, 256, 2, 2, 64, 64, True, 0, 0, jnp.float32),
+    (2, 128, 128, 1, 4, 128, 128, True, 0, 0, jnp.float32),
+    (1, 256, 256, 2, 1, 128, 128, False, 0, 0, jnp.float32),
+    (1, 256, 256, 1, 2, 64, 64, True, 128, 0, jnp.float32),
+    (1, 128, 128, 1, 1, 96, 96, True, 0, 0, jnp.float32),      # phi3 head_dim
+    (1, 128, 128, 1, 2, 256, 256, True, 0, 0, jnp.float32),    # gemma head_dim
+    (2, 128, 384, 1, 4, 64, 64, True, 0, 256, jnp.float32),    # suffix continuation
+    (1, 128, 384, 2, 1, 64, 64, True, 128, 256, jnp.float32),  # window + offset
+    (1, 256, 256, 2, 2, 64, 64, True, 0, 0, jnp.bfloat16),
+    (1, 128, 128, 1, 2, 128, 128, False, 0, 0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_ref(case):
+    B, Sq, Skv, KV, G, hd, hv, causal, window, offset, dt = case
+    q = randn((B, Sq, KV, G, hd), dt)
+    k = randn((B, Skv, KV, hd), dt)
+    v = randn((B, Skv, KV, hv), dt)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              offset=offset, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   offset=offset)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_flash():
+    """The Pallas kernel and the pure-JAX custom-VJP flash agree."""
+    from repro.models.flash import flash_attention_grouped
+
+    q = randn((1, 512, 2, 2, 64), jnp.float32)
+    k = randn((1, 512, 2, 64), jnp.float32)
+    v = randn((1, 512, 2, 64), jnp.float32)
+    a = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    b = flash_attention_grouped(q, k, v, causal=True)
+    # model flash returns [B,S,KV,G,hv]
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_blocks_divisibility_guard():
+    q = randn((1, 100, 1, 1, 64), jnp.float32)
+    k = randn((1, 100, 1, 64), jnp.float32)
+    v = randn((1, 100, 1, 64), jnp.float32)
+    with pytest.raises(AssertionError):
+        ops.flash_attention(q, k, v, causal=True, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 5), st.integers(0, 2**31 - 1), st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_dirty_reduce_property(tiles, seed, all_dirty):
+    rng = np.random.default_rng(seed)
+    P, W, block = tiles * 8, 128, 8
+    kids = jnp.asarray(rng.standard_normal((P, 2, W)), jnp.float32)
+    old = jnp.asarray(rng.standard_normal((P, W)), jnp.float32)
+    dirty = jnp.asarray(np.ones(P, bool) if all_dirty
+                        else rng.random(P) < 0.3)
+    out = ops.dirty_reduce_level(kids, old, dirty, block=block, interpret=True)
+    tile_dirty = np.repeat(
+        np.asarray(dirty).reshape(-1, block).any(1), block)
+    want = ref.dirty_reduce_level_ref(kids, old, jnp.asarray(tile_dirty))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)
+
+
+def test_dirty_reduce_clean_is_identity():
+    P, W = 32, 128
+    kids = randn((P, 2, W), jnp.float32)
+    old = randn((P, W), jnp.float32)
+    out = ops.dirty_reduce_level(kids, old, jnp.zeros(P, bool), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(old))
+
+
+# ---------------------------------------------------------------------------
+GM_CASES = [
+    (200, 64, 256, 5, [50, 0, 90, 37, 23], jnp.float32),
+    (64, 32, 128, 2, [64, 0], jnp.float32),
+    (128, 128, 128, 4, [1, 2, 3, 122], jnp.float32),
+    (96, 64, 128, 3, [32, 32, 32], jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", GM_CASES)
+def test_grouped_matmul_matches_ref(case):
+    M, D, F, E, sizes, dt = case
+    x = randn((M, D), dt)
+    w = randn((E, D, F), dt)
+    gs = jnp.asarray(sizes, jnp.int32)
+    out = ops.grouped_matmul(x, w, gs, mb=16, fb=64, interpret=True)
+    want = ref.grouped_matmul_ref(x, w, gs)
+    tol = 5e-2 if dt == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_grouped_matmul_matches_ragged_dot():
+    M, D, F, E = 120, 32, 128, 4
+    x = randn((M, D), jnp.float32)
+    w = randn((E, D, F), jnp.float32)
+    gs = jnp.asarray([30, 42, 0, 48], jnp.int32)
+    out = ops.grouped_matmul(x, w, gs, mb=8, fb=64, interpret=True)
+    want = jax.lax.ragged_dot(x, w, gs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

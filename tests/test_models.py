@@ -1,0 +1,179 @@
+"""Per-architecture smoke tests: reduced configs, real code paths.
+
+Every assigned architecture instantiates its SMOKE config (same family,
+small dims) and runs one forward/train step and, where defined, a
+prefill + decode step on CPU, asserting shapes and finiteness.  The FULL
+configs are exercised only by the dry-run (ShapeDtypeStruct, no alloc).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import build_model
+from repro.optim import make_optimizer, make_schedule
+from repro.launch.train import init_train_state, make_train_step
+
+DECODE_FAMILIES = ("dense", "vlm", "moe", "ssm", "hybrid", "encdec")
+
+
+def make_batch(cfg, B=2, S=32, train=True, key=0):
+    k = jax.random.PRNGKey(key)
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if train:
+        batch["labels"] = jax.random.randint(
+            jax.random.PRNGKey(key + 1), (B, S), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(key + 2), (B, cfg.num_patches, 1024),
+            jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(key + 3), (B, S, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss, metrics = model.loss(params, batch, impl="naive")
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    optimizer = make_optimizer(cfg)
+    schedule = make_schedule(cfg.lr_schedule, 1e-3, 100)
+    step = make_train_step(model, optimizer, schedule)
+    state = init_train_state(model, optimizer, jax.random.PRNGKey(0))
+    B = 2 * max(cfg.grad_accum, 1)
+    batch = make_batch(cfg, B=B)
+    state2, metrics = jax.jit(step)(state, batch)
+    assert int(state2["step"]) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # parameters actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state["params"], state2["params"])
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_loss_decreases(arch):
+    """A few steps on a fixed batch must reduce the loss (end-to-end
+    learning sanity for every family)."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    optimizer = make_optimizer(cfg)
+    schedule = make_schedule("constant", 3e-3, 100, warmup_steps=1)
+    step = jax.jit(make_train_step(model, optimizer, schedule))
+    state = init_train_state(model, optimizer, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B=2 * max(cfg.grad_accum, 1), S=16)
+    losses = []
+    for _ in range(5):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], (arch, losses)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_and_decode(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = make_batch(cfg, B=B, S=S, train=False)
+    logits, cache = model.prefill(params, batch, impl="naive")
+    # vocab may be padded for sharding; padded tail is masked to -inf
+    assert logits.shape[0] == B and logits.shape[-1] >= cfg.vocab_size
+    real = np.asarray(logits, np.float32)[..., :cfg.vocab_size]
+    assert np.isfinite(real).all()
+
+    tok = jnp.full((B, 1), 3, jnp.int32)
+    if cfg.family == "encdec":
+        pos = jnp.full((B,), S // 2, jnp.int32)
+    else:
+        pos = jnp.full((B,), S, jnp.int32)
+    logits2, cache2 = model.decode_step(params, cache, tok, pos)
+    assert logits2.shape[:2] == (B, 1) and logits2.shape[-1] >= cfg.vocab_size
+    assert np.isfinite(
+        np.asarray(logits2, np.float32)[..., :cfg.vocab_size]).all()
+
+
+@pytest.mark.parametrize("arch", ["yi_6b", "gemma_7b", "recurrentgemma_9b"])
+def test_decode_matches_prefill(arch):
+    """Prefill(S+1)'s last logits == prefill(S) + one decode step.
+
+    (mamba2's SSD scan requires chunk-aligned sequence lengths, so S and
+    S+1 can't both prefill; its decode path is covered by
+    test_prefill_and_decode.)"""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 1, 33
+    full = make_batch(cfg, B=B, S=S, train=False, key=7)
+    logits_full, _ = model.prefill(params, full, impl="naive")
+
+    pre = {k: (v[:, :S - 1] if k == "tokens" else v) for k, v in full.items()}
+    _, cache = model.prefill(params, pre, impl="naive")
+    # pad cache to S positions for the decode write
+    def pad(c):
+        if c.ndim >= 3 and c.shape[2] == S - 1:
+            pad_width = [(0, 0)] * c.ndim
+            pad_width[2] = (0, 1)
+            return jnp.pad(c, pad_width)
+        return c
+    if cfg.family in ("dense", "vlm", "moe"):
+        cache = jax.tree.map(pad, cache)
+    logits_dec, _ = model.decode_step(
+        params, cache, full["tokens"][:, -1:],
+        jnp.full((B,), S - 1, jnp.int32))
+    a = np.asarray(logits_full[:, -1], np.float32)
+    b = np.asarray(logits_dec[:, -1], np.float32)
+    assert np.allclose(a, b, rtol=3e-2, atol=3e-2), (
+        arch, float(np.max(np.abs(a - b))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL config must carry the exact assigned hyperparameters."""
+    spec = {
+        "minicpm_2b": (40, 2304, 36, 36, 5760, 122753),
+        "yi_6b": (32, 4096, 32, 4, 11008, 64000),
+        "phi3_mini_3_8b": (32, 3072, 32, 32, 8192, 32064),
+        "gemma_7b": (28, 3072, 16, 16, 24576, 256000),
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+        "seamless_m4t_large_v2": (24, 1024, 16, 16, 8192, 256206),
+        "mamba2_370m": (48, 1024, 4, 0, 0, 50280),
+        "deepseek_v3_671b": (61, 7168, 128, 128, 2048, 129280),
+        "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+        "internvl2_2b": (24, 2048, 16, 8, 8192, 92553),
+    }[arch]
+    cfg = get_config(arch)
+    L, d, H, KV, ff, V = spec
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    if cfg.family != "ssm":
+        assert cfg.num_heads == H
+        assert cfg.num_kv_heads == KV
+    assert (cfg.d_ff or 0) == ff
+    assert cfg.vocab_size == V
+
+
+def test_moe_param_counts():
+    cfg = get_config("deepseek_v3_671b")
+    model = build_model(cfg)
+    total = model.param_count()
+    active = model.param_count(active_only=True)
+    assert 6.0e11 < total < 7.5e11, total      # ~671B
+    assert 3.0e10 < active < 4.5e10, active    # ~37B active

@@ -1,0 +1,183 @@
+"""Property-based tests (hypothesis): the system's core invariant.
+
+For ANY deterministic program in the framework and ANY sequence of batch
+updates, change propagation must yield exactly the state a from-scratch
+run on the updated input would produce (Theorem 4.1).  We generate random
+nested-parallel dataflow programs and random update sequences and check
+the invariant, plus stability properties of the apps.
+"""
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Engine
+from repro.core.distance import computation_distance
+
+
+# ---------------------------------------------------------------------------
+# Random program generator: a layered dataflow of combine readers.  Layer 0
+# reads inputs; each later node reads 1-3 mods from earlier layers with a
+# random associative-ish integer function, possibly through a data-dependent
+# branch (exercising dynamic RSP restructuring).
+# ---------------------------------------------------------------------------
+def make_program(eng, inputs, layout, fns):
+    """layout: list of layers; each node = (src_indices, fn_id).
+    Returns list of all mods (inputs + internal) in creation order."""
+    all_mods = list(inputs)
+
+    def run():
+        created = []
+        for layer in layout:
+            layer_mods = [eng.mod() for _ in layer]
+
+            def do_layer(layer=layer, layer_mods=layer_mods):
+                def node(j):
+                    srcs, fn_id = layer[j]
+                    mods = [all_mods[s] for s in srcs]
+                    fn = fns[fn_id]
+                    eng.read(tuple(mods),
+                             lambda *vs: eng.write(layer_mods[j], fn(*vs)))
+                eng.parallel_for(0, len(layer), node)
+
+            do_layer()
+            all_mods.extend(layer_mods)
+            created.extend(layer_mods)
+
+    return run
+
+
+FNS = [
+    lambda *vs: sum(vs),
+    lambda *vs: min(vs),
+    lambda *vs: max(vs) - min(vs),
+    lambda *vs: sum(v * v for v in vs) % 1009,
+    lambda *vs: vs[0] - sum(vs[1:]),
+    lambda *vs: (vs[0] + 7) if vs[0] % 2 == 0 else sum(vs),  # branchy
+]
+
+
+@st.composite
+def programs(draw):
+    n_inputs = draw(st.integers(2, 8))
+    n_layers = draw(st.integers(1, 4))
+    layout = []
+    avail = n_inputs
+    for _ in range(n_layers):
+        width = draw(st.integers(1, 5))
+        layer = []
+        for _ in range(width):
+            arity = draw(st.integers(1, min(3, avail)))
+            srcs = draw(st.lists(st.integers(0, avail - 1),
+                                 min_size=arity, max_size=arity))
+            fn_id = draw(st.integers(0, len(FNS) - 1))
+            layer.append((tuple(srcs), fn_id))
+        layout.append(layer)
+        avail += width
+    values = draw(st.lists(st.integers(-50, 50),
+                           min_size=n_inputs, max_size=n_inputs))
+    n_updates = draw(st.integers(1, 3))
+    updates = []
+    for _ in range(n_updates):
+        k = draw(st.integers(1, n_inputs))
+        idx = draw(st.lists(st.integers(0, n_inputs - 1),
+                            min_size=k, max_size=k, unique=True))
+        vals = draw(st.lists(st.integers(-50, 50), min_size=k, max_size=k))
+        updates.append(list(zip(idx, vals)))
+    return layout, values, updates
+
+
+def run_program(layout, values):
+    eng = Engine()
+    inputs = eng.alloc_array(len(values), "in")
+    for m, v in zip(inputs, values):
+        eng.write(m, v)
+    prog = make_program(eng, inputs, layout, FNS)
+    comp = eng.run(prog)
+    return eng, inputs, comp
+
+
+@given(programs())
+@settings(max_examples=60, deadline=None)
+def test_propagate_equals_from_scratch(prog):
+    layout, values, updates = prog
+    eng, inputs, comp = run_program(layout, values)
+    cur = list(values)
+    for batch in updates:
+        for i, v in batch:
+            cur[i] = v
+            eng.write(inputs[i], v)
+        comp.propagate()
+        # from-scratch oracle
+        eng2, inputs2, comp2 = run_program(layout, cur)
+        d = computation_distance(comp.root, comp2.root)
+        assert d.work == 0 and d.affected_reads == 0, (
+            "propagated tree diverges from from-scratch tree")
+
+
+@given(st.integers(2, 64), st.data())
+@settings(max_examples=30, deadline=None)
+def test_sum_app_any_updates(n, data):
+    """Algorithm-1 sum stays correct under arbitrary update sequences."""
+    eng = Engine()
+    mods = eng.alloc_array(n, "x")
+    vals = data.draw(st.lists(st.integers(-100, 100), min_size=n, max_size=n))
+    for m, v in zip(mods, vals):
+        eng.write(m, v)
+    res = eng.mod()
+
+    def rec(lo, hi, out):
+        if hi - lo == 1:
+            eng.read(mods[lo], lambda v: eng.write(out, v))
+            return
+        mid = (lo + hi) // 2
+        l, r = eng.mod(), eng.mod()
+        eng.par(lambda: rec(lo, mid, l), lambda: rec(mid, hi, r))
+        eng.read((l, r), lambda a, b: eng.write(out, a + b))
+
+    comp = eng.run(lambda: rec(0, n, res))
+    for _ in range(3):
+        k = data.draw(st.integers(1, n))
+        idx = data.draw(st.lists(st.integers(0, n - 1), min_size=k,
+                                 max_size=k, unique=True))
+        for i in idx:
+            vals[i] = data.draw(st.integers(-100, 100))
+            eng.write(mods[i], vals[i])
+        comp.propagate()
+        assert res.peek() == sum(vals)
+
+
+@given(st.integers(4, 48), st.integers(0, 1000), st.data())
+@settings(max_examples=20, deadline=None)
+def test_list_contraction_random(n, seed, data):
+    from repro.apps import ListContractionApp
+
+    app = ListContractionApp(n=n, seed=seed)
+    eng = Engine()
+    app.build_input(eng)
+    comp = app.run(eng)
+    assert app.output() == app.expected()
+    for _ in range(2):
+        k = data.draw(st.integers(1, n))
+        app.apply_update(eng, k)
+        comp.propagate()
+        assert app.output() == app.expected()
+
+
+@given(st.integers(4, 40), st.integers(0, 1000), st.data())
+@settings(max_examples=15, deadline=None)
+def test_tree_contraction_random(n, seed, data):
+    from repro.apps import TreeContractionApp
+
+    app = TreeContractionApp(n=n, seed=seed)
+    eng = Engine()
+    app.build_input(eng)
+    comp = app.run(eng)
+    assert app.output() == app.expected()
+    k = data.draw(st.integers(1, n))
+    app.apply_update(eng, k)
+    comp.propagate()
+    assert app.output() == app.expected()
+    if n >= 8:
+        app.apply_structure_update(eng, data.draw(st.integers(1, 3)))
+        comp.propagate()
+        assert app.output() == app.expected()

@@ -1,0 +1,61 @@
+"""Logical-axis sharding resolution (the glue the dry-run depends on)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.shardlib import ShardCtx, rules_for_mode, shard_ctx, current_ctx
+from repro.launch.mesh import make_local_mesh
+
+
+@pytest.fixture
+def ctx():
+    mesh = make_local_mesh(model=1)  # single CPU device
+    return ShardCtx(mesh, rules_for_mode("train"))
+
+
+def test_missing_mesh_axis_dropped(ctx):
+    # 'pod' does not exist on the local mesh: ('pod','data') -> ('data',)
+    spec = ctx.resolve(("batch", "seq"))
+    assert spec == P("data", None)
+
+
+def test_divisibility_fallback(ctx):
+    # an axis whose size does not divide falls back to replication
+    spec = ctx.resolve(("q_heads",), shape=(36,))
+    # local mesh 'model' has size 1 -> divides; simulate via a fake size
+    ctx.axis_sizes["model"] = 16
+    spec = ctx.resolve(("q_heads",), shape=(36,))
+    assert spec == P(None)
+    spec = ctx.resolve(("q_heads",), shape=(32,))
+    assert spec == P("model")
+
+
+def test_axis_used_once(ctx):
+    ctx.axis_sizes["model"] = 4
+    spec = ctx.resolve(("q_heads", "mlp"), shape=(8, 8))
+    # 'model' consumed by q_heads; mlp falls back to replication
+    assert spec == P("model", None)
+
+
+def test_unknown_logical_axis_replicates(ctx):
+    assert ctx.resolve(("nonexistent",)) == P(None)
+
+
+def test_context_stack():
+    mesh = make_local_mesh()
+    assert current_ctx() is None
+    with shard_ctx(mesh, rules_for_mode("train")) as c1:
+        assert current_ctx() is c1
+        with shard_ctx(mesh, rules_for_mode("decode")) as c2:
+            assert current_ctx() is c2
+        assert current_ctx() is c1
+    assert current_ctx() is None
+
+
+def test_decode_rules_shard_cache_seq():
+    mesh = make_local_mesh()
+    ctx = ShardCtx(mesh, rules_for_mode("decode"))
+    ctx.axis_sizes["model"] = 16
+    spec = ctx.resolve(("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                       shape=(32, 128, 32768, 4, 128))
+    assert spec == P(None, "data", "model", None, None)

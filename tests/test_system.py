@@ -1,0 +1,129 @@
+"""End-to-end behaviour: train/serve on a local mesh, dry-run machinery.
+
+These are the integration seams: the same model/step/sharding code the
+512-device dry-run lowers, executed for real on the 1-device local mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model, shape_by_name, SHAPES
+from repro.optim import make_optimizer, make_schedule
+from repro.launch.mesh import make_local_mesh
+from repro.launch.train import init_train_state, make_train_step
+from repro.launch.serve import make_decode_step, make_prefill_step
+from repro.shardlib import rules_for_mode, shard_ctx
+
+
+def test_shapes_registry():
+    names = {s.name for s in SHAPES}
+    assert names == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    s = shape_by_name("train_4k")
+    assert s.seq_len == 4096 and s.global_batch == 256 and s.kind == "train"
+    s = shape_by_name("decode_32k")
+    assert s.seq_len == 32768 and s.global_batch == 128 and s.kind == "decode"
+    s = shape_by_name("long_500k")
+    assert s.seq_len == 524288 and s.global_batch == 1
+
+
+def test_train_under_mesh():
+    """train_step jits and runs under an explicit mesh + sharding rules."""
+    cfg = get_smoke_config("yi_6b")
+    model = build_model(cfg)
+    optimizer = make_optimizer(cfg)
+    step = make_train_step(model, optimizer, make_schedule("cosine", 1e-3, 100))
+    mesh = make_local_mesh()
+    with shard_ctx(mesh, rules_for_mode("train")):
+        state = init_train_state(model, optimizer, jax.random.PRNGKey(0))
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                         cfg.vocab_size),
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
+                                         cfg.vocab_size),
+        }
+        with mesh:
+            state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_serve_roundtrip_under_mesh():
+    cfg = get_smoke_config("yi_6b")
+    model = build_model(cfg)
+    prefill = make_prefill_step(model, impl="naive")
+    decode = make_decode_step(model, decode_impl="naive")
+    mesh = make_local_mesh()
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    with shard_ctx(mesh, rules_for_mode("decode")), mesh:
+        logits, cache = jax.jit(prefill)(params, {"tokens": tokens})
+        # grow cache and decode 3 tokens greedily
+        cache = jax.tree.map(
+            lambda c: jnp.pad(c, [(0, 0), (0, 8)] + [(0, 0)] * (c.ndim - 2))
+            if c.ndim >= 3 and c.shape[1] == S else c, cache)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        for i in range(3):
+            pos = jnp.full((B,), S + i, jnp.int32)
+            next_tok, logits2, cache = jax.jit(decode)(params, cache, tok, pos)
+            tok = next_tok[:, None]
+    assert tok.shape == (B, 1)
+
+
+def test_decode_cache_layout_roundtrip():
+    """Prefill cache layout == decode cache layout for every family."""
+    for arch in ("yi_6b", "mamba2_370m", "recurrentgemma_9b",
+                 "deepseek_v3_671b", "seamless_m4t_large_v2"):
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        B, S = 1, 16
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S),
+                                              0, cfg.vocab_size)}
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((B, S, cfg.d_model), jnp.bfloat16)
+        _, cache = model.prefill(params, batch, impl="naive")
+        # decoder cache length == decoder token length (= S here)
+        want = model.cache_shapes(B, S)
+        got_shapes = jax.tree.map(lambda a: a.shape, cache)
+        want_shapes = jax.tree.map(lambda s: s.shape, want)
+        assert got_shapes == want_shapes, (arch, got_shapes, want_shapes)
+
+
+def test_local_dryrun_lower_compile():
+    """The dry-run contract (lower + compile + analyses) on the local mesh."""
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    cfg = get_smoke_config("minicpm_2b")
+    model = build_model(cfg)
+    optimizer = make_optimizer(cfg)
+    step = make_train_step(model, optimizer, make_schedule("cosine", 1e-3, 100))
+    mesh = make_local_mesh()
+    with shard_ctx(mesh, rules_for_mode("train")), mesh:
+        state_abs = jax.eval_shape(
+            lambda: init_train_state(model, optimizer, jax.random.PRNGKey(0)))
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((2, 32), jnp.int32),
+        }
+        lowered = jax.jit(step).lower(state_abs, batch)
+        compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    assert ma is not None
+    costs = analyze_hlo(compiled.as_text(), 1)
+    assert costs.flops > 0
+    assert costs.bytes > 0
+
+
+def test_benchmark_runner_quick(capsys):
+    """The benchmark driver's quick paths execute end to end."""
+    from benchmarks import psac_tables, readersets
+
+    rows = psac_tables.bench_app("stringhash", quick=True)
+    phases = {r["phase"] for r in rows}
+    assert {"static", "psac_initial", "psac_update", "tree_size",
+            "gc"} <= phases
+    rows = readersets.run(quick=True)
+    assert len(rows) >= 3
