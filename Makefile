@@ -1,0 +1,17 @@
+# Developer entry points.  The tier-1 invocation is `make test` (the
+# default fast lane: pytest.ini deselects tests marked `slow`).
+PY := PYTHONPATH=src python
+
+.PHONY: test test-all bench bench-graph
+
+test:
+	$(PY) -m pytest -x -q
+
+test-all:
+	$(PY) -m pytest -q -m "slow or not slow"
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-graph:
+	$(PY) -m benchmarks.graph_pipeline

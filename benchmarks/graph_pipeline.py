@@ -1,0 +1,148 @@
+"""Graph-runtime benchmark: recomputed blocks + update latency across k.
+
+Builds two traced SP-dags —
+
+  * ``pipeline``   — map -> stencil -> balanced reduce (>= 3 dag levels
+    mixing elementwise and tree work), the canonical static block program;
+  * ``stringhash`` — the Rabin-Karp host app ported as a graph program;
+
+then, for a sweep of edit sizes k (dirty input blocks), measures
+
+  * ``recomputed``      — dag blocks actually recomputed (W_delta),
+  * ``total_blocks``    — dag blocks a from-scratch run recomputes,
+  * ``update_ms``       — jitted ``propagate`` wall-clock,
+  * ``scratch_ms``      — jitted from-scratch ``init`` wall-clock,
+  * ``work_savings``    — total_blocks / recomputed,
+  * ``speedup``         — scratch_ms / update_ms,
+
+the graph-runtime analogue of the paper's work-savings / self-speedup
+tables.  Results print as rows and are written to
+``results/bench/BENCH_graph.json``.
+
+Usage:  PYTHONPATH=src python -m benchmarks.graph_pipeline [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+
+def _time(f, *args, reps: int = 5):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3, out
+
+
+def _edit(rng, data: np.ndarray, k_blocks: int, block: int) -> np.ndarray:
+    nb = data.shape[0] // block
+    out = data.copy()
+    for b in rng.choice(nb, size=k_blocks, replace=False):
+        pos = b * block + rng.integers(block)
+        out[pos] = out[pos] + 1.0 if out.dtype.kind == "f" else (
+            (out[pos] + 1) % 120)
+    return out
+
+
+def bench_pipeline(n: int, block: int, ks, seed: int = 0):
+    from repro.jaxsac import GraphBuilder
+
+    g = GraphBuilder()
+    x = g.input("x", n=n, block=block)
+    y = g.map(lambda b: b * 2.0 + 1.0, x, name="affine")
+    s = g.stencil(lambda w: w[block:2 * block]
+                  + 0.5 * (w[:block] + w[2 * block:]), y, radius=1)
+    t = g.reduce_tree(jnp.add, s, identity=0.0)
+    g.output(t)
+    cg = g.compile(max_sparse=64)
+
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal(n).astype(np.float32)
+    scratch_ms, state = _time(cg.init, {"x": jnp.asarray(data)})
+    rows = []
+    for k in ks:
+        new = _edit(rng, data, k, block)
+        upd_ms, (state, stats) = _time(
+            cg.propagate, state, {"x": jnp.asarray(new)})
+        data = new
+        rec = int(stats["recomputed"])
+        rows.append({
+            "app": "pipeline", "n": n, "block": block,
+            "levels": cg.num_levels, "k_blocks": k,
+            "recomputed": rec, "affected": int(stats["affected"]),
+            "total_blocks": cg.total_blocks,
+            "work_savings": round(cg.total_blocks / max(rec, 1), 2),
+            "update_ms": round(upd_ms, 3), "scratch_ms": round(scratch_ms, 3),
+            "speedup": round(scratch_ms / max(upd_ms, 1e-9), 2),
+        })
+    return rows
+
+
+def bench_stringhash(n: int, grain: int, ks, seed: int = 0):
+    from repro.jaxsac.apps import stringhash_graph, stringhash_oracle
+
+    cg, _ = stringhash_graph(n, grain)
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(97, 123, n).astype(np.int32)
+    scratch_ms, state = _time(cg.init, {"text": jnp.asarray(codes)})
+    rows = []
+    for k in ks:
+        codes = _edit(rng, codes, k, grain)
+        upd_ms, (state, stats) = _time(
+            cg.propagate, state, {"text": jnp.asarray(codes)})
+        assert int(cg.result(state)[0, 0]) == stringhash_oracle(codes)
+        rec = int(stats["recomputed"])
+        rows.append({
+            "app": "stringhash", "n": n, "block": grain,
+            "levels": cg.num_levels, "k_blocks": k,
+            "recomputed": rec, "affected": int(stats["affected"]),
+            "total_blocks": cg.total_blocks,
+            "work_savings": round(cg.total_blocks / max(rec, 1), 2),
+            "update_ms": round(upd_ms, 3), "scratch_ms": round(scratch_ms, 3),
+            "speedup": round(scratch_ms / max(upd_ms, 1e-9), 2),
+        })
+    return rows
+
+
+def run(quick: bool = True, seed: int = 0):
+    if quick:
+        ks = [1, 4, 16, 64]
+        rows = bench_pipeline(1 << 14, 16, ks, seed)
+        rows += bench_stringhash(1 << 14, 64, ks, seed)
+    else:
+        ks = [1, 4, 16, 64, 256, 1024]
+        rows = bench_pipeline(1 << 18, 64, ks, seed)
+        rows += bench_stringhash(1 << 18, 64, ks, seed)
+    return rows
+
+
+def write_json(rows) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "BENCH_graph.json"
+    out.write_text(json.dumps(rows, indent=2))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    rows = run(quick=not args.full)
+    for r in rows:
+        print("  " + ", ".join(f"{k}={v}" for k, v in r.items()))
+    print(f"  -> {write_json(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -51,7 +51,7 @@ def main() -> None:
                     help="paper-scale sizes (several minutes)")
     ap.add_argument("--only", default="all",
                     choices=["all", "apps", "granularity", "readersets",
-                             "roofline"])
+                             "graph", "roofline"])
     ap.add_argument("--app", default=None, help="restrict --only apps")
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--tag", default="", help="roofline variant tag")
@@ -81,6 +81,13 @@ def main() -> None:
         rows = readersets.run(quick=quick)
         _print_rows(rows)
         _write_csv("readersets", rows)
+
+    if args.only in ("all", "graph"):
+        from . import graph_pipeline
+        print("== Graph runtime: recomputed blocks / update latency ==")
+        rows = graph_pipeline.run(quick=quick)
+        _print_rows(rows)
+        print(f"  -> {graph_pipeline.write_json(rows)}")
 
     if args.only in ("all", "roofline"):
         from . import roofline

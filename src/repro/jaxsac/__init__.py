@@ -21,19 +21,34 @@ of the paper's idea (see DESIGN.md §Hardware-adaptation):
     bitwise-equality check that stops propagation early.
 
 Modules:
+  * ``graph``   — the general subsystem: a tracing API (``GraphBuilder``)
+    that records a static SP-dag of block-granular ops (map / zip_map /
+    reduce_tree / stencil / scan, composed with seq/par mirroring the
+    host engine's S/P nodes), where each edge carries a reader index map.
+  * ``graph_compile`` — level-schedules the dag and emits ``init`` plus a
+    fully jitted ``propagate`` (dirty-mask pushing + masked recompute,
+    sparse-gather vs dense-masked per level, Pallas dirty-tile routing).
+  * ``graph_ops`` — per-kind forward / dirty-transfer / recompute math.
   * ``reduce``  — incremental balanced reductions (the paper's Algorithm 1
-    divide-and-conquer sum, O(k log(n/k)) dirty nodes per k-block update).
+    divide-and-conquer sum, O(k log(n/k)) dirty nodes per k-block update);
+    now a thin wrapper over the graph runtime.
   * ``prefill`` — incremental KV-cache prefill for the serving path: edit
     k tokens of an S-token prompt and re-establish the exact cache while
     recomputing only the affected positions per layer (dirty intervals).
+  * ``apps``    — host-engine applications ported as graph programs
+    (Rabin-Karp string hash).
 """
 from .core import BlockTensor, dirty_from_diff
+from .graph import GraphBuilder
+from .graph_compile import CompiledGraph
 from .reduce import IncrementalReduce
 from .prefill import incremental_prefill, prefill_distance
 
 __all__ = [
     "BlockTensor",
     "dirty_from_diff",
+    "GraphBuilder",
+    "CompiledGraph",
     "IncrementalReduce",
     "incremental_prefill",
     "prefill_distance",

@@ -1,0 +1,113 @@
+"""Host-engine applications ported to the SP-dag graph runtime.
+
+The host apps (``repro.apps``) run on the paper-faithful dynamic engine:
+Python closures, per-read reader sets.  The ports here re-express the
+same dataflow as *traced* static SP-dags so the jit-compiled propagate
+of ``graph_compile`` does the change propagation on TPU.
+
+``stringhash_graph`` ports the Rabin-Karp chunk pipeline of
+``repro.apps.stringhash``: the string lives in n/g blocks of g character
+codes; a leaf map computes each block's (hash, base^len) pair via the
+homomorphism h(a ++ b) = h(a) * B^len(b) + h(b) (mod p); a balanced
+reduce tree combines pairs, so a k-block edit recomputes O(k log(n/g))
+dag blocks.  The modulus is 65521 (largest prime < 2^16) so every
+intermediate product stays below 2^32 and the whole pipeline runs in
+uint32 without requiring 64-bit mode.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph import GraphBuilder, Handle
+
+__all__ = ["MOD", "BASE", "stringhash_graph", "stringhash_oracle",
+           "GraphStringHash"]
+
+MOD = 65521            # largest prime < 2^16: keeps products in uint32
+BASE = 257
+
+
+def _block_pair(grain: int):
+    """Per-block (hash, base^grain) pair, Horner fold over the block."""
+    p_const = pow(BASE, grain, MOD)
+
+    def pair(block: jax.Array) -> jax.Array:
+        def step(h, c):
+            return (h * jnp.uint32(BASE) + c) % jnp.uint32(MOD), None
+
+        h, _ = jax.lax.scan(step, jnp.uint32(0), block.astype(jnp.uint32))
+        return jnp.stack([h, jnp.uint32(p_const)])
+
+    return pair
+
+
+def _combine(l: jax.Array, r: jax.Array) -> jax.Array:
+    """(h, p) homomorphism combine on [..., 2]-stacked pairs."""
+    l = l.astype(jnp.uint32)
+    r = r.astype(jnp.uint32)
+    h = (l[..., 0] * r[..., 1] + r[..., 0]) % jnp.uint32(MOD)
+    p = (l[..., 1] * r[..., 1]) % jnp.uint32(MOD)
+    return jnp.stack([h, p], axis=-1)
+
+
+def stringhash_graph(n: int, grain: int = 64, *, max_sparse: int = 64,
+                     use_pallas="auto"):
+    """Trace + compile the Rabin-Karp pipeline.
+
+    Returns (compiled_graph, output_handle); feed it the character codes
+    as the ``"text"`` input (int32 [n]).
+    """
+    assert n % grain == 0
+    g = GraphBuilder()
+    x = g.input("text", n=n, block=grain)
+    pairs = g.map(_block_pair(grain), x, out_block=1, name="rk.leaf")
+    out = g.reduce_tree(_combine, pairs, identity=0, name="rk")
+    g.output(out)
+    cg = g.compile(max_sparse=max_sparse, use_pallas=use_pallas)
+    return cg, out
+
+
+def stringhash_oracle(codes: Sequence[int]) -> int:
+    """From-scratch Rabin-Karp hash in exact Python integers."""
+    h = 0
+    for c in codes:
+        h = (h * BASE + int(c)) % MOD
+    return h
+
+
+class GraphStringHash:
+    """Drop-in style app facade mirroring repro.apps.stringhash usage."""
+
+    name = "stringhash_graph"
+
+    def __init__(self, n: int = 65536, grain: int = 64, seed: int = 0):
+        import numpy as np
+
+        self.n, self.grain = n, grain
+        self.rng = np.random.default_rng(seed)
+        self.codes = self.rng.integers(97, 123, n).astype("int32")
+        self.cg, self.out = stringhash_graph(n, grain)
+        self.state = None
+
+    def run(self):
+        # jnp.array (not asarray): self.codes is mutated in place between
+        # updates, so hand jax a copy, never a zero-copy view.
+        self.state = self.cg.init(text=jnp.array(self.codes))
+        return self.state
+
+    def apply_update(self, k: int) -> dict:
+        """Edit k random characters; propagate; return stats."""
+        idx = self.rng.choice(self.n, size=k, replace=False)
+        self.codes[idx] = self.rng.integers(97, 123, k).astype("int32")
+        self.state, stats = self.cg.propagate(
+            self.state, {"text": jnp.array(self.codes)})
+        return stats
+
+    def output(self) -> int:
+        return int(self.cg.result(self.state)[0, 0])
+
+    def expected(self) -> int:
+        return stringhash_oracle(self.codes)

@@ -17,12 +17,17 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["BlockTensor", "dirty_from_diff", "blocks_of"]
+__all__ = ["BlockTensor", "dirty_from_diff", "blocks_of", "broadcast_mask"]
 
 
 def blocks_of(n: int, block: int) -> int:
     assert n % block == 0, f"size {n} not divisible by block {block}"
     return n // block
+
+
+def broadcast_mask(mask: jax.Array, like: jax.Array) -> jax.Array:
+    """Broadcast a leading-axis mask over the trailing dims of ``like``."""
+    return mask.reshape(mask.shape + (1,) * (like.ndim - 1))
 
 
 def dirty_from_diff(old: jax.Array, new: jax.Array, block: int) -> jax.Array:

@@ -1,0 +1,269 @@
+"""Static SP-dag tracer for block-granular self-adjusting programs.
+
+The host engine (``repro.core.engine``) builds its RSP tree *dynamically*:
+every run records reads, scopes, and series/parallel composition as Python
+closures execute.  None of that jits.  This module is the hardware path's
+answer: a **tracing API** that records, once, the static SP-dag of a
+block-tensor computation, which ``graph_compile`` then level-schedules and
+compiles into a single jitted ``propagate``.
+
+A traced program is a dag of block-granular ops.  Each node produces a
+tensor whose leading axis is ``num_blocks * block`` (a ``BlockTensor``
+worth of modifiables); each edge carries a *reader index map* — which
+blocks of the input does block ``i`` of the output read:
+
+  ============  =========================================  ================
+  op            reader index map (out block i reads)       dirty transfer
+  ============  =========================================  ================
+  map           in block i                                 identity
+  zip_map       block i of both inputs                     union
+  reduce_level  in blocks 2i, 2i+1                         pairwise OR
+  stencil(r)    in blocks i-r .. i+r (clamped)             dilation by r
+  scan carry    in blocks 0 .. i-1                         prefix OR
+  ============  =========================================  ================
+
+This is the static special case the paper itself singles out ("the RSP
+tree will always look the same", Section 2): because the dag never
+changes shape, the reader sets of the host engine collapse into these
+index maps and change propagation becomes mask pushing + masked
+recompute (see graph_compile.py).
+
+``seq``/``par`` mirror the host engine's S/P composition: ``par`` asserts
+branches are independent (they may share a schedule level), ``seq``
+imposes S-node ordering (later branches are scheduled strictly after
+earlier ones, even without a data edge).
+
+Typical use::
+
+    g = GraphBuilder()
+    x = g.input("x", n=4096, block=16)
+    y = g.map(lambda b: b * 2.0 + 1.0, x)
+    s = g.stencil(lambda w: w[16:32] + 0.5 * (w[:16] + w[32:]), y, radius=1)
+    total = g.reduce_tree(jnp.add, s, identity=0.0)
+    cg = g.compile(max_sparse=64)
+    state = cg.init(x=data)
+    state, stats = cg.propagate(state, {"x": new_data})
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+__all__ = ["GraphBuilder", "Handle", "GNode"]
+
+ELEMENTWISE_KINDS = ("map", "zip_map", "reduce_level")
+KINDS = ("input",) + ELEMENTWISE_KINDS + ("stencil", "escan")
+
+
+@dataclasses.dataclass
+class GNode:
+    """One block-granular op in the traced SP-dag (static metadata only)."""
+
+    idx: int
+    kind: str                       # one of KINDS
+    num_blocks: int                 # output block count
+    block: int                      # elements per output block
+    deps: Tuple[int, ...]           # data-edge predecessors (node idxs)
+    control: Tuple[int, ...] = ()   # S-composition predecessors (node idxs)
+    fn: Optional[Callable] = None   # per-block function (map/zip_map/stencil)
+    op: Optional[Callable] = None   # combining op (reduce_level/escan)
+    identity: Any = None            # identity of ``op`` (fill / scan seed)
+    radius: int = 0                 # stencil radius (blocks)
+    fill: Any = None                # stencil boundary fill (None = clamp)
+    name: str = ""
+
+    @property
+    def n(self) -> int:
+        return self.num_blocks * self.block
+
+
+@dataclasses.dataclass(frozen=True)
+class Handle:
+    """Reference to a traced node, returned by every GraphBuilder op."""
+
+    builder: "GraphBuilder" = dataclasses.field(repr=False)
+    idx: int = 0
+
+    @property
+    def node(self) -> GNode:
+        return self.builder.nodes[self.idx]
+
+    @property
+    def num_blocks(self) -> int:
+        return self.node.num_blocks
+
+    @property
+    def block(self) -> int:
+        return self.node.block
+
+
+class GraphBuilder:
+    """Records a static SP-dag of block-granular ops."""
+
+    def __init__(self):
+        self.nodes: List[GNode] = []
+        self.inputs: dict = {}          # name -> node idx
+        self.outputs: List[int] = []    # explicitly marked outputs
+        # S-composition context: node idxs the *next* traced op must be
+        # scheduled after (set while inside the later branches of seq()).
+        self._control: Tuple[int, ...] = ()
+
+    # ------------------------------------------------------------------
+    def _add(self, kind: str, num_blocks: int, block: int,
+             deps: Sequence[int], **kw) -> Handle:
+        node = GNode(idx=len(self.nodes), kind=kind, num_blocks=num_blocks,
+                     block=block, deps=tuple(deps), control=self._control,
+                     **kw)
+        self.nodes.append(node)
+        return Handle(self, node.idx)
+
+    @staticmethod
+    def _blocks(n: int, block: int) -> int:
+        assert n % block == 0, f"size {n} not divisible by block {block}"
+        return n // block
+
+    # ------------------------------------------------------------------
+    # Sources
+    # ------------------------------------------------------------------
+    def input(self, name: str, n: int, block: int = 1) -> Handle:
+        """Declare a block-modifiable input of ``n`` leading elements."""
+        assert name not in self.inputs, f"duplicate input {name!r}"
+        h = self._add("input", self._blocks(n, block), block, (), name=name)
+        self.inputs[name] = h.idx
+        return h
+
+    # ------------------------------------------------------------------
+    # Block ops
+    # ------------------------------------------------------------------
+    def map(self, f: Callable, x: Handle, out_block: Optional[int] = None,
+            name: str = "") -> Handle:
+        """Apply ``f`` to each block independently.
+
+        ``f`` maps one block ``[block, *feat] -> [out_block, *out_feat]``
+        (or ``-> [*out_feat]`` when ``out_block == 1``, e.g. a block-local
+        aggregation).  Identity reader map: out block i reads in block i.
+        """
+        ob = x.block if out_block is None else out_block
+        return self._add("map", x.num_blocks, ob, (x.idx,), fn=f,
+                         name=name or "map")
+
+    def zip_map(self, f: Callable, x: Handle, y: Handle,
+                out_block: Optional[int] = None, name: str = "") -> Handle:
+        """Apply ``f`` to aligned block pairs of two inputs.
+
+        Inputs must agree on ``num_blocks`` (block sizes may differ, e.g.
+        zipping data blocks with per-block carries).
+        """
+        assert x.num_blocks == y.num_blocks, (x.num_blocks, y.num_blocks)
+        ob = x.block if out_block is None else out_block
+        return self._add("zip_map", x.num_blocks, ob, (x.idx, y.idx), fn=f,
+                         name=name or "zip_map")
+
+    def reduce_tree(self, op: Callable, x: Handle, identity: Any = 0.0,
+                    name: str = "") -> Handle:
+        """Balanced-tree reduction over all blocks (paper Algorithm 1).
+
+        Expands into one block-local fold plus log2(num_blocks) pairwise
+        ``reduce_level`` nodes; a k-block edit dirties O(k log(n/k)) of
+        them (Theorem 4.2), and the value-equality cutoff at every level
+        can stop propagation earlier still.
+        """
+        nb = x.num_blocks
+        assert nb & (nb - 1) == 0, "block count must be a power of two"
+        name = name or "reduce"
+        cur = x
+        if x.block > 1:
+            from .reduce import _fold  # balanced in-block fold
+
+            cur = self.map(
+                lambda b, _op=op, _id=identity: _fold(_op, _id, b[None], 1)[0],
+                x, out_block=1, name=f"{name}.leaf")
+        while cur.num_blocks > 1:
+            cur = self._add("reduce_level", cur.num_blocks // 2, 1,
+                            (cur.idx,), op=op, identity=identity,
+                            name=f"{name}.lvl")
+        return cur
+
+    def stencil(self, f: Callable, x: Handle, radius: int = 1,
+                fill: Any = None, name: str = "") -> Handle:
+        """Sliding-window block op: out block i reads blocks i-r .. i+r.
+
+        ``f`` maps the concatenated window ``[(2r+1)*block, *feat]`` to one
+        output block ``[block, *feat']``.  Out-of-range neighbours clamp to
+        the edge block, or are filled with ``fill`` when given.  Dirty
+        transfer is mask dilation by ``radius``.
+        """
+        assert radius >= 1
+        return self._add("stencil", x.num_blocks, x.block, (x.idx,), fn=f,
+                         radius=radius, fill=fill, name=name or "stencil")
+
+    def scan(self, op: Callable, x: Handle, identity: Any = 0.0,
+             name: str = "") -> Handle:
+        """Inclusive prefix scan of an associative ``op`` over the leading
+        axis, traced as the classic three-node pipeline: block aggregates
+        (map) -> exclusive carry scan over aggregates -> block-local scans
+        seeded by the carries (zip_map).  A k-block edit recomputes the k
+        local aggregates, the (cheap, nb-element) carry pass, and only the
+        downstream blocks whose carry *value* actually changed.
+        """
+        name = name or "scan"
+        from .reduce import _fold
+
+        agg = self.map(
+            lambda b, _op=op, _id=identity: _fold(_op, _id, b[None], 1)[0],
+            x, out_block=1, name=f"{name}.agg")
+        carry = self._add("escan", x.num_blocks, 1, (agg.idx,), op=op,
+                          identity=identity, name=f"{name}.carry")
+
+        def local(bx, cb, _op=op):
+            import jax
+
+            scanned = jax.lax.associative_scan(_op, bx, axis=0)
+            return _op(cb, scanned)    # cb [1,*f] broadcasts over the block
+
+        return self.zip_map(local, x, carry, name=f"{name}.local")
+
+    # ------------------------------------------------------------------
+    # SP composition (mirrors Engine.seq-by-default / Engine.par)
+    # ------------------------------------------------------------------
+    def par(self, *thunks: Callable[[], Any]) -> List[Any]:
+        """P-node: trace branches as independent (level-sharable)."""
+        return [t() for t in thunks]
+
+    def seq(self, *thunks: Callable[[], Any]) -> List[Any]:
+        """S-node: trace branches in series.  Ops of branch i+1 are
+        scheduled strictly after every op of branch i, even when no data
+        edge connects them (control edges in the level scheduler)."""
+        saved = self._control
+        out = []
+        prev: Tuple[int, ...] = ()
+        for t in thunks:
+            first = len(self.nodes)
+            self._control = saved + prev
+            out.append(t())
+            created = tuple(range(first, len(self.nodes)))
+            if created:        # a branch tracing nothing keeps the chain
+                prev = created
+        self._control = saved
+        return out
+
+    def output(self, *handles: Handle) -> None:
+        """Mark result nodes (defaults to dag sinks when never called)."""
+        for h in handles:
+            self.outputs.append(h.idx)
+
+    # ------------------------------------------------------------------
+    def sinks(self) -> List[int]:
+        used = set()
+        for nd in self.nodes:
+            used.update(nd.deps)
+        return [nd.idx for nd in self.nodes if nd.idx not in used]
+
+    def compile(self, max_sparse: int = 64, use_pallas="auto",
+                interpret: Optional[bool] = None, pallas_tile: int = 8):
+        """Level-schedule the dag and build the jitted runtime."""
+        from .graph_compile import CompiledGraph
+
+        return CompiledGraph(self, max_sparse=max_sparse,
+                             use_pallas=use_pallas, interpret=interpret,
+                             pallas_tile=pallas_tile)

@@ -1,0 +1,257 @@
+"""Level scheduler + jit-compiled change propagation for traced SP-dags.
+
+``CompiledGraph`` takes a ``GraphBuilder`` trace and produces:
+
+  * ``init(**inputs) -> state`` — the initial run (jitted): forward every
+    node, store every value (the analogue of building the RSP tree and
+    memoizing every mod).
+  * ``propagate(state, new_inputs) -> (state, stats)`` — fully jitted
+    change propagation: diff the inputs into per-block dirty masks
+    (Algorithm-2 value cutoff at the leaves), push masks edge-wise through
+    the reader index maps level by level, and recompute exactly the dirty
+    blocks of each node, re-applying the value cutoff after every node so
+    propagation dies as soon as recomputed values are bitwise unchanged.
+
+Scheduling: nodes are grouped into *levels* (longest path from an input,
+over data edges plus the S-composition control edges recorded by
+``GraphBuilder.seq``).  Nodes within a level are independent by SP
+structure — exactly the paper's guarantee that change propagation may
+proceed in parallel under P nodes — so their masked recomputes execute in
+one fused pass per level under jit (XLA sees a straight-line program with
+no cross-node ordering inside a level).
+
+Per node, per update, the runtime picks between two identical-result
+regimes by dirty count (the TPU translation of the paper's observation
+that from-scratch wins past a crossover update size, generalized from
+``reduce.py``):
+
+  * sparse — gather the <= max_sparse dirty blocks, recompute, scatter;
+  * dense  — one masked pass over all blocks; elementwise/pair levels
+    (map / zip_map / reduce_level) route through the Pallas dirty-tile
+    kernel (``kernels.dirty_map``) when eligible, which skips clean tiles
+    entirely via scalar-prefetched flags.
+
+``stats['recomputed']`` counts recomputed blocks (the realized computation
+distance W_delta), ``stats['affected']`` the value-changed blocks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import graph_ops
+from .core import dirty_from_diff
+from .graph import ELEMENTWISE_KINDS, GNode, GraphBuilder, Handle
+
+__all__ = ["CompiledGraph"]
+
+
+def _feat_size(shape: Tuple[int, ...]) -> int:
+    return int(math.prod(shape[1:]))
+
+
+def _own_inputs(inputs: Dict[str, Any]) -> Dict[str, Any]:
+    """Copy numpy-backed inputs before dispatch.
+
+    ``jnp.asarray`` of an aligned numpy buffer is zero-copy, and the
+    jitted init/propagate consume it asynchronously — a caller mutating
+    the buffer in place afterwards (the natural usage for an incremental
+    API) would corrupt the stored old values.  ``jnp.array`` copies the
+    numpy source synchronously; jax Arrays are immutable and pass
+    through (a caller holding a zero-copy *view* must copy themselves —
+    the standard JAX aliasing rule).
+    """
+    return {k: jnp.array(v) if isinstance(v, np.ndarray) else v
+            for k, v in inputs.items()}
+
+
+class CompiledGraph:
+    def __init__(self, builder: GraphBuilder, *, max_sparse: int = 64,
+                 use_pallas="auto", interpret: Optional[bool] = None,
+                 pallas_tile: int = 8):
+        assert builder.inputs, "graph has no inputs"
+        self.nodes: List[GNode] = list(builder.nodes)
+        self.input_names: Dict[str, int] = dict(builder.inputs)
+        self.outputs: List[int] = list(builder.outputs) or builder.sinks()
+        self.max_sparse = int(max_sparse)
+        self.pallas_tile = int(pallas_tile)
+        if use_pallas == "auto":
+            use_pallas = jax.default_backend() == "tpu"
+        self.use_pallas = bool(use_pallas)
+        self.interpret = interpret
+
+        # ---- level schedule (data edges + seq control edges) ----------
+        level: Dict[int, int] = {}
+        for nd in self.nodes:
+            preds = tuple(nd.deps) + tuple(nd.control)
+            level[nd.idx] = (
+                0 if nd.kind == "input"
+                else 1 + max(level[p] for p in preds))
+        self.num_levels = max(level.values()) + 1 if level else 0
+        self.schedule: List[List[int]] = [[] for _ in range(self.num_levels)]
+        for nd in self.nodes:
+            self.schedule[level[nd.idx]].append(nd.idx)
+        self.level_of = level
+        # from-scratch work in blocks (every op node recomputes everything)
+        self.total_blocks = sum(
+            nd.num_blocks for nd in self.nodes if nd.kind != "input")
+
+        self._init_fn = jax.jit(self._init_impl)
+        self._prop_fn = jax.jit(self._propagate_impl)
+
+    # ------------------------------------------------------------------
+    # Initial run
+    # ------------------------------------------------------------------
+    def _init_impl(self, inputs: Dict[str, jax.Array]):
+        values: List[Any] = [None] * len(self.nodes)
+        for nd in self.nodes:
+            if nd.kind == "input":
+                values[nd.idx] = jnp.asarray(inputs[nd.name])
+            else:
+                parents = [values[d] for d in nd.deps]
+                values[nd.idx] = graph_ops.forward(nd, self.nodes, parents)
+        return {"v": tuple(values)}
+
+    def init(self, inputs: Optional[Dict[str, jax.Array]] = None, **kw):
+        inputs = {**(inputs or {}), **kw}
+        assert set(inputs) == set(self.input_names), (
+            f"inputs {sorted(inputs)} != declared {sorted(self.input_names)}")
+        for name, idx in self.input_names.items():
+            nd = self.nodes[idx]
+            got = inputs[name].shape[0]
+            assert got == nd.n, (
+                f"input {name!r}: leading size {got}, traced with {nd.n}")
+        return self._init_fn(_own_inputs(inputs))
+
+    # ------------------------------------------------------------------
+    # Accessors
+    # ------------------------------------------------------------------
+    def value(self, state, handle: Handle) -> jax.Array:
+        return state["v"][handle.idx]
+
+    def result(self, state, handle: Optional[Handle] = None) -> jax.Array:
+        idx = self.outputs[0] if handle is None else handle.idx
+        return state["v"][idx]
+
+    # ------------------------------------------------------------------
+    # Change propagation
+    # ------------------------------------------------------------------
+    def propagate(self, state, new_inputs: Dict[str, jax.Array]):
+        """Jitted change propagation; omitted inputs are taken unchanged.
+
+        Numpy inputs are copied before dispatch (see ``_own_inputs``);
+        don't pass a zero-copy jax view (``jnp.asarray``) of a buffer you
+        then mutate in place — the standard JAX aliasing rule.
+        """
+        unknown = set(new_inputs) - set(self.input_names)
+        assert not unknown, f"unknown inputs {sorted(unknown)}"
+        return self._prop_fn(state, _own_inputs(new_inputs))
+
+    def _propagate_impl(self, state, new_inputs: Dict[str, jax.Array]):
+        vals = list(state["v"])
+        changed: List[Any] = [None] * len(self.nodes)
+        recomputed = jnp.int32(0)
+        affected = jnp.int32(0)
+        dirty_inputs = jnp.int32(0)
+
+        for lvl in self.schedule:
+            for idx in lvl:
+                nd = self.nodes[idx]
+                if nd.kind == "input":
+                    old = vals[idx]
+                    if nd.name in new_inputs:
+                        new = jnp.asarray(new_inputs[nd.name]).astype(
+                            old.dtype)
+                        ch = dirty_from_diff(old, new, nd.block)
+                        vals[idx] = new
+                    else:
+                        ch = jnp.zeros((nd.num_blocks,), bool)
+                    changed[idx] = ch
+                    dirty_inputs += jnp.sum(ch.astype(jnp.int32))
+                    continue
+
+                dirty = graph_ops.edge_dirty(
+                    nd, [changed[d] for d in nd.deps])
+                parents = [vals[d] for d in nd.deps]
+                old = vals[idx]
+                new = self._recompute(nd, parents, old, dirty)
+                ch = dirty & dirty_from_diff(old, new, nd.block)
+                vals[idx] = new
+                changed[idx] = ch
+                recomputed += jnp.sum(dirty.astype(jnp.int32))
+                affected += jnp.sum(ch.astype(jnp.int32))
+
+        stats = {"recomputed": recomputed, "affected": affected,
+                 "dirty_inputs": dirty_inputs}
+        return {"v": tuple(vals)}, stats
+
+    # ------------------------------------------------------------------
+    def _recompute(self, nd: GNode, parents, old, dirty):
+        if nd.kind == "escan":
+            # nb cheap elements; the masked dense pass IS the fast path.
+            return graph_ops.dense_update(nd, self.nodes, parents, old, dirty)
+        k = min(self.max_sparse, nd.num_blocks)
+        count = jnp.sum(dirty.astype(jnp.int32))
+
+        def sparse(_):
+            return graph_ops.sparse_update(
+                nd, self.nodes, parents, old, dirty, k)
+
+        def dense(_):
+            return self._dense(nd, parents, old, dirty)
+
+        return jax.lax.cond(count <= k, sparse, dense, None)
+
+    def _dense(self, nd: GNode, parents, old, dirty):
+        if self.use_pallas and self._pallas_eligible(nd, parents, old):
+            return self._pallas_dense(nd, parents, old, dirty)
+        return graph_ops.dense_update(nd, self.nodes, parents, old, dirty)
+
+    # ------------------------------------------------------------------
+    # Pallas dirty-tile routing (elementwise / pair levels)
+    # ------------------------------------------------------------------
+    def _pallas_eligible(self, nd: GNode, parents, old) -> bool:
+        if nd.kind not in ELEMENTWISE_KINDS:
+            return False
+        if nd.num_blocks % self.pallas_tile != 0:
+            return False
+        return all(p.dtype == old.dtype for p in parents)
+
+    def _pallas_dense(self, nd: GNode, parents, old, dirty):
+        from repro.kernels.ops import dirty_map
+
+        nb = nd.num_blocks
+        w_out = nd.block * _feat_size(old.shape)
+        rows, shapes = [], []
+        for d, val in zip(nd.deps, parents):
+            p = self.nodes[d]
+            if nd.kind == "reduce_level":
+                bshape = (2,) + val.shape[1:]          # pair per out block
+            else:
+                bshape = (p.block,) + val.shape[1:]
+            rows.append(val.reshape(nb, int(math.prod(bshape))))
+            shapes.append(bshape)
+
+        def tile_fn(*tiles):
+            t = tiles[0].shape[0]
+            blocks = [x.reshape((t,) + s) for x, s in zip(tiles, shapes)]
+            if nd.kind == "reduce_level":
+                raw = nd.op(blocks[0][:, 0], blocks[0][:, 1])
+            else:
+                raw = jax.vmap(nd.fn)(*blocks)
+            return raw.reshape(t, w_out)
+
+        out = dirty_map(tile_fn, rows, old.reshape(nb, w_out), dirty,
+                        block=self.pallas_tile, interpret=self.interpret)
+        # The kernel recomputes *whole* dirty tiles, including their clean
+        # blocks.  By determinism those recompute to equal values — but
+        # only modulo compiled-kernel-vs-XLA fusion differences (FMA can
+        # shift a ulp).  Mask them back to `old` so clean blocks stay
+        # bitwise stable and the changed-mask cutoff remains sound.
+        old_rows = old.reshape(nb, w_out)
+        out = jnp.where(dirty[:, None], out, old_rows)
+        return out.reshape(old.shape)

@@ -1,0 +1,190 @@
+"""Per-kind semantics of SP-dag nodes: forward, dirty transfer, recompute.
+
+For every node kind this module supplies the four pieces the compiled
+runtime (graph_compile.py) assembles:
+
+  * ``forward(node, parents)``       — from-scratch value of the node.
+  * ``edge_dirty(node, changed)``    — push per-block *changed* masks of
+    the parents through the edge's reader index map: out block i is dirty
+    iff some block it reads changed (the mark phase of Algorithm 2,
+    vectorized).
+  * ``dense_update``                 — recompute every block under a mask
+    (one fused pass; clean blocks keep their old value bitwise).
+  * ``sparse_update``                — gather the <= k dirty blocks,
+    recompute just those lanes, scatter back (O(k) work).
+
+Both recompute regimes produce identical values; the runtime picks per
+node per update by dirty count, generalizing the regime switch of
+``reduce.py``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .core import broadcast_mask as _bc
+from .graph import GNode
+
+__all__ = ["forward", "edge_dirty", "dense_update", "sparse_update"]
+
+
+def _as_blocks(x: jax.Array, num_blocks: int, block: int) -> jax.Array:
+    return x.reshape((num_blocks, block) + x.shape[1:])
+
+
+def _from_blocks(xb: jax.Array) -> jax.Array:
+    return xb.reshape((xb.shape[0] * xb.shape[1],) + xb.shape[2:])
+
+
+def _pack(node: GNode, raw: jax.Array) -> jax.Array:
+    """vmap output [nb, ...] -> node value layout [nb*block, *feat]."""
+    if node.block == 1:
+        return raw
+    assert raw.shape[1] == node.block, (
+        f"node {node.name}: per-block fn returned leading {raw.shape[1:]}, "
+        f"expected out_block={node.block}")
+    return raw.reshape((node.num_blocks * node.block,) + raw.shape[2:])
+
+
+def _parent(node: GNode, nodes) -> GNode:
+    return nodes[node.deps[0]]
+
+
+# ---------------------------------------------------------------------------
+# Window construction (stencil)
+# ---------------------------------------------------------------------------
+def _windows(node: GNode, p: GNode, x: jax.Array,
+             idx: Optional[jax.Array] = None) -> jax.Array:
+    """[len(idx), (2r+1)*block, *feat] neighbourhood view of the parent
+    at output blocks ``idx`` (all blocks when None — the dense pass)."""
+    xb = _as_blocks(x, p.num_blocks, p.block)
+    if idx is None:
+        idx = jnp.arange(p.num_blocks)
+    parts = []
+    for off in range(-node.radius, node.radius + 1):
+        j = idx + off
+        jc = jnp.clip(j, 0, p.num_blocks - 1)
+        part = xb[jc]
+        if node.fill is not None:
+            oob = (j < 0) | (j >= p.num_blocks)
+            part = jnp.where(_bc(oob, part),
+                             jnp.asarray(node.fill, x.dtype), part)
+        parts.append(part)
+    return jnp.concatenate(parts, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def forward(node: GNode, nodes, parents: List[jax.Array]) -> jax.Array:
+    if node.kind == "map":
+        p = _parent(node, nodes)
+        xb = _as_blocks(parents[0], p.num_blocks, p.block)
+        return _pack(node, jax.vmap(node.fn)(xb))
+    if node.kind == "zip_map":
+        px, py = nodes[node.deps[0]], nodes[node.deps[1]]
+        xb = _as_blocks(parents[0], px.num_blocks, px.block)
+        yb = _as_blocks(parents[1], py.num_blocks, py.block)
+        return _pack(node, jax.vmap(node.fn)(xb, yb))
+    if node.kind == "reduce_level":
+        x = parents[0]
+        return node.op(x[0::2], x[1::2])
+    if node.kind == "stencil":
+        p = _parent(node, nodes)
+        win = _windows(node, p, parents[0])
+        return _pack(node, jax.vmap(node.fn)(win))
+    if node.kind == "escan":
+        x = parents[0]
+        inclusive = jax.lax.associative_scan(node.op, x, axis=0)
+        seed = jnp.full_like(x[:1], node.identity)
+        return jnp.concatenate([seed, inclusive[:-1]], axis=0)
+    raise ValueError(f"forward of non-op node {node.kind}")
+
+
+# ---------------------------------------------------------------------------
+# dirty transfer (reader index maps, reversed)
+# ---------------------------------------------------------------------------
+def edge_dirty(node: GNode, changed: List[jax.Array]) -> jax.Array:
+    """Per-out-block dirty mask from the parents' changed masks."""
+    if node.kind in ("map", "stencil", "escan"):
+        d = changed[0]
+    elif node.kind == "zip_map":
+        d = changed[0] | changed[1]
+    elif node.kind == "reduce_level":
+        c = changed[0]
+        return c[0::2] | c[1::2]
+    else:
+        raise ValueError(node.kind)
+    if node.kind == "stencil":
+        out = d
+        for off in range(1, node.radius + 1):
+            out = out | jnp.roll(d, off).at[:off].set(False)
+            out = out | jnp.roll(d, -off).at[-off:].set(False)
+        return out
+    if node.kind == "escan":
+        # out block j reads blocks < j: prefix-OR, exclusive.
+        pref = jnp.cumsum(d.astype(jnp.int32)) > 0
+        return jnp.concatenate([jnp.zeros((1,), bool), pref[:-1]])
+    return d
+
+
+# ---------------------------------------------------------------------------
+# dense recompute (masked pass)
+# ---------------------------------------------------------------------------
+def dense_update(node: GNode, nodes, parents: List[jax.Array],
+                 old: jax.Array, dirty: jax.Array) -> jax.Array:
+    new = forward(node, nodes, parents)
+    nb = node.num_blocks
+    new_b = _as_blocks(new, nb, node.block)
+    old_b = _as_blocks(old, nb, node.block)
+    return _from_blocks(jnp.where(_bc(dirty, new_b), new_b, old_b))
+
+
+# ---------------------------------------------------------------------------
+# sparse recompute (gather dirty lanes, scatter back)
+# ---------------------------------------------------------------------------
+def sparse_update(node: GNode, nodes, parents: List[jax.Array],
+                  old: jax.Array, dirty: jax.Array, k: int) -> jax.Array:
+    nb = node.num_blocks
+    if node.kind == "escan":
+        # Carries are nb scalars-per-feature; the dense masked pass IS the
+        # cheap path (and a gather-based one would serialize the prefix).
+        return dense_update(node, nodes, parents, old, dirty)
+    (idx,) = jnp.nonzero(dirty, size=k, fill_value=nb)
+
+    if node.kind == "reduce_level":
+        kids = parents[0]
+        l_kid = kids.at[2 * idx].get(mode="fill", fill_value=node.identity)
+        r_kid = kids.at[2 * idx + 1].get(mode="fill", fill_value=node.identity)
+        vals = node.op(l_kid, r_kid)
+        return old.at[idx].set(vals, mode="drop")
+
+    if node.kind == "map":
+        p = _parent(node, nodes)
+        xb = _as_blocks(parents[0], p.num_blocks, p.block)
+        xg = xb.at[idx].get(mode="fill", fill_value=0)
+        raw = jax.vmap(node.fn)(xg)
+    elif node.kind == "zip_map":
+        px, py = nodes[node.deps[0]], nodes[node.deps[1]]
+        xg = _as_blocks(parents[0], px.num_blocks, px.block).at[idx].get(
+            mode="fill", fill_value=0)
+        yg = _as_blocks(parents[1], py.num_blocks, py.block).at[idx].get(
+            mode="fill", fill_value=0)
+        raw = jax.vmap(node.fn)(xg, yg)
+    elif node.kind == "stencil":
+        # Gather only the k dirty windows; sentinel lanes (idx == nb)
+        # gather clamped edge rows and are dropped by the scatter below.
+        p = _parent(node, nodes)
+        wg = _windows(node, p, parents[0], idx)
+        raw = jax.vmap(node.fn)(wg)
+    else:
+        raise ValueError(node.kind)
+
+    old_b = _as_blocks(old, nb, node.block)
+    if node.block == 1:  # fn returned [*feat] per block; add the block axis
+        vals_b = raw.reshape((k, 1) + raw.shape[1:])
+    else:
+        vals_b = raw
+    return _from_blocks(old_b.at[idx].set(vals_b, mode="drop"))

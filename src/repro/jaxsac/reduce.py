@@ -2,22 +2,17 @@
 
 The divide-and-conquer sum of the paper keeps one modifiable per internal
 node of a balanced binary tree; updating k of n leaves re-executes
-O(k log(1 + n/k)) readers (Theorem 4.2).  The jaxsac analogue stores the
-aggregation tree level by level and propagates a per-node dirty mask
-upward, recomputing only dirty parents, with the value-equality cutoff of
-Algorithm 2 (a parent whose recomputed aggregate is bitwise unchanged
-stops the propagation).
+O(k log(1 + n/k)) readers (Theorem 4.2).
 
-Two propagation regimes, chosen at runtime by dirty count (this is the
-TPU translation of the paper's observation that from-scratch wins past a
-crossover update size):
-
-  * sparse — gather the <= max_sparse dirty parents, recompute just those
-    lanes, scatter back: O(k) work per level, O(k log n) total.
-  * dense  — recompute every parent on the level under a mask: O(n) work
-    but one fused pass, better for large k.
-
-Both regimes produce identical results; ``update`` is fully jittable.
+``IncrementalReduce`` is now a thin wrapper over the general SP-dag
+runtime (``graph.py`` / ``graph_compile.py``): the reduction is *traced*
+as one block-local fold plus log2(num_blocks) pairwise combine levels,
+and the compiled ``propagate`` supplies everything this module once
+hand-rolled — upward dirty-mask pushing, the Algorithm-2 value-equality
+cutoff per level, and the sparse-gather vs dense-masked regime switch.
+The hand-built implementation is kept verbatim below as
+``_LegacyIncrementalReduce`` (it is the bitwise-equivalence oracle in
+tests/test_graph.py).
 """
 from __future__ import annotations
 
@@ -28,7 +23,7 @@ from typing import Any, Callable, Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
-from .core import BlockTensor, dirty_from_diff
+from .core import BlockTensor, dirty_from_diff, broadcast_mask as _bc
 
 __all__ = ["IncrementalReduce"]
 
@@ -39,7 +34,74 @@ class IncrementalReduce:
 
     ``op`` must be associative with ``identity``; the element arrays may
     have trailing feature dims (reduced only over the leading axis).
+    Backed by a compiled SP-dag: ``init`` runs the initial pass, ``update``
+    is the jitted change propagation of the graph runtime.
     """
+
+    n: int
+    block: int = 1
+    op: Callable[[jax.Array, jax.Array], jax.Array] = jnp.add
+    identity: float = 0.0
+    max_sparse: int = 64          # sparse-path budget per level
+    use_pallas: Any = False       # route dense levels through dirty_map
+
+    def __post_init__(self):
+        assert self.n % self.block == 0
+        nb = self.n // self.block
+        assert nb & (nb - 1) == 0, "block count must be a power of two"
+        from .graph import GraphBuilder
+
+        g = GraphBuilder()
+        x = g.input("x", n=self.n, block=self.block)
+        out = g.reduce_tree(self.op, x, identity=self.identity)
+        g.output(out)
+        cg = g.compile(max_sparse=self.max_sparse, use_pallas=self.use_pallas)
+        object.__setattr__(self, "_cg", cg)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.n // self.block
+
+    @property
+    def num_levels(self) -> int:
+        return int(math.log2(self.num_blocks))
+
+    def init(self, data: jax.Array) -> Dict[str, Any]:
+        """The initial run: build every level of the aggregation tree."""
+        assert data.shape[0] == self.n
+        return self._cg.init(x=data)
+
+    def result(self, state: Dict[str, Any]) -> jax.Array:
+        return self._cg.result(state)[0]
+
+    def update(self, state: Dict[str, Any], new_data: jax.Array,
+              ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+        """Change propagation for a replacement of the leaf array.
+
+        Returns (new_state, stats); stats['recomputed'] counts recomputed
+        tree nodes (the realized computation distance W_delta) and
+        stats['affected'] counts value-changed nodes.
+        """
+        state, stats = self._cg.propagate(state, {"x": new_data})
+        return state, {"recomputed": stats["recomputed"],
+                       "affected": stats["affected"]}
+
+
+# ---------------------------------------------------------------------------
+# The pre-graph hand-rolled implementation (reference oracle).
+#
+# Two propagation regimes, chosen at runtime by dirty count (this is the
+# TPU translation of the paper's observation that from-scratch wins past a
+# crossover update size):
+#
+#   * sparse — gather the <= max_sparse dirty parents, recompute just
+#     those lanes, scatter back: O(k) work per level, O(k log n) total.
+#   * dense  — recompute every parent on the level under a mask: O(n)
+#     work but one fused pass, better for large k.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _LegacyIncrementalReduce:
+    """Hand-built dirty-mask bookkeeping (kept as equivalence oracle)."""
 
     n: int
     block: int = 1
@@ -133,11 +195,6 @@ class IncrementalReduce:
 
         return ({"leaves": leaves.clear(), "levels": levels},
                 {"recomputed": recomputed, "affected": affected})
-
-
-def _bc(mask: jax.Array, like: jax.Array) -> jax.Array:
-    """Broadcast a leading-axis mask over trailing dims of ``like``."""
-    return mask.reshape(mask.shape + (1,) * (like.ndim - 1))
 
 
 def _fold(op, identity, blocks: jax.Array, axis: int) -> jax.Array:

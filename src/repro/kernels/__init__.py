@@ -4,12 +4,16 @@
     causal/window block skip and query offset (incremental prefill).
   * dirty_reduce    — dirty-masked tree-reduction level: change
     propagation's "skip unmarked subtrees" as BlockSpec machinery.
+  * dirty_map       — the generalized dirty-tile kernel (arbitrary
+    combining function, N inputs); the graph runtime's dense-path lane.
   * grouped_matmul  — block-diagonal expert GEMM (dropless MoE tile map).
 
 Each kernel is written against TPU (pl.pallas_call + BlockSpec VMEM
 tiling) and validated on CPU via interpret mode against the pure-jnp
 oracles in ``ref.py`` (tests/test_kernels.py sweeps shapes and dtypes).
 """
-from .ops import flash_attention, dirty_reduce_level, grouped_matmul
+from .ops import (dirty_map, dirty_reduce_level, flash_attention,
+                  grouped_matmul)
 
-__all__ = ["flash_attention", "dirty_reduce_level", "grouped_matmul"]
+__all__ = ["flash_attention", "dirty_reduce_level", "dirty_map",
+           "grouped_matmul"]

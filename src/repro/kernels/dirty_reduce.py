@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["dirty_reduce_level_call"]
+__all__ = ["dirty_reduce_level_call", "dirty_map_call"]
 
 
 def _kernel(tile_dirty_ref, kids_ref, old_ref, out_ref):
@@ -69,3 +69,65 @@ def dirty_reduce_level_call(
         out_shape=jax.ShapeDtypeStruct((P, W), old_parents.dtype),
         interpret=interpret,
     )(tile_dirty, children, old_parents)
+
+
+# ---------------------------------------------------------------------------
+# Generalized dirty-tile map: arbitrary combining function, N inputs.
+#
+# The graph runtime (repro.jaxsac.graph_compile) lowers every elementwise /
+# pair level of an SP-dag through this one kernel shape: row i of each
+# input holds the flattened payload read by output block i (for a map
+# node that is the input block itself; for a reduce level, the two
+# children).  ``fn`` is the node's combining function, traced *into the
+# kernel body* — tiles whose scalar-prefetched dirty flag is clear never
+# execute it and copy the old output instead, exactly the mark-guided
+# skip of dirty_reduce_level_call but for any op, not just ``+``.
+# ---------------------------------------------------------------------------
+def dirty_map_call(
+    fn,                       # (*tiles [block, W_i]) -> [block, W_out]
+    inputs,                   # sequence of [P, W_i]
+    old_out: jax.Array,       # [P, W_out]
+    dirty: jax.Array,         # [P] bool — per-output-block marks
+    *,
+    block: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    inputs = tuple(inputs)
+    assert inputs, "dirty_map_call needs at least one input"
+    P, W = old_out.shape
+    for x in inputs:
+        assert x.ndim == 2 and x.shape[0] == P, (x.shape, P)
+    assert dirty.shape == (P,)
+    assert P % block == 0, (P, block)
+    tiles = P // block
+    tile_dirty = jnp.any(dirty.reshape(tiles, block), axis=1).astype(jnp.int32)
+    n_in = len(inputs)
+
+    def kernel(tile_dirty_ref, *refs):
+        in_refs, old_ref, out_ref = refs[:n_in], refs[n_in], refs[n_in + 1]
+        t = pl.program_id(0)
+
+        @pl.when(tile_dirty_ref[t] != 0)
+        def _recompute():
+            out_ref[...] = fn(*(r[...] for r in in_refs)).astype(out_ref.dtype)
+
+        @pl.when(tile_dirty_ref[t] == 0)
+        def _keep():
+            out_ref[...] = old_ref[...]
+
+    in_specs = [
+        pl.BlockSpec((block, x.shape[1]), lambda t, s: (t, 0)) for x in inputs
+    ]
+    in_specs.append(pl.BlockSpec((block, W), lambda t, s: (t, 0)))
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(tiles,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((block, W), lambda t, s: (t, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((P, W), old_out.dtype),
+        interpret=interpret,
+    )(tile_dirty, *inputs, old_out)

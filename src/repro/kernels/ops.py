@@ -12,10 +12,11 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention_kernel_call
-from .dirty_reduce import dirty_reduce_level_call
+from .dirty_reduce import dirty_map_call, dirty_reduce_level_call
 from .grouped_matmul import grouped_matmul_call
 
-__all__ = ["flash_attention", "dirty_reduce_level", "grouped_matmul"]
+__all__ = ["flash_attention", "dirty_reduce_level", "dirty_map",
+           "grouped_matmul"]
 
 
 def _default_interpret() -> bool:
@@ -51,6 +52,19 @@ def dirty_reduce_level(children: jax.Array, old_parents: jax.Array,
     """One dirty-masked reduction level: children [P,2,W] -> parents [P,W]."""
     return dirty_reduce_level_call(
         children, old_parents, dirty, block=block,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def dirty_map(fn, inputs, old_out: jax.Array, dirty: jax.Array, *,
+              block: int = 8, interpret: bool | None = None) -> jax.Array:
+    """Dirty-tile masked map with an arbitrary combining function.
+
+    ``inputs``: sequence of [P, W_i] row-payloads (row i = what output
+    block i reads); ``fn``: (*tiles) -> [tile, W_out]; clean tiles keep
+    ``old_out`` without executing ``fn``.
+    """
+    return dirty_map_call(
+        fn, inputs, old_out, dirty, block=block,
         interpret=_default_interpret() if interpret is None else interpret)
 
 

@@ -6,7 +6,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["flash_attention_ref", "dirty_reduce_level_ref",
+__all__ = ["flash_attention_ref", "dirty_reduce_level_ref", "dirty_map_ref",
            "grouped_matmul_ref"]
 
 NEG_INF = -2.0e38
@@ -44,6 +44,14 @@ def dirty_reduce_level_ref(children: jax.Array, old_parents: jax.Array,
     new = children[:, 0, :] + children[:, 1, :]
     return jnp.where(dirty[:, None], new.astype(old_parents.dtype),
                      old_parents)
+
+
+def dirty_map_ref(fn, inputs, old_out: jax.Array,
+                  dirty: jax.Array) -> jax.Array:
+    """Row-wise oracle for dirty_map: dirty rows get fn(*inputs), clean
+    rows keep old (tile granularity is applied by the caller)."""
+    new = fn(*inputs).astype(old_out.dtype)
+    return jnp.where(dirty[:, None], new, old_out)
 
 
 def grouped_matmul_ref(x: jax.Array, w: jax.Array,

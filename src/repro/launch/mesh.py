@@ -15,15 +15,15 @@ from __future__ import annotations
 
 import jax
 
+from repro.shardlib import make_mesh
+
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model: int = 1, data: int = 0):
@@ -31,7 +31,4 @@ def make_local_mesh(model: int = 1, data: int = 0):
     n = len(jax.devices())
     model = min(model, n)
     data = data or (n // model)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((data, model), ("data", "model"))

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..shardlib import constrain, current_ctx
+from ..shardlib import constrain, current_ctx, shard_map
 from .layers import apply_rope, residual_out_scale as _residual_out_scale, rope
 from .params import ParamSpec
 
@@ -357,7 +357,7 @@ def _flash_decode_sharded(q, ck, cv, pos, *, window: int, ring: bool) -> jax.Arr
         return o.astype(q_.dtype)
 
     bspec = other if other else None  # batch dim shards over non-model axes
-    out = jax.shard_map(
+    out = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(
@@ -367,7 +367,6 @@ def _flash_decode_sharded(q, ck, cv, pos, *, window: int, ring: bool) -> jax.Arr
             P(bspec),
         ),
         out_specs=P(bspec, None, None, None),
-        check_vma=False,
     )(q, ck, cv, pos)
     return out
 

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..shardlib import constrain, current_ctx
+from ..shardlib import constrain, current_ctx, shard_map
 from .layers import residual_out_scale
 from .params import ParamSpec
 
@@ -256,14 +256,13 @@ def moe_fwd_ep(cfg, p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
     xf = x.reshape(N, D)
     bspec = batch_axes if batch_axes else None
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(P(bspec, None), P(None, None),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
         out_specs=(P(bspec, None), P()),
-        check_vma=False,
     )(xf, p["router"], p["gate"], p["up"], p["down"])
     out = out.reshape(B, S, D)
     if cfg.moe_shared_experts:

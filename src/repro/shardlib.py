@@ -21,6 +21,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
+    "make_mesh",
+    "shard_map",
     "ShardCtx",
     "shard_ctx",
     "current_ctx",
@@ -36,6 +38,52 @@ __all__ = [
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
 Rules = List[Tuple[str, MeshAxes]]
+
+# ---------------------------------------------------------------------------
+# Mesh construction across JAX versions.  Newer JAX exposes
+# jax.sharding.AxisType and jax.make_mesh(..., axis_types=...); older
+# releases have neither the enum nor the kwarg.  All our meshes want plain
+# Auto axes (the default everywhere), so detect once and degrade to the
+# vanilla call.
+# ---------------------------------------------------------------------------
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Build a Mesh of Auto axes, portable across JAX versions."""
+    if _AXIS_TYPE is not None:
+        try:
+            return jax.make_mesh(
+                tuple(shape), tuple(axes),
+                axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    devices = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(devices, tuple(axes))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """Version-portable shard_map.
+
+    Newer JAX: ``jax.shard_map(..., check_vma=)``; older releases only have
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)``.  The check
+    flag means the same thing in both (replication/varying-manual-axes
+    validation); all our call sites disable it.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check)
+        except TypeError:  # top-level shard_map predates the kwarg rename
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)
+    from jax.experimental.shard_map import shard_map as _esm
+
+    return _esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check)
 
 # ---------------------------------------------------------------------------
 # Rule tables.  'pod' only exists on the multi-pod mesh; axes not present in

@@ -206,6 +206,127 @@ def test_gc_collects_detached_subtrees():
     assert eng.live_nodes <= live_before + 4
 
 
+def test_gc_live_bookkeeping_and_reader_unregistration():
+    """collect() after propagation: live_nodes/live_mods return to their
+    pre-update level and dead readers vanish from surviving reader sets."""
+    eng = Engine()
+    x, y = eng.mod("x"), eng.mod("y")
+    eng.write(x, 1)
+    eng.write(y, 10)
+    out = eng.mod("out")
+
+    def prog():
+        def outer(v):
+            tmp = eng.mod("tmp")          # owned by the reader's scope
+            eng.write(tmp, v * 2)
+            # inner reader also reads the *persistent* y, so y's reader set
+            # must shed the dead inner reader after GC.
+            eng.read((tmp, y), lambda t, w: eng.write(out, t + w))
+        eng.read(x, outer)
+
+    comp = eng.run(prog)
+    assert out.peek() == 12
+    nodes0, mods0 = eng.live_nodes, eng.live_mods
+    assert len(y.readers) == 1
+
+    eng.write(x, 5)                        # outer re-executes
+    comp.propagate()
+    assert out.peek() == 20
+    # old inner subtree is garbage but still counted until collect();
+    # y temporarily sees both the dead and the replacement reader.
+    assert eng.live_nodes > nodes0
+    assert len(y.readers) == 2
+    collected = eng.collect()
+    assert collected >= 1
+    assert eng.live_nodes == nodes0        # replacement exactly offsets dead
+    assert eng.live_mods == mods0          # old owned tmp freed, new one live
+    assert len(y.readers) == 1
+    # the surviving reader is live: updates through y still propagate
+    eng.write(y, 100)
+    comp.propagate()
+    assert out.peek() == 110
+
+
+def test_gc_dead_reader_lazily_dropped_from_reader_set():
+    """A dead reader still sitting in a reader set is discarded lazily by
+    write()'s mark loop (Section 5 lazy deletion)."""
+    eng = Engine()
+    sel, a = eng.mod("sel"), eng.mod("a")
+    eng.write(sel, 0)
+    eng.write(a, 7)
+    out = eng.mod()
+
+    def prog():
+        def body(s):
+            if s == 0:
+                eng.read(a, lambda v: eng.write(out, v))
+            else:
+                eng.write(out, -1)
+        eng.read(sel, body)
+
+    comp = eng.run(prog)
+    eng.write(sel, 1)                      # drops the reader of `a`
+    comp.propagate()
+    eng.collect()                          # marks it dead, unregisters
+    assert len(a.readers) == 0
+    # a write to `a` now marks nothing and re-runs nothing
+    eng.write(a, 8)
+    st = comp.propagate()
+    assert st.affected_readers == 0 and out.peek() == -1
+
+
+def test_collect_idempotent_when_no_garbage():
+    eng = Engine()
+    mods = eng.alloc_array(4, "x")
+    for i, m in enumerate(mods):
+        eng.write(m, i)
+    res = eng.mod()
+    comp = eng.run(lambda: sum_program(eng, mods, res))
+    assert eng.collect() == 0              # nothing detached yet
+    before = (eng.live_nodes, eng.live_mods)
+    assert eng.collect() == 0              # idempotent
+    assert (eng.live_nodes, eng.live_mods) == before
+
+
+def test_write_once_violation_during_propagation():
+    """The write-once check fires on the propagation epoch too: two
+    readers racing to write the same mod is caught mid-propagate."""
+    eng = Engine()
+    a = eng.mod("a")
+    eng.write(a, 1)
+    shared = eng.mod("shared")
+
+    def prog():
+        # Two sibling readers of `a` both write `shared` with different
+        # values.  The initial run already trips the restriction.
+        eng.read(a, lambda v: eng.write(shared, v))
+        eng.read(a, lambda v: eng.write(shared, v + 1))
+
+    with pytest.raises(RuntimeError, match="write-once"):
+        eng.run(prog)
+
+
+def test_write_once_equal_value_is_permitted():
+    """Algorithm 2's cutoff applies before the write-once check: a second
+    writer writing the *same* value marks nothing and does not trip the
+    restriction (it re-records the writer instead)."""
+    eng = Engine()
+    a = eng.mod("a")
+    eng.write(a, 3)
+    shared = eng.mod("shared")
+
+    def prog():
+        eng.read(a, lambda v: eng.write(shared, v * 2))
+        eng.read(a, lambda v: eng.write(shared, v * 2))   # equal value
+
+    comp = eng.run(prog)
+    assert shared.peek() == 6
+    # and propagation keeps the invariant
+    eng.write(a, 4)
+    comp.propagate()
+    assert shared.peek() == 8
+
+
 def test_static_engine_matches():
     """The static baseline computes the same result with no RSP tree."""
     seng = StaticEngine()

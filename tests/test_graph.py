@@ -1,0 +1,316 @@
+"""The SP-dag graph runtime: tracing, scheduling, jitted propagation.
+
+The system invariant under test is the graph-runtime restatement of
+Theorem 4.1: for ANY traced dag and ANY update, ``propagate`` must leave
+the state exactly (bitwise) where ``init`` on the updated input would,
+while recomputing O(k log(n/k))-ish blocks instead of everything.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.jaxsac import GraphBuilder, IncrementalReduce
+from repro.jaxsac.apps import GraphStringHash, stringhash_graph, \
+    stringhash_oracle
+from repro.jaxsac.reduce import _LegacyIncrementalReduce
+
+
+def assert_states_equal(cg, state_a, state_b):
+    for i, (a, b) in enumerate(zip(state_a["v"], state_b["v"])):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"node {i} ({cg.nodes[i].kind} {cg.nodes[i].name!r})")
+
+
+# ---------------------------------------------------------------------------
+# A ≥3-level pipeline mixing map + stencil + reduce
+# ---------------------------------------------------------------------------
+def make_pipeline(n=1024, block=8, max_sparse=16, use_pallas=False):
+    g = GraphBuilder()
+    x = g.input("x", n=n, block=block)
+    y = g.map(lambda b: b * 2.0 + 1.0, x, name="affine")
+    s = g.stencil(lambda w: w[block:2 * block]
+                  + 0.5 * (w[:block] + w[2 * block:]), y, radius=1)
+    t = g.reduce_tree(jnp.add, s, identity=0.0)
+    g.output(t)
+    cg = g.compile(max_sparse=max_sparse, use_pallas=use_pallas)
+    return cg
+
+
+def test_pipeline_levels_and_blocks():
+    cg = make_pipeline(n=1024, block=8)
+    # input -> map -> stencil -> leaf fold -> log2(128) reduce levels
+    assert cg.num_levels == 3 + 1 + int(math.log2(128))
+    assert cg.total_blocks == 128 + 128 + 128 + 127
+    # every schedule level's nodes are distinct and cover the dag once
+    flat = [i for lvl in cg.schedule for i in lvl]
+    assert sorted(flat) == list(range(len(cg.nodes)))
+
+
+@pytest.mark.parametrize("k", [1, 3, 17, 128])
+def test_pipeline_update_equals_from_scratch(k):
+    cg = make_pipeline()
+    rng = np.random.default_rng(k)
+    x = jnp.asarray(rng.standard_normal(1024), jnp.float32)
+    state = cg.init(x=x)
+    blocks = rng.choice(128, size=k, replace=False)
+    y = np.asarray(x).copy()
+    for b in blocks:
+        y[b * 8 + rng.integers(8)] = rng.standard_normal()
+    y = jnp.asarray(y)
+    state, stats = cg.propagate(state, {"x": y})
+    assert_states_equal(cg, state, cg.init(x=y))
+    # Theorem 4.2 shape: k dirty chains of height log(n/k), plus the
+    # stencil dilation (x3) on the two elementwise levels.
+    nb = 128
+    bound = 5 * k * (1 + math.log2(1 + nb / min(k, nb))) + 16
+    assert int(stats["recomputed"]) <= bound, (int(stats["recomputed"]), bound)
+
+
+def test_pipeline_noop_update_zero_work():
+    cg = make_pipeline()
+    x = jnp.asarray(np.arange(1024), jnp.float32)
+    state = cg.init(x=x)
+    state, stats = cg.propagate(state, {"x": x + 0.0})
+    assert int(stats["recomputed"]) == 0
+    assert int(stats["affected"]) == 0
+
+
+def test_value_cutoff_stops_midway():
+    """An edit masked out by the map's value cutoff propagates nowhere."""
+    g = GraphBuilder()
+    x = g.input("x", n=256, block=4)
+    y = g.map(lambda b: jnp.clip(b, 0.0, 1.0), x)    # saturating
+    t = g.reduce_tree(jnp.add, y, identity=0.0)
+    g.output(t)
+    cg = g.compile(max_sparse=8)
+    x0 = jnp.full((256,), 5.0, jnp.float32)           # all saturate to 1
+    state = cg.init(x=x0)
+    state, stats = cg.propagate(state, {"x": x0.at[100].set(9.0)})
+    # the edited block recomputes at the map, but its value is unchanged,
+    # so the whole reduce tree stays clean.
+    assert int(stats["recomputed"]) == 1
+    assert int(stats["affected"]) == 0
+    np.testing.assert_allclose(float(cg.result(state)[0]), 256.0)
+
+
+# ---------------------------------------------------------------------------
+# zip_map + scan + seq/par
+# ---------------------------------------------------------------------------
+def test_zip_map_and_par_schedule():
+    g = GraphBuilder()
+    x = g.input("x", n=128, block=4)
+    (a,), (b,) = g.par(lambda: [g.map(lambda v: v + 1.0, x)],
+                       lambda: [g.map(lambda v: v * 2.0, x)])
+    z = g.zip_map(lambda u, v: u * v, a, b)
+    g.output(z)
+    cg = g.compile(max_sparse=4)
+    assert cg.level_of[a.idx] == cg.level_of[b.idx]   # P: level-sharable
+    rng = np.random.default_rng(0)
+    d = jnp.asarray(rng.standard_normal(128), jnp.float32)
+    state = cg.init(x=d)
+    np.testing.assert_allclose(np.asarray(cg.value(state, z)),
+                               np.asarray((d + 1.0) * (d * 2.0)))
+    d2 = d.at[13].set(5.0)
+    state, stats = cg.propagate(state, {"x": d2})
+    assert_states_equal(cg, state, cg.init(x=d2))
+    assert int(stats["recomputed"]) == 3              # one block, 3 nodes
+
+
+def test_seq_orders_independent_branches():
+    g = GraphBuilder()
+    x = g.input("x", n=64, block=4)
+    (a,), (b,) = g.seq(lambda: [g.map(lambda v: v + 1.0, x)],
+                       lambda: [g.map(lambda v: v * 2.0, x)])
+    cg = g.compile()
+    assert cg.level_of[b.idx] > cg.level_of[a.idx]    # S: strict order
+
+
+def test_seq_empty_branch_keeps_ordering():
+    """A seq branch that traces no nodes must not break the S-chain."""
+    g = GraphBuilder()
+    x = g.input("x", n=64, block=4)
+    a, _, b = g.seq(lambda: g.map(lambda v: v + 1.0, x),
+                    lambda: None,                    # traces nothing
+                    lambda: g.map(lambda v: v * 2.0, x))
+    cg = g.compile()
+    assert cg.level_of[b.idx] > cg.level_of[a.idx]
+
+
+def test_numpy_inputs_are_copied():
+    """In-place mutation of a numpy input after init/propagate must not
+    alias the stored state (CompiledGraph owns numpy inputs)."""
+    cg = make_pipeline()
+    d = np.zeros(1024, np.float32)
+    state = cg.init(x=d)
+    d[0] = 5.0
+    state, stats = cg.propagate(state, {"x": d})
+    assert int(stats["dirty_inputs"]) == 1
+    assert_states_equal(cg, state, cg.init(x=d.copy()))
+
+
+@pytest.mark.parametrize("k", [1, 4, 16])
+def test_scan_update_equals_from_scratch(k):
+    g = GraphBuilder()
+    x = g.input("x", n=512, block=8)
+    sc = g.scan(jnp.add, x, identity=0.0)
+    g.output(sc)
+    cg = g.compile(max_sparse=8)
+    rng = np.random.default_rng(k)
+    # integers: carries must compare bitwise-equal to cut off cleanly
+    d = jnp.asarray(rng.integers(-5, 6, 512), jnp.float32)
+    state = cg.init(x=d)
+    np.testing.assert_allclose(np.asarray(cg.value(state, sc)),
+                               np.cumsum(np.asarray(d)))
+    y = np.asarray(d).copy()
+    y[rng.choice(512, size=k, replace=False)] += 1.0
+    y = jnp.asarray(y)
+    state, stats = cg.propagate(state, {"x": y})
+    assert_states_equal(cg, state, cg.init(x=y))
+
+
+def test_scan_suffix_cutoff():
+    """A +1/-1 edit pair inside one block leaves every carry unchanged:
+    only that block's aggregate and local scan recompute downstream."""
+    g = GraphBuilder()
+    x = g.input("x", n=256, block=8)
+    sc = g.scan(jnp.add, x, identity=0.0)
+    g.output(sc)
+    cg = g.compile(max_sparse=8)
+    d = jnp.asarray(np.arange(256), jnp.float32)
+    state = cg.init(x=d)
+    y = d.at[80].add(1.0).at[83].add(-1.0)   # same block, net zero
+    state, stats = cg.propagate(state, {"x": y})
+    assert_states_equal(cg, state, cg.init(x=y))
+    # agg recomputes 1 block, carry recomputes 0 (no carry read changed),
+    # local recomputes 1 block.
+    assert int(stats["recomputed"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# Sparse / dense / Pallas regime parity
+# ---------------------------------------------------------------------------
+def test_sparse_dense_pallas_agree():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1024), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(1024), jnp.float32)  # all dirty
+    states = []
+    for ms, pallas in ((4, False), (4096, False), (4, True)):
+        cg = make_pipeline(max_sparse=ms, use_pallas=pallas)
+        state = cg.init(x=x)
+        state, _ = cg.propagate(state, {"x": y})
+        states.append((cg, state))
+    for cg, state in states[1:]:
+        assert_states_equal(cg, states[0][1], state)
+
+
+def test_pallas_partial_tile_clean_blocks_bitwise_stable():
+    """Dense Pallas recompute of a partially-dirty tile must keep the
+    tile's clean blocks bitwise equal to the old state (the kernel
+    recomputes whole tiles; the runtime masks them back)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal(1024), jnp.float32)
+    # max_sparse=2 with a 5-block edit forces the dense path everywhere
+    cgp = make_pipeline(max_sparse=2, use_pallas=True)
+    cgj = make_pipeline(max_sparse=2, use_pallas=False)
+    y = np.asarray(x).copy()
+    for b in (8, 9, 40, 41, 100):         # partial tiles of 8 blocks
+        y[b * 8] += 1.0
+    y = jnp.asarray(y)
+    sp, _ = cgp.propagate(cgp.init(x=x), {"x": y})
+    sj, _ = cgj.propagate(cgj.init(x=x), {"x": y})
+    assert_states_equal(cgp, sp, sj)
+
+
+# ---------------------------------------------------------------------------
+# IncrementalReduce re-based on the graph runtime vs the legacy oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,k", [(0, 1), (1, 7), (2, 40), (3, 512)])
+def test_reduce_rebase_bitwise_and_counts(seed, k):
+    rng = np.random.default_rng(seed)
+    new = IncrementalReduce(n=512, block=4, op=jnp.add, identity=0.0,
+                            max_sparse=32)
+    old = _LegacyIncrementalReduce(n=512, block=4, op=jnp.add, identity=0.0,
+                                   max_sparse=32)
+    x = jnp.asarray(rng.standard_normal(512), jnp.float32)
+    sn, so = new.init(x), old.init(x)
+    np.testing.assert_array_equal(np.asarray(new.result(sn)),
+                                  np.asarray(old.result(so)))
+    for step in range(3):
+        idx = rng.choice(512, size=min(k, 512), replace=False)
+        x = x.at[jnp.asarray(idx)].set(
+            jnp.asarray(rng.standard_normal(len(idx)), jnp.float32))
+        sn, stn = jax.jit(new.update)(sn, x)
+        so, sto = jax.jit(old.update)(so, x)
+        # bitwise-identical result, equal-or-lower realized work
+        np.testing.assert_array_equal(np.asarray(new.result(sn)),
+                                      np.asarray(old.result(so)))
+        assert int(stn["recomputed"]) <= int(sto["recomputed"])
+        assert int(stn["affected"]) <= int(sto["affected"])
+
+
+def test_reduce_rebase_max_op():
+    new = IncrementalReduce(n=256, block=4, op=jnp.maximum, identity=-1e30,
+                            max_sparse=8)
+    x = jnp.zeros(256).at[100].set(50.0)
+    state = new.init(x)
+    state, stats = jax.jit(new.update)(state, x.at[7].set(1.0))
+    assert float(new.result(state)) == 50.0
+    assert int(stats["recomputed"]) <= 8
+
+
+# ---------------------------------------------------------------------------
+# Rabin-Karp host app ported as a graph program
+# ---------------------------------------------------------------------------
+def test_stringhash_graph_matches_oracle():
+    app = GraphStringHash(n=8192, grain=64, seed=0)
+    app.run()
+    assert app.output() == app.expected()
+    for k in (1, 3, 64, 1000):
+        stats = app.apply_update(k)
+        assert app.output() == app.expected(), k
+        assert int(stats["recomputed"]) >= 1
+
+
+def test_stringhash_graph_complexity():
+    """k-block edits touch O(k log(nb/k)) dag blocks (Theorem 4.2)."""
+    n, grain = 16384, 64
+    nb = n // grain                       # 256 leaf blocks
+    cg, out = stringhash_graph(n, grain, use_pallas=False)
+    rng = np.random.default_rng(0)
+    codes = rng.integers(97, 123, n).astype("int32")
+    # pass the numpy array itself: CompiledGraph copies numpy inputs, so
+    # the in-place edits below cannot alias the stored state
+    state = cg.init(text=codes)
+    for k in (1, 4, 16):
+        idx = rng.choice(nb, size=k, replace=False)
+        for b in idx:
+            codes[b * grain + rng.integers(grain)] = rng.integers(97, 123)
+        state, stats = cg.propagate(state, {"text": codes})
+        assert int(cg.result(state)[0, 0]) == stringhash_oracle(codes)
+        bound = 3 * k * (1 + math.log2(1 + nb / k)) + 8
+        assert int(stats["recomputed"]) <= bound
+
+
+# ---------------------------------------------------------------------------
+# Builder validation
+# ---------------------------------------------------------------------------
+def test_builder_rejects_bad_shapes():
+    g = GraphBuilder()
+    with pytest.raises(AssertionError):
+        g.input("x", n=100, block=8)      # not divisible
+    x = g.input("y", n=96, block=8)
+    with pytest.raises(AssertionError):
+        g.reduce_tree(jnp.add, x)         # 12 blocks: not a power of two
+    with pytest.raises(AssertionError):
+        GraphBuilder().compile()
+
+
+def test_propagate_rejects_unknown_input():
+    cg = make_pipeline()
+    state = cg.init(x=jnp.zeros(1024, jnp.float32))
+    with pytest.raises(AssertionError):
+        cg.propagate(state, {"bogus": jnp.zeros(1024, jnp.float32)})

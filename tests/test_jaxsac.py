@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.jaxsac import (BlockTensor, IncrementalReduce, dirty_from_diff,
                           incremental_prefill, prefill_distance)
@@ -92,7 +92,9 @@ def test_reduce_sparse_dense_agree():
 # Incremental prefill (serving-path change propagation)
 # ---------------------------------------------------------------------------
 SUPPORTED_ARCHS = ["minicpm_2b", "yi_6b", "phi3_mini_3_8b", "gemma_7b",
-                   "deepseek_v3_671b", "arctic_480b", "internvl2_2b"]
+                   pytest.param("deepseek_v3_671b", marks=pytest.mark.slow),
+                   pytest.param("arctic_480b", marks=pytest.mark.slow),
+                   "internvl2_2b"]
 
 
 def _setup(arch, B=2, S=64, seed=0):

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -89,6 +89,58 @@ def test_dirty_reduce_clean_is_identity():
     kids = randn((P, 2, W), jnp.float32)
     old = randn((P, W), jnp.float32)
     out = ops.dirty_reduce_level(kids, old, jnp.zeros(P, bool), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(old))
+
+
+# ---------------------------------------------------------------------------
+# dirty_map: the generalized dirty-tile kernel (arbitrary combining fn)
+# ---------------------------------------------------------------------------
+def _tile_dilate(dirty, block):
+    return np.repeat(np.asarray(dirty).reshape(-1, block).any(1), block)
+
+
+@pytest.mark.parametrize("op", [jnp.add, jnp.maximum, jnp.multiply])
+def test_dirty_map_reduce_level_any_op(op):
+    """dirty_map reproduces a reduce level for any combining op."""
+    P, W, block = 32, 128, 8
+    rng = np.random.default_rng(0)
+    kids = jnp.asarray(rng.standard_normal((P, 2, W)), jnp.float32)
+    old = jnp.asarray(rng.standard_normal((P, W)), jnp.float32)
+    dirty = jnp.asarray(rng.random(P) < 0.3)
+
+    def fn(rows):                       # rows: [tile, 2*W]
+        pair = rows.reshape(rows.shape[0], 2, W)
+        return op(pair[:, 0], pair[:, 1])
+
+    out = ops.dirty_map(fn, [kids.reshape(P, 2 * W)], old, dirty,
+                        block=block, interpret=True)
+    want = ref.dirty_map_ref(fn, [kids.reshape(P, 2 * W)], old,
+                             jnp.asarray(_tile_dilate(dirty, block)))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_dirty_map_two_inputs():
+    P, W, block = 24, 64, 8
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((P, W)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((P, W)), jnp.float32)
+    old = jnp.asarray(rng.standard_normal((P, W)), jnp.float32)
+    dirty = jnp.asarray(rng.random(P) < 0.5)
+    fn = lambda x, y: x * y + 1.0
+    out = ops.dirty_map(fn, [a, b], old, dirty, block=block, interpret=True)
+    want = ref.dirty_map_ref(fn, [a, b], old,
+                             jnp.asarray(_tile_dilate(dirty, block)))
+    # mul+add may fuse to an FMA outside the kernel: allow 1-ulp slack
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_dirty_map_clean_is_identity():
+    P, W = 16, 128
+    x = randn((P, W), jnp.float32)
+    old = randn((P, W), jnp.float32)
+    out = ops.dirty_map(lambda v: v * 3.0, [x], old, jnp.zeros(P, bool),
+                        block=8, interpret=True)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(old))
 
 

@@ -10,6 +10,10 @@ import sys
 
 import pytest
 
+# Subprocess jit of full MoE fwd+bwd on 8 fake devices: minutes-scale on a
+# loaded CI box.  Run with `make test-all`.
+pytestmark = pytest.mark.slow
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -18,14 +22,13 @@ import jax, jax.numpy as jnp
 from repro.configs import get_smoke_config
 from repro.models import moe as moe_mod
 from repro.models.params import init_tree
-from repro.shardlib import shard_ctx, rules_for_mode
+from repro.shardlib import shard_ctx, rules_for_mode, make_mesh
 
 cfg = get_smoke_config("%(arch)s")
 # EP enforces per-shard capacity quotas; give enough headroom that nothing
 # drops, so the dropless oracle is an exact reference.
 cfg = cfg.replace(moe_capacity_factor=16.0)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 p = init_tree(moe_mod.moe_specs(cfg, 0), jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
 

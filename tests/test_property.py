@@ -8,7 +8,7 @@ the invariant, plus stability properties of the apps.
 """
 import random
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import Engine
 from repro.core.distance import computation_distance

@@ -28,6 +28,7 @@ def test_shapes_registry():
     assert s.seq_len == 524288 and s.global_batch == 1
 
 
+@pytest.mark.slow
 def test_train_under_mesh():
     """train_step jits and runs under an explicit mesh + sharding rules."""
     cfg = get_smoke_config("yi_6b")
@@ -48,6 +49,7 @@ def test_train_under_mesh():
     assert np.isfinite(float(metrics["loss"]))
 
 
+@pytest.mark.slow
 def test_serve_roundtrip_under_mesh():
     cfg = get_smoke_config("yi_6b")
     model = build_model(cfg)
@@ -72,6 +74,7 @@ def test_serve_roundtrip_under_mesh():
     assert tok.shape == (B, 1)
 
 
+@pytest.mark.slow
 def test_decode_cache_layout_roundtrip():
     """Prefill cache layout == decode cache layout for every family."""
     for arch in ("yi_6b", "mamba2_370m", "recurrentgemma_9b",
@@ -92,6 +95,7 @@ def test_decode_cache_layout_roundtrip():
         assert got_shapes == want_shapes, (arch, got_shapes, want_shapes)
 
 
+@pytest.mark.slow
 def test_local_dryrun_lower_compile():
     """The dry-run contract (lower + compile + analyses) on the local mesh."""
     from repro.launch.hlo_analysis import analyze_hlo
