@@ -2,7 +2,7 @@
 # default fast lane: pytest.ini deselects tests marked `slow`).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all bench bench-graph
+.PHONY: test test-all bench bench-graph bench-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -15,3 +15,8 @@ bench:
 
 bench-graph:
 	$(PY) -m benchmarks.graph_pipeline
+
+# CI gate: tiny-size update-latency + recompute check against the
+# committed results/bench/BENCH_graph.json baseline (>2x fails).
+bench-check:
+	$(PY) -m benchmarks.graph_pipeline --check

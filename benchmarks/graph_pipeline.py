@@ -1,30 +1,37 @@
 """Graph-runtime benchmark: recomputed blocks + update latency across k.
 
-Builds two traced SP-dags —
+Traces two programs through the ``@sac.incremental`` frontend —
 
   * ``pipeline``   — map -> stencil -> balanced reduce (>= 3 dag levels
     mixing elementwise and tree work), the canonical static block program;
-  * ``stringhash`` — the Rabin-Karp host app ported as a graph program;
+  * ``stringhash`` — the Rabin-Karp host app as a traced program;
 
 then, for a sweep of edit sizes k (dirty input blocks), measures
 
   * ``recomputed``      — dag blocks actually recomputed (W_delta),
   * ``total_blocks``    — dag blocks a from-scratch run recomputes,
-  * ``update_ms``       — jitted ``propagate`` wall-clock,
-  * ``scratch_ms``      — jitted from-scratch ``init`` wall-clock,
+  * ``update_ms``       — jitted ``update`` wall-clock,
+  * ``scratch_ms``      — jitted from-scratch ``run`` wall-clock,
   * ``work_savings``    — total_blocks / recomputed,
   * ``speedup``         — scratch_ms / update_ms,
 
 the graph-runtime analogue of the paper's work-savings / self-speedup
-tables.  Results print as rows and are written to
-``results/bench/BENCH_graph.json``.
+tables.  Results print as rows and merge into
+``results/bench/BENCH_graph.json`` (keyed by app/n/block/k).
 
-Usage:  PYTHONPATH=src python -m benchmarks.graph_pipeline [--full]
+``--check`` runs the tiny size and compares update latency against the
+committed baseline rows instead of overwriting them: any (app, k) whose
+``update_ms`` regresses beyond ``--threshold`` (default 2x) fails the
+process — the `make bench-check` CI gate.
+
+Usage:  PYTHONPATH=src python -m benchmarks.graph_pipeline
+            [--size tiny|quick|full] [--check] [--threshold 2.0]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
@@ -33,14 +40,24 @@ import jax.numpy as jnp
 import numpy as np
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
+BASELINE = RESULTS / "BENCH_graph.json"
+
+SIZES = {                       # name -> (n, block/grain, ks)
+    "tiny": (1 << 10, 16, [1, 4, 16]),
+    "quick": (1 << 14, 16, [1, 4, 16, 64]),
+    "full": (1 << 18, 64, [1, 4, 16, 64, 256, 1024]),
+}
+# Timer-noise floor for --check: latencies below this many ms are
+# considered equal (CI machines jitter far more than the runtime does).
+NOISE_FLOOR_MS = 1.0
 
 
-def _time(f, *args, reps: int = 5):
-    out = f(*args)
+def _time(f, *args, reps: int = 5, **kw):
+    out = f(*args, **kw)
     jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = f(*args)
+        out = f(*args, **kw)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps * 1e3, out
 
@@ -55,90 +72,145 @@ def _edit(rng, data: np.ndarray, k_blocks: int, block: int) -> np.ndarray:
     return out
 
 
-def bench_pipeline(n: int, block: int, ks, seed: int = 0):
-    from repro.jaxsac import GraphBuilder
+def pipeline_program(block: int):
+    from repro import sac
 
-    g = GraphBuilder()
-    x = g.input("x", n=n, block=block)
-    y = g.map(lambda b: b * 2.0 + 1.0, x, name="affine")
-    s = g.stencil(lambda w: w[block:2 * block]
-                  + 0.5 * (w[:block] + w[2 * block:]), y, radius=1)
-    t = g.reduce_tree(jnp.add, s, identity=0.0)
-    g.output(t)
-    cg = g.compile(max_sparse=64)
+    @sac.incremental(block=block)
+    def pipeline(x):
+        y = x * 2.0 + 1.0
+        s = sac.stencil(lambda w: w[block:2 * block]
+                        + 0.5 * (w[:block] + w[2 * block:]), x=y, radius=1)
+        return sac.reduce(jnp.add, s, identity=0.0)
 
+    return pipeline
+
+
+def _sweep(handle, total_blocks, levels, app, n, block, ks, data, seed,
+           input_name="x", check=None, reps: int = 3):
     rng = np.random.default_rng(seed)
-    data = rng.standard_normal(n).astype(np.float32)
-    scratch_ms, state = _time(cg.init, {"x": jnp.asarray(data)})
+    scratch_ms, _ = _time(handle.run, {input_name: jnp.asarray(data)})
     rows = []
     for k in ks:
         new = _edit(rng, data, k, block)
-        upd_ms, (state, stats) = _time(
-            cg.propagate, state, {"x": jnp.asarray(new)})
+        old_j, new_j = jnp.asarray(data), jnp.asarray(new)
+        # Stats come from the real k-block diff; latency is then timed
+        # over edit/revert pairs so every timed propagate pushes k dirty
+        # blocks (the handle is stateful — repeating one input would
+        # measure the no-op path).
+        jax.block_until_ready(handle.update({input_name: new_j}))
+        stats = handle.stats
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            handle.update({input_name: old_j})
+            jax.block_until_ready(handle.update({input_name: new_j}))
+        upd_ms = (time.perf_counter() - t0) / (2 * reps) * 1e3
         data = new
+        if check is not None:
+            check(app, data)
         rec = int(stats["recomputed"])
         rows.append({
-            "app": "pipeline", "n": n, "block": block,
-            "levels": cg.num_levels, "k_blocks": k,
+            "app": app, "n": n, "block": block,
+            "levels": levels, "k_blocks": k,
             "recomputed": rec, "affected": int(stats["affected"]),
-            "total_blocks": cg.total_blocks,
-            "work_savings": round(cg.total_blocks / max(rec, 1), 2),
+            "total_blocks": total_blocks,
+            "work_savings": round(total_blocks / max(rec, 1), 2),
             "update_ms": round(upd_ms, 3), "scratch_ms": round(scratch_ms, 3),
             "speedup": round(scratch_ms / max(upd_ms, 1e-9), 2),
         })
     return rows
+
+
+def bench_pipeline(n: int, block: int, ks, seed: int = 0):
+    h = pipeline_program(block).compile(x=n, max_sparse=64)
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal(n).astype(np.float32)
+    return _sweep(h, h.cg.total_blocks, h.cg.num_levels, "pipeline",
+                  n, block, ks, data, seed)
 
 
 def bench_stringhash(n: int, grain: int, ks, seed: int = 0):
     from repro.jaxsac.apps import stringhash_graph, stringhash_oracle
 
-    cg, _ = stringhash_graph(n, grain)
+    h = stringhash_graph(n, grain, max_sparse=64)
     rng = np.random.default_rng(seed)
     codes = rng.integers(97, 123, n).astype(np.int32)
-    scratch_ms, state = _time(cg.init, {"text": jnp.asarray(codes)})
-    rows = []
-    for k in ks:
-        codes = _edit(rng, codes, k, grain)
-        upd_ms, (state, stats) = _time(
-            cg.propagate, state, {"text": jnp.asarray(codes)})
-        assert int(cg.result(state)[0, 0]) == stringhash_oracle(codes)
-        rec = int(stats["recomputed"])
-        rows.append({
-            "app": "stringhash", "n": n, "block": grain,
-            "levels": cg.num_levels, "k_blocks": k,
-            "recomputed": rec, "affected": int(stats["affected"]),
-            "total_blocks": cg.total_blocks,
-            "work_savings": round(cg.total_blocks / max(rec, 1), 2),
-            "update_ms": round(upd_ms, 3), "scratch_ms": round(scratch_ms, 3),
-            "speedup": round(scratch_ms / max(upd_ms, 1e-9), 2),
-        })
+
+    def check(app, data):
+        assert int(h.outputs()[0, 0]) == stringhash_oracle(data)
+
+    rows = _sweep(h, h.cg.total_blocks, h.cg.num_levels, "stringhash",
+                  n, grain, ks, codes, seed, input_name="text", check=check)
     return rows
 
 
-def run(quick: bool = True, seed: int = 0):
-    if quick:
-        ks = [1, 4, 16, 64]
-        rows = bench_pipeline(1 << 14, 16, ks, seed)
-        rows += bench_stringhash(1 << 14, 64, ks, seed)
-    else:
-        ks = [1, 4, 16, 64, 256, 1024]
-        rows = bench_pipeline(1 << 18, 64, ks, seed)
-        rows += bench_stringhash(1 << 18, 64, ks, seed)
+def run(size: str = "quick", seed: int = 0):
+    n, block, ks = SIZES[size]
+    grain = 64 if size == "full" else block * 4
+    rows = bench_pipeline(n, block, ks, seed)
+    rows += bench_stringhash(n, grain, ks, seed)
     return rows
+
+
+def _key(row):
+    return (row["app"], row["n"], row["block"], row["k_blocks"])
 
 
 def write_json(rows) -> Path:
+    """Merge rows into the committed baseline, keyed by app/n/block/k."""
     RESULTS.mkdir(parents=True, exist_ok=True)
-    out = RESULTS / "BENCH_graph.json"
-    out.write_text(json.dumps(rows, indent=2))
-    return out
+    merged = {}
+    if BASELINE.exists():
+        merged = {_key(r): r for r in json.loads(BASELINE.read_text())}
+    for r in rows:
+        merged[_key(r)] = r
+    BASELINE.write_text(json.dumps(list(merged.values()), indent=2))
+    return BASELINE
+
+
+def check_regression(rows, threshold: float) -> int:
+    """Compare fresh rows against the committed baseline; returns the
+    number of regressions (update latency beyond threshold, or any
+    increase in recomputed blocks — the machine-independent signal)."""
+    if not BASELINE.exists():
+        print(f"  no baseline at {BASELINE}; run without --check first")
+        return 1
+    base = {_key(r): r for r in json.loads(BASELINE.read_text())}
+    bad = 0
+    for r in rows:
+        b = base.get(_key(r))
+        tag = f"{r['app']} n={r['n']} k={r['k_blocks']}"
+        if b is None:
+            print(f"  MISSING baseline row: {tag}")
+            bad += 1
+            continue
+        if r["recomputed"] > b["recomputed"]:
+            print(f"  REGRESSION {tag}: recomputed {b['recomputed']} -> "
+                  f"{r['recomputed']}")
+            bad += 1
+        ref = max(b["update_ms"], NOISE_FLOOR_MS)
+        if r["update_ms"] > threshold * ref:
+            print(f"  REGRESSION {tag}: update_ms {b['update_ms']} -> "
+                  f"{r['update_ms']} (> {threshold}x)")
+            bad += 1
+        else:
+            print(f"  ok {tag}: update_ms {b['update_ms']} -> "
+                  f"{r['update_ms']}, recomputed {r['recomputed']}")
+    return bad
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--size", choices=sorted(SIZES), default="quick")
+    ap.add_argument("--full", action="store_true",
+                    help="alias for --size full")
+    ap.add_argument("--check", action="store_true",
+                    help="tiny-size latency check vs the committed baseline")
+    ap.add_argument("--threshold", type=float, default=2.0)
     args = ap.parse_args()
-    rows = run(quick=not args.full)
+    if args.check:
+        rows = run(size="tiny")
+        sys.exit(1 if check_regression(rows, args.threshold) else 0)
+    rows = run(size="full" if args.full else args.size)
     for r in rows:
         print("  " + ", ".join(f"{k}={v}" for k, v in r.items()))
     print(f"  -> {write_json(rows)}")

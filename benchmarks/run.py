@@ -85,7 +85,7 @@ def main() -> None:
     if args.only in ("all", "graph"):
         from . import graph_pipeline
         print("== Graph runtime: recomputed blocks / update latency ==")
-        rows = graph_pipeline.run(quick=quick)
+        rows = graph_pipeline.run(size="quick" if quick else "full")
         _print_rows(rows)
         print(f"  -> {graph_pipeline.write_json(rows)}")
 

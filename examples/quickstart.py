@@ -1,23 +1,54 @@
-"""Quickstart: parallel self-adjusting computation in 60 lines.
+"""Quickstart: parallel self-adjusting computation in 80 lines.
 
-Runs the paper's Algorithm-1 divide-and-conquer sum twice:
+1. ``@sac.incremental`` — THE public API: write the ordinary program
+   once, compile it onto the jitted graph runtime (``backend="graph"``)
+   or the paper-faithful host engine (``backend="host"``), then
+   ``run`` / ``update`` / ``stats``.
+2. The same Algorithm-1 divide-and-conquer sum hand-written against the
+   host engine primitives (``repro.core``) — what the frontend derives
+   for you.
+3. ``IncrementalReduce`` — the pre-traced reduction wrapper.
 
-  1. on the paper-faithful host engine (``repro.core``) — dynamic RSP
-     tree, reader sets, change propagation with work/span accounting;
-  2. on the TPU-native jaxsac path (``repro.jaxsac``) — static RSP
-     structure, block-granular dirty masks, jit-compiled propagation.
-
-Both show the same O(k log(n/k)) behaviour (Theorem 4.2).
+All show the same O(k log(n/k)) behaviour (Theorem 4.2).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
+import repro.sac as sac
 from repro.core import Engine
 from repro.jaxsac import IncrementalReduce
 
+
+@sac.incremental(block=8)
+def pipeline(x):
+    """An ordinary array program: affine map -> 3-block stencil -> sum."""
+    y = x * 2.0 + 1.0
+    s = sac.stencil(lambda w: w[8:16] + 0.5 * (w[:8] + w[16:]), y, radius=1)
+    return sac.reduce(jnp.add, s, identity=0.0)
+
+
 N = 4096
+
+
+def sac_demo():
+    print("== @sac.incremental: one trace, two backends ==")
+    data = jnp.arange(N, dtype=jnp.float32)
+    graph = pipeline.compile(x=N)                  # jitted TPU runtime
+    host = pipeline.compile("host", x=N)           # paper-faithful engine
+    out = graph.run(x=data)
+    assert float(host.run(x=data)[0]) == float(out[0])   # bitwise equal
+    print(f" initial run : total={float(out[0]):.1f}  "
+          f"(host engine agrees bitwise)")
+    for k in (1, 16, 256):
+        data = data.at[jnp.arange(k) * (N // k)].add(1.0)
+        out = graph.update(x=data)
+        host.update(x=data)
+        g, h = graph.stats, host.stats
+        print(f" update k={k:4d}: total={float(out[0]):9.1f}  recomputed "
+              f"blocks={g['recomputed']:4d}/{graph.cg.total_blocks}  "
+              f"host work={h['work']:6d} span={h['span']:3d}")
 
 
 def sum_program(eng, mods, res):
@@ -34,7 +65,7 @@ def sum_program(eng, mods, res):
 
 
 def host_engine_demo():
-    print(f"== host engine: self-adjusting sum of {N} values ==")
+    print(f"\n== host engine primitives: self-adjusting sum of {N} values ==")
     eng = Engine()
     mods = eng.alloc_array(N, "x")
     for i, m in enumerate(mods):
@@ -70,5 +101,6 @@ def jaxsac_demo():
 
 
 if __name__ == "__main__":
+    sac_demo()
     host_engine_demo()
     jaxsac_demo()

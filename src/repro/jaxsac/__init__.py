@@ -14,42 +14,74 @@ of the paper's idea (see DESIGN.md §Hardware-adaptation):
     (Table 9).  A modifiable is a block; its "reader set" is the static
     set of downstream blocks, encoded as an index map instead of a hash
     table.
-  * Change propagation = dirty-mask propagation through the static dag +
+  * Change propagation = dirty-set propagation through the static dag +
     masked recompute of exactly the dirty blocks, with the paper's
     value-equality write cutoff (Algorithm 2: a write that does not
     change the value marks no readers) implemented as a per-block
     bitwise-equality check that stops propagation early.
 
+The public way to *author* programs is the ``repro.sac`` tracing
+frontend (re-exported here as ``sac``): decorate an ordinary function
+with ``@sac.incremental`` and compile it onto this runtime
+(``backend="graph"``) or onto the host engine (``backend="host"``).
+
 Modules:
-  * ``graph``   — the general subsystem: a tracing API (``GraphBuilder``)
-    that records a static SP-dag of block-granular ops (map / zip_map /
-    reduce_tree / stencil / scan, composed with seq/par mirroring the
-    host engine's S/P nodes), where each edge carries a reader index map.
+  * ``graph``   — the static SP-dag IR the frontend records into
+    (``GraphBuilder`` — deprecated as a user-facing API, see below).
   * ``graph_compile`` — level-schedules the dag and emits ``init`` plus a
-    fully jitted ``propagate`` (dirty-mask pushing + masked recompute,
-    sparse-gather vs dense-masked per level, Pallas dirty-tile routing).
+    fully jitted ``propagate`` (dirty-set pushing + masked recompute,
+    sparse-gather vs dense-masked per level with an auto-tuned
+    crossover, Pallas dirty-tile routing).
   * ``graph_ops`` — per-kind forward / dirty-transfer / recompute math.
+  * ``dirtyset`` — pluggable dirty representations: exact per-block
+    ``MaskDirty`` and O(1) suffix/interval ``IntervalDirty`` (the
+    representation causal attention and the serving path propagate).
+  * ``autotune`` — timed calibration of the sparse/dense crossover.
   * ``reduce``  — incremental balanced reductions (the paper's Algorithm 1
     divide-and-conquer sum, O(k log(n/k)) dirty nodes per k-block update);
-    now a thin wrapper over the graph runtime.
+    a thin wrapper over the traced frontend.
   * ``prefill`` — incremental KV-cache prefill for the serving path: edit
     k tokens of an S-token prompt and re-establish the exact cache while
-    recomputing only the affected positions per layer (dirty intervals).
-  * ``apps``    — host-engine applications ported as graph programs
+    recomputing only the affected positions; its mark phase runs on the
+    runtime's interval DirtySet.
+  * ``apps``    — host-engine applications ported as traced programs
     (Rabin-Karp string hash).
 """
+import warnings as _warnings
+
+from repro import sac
 from .core import BlockTensor, dirty_from_diff
-from .graph import GraphBuilder
+from .dirtyset import IntervalDirty, MaskDirty
 from .graph_compile import CompiledGraph
 from .reduce import IncrementalReduce
 from .prefill import incremental_prefill, prefill_distance
 
 __all__ = [
+    "sac",
     "BlockTensor",
     "dirty_from_diff",
+    "MaskDirty",
+    "IntervalDirty",
     "GraphBuilder",
     "CompiledGraph",
     "IncrementalReduce",
     "incremental_prefill",
     "prefill_distance",
 ]
+
+
+def __getattr__(name: str):
+    if name == "GraphBuilder":
+        # The imperative builder is now the IR behind the repro.sac
+        # tracer; reaching it through the package namespace is the
+        # legacy spelling.
+        _warnings.warn(
+            "repro.jaxsac.GraphBuilder is deprecated: write programs "
+            "with @repro.sac.incremental (the tracing frontend) instead. "
+            "GraphBuilder remains available as the IR at "
+            "repro.jaxsac.graph.GraphBuilder.",
+            DeprecationWarning, stacklevel=2)
+        from .graph import GraphBuilder
+
+        return GraphBuilder
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

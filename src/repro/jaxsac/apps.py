@@ -1,9 +1,10 @@
-"""Host-engine applications ported to the SP-dag graph runtime.
+"""Host-engine applications ported to the ``repro.sac`` frontend.
 
 The host apps (``repro.apps``) run on the paper-faithful dynamic engine:
 Python closures, per-read reader sets.  The ports here re-express the
-same dataflow as *traced* static SP-dags so the jit-compiled propagate
-of ``graph_compile`` does the change propagation on TPU.
+same dataflow as ordinary ``@sac.incremental`` programs, so one trace
+runs on the jit-compiled graph runtime (``backend="graph"``) or back on
+the host engine (``backend="host"``) for work/span accounting.
 
 ``stringhash_graph`` ports the Rabin-Karp chunk pipeline of
 ``repro.apps.stringhash``: the string lives in n/g blocks of g character
@@ -16,12 +17,12 @@ uint32 without requiring 64-bit mode.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .graph import GraphBuilder, Handle
+from repro import sac
 
 __all__ = ["MOD", "BASE", "stringhash_graph", "stringhash_oracle",
            "GraphStringHash"]
@@ -53,21 +54,34 @@ def _combine(l: jax.Array, r: jax.Array) -> jax.Array:
     return jnp.stack([h, p], axis=-1)
 
 
-def stringhash_graph(n: int, grain: int = 64, *, max_sparse: int = 64,
-                     use_pallas="auto"):
-    """Trace + compile the Rabin-Karp pipeline.
+def stringhash_program(grain: int):
+    """The Rabin-Karp pipeline as an ordinary traced program."""
 
-    Returns (compiled_graph, output_handle); feed it the character codes
-    as the ``"text"`` input (int32 [n]).
+    @sac.incremental(block=grain)
+    def rk(text):
+        pairs = sac.map_blocks(_block_pair(grain), text, out_block=1,
+                               name="rk.leaf")
+        # The combine's neutral element is the PAIR (h=0, p=1): it is
+        # what identity-padded odd reduce levels splice in, so a scalar
+        # 0 here would annihilate the hash on non-power-of-two counts.
+        return sac.reduce(_combine, pairs,
+                          identity=jnp.array([0, 1], jnp.uint32), name="rk")
+
+    return rk
+
+
+def stringhash_graph(n: int, grain: int = 64, *, max_sparse="auto",
+                     use_pallas="auto", backend: str = "graph"):
+    """Trace + compile the Rabin-Karp pipeline via ``@sac.incremental``.
+
+    Returns the compiled handle (``.run`` / ``.update`` / ``.stats``);
+    feed it the character codes as the ``"text"`` input (int32 [n]).
     """
     assert n % grain == 0
-    g = GraphBuilder()
-    x = g.input("text", n=n, block=grain)
-    pairs = g.map(_block_pair(grain), x, out_block=1, name="rk.leaf")
-    out = g.reduce_tree(_combine, pairs, identity=0, name="rk")
-    g.output(out)
-    cg = g.compile(max_sparse=max_sparse, use_pallas=use_pallas)
-    return cg, out
+    if backend == "host":
+        return stringhash_program(grain).compile("host", text=n)
+    return stringhash_program(grain).compile(
+        text=n, max_sparse=max_sparse, use_pallas=use_pallas)
 
 
 def stringhash_oracle(codes: Sequence[int]) -> int:
@@ -83,31 +97,29 @@ class GraphStringHash:
 
     name = "stringhash_graph"
 
-    def __init__(self, n: int = 65536, grain: int = 64, seed: int = 0):
+    def __init__(self, n: int = 65536, grain: int = 64, seed: int = 0,
+                 backend: str = "graph"):
         import numpy as np
 
         self.n, self.grain = n, grain
         self.rng = np.random.default_rng(seed)
         self.codes = self.rng.integers(97, 123, n).astype("int32")
-        self.cg, self.out = stringhash_graph(n, grain)
-        self.state = None
+        self.handle = stringhash_graph(n, grain, backend=backend)
 
     def run(self):
         # jnp.array (not asarray): self.codes is mutated in place between
         # updates, so hand jax a copy, never a zero-copy view.
-        self.state = self.cg.init(text=jnp.array(self.codes))
-        return self.state
+        return self.handle.run(text=jnp.array(self.codes))
 
     def apply_update(self, k: int) -> dict:
         """Edit k random characters; propagate; return stats."""
         idx = self.rng.choice(self.n, size=k, replace=False)
         self.codes[idx] = self.rng.integers(97, 123, k).astype("int32")
-        self.state, stats = self.cg.propagate(
-            self.state, {"text": jnp.array(self.codes)})
-        return stats
+        self.handle.update(text=jnp.array(self.codes))
+        return self.handle.stats
 
     def output(self) -> int:
-        return int(self.cg.result(self.state)[0, 0])
+        return int(self.handle.outputs()[0, 0])
 
     def expected(self) -> int:
         return stringhash_oracle(self.codes)

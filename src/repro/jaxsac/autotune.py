@@ -1,0 +1,103 @@
+"""Sparse/dense crossover calibration for the compiled graph runtime.
+
+Per node, per update, the runtime picks between the sparse regime
+(gather <= k dirty blocks, recompute, scatter) and the dense regime (one
+masked pass over all blocks).  The crossover ``k`` used to be a constant
+(``max_sparse=64``); this module calibrates it per level from one timed
+warmup pass, run when the compiled program is first initialized (that is
+when every node's feature width — hence its real per-block payload — is
+known).
+
+The crossover is dominated by the *regime mechanics* — gather/scatter
+overhead vs full-pass bandwidth — not by the user's combining function
+(both regimes apply it to the same lanes), so calibration times a
+synthetic elementwise update of the level's [num_blocks, width] shape:
+
+  * ``t_dense``      — one masked pass over all blocks;
+  * ``t_sparse(k)``  — gather k lanes, recompute, scatter; measured at
+    two k values and modelled linearly, t_sparse(k) ~= a + b*k.
+
+The calibrated crossover is the k where the lines meet, clamped to
+[8, num_blocks].  Results are memoized process-wide on (num_blocks,
+width) so repeated compiles of same-shaped levels (the common case in
+tests and serving) pay for the timing once.
+
+``max_sparse=<int>`` on compile() bypasses all of this (the old
+constant behaviour); degenerate timings fall back to the old default.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["calibrated_max_sparse", "DEFAULT_MAX_SPARSE", "clear_cache"]
+
+DEFAULT_MAX_SPARSE = 64          # fallback when timing is degenerate
+
+_CACHE: Dict[Tuple[int, int], int] = {}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def _best_ms(fn, *args, reps: int = 3) -> float:
+    out = fn(*args)                      # warmup (compile)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def calibrated_max_sparse(num_blocks: int, width: int) -> int:
+    """Crossover k for a level of ``num_blocks`` blocks of ``width``
+    elements, from one timed warmup (memoized)."""
+    if num_blocks <= 16:
+        return num_blocks                # sparse can never lose: one pass
+    key = (num_blocks, width)
+    if key in _CACHE:
+        return _CACHE[key]
+    k = _measure(num_blocks, max(width, 1))
+    _CACHE[key] = k
+    return k
+
+
+def _measure(nb: int, w: int) -> int:
+    try:
+        x = jnp.ones((nb, w), jnp.float32)
+        mask = jnp.ones((nb,), bool)
+
+        @jax.jit
+        def dense(x):
+            new = x * 1.0001 + 1.0
+            return jnp.where(mask[:, None], new, x)
+
+        def make_sparse(k):
+            idx = jnp.arange(k, dtype=jnp.int32)
+
+            @jax.jit
+            def sparse(x):
+                g = x.at[idx].get(mode="fill", fill_value=0)
+                return x.at[idx].set(g * 1.0001 + 1.0, mode="drop")
+
+            return sparse
+
+        k_lo, k_hi = 1, min(nb, 256)
+        t_dense = _best_ms(dense, x)
+        t_lo = _best_ms(make_sparse(k_lo), x)
+        t_hi = _best_ms(make_sparse(k_hi), x)
+        slope = (t_hi - t_lo) / max(k_hi - k_lo, 1)
+        if slope <= 0 or t_dense <= t_lo:
+            # Gather overhead already beats (or timing can't resolve) a
+            # dense pass at this size: the constant served fine, keep it.
+            return min(DEFAULT_MAX_SPARSE, nb)
+        k_star = int((t_dense - t_lo) / slope) + k_lo
+        return max(8, min(k_star, nb))
+    except Exception:                    # pragma: no cover - timing guard
+        return min(DEFAULT_MAX_SPARSE, nb)

@@ -1,0 +1,228 @@
+"""Pluggable dirty-set representations for the graph runtime.
+
+Change propagation needs, per node, a representation of "which output
+blocks must be recomputed".  The runtime historically hard-coded one: a
+boolean per-block mask.  This module makes the representation pluggable
+behind a small protocol so the compiled propagate can pick the cheapest
+sound one per program:
+
+  * ``MaskDirty``     — the exact per-block boolean mask (the default).
+  * ``IntervalDirty`` — a single half-open block interval ``[lo, hi)``,
+    the hull of the dirty blocks.  An over-approximation in general (it
+    cannot represent holes), but *exact* for the suffix-shaped sets that
+    causal attention and prefix scans produce — and O(1) space, which is
+    what lets the serving path (``prefill.py``) mark an S-token prompt
+    with two integers instead of an S/block mask.
+
+Every edge kind of the SP-dag pushes dirtiness through its reader index
+map via one of the transfer methods below; both representations implement
+the same method set, so ``graph_ops.edge_dirty`` and the compiled
+propagate are representation-agnostic:
+
+  ============  ==============================  =========================
+  edge kind     transfer method                 interval behaviour
+  ============  ==============================  =========================
+  map           identity                        exact
+  zip_map       ``union``                       hull of the two intervals
+  reduce_level  ``pair_or``                     exact (hull of halves)
+  stencil(r)    ``dilate(r)``                   exact
+  escan         ``prefix_shift``                exact (suffix)
+  causal        ``suffix``                      exact (suffix) — the
+                                                interval-carrying edge
+  ============  ==============================  =========================
+
+Soundness: a transfer may over-approximate (recompute extra blocks — by
+determinism they recompute to bitwise-equal values) but must never
+under-approximate.  ``meet_diff`` re-applies the paper's Algorithm-2
+value-equality cutoff after a recompute: the changed set is the dirty set
+intersected with the blocks whose value actually changed.
+
+Everything is jit-compatible: members are (traced) jax arrays; the
+representation choice itself is static per compilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from .core import dirty_from_diff
+
+__all__ = ["DirtySet", "MaskDirty", "IntervalDirty", "DIRTY_REPS"]
+
+
+@runtime_checkable
+class DirtySet(Protocol):
+    """What the compiled propagate needs from a dirty representation."""
+
+    def to_mask(self) -> jax.Array: ...
+    def count(self) -> jax.Array: ...
+    def any(self) -> jax.Array: ...
+    # edge transfers (reader index maps, reversed)
+    def union(self, other: "DirtySet") -> "DirtySet": ...
+    def pair_or(self, out_blocks: int) -> "DirtySet": ...
+    def dilate(self, radius: int) -> "DirtySet": ...
+    def prefix_shift(self) -> "DirtySet": ...
+    def suffix(self) -> "DirtySet": ...
+    # Algorithm-2 value cutoff after a recompute
+    def meet_diff(self, old: jax.Array, new: jax.Array,
+                  block: int) -> "DirtySet": ...
+
+
+# ---------------------------------------------------------------------------
+# Exact per-block mask (the historical representation)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MaskDirty:
+    """Exact dirty set: one bool per block."""
+
+    mask: jax.Array                     # [num_blocks] bool
+
+    @classmethod
+    def none(cls, num_blocks: int) -> "MaskDirty":
+        return cls(jnp.zeros((num_blocks,), bool))
+
+    @classmethod
+    def from_diff(cls, old: jax.Array, new: jax.Array,
+                  block: int) -> "MaskDirty":
+        return cls(dirty_from_diff(old, new, block))
+
+    @property
+    def num_blocks(self) -> int:
+        return self.mask.shape[0]
+
+    def to_mask(self) -> jax.Array:
+        return self.mask
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.mask.astype(jnp.int32))
+
+    def any(self) -> jax.Array:
+        return jnp.any(self.mask)
+
+    # ---- transfers ---------------------------------------------------
+    def union(self, other: "MaskDirty") -> "MaskDirty":
+        return MaskDirty(self.mask | other.mask)
+
+    def pair_or(self, out_blocks: int) -> "MaskDirty":
+        c = self.mask
+        if c.shape[0] % 2:                   # odd level: identity-padded
+            c = jnp.concatenate([c, jnp.zeros((1,), bool)])
+        out = c[0::2] | c[1::2]
+        assert out.shape[0] == out_blocks, (out.shape, out_blocks)
+        return MaskDirty(out)
+
+    def dilate(self, radius: int) -> "MaskDirty":
+        d = self.mask
+        out = d
+        for off in range(1, radius + 1):
+            out = out | jnp.roll(d, off).at[:off].set(False)
+            out = out | jnp.roll(d, -off).at[-off:].set(False)
+        return MaskDirty(out)
+
+    def prefix_shift(self) -> "MaskDirty":
+        # out block j reads blocks < j: exclusive prefix-OR.
+        pref = jnp.cumsum(self.mask.astype(jnp.int32)) > 0
+        return MaskDirty(jnp.concatenate([jnp.zeros((1,), bool), pref[:-1]]))
+
+    def suffix(self) -> "MaskDirty":
+        # out block j reads blocks <= j: inclusive prefix-OR.
+        return MaskDirty(jnp.cumsum(self.mask.astype(jnp.int32)) > 0)
+
+    # ---- value cutoff ------------------------------------------------
+    def meet_diff(self, old: jax.Array, new: jax.Array,
+                  block: int) -> "MaskDirty":
+        return MaskDirty(self.mask & dirty_from_diff(old, new, block))
+
+
+# ---------------------------------------------------------------------------
+# Suffix/interval hull (O(1) space; exact for causal programs)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class IntervalDirty:
+    """Dirty set as the half-open block interval hull ``[lo, hi)``.
+
+    Empty is canonically ``lo == hi == 0``.  ``num_blocks`` is static.
+    """
+
+    lo: jax.Array                       # int32 scalar
+    hi: jax.Array                       # int32 scalar
+    num_blocks: int = dataclasses.field(metadata=dict(static=True))
+
+    @classmethod
+    def none(cls, num_blocks: int) -> "IntervalDirty":
+        z = jnp.int32(0)
+        return cls(z, z, num_blocks)
+
+    @classmethod
+    def from_mask(cls, mask: jax.Array) -> "IntervalDirty":
+        nb = mask.shape[0]
+        idx = jnp.arange(nb)
+        nonempty = jnp.any(mask)
+        lo = jnp.min(jnp.where(mask, idx, nb))
+        hi = jnp.max(jnp.where(mask, idx + 1, 0))
+        return cls(jnp.where(nonempty, lo, 0).astype(jnp.int32),
+                   jnp.where(nonempty, hi, 0).astype(jnp.int32), nb)
+
+    @classmethod
+    def from_diff(cls, old: jax.Array, new: jax.Array,
+                  block: int) -> "IntervalDirty":
+        return cls.from_mask(dirty_from_diff(old, new, block))
+
+    def _make(self, lo, hi, nb=None) -> "IntervalDirty":
+        nb = self.num_blocks if nb is None else nb
+        empty = hi <= lo
+        return IntervalDirty(jnp.where(empty, 0, lo).astype(jnp.int32),
+                             jnp.where(empty, 0, hi).astype(jnp.int32), nb)
+
+    def to_mask(self) -> jax.Array:
+        idx = jnp.arange(self.num_blocks)
+        return (idx >= self.lo) & (idx < self.hi)
+
+    def count(self) -> jax.Array:
+        return (self.hi - self.lo).astype(jnp.int32)
+
+    def any(self) -> jax.Array:
+        return self.hi > self.lo
+
+    # ---- transfers ---------------------------------------------------
+    def union(self, other: "IntervalDirty") -> "IntervalDirty":
+        # Hull of the union: empty operands must not drag lo to 0.
+        big = jnp.int32(max(self.num_blocks, other.num_blocks))
+        lo_a = jnp.where(self.any(), self.lo, big)
+        lo_b = jnp.where(other.any(), other.lo, big)
+        return self._make(jnp.minimum(lo_a, lo_b),
+                          jnp.maximum(self.hi, other.hi))
+
+    def pair_or(self, out_blocks: int) -> "IntervalDirty":
+        return self._make(self.lo // 2, (self.hi + 1) // 2, out_blocks)
+
+    def dilate(self, radius: int) -> "IntervalDirty":
+        lo = jnp.maximum(self.lo - radius, 0)
+        hi = jnp.minimum(self.hi + radius, self.num_blocks)
+        return self._make(jnp.where(self.any(), lo, 0),
+                          jnp.where(self.any(), hi, 0))
+
+    def prefix_shift(self) -> "IntervalDirty":
+        # escan: out block j reads blocks < j -> suffix from lo+1.
+        return self._make(jnp.where(self.any(), self.lo + 1, 0),
+                          jnp.where(self.any(), self.num_blocks, 0))
+
+    def suffix(self) -> "IntervalDirty":
+        # causal: out block j reads blocks <= j -> suffix from lo.  This
+        # is the transfer rule the serving path folds per layer: suffixes
+        # are a fixed point, so a whole causal network propagates one
+        # (lo, hi) pair (prefill.py).
+        return self._make(self.lo,
+                          jnp.where(self.any(), self.num_blocks, 0))
+
+    # ---- value cutoff ------------------------------------------------
+    def meet_diff(self, old: jax.Array, new: jax.Array,
+                  block: int) -> "IntervalDirty":
+        changed = self.to_mask() & dirty_from_diff(old, new, block)
+        return IntervalDirty.from_mask(changed)
+
+
+DIRTY_REPS = {"mask": MaskDirty, "interval": IntervalDirty}

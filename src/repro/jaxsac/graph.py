@@ -46,13 +46,14 @@ Typical use::
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
-__all__ = ["GraphBuilder", "Handle", "GNode"]
+__all__ = ["GraphBuilder", "Handle", "GNode", "level_schedule"]
 
 ELEMENTWISE_KINDS = ("map", "zip_map", "reduce_level")
-KINDS = ("input",) + ELEMENTWISE_KINDS + ("stencil", "escan")
+KINDS = ("input",) + ELEMENTWISE_KINDS + ("stencil", "escan", "causal")
 
 
 @dataclasses.dataclass
@@ -97,6 +98,29 @@ class Handle:
         return self.node.block
 
 
+def level_schedule(nodes: Sequence[GNode]):
+    """Group nodes into levels by longest path from an input, over data
+    edges plus S-composition control edges.  Nodes within a level are
+    independent by SP structure — the paper's guarantee that change
+    propagation may proceed in parallel under P nodes.  Shared by both
+    backends (graph_compile jit-fuses a level; the host backend runs it
+    under ``parallel_for``), so their schedules cannot drift.
+
+    Returns ``(level_of, schedule)``: node idx -> level, and the list of
+    node-idx buckets per level.
+    """
+    level = {}
+    for nd in nodes:
+        preds = tuple(nd.deps) + tuple(nd.control)
+        level[nd.idx] = (0 if nd.kind == "input"
+                         else 1 + max(level[p] for p in preds))
+    num_levels = max(level.values()) + 1 if level else 0
+    schedule: List[List[int]] = [[] for _ in range(num_levels)]
+    for nd in nodes:
+        schedule[level[nd.idx]].append(nd.idx)
+    return level, schedule
+
+
 class GraphBuilder:
     """Records a static SP-dag of block-granular ops."""
 
@@ -107,14 +131,23 @@ class GraphBuilder:
         # S-composition context: node idxs the *next* traced op must be
         # scheduled after (set while inside the later branches of seq()).
         self._control: Tuple[int, ...] = ()
+        # Region stack for the context-manager form of S/P composition
+        # (seq_region / par_region, used by the repro.sac frontend).
+        self._regions: List[Any] = []
 
     # ------------------------------------------------------------------
     def _add(self, kind: str, num_blocks: int, block: int,
              deps: Sequence[int], **kw) -> Handle:
+        control = self._control
+        if self._regions:
+            extra = self._regions[-1].control()
+            control = control + tuple(i for i in extra if i not in control)
         node = GNode(idx=len(self.nodes), kind=kind, num_blocks=num_blocks,
-                     block=block, deps=tuple(deps), control=self._control,
+                     block=block, deps=tuple(deps), control=control,
                      **kw)
         self.nodes.append(node)
+        if self._regions:
+            self._regions[-1].note(node.idx)
         return Handle(self, node.idx)
 
     @staticmethod
@@ -163,13 +196,16 @@ class GraphBuilder:
                     name: str = "") -> Handle:
         """Balanced-tree reduction over all blocks (paper Algorithm 1).
 
-        Expands into one block-local fold plus log2(num_blocks) pairwise
-        ``reduce_level`` nodes; a k-block edit dirties O(k log(n/k)) of
-        them (Theorem 4.2), and the value-equality cutoff at every level
-        can stop propagation earlier still.
+        Expands into one block-local fold plus ceil(log2(num_blocks))
+        pairwise ``reduce_level`` nodes; a k-block edit dirties
+        O(k log(n/k)) of them (Theorem 4.2), and the value-equality
+        cutoff at every level can stop propagation earlier still.
+
+        Any block count works: an odd level is conceptually padded with
+        one ``identity`` block (the padding never materializes in state —
+        each level's forward/sparse recompute supplies the identity for
+        the missing right child).
         """
-        nb = x.num_blocks
-        assert nb & (nb - 1) == 0, "block count must be a power of two"
         name = name or "reduce"
         cur = x
         if x.block > 1:
@@ -179,7 +215,7 @@ class GraphBuilder:
                 lambda b, _op=op, _id=identity: _fold(_op, _id, b[None], 1)[0],
                 x, out_block=1, name=f"{name}.leaf")
         while cur.num_blocks > 1:
-            cur = self._add("reduce_level", cur.num_blocks // 2, 1,
+            cur = self._add("reduce_level", (cur.num_blocks + 1) // 2, 1,
                             (cur.idx,), op=op, identity=identity,
                             name=f"{name}.lvl")
         return cur
@@ -196,6 +232,26 @@ class GraphBuilder:
         assert radius >= 1
         return self._add("stencil", x.num_blocks, x.block, (x.idx,), fn=f,
                          radius=radius, fill=fill, name=name or "stencil")
+
+    def causal(self, f: Callable, x: Handle, out_block: Optional[int] = None,
+               name: str = "") -> Handle:
+        """Causal op: out block i reads parent blocks 0 .. i (inclusive).
+
+        This is the interval-carrying edge kind: its dirty transfer is
+        the *suffix hull* — an edit at block j dirties [j, nb), which the
+        interval ``DirtySet`` represents exactly in O(1) space.  It is
+        the graph-runtime form of causal attention: per output block the
+        reader set is the whole prefix.
+
+        ``f(x, i)`` receives the FULL parent array ``[n, *feat]`` plus
+        the (traced) output block index ``i`` and must restrict itself to
+        rows ``< (i+1) * block`` (e.g. via a causal mask computed from
+        ``i``) — the runtime relies on that contract for incremental
+        soundness and may zero-fill rows beyond the prefix.
+        """
+        ob = x.block if out_block is None else out_block
+        return self._add("causal", x.num_blocks, ob, (x.idx,), fn=f,
+                         name=name or "causal")
 
     def scan(self, op: Callable, x: Handle, identity: Any = 0.0,
              name: str = "") -> Handle:
@@ -247,6 +303,37 @@ class GraphBuilder:
         self._control = saved
         return out
 
+    @contextlib.contextmanager
+    def seq_region(self):
+        """Context-manager S-composition: every op traced inside is
+        scheduled strictly after the op (or nested region) traced just
+        before it, even without a data edge.  The statement-level form of
+        ``seq`` used by the ``repro.sac`` frontend."""
+        base = self._regions[-1].control() if self._regions else ()
+        region = _SeqRegion(base)
+        self._regions.append(region)
+        try:
+            yield
+        finally:
+            self._regions.pop()
+            if self._regions:
+                self._regions[-1].absorb(region.created)
+
+    @contextlib.contextmanager
+    def par_region(self):
+        """Context-manager P-composition: ops traced inside are mutually
+        independent (they suspend the innermost seq chaining); on exit
+        they collectively form one step of the enclosing region."""
+        base = self._regions[-1].control() if self._regions else ()
+        region = _ParRegion(base)
+        self._regions.append(region)
+        try:
+            yield
+        finally:
+            self._regions.pop()
+            if self._regions:
+                self._regions[-1].absorb(region.created)
+
     def output(self, *handles: Handle) -> None:
         """Mark result nodes (defaults to dag sinks when never called)."""
         for h in handles:
@@ -259,11 +346,60 @@ class GraphBuilder:
             used.update(nd.deps)
         return [nd.idx for nd in self.nodes if nd.idx not in used]
 
-    def compile(self, max_sparse: int = 64, use_pallas="auto",
-                interpret: Optional[bool] = None, pallas_tile: int = 8):
-        """Level-schedule the dag and build the jitted runtime."""
+    def compile(self, max_sparse="auto", use_pallas="auto",
+                interpret: Optional[bool] = None, pallas_tile: int = 8,
+                dirty: str = "mask"):
+        """Level-schedule the dag and build the jitted runtime.
+
+        ``max_sparse="auto"`` calibrates the sparse/dense crossover per
+        level from a timed warmup pass (see autotune.py); pass an int for
+        the old constant behaviour.  ``dirty`` picks the DirtySet
+        representation: ``"mask"`` (exact per-block) or ``"interval"``
+        (suffix/interval hull — O(1) space, exact for causal programs).
+        """
         from .graph_compile import CompiledGraph
 
         return CompiledGraph(self, max_sparse=max_sparse,
                              use_pallas=use_pallas, interpret=interpret,
-                             pallas_tile=pallas_tile)
+                             pallas_tile=pallas_tile, dirty=dirty)
+
+
+class _SeqRegion:
+    """Statement-level S chaining: each op is ordered after the previous."""
+
+    __slots__ = ("prev", "created")
+
+    def __init__(self, base: Tuple[int, ...] = ()):
+        self.prev: Tuple[int, ...] = base
+        self.created: List[int] = []
+
+    def control(self) -> Tuple[int, ...]:
+        return self.prev
+
+    def note(self, idx: int) -> None:
+        self.prev = (idx,)
+        self.created.append(idx)
+
+    def absorb(self, nodes: List[int]) -> None:
+        if nodes:
+            self.prev = tuple(nodes)
+            self.created.extend(nodes)
+
+
+class _ParRegion:
+    """Branches share the control captured at entry; mutually unordered."""
+
+    __slots__ = ("base", "created")
+
+    def __init__(self, base: Tuple[int, ...]):
+        self.base = base
+        self.created: List[int] = []
+
+    def control(self) -> Tuple[int, ...]:
+        return self.base
+
+    def note(self, idx: int) -> None:
+        self.created.append(idx)
+
+    def absorb(self, nodes: List[int]) -> None:
+        self.created.extend(nodes)

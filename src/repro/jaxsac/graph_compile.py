@@ -44,8 +44,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import graph_ops
-from .core import dirty_from_diff
-from .graph import ELEMENTWISE_KINDS, GNode, GraphBuilder, Handle
+from .autotune import calibrated_max_sparse
+from .dirtyset import DIRTY_REPS
+from .graph import (ELEMENTWISE_KINDS, GNode, GraphBuilder, Handle,
+                    level_schedule)
 
 __all__ = ["CompiledGraph"]
 
@@ -70,14 +72,26 @@ def _own_inputs(inputs: Dict[str, Any]) -> Dict[str, Any]:
 
 
 class CompiledGraph:
-    def __init__(self, builder: GraphBuilder, *, max_sparse: int = 64,
+    def __init__(self, builder: GraphBuilder, *, max_sparse="auto",
                  use_pallas="auto", interpret: Optional[bool] = None,
-                 pallas_tile: int = 8):
+                 pallas_tile: int = 8, dirty: str = "mask"):
         assert builder.inputs, "graph has no inputs"
+        assert dirty in DIRTY_REPS, f"unknown dirty rep {dirty!r}"
         self.nodes: List[GNode] = list(builder.nodes)
         self.input_names: Dict[str, int] = dict(builder.inputs)
         self.outputs: List[int] = list(builder.outputs) or builder.sinks()
-        self.max_sparse = int(max_sparse)
+        self.dirty_rep = dirty
+        self._dirty_cls = DIRTY_REPS[dirty]
+        self.max_sparse = max_sparse
+        # Per-node sparse budget: the old constant when given; otherwise
+        # calibrated per level from a timed warmup (autotune.py) at the
+        # first init, when the values' feature dims are known and the
+        # measured payload matches the real per-block row width.
+        if max_sparse in (None, "auto"):
+            self._ks: Optional[List[int]] = None
+        else:
+            self._ks = [min(int(max_sparse), nd.num_blocks)
+                        for nd in self.nodes]
         self.pallas_tile = int(pallas_tile)
         if use_pallas == "auto":
             use_pallas = jax.default_backend() == "tpu"
@@ -85,17 +99,8 @@ class CompiledGraph:
         self.interpret = interpret
 
         # ---- level schedule (data edges + seq control edges) ----------
-        level: Dict[int, int] = {}
-        for nd in self.nodes:
-            preds = tuple(nd.deps) + tuple(nd.control)
-            level[nd.idx] = (
-                0 if nd.kind == "input"
-                else 1 + max(level[p] for p in preds))
-        self.num_levels = max(level.values()) + 1 if level else 0
-        self.schedule: List[List[int]] = [[] for _ in range(self.num_levels)]
-        for nd in self.nodes:
-            self.schedule[level[nd.idx]].append(nd.idx)
-        self.level_of = level
+        self.level_of, self.schedule = level_schedule(self.nodes)
+        self.num_levels = len(self.schedule)
         # from-scratch work in blocks (every op node recomputes everything)
         self.total_blocks = sum(
             nd.num_blocks for nd in self.nodes if nd.kind != "input")
@@ -125,7 +130,17 @@ class CompiledGraph:
             got = inputs[name].shape[0]
             assert got == nd.n, (
                 f"input {name!r}: leading size {got}, traced with {nd.n}")
-        return self._init_fn(_own_inputs(inputs))
+        state = self._init_fn(_own_inputs(inputs))
+        if self._ks is None:             # auto crossover: calibrate once
+            # escan always takes the dense path (_recompute), so its
+            # crossover is dead — don't pay timed runs for it.
+            self._ks = [
+                0 if nd.kind in ("input", "escan") else
+                calibrated_max_sparse(
+                    nd.num_blocks,
+                    nd.block * _feat_size(state["v"][nd.idx].shape))
+                for nd in self.nodes]
+        return state
 
     # ------------------------------------------------------------------
     # Accessors
@@ -149,11 +164,13 @@ class CompiledGraph:
         """
         unknown = set(new_inputs) - set(self.input_names)
         assert not unknown, f"unknown inputs {sorted(unknown)}"
+        assert self._ks is not None, "propagate() before init()"
         return self._prop_fn(state, _own_inputs(new_inputs))
 
     def _propagate_impl(self, state, new_inputs: Dict[str, jax.Array]):
+        D = self._dirty_cls
         vals = list(state["v"])
-        changed: List[Any] = [None] * len(self.nodes)
+        changed: List[Any] = [None] * len(self.nodes)   # DirtySets
         recomputed = jnp.int32(0)
         affected = jnp.int32(0)
         dirty_inputs = jnp.int32(0)
@@ -166,12 +183,12 @@ class CompiledGraph:
                     if nd.name in new_inputs:
                         new = jnp.asarray(new_inputs[nd.name]).astype(
                             old.dtype)
-                        ch = dirty_from_diff(old, new, nd.block)
+                        ch = D.from_diff(old, new, nd.block)
                         vals[idx] = new
                     else:
-                        ch = jnp.zeros((nd.num_blocks,), bool)
+                        ch = D.none(nd.num_blocks)
                     changed[idx] = ch
-                    dirty_inputs += jnp.sum(ch.astype(jnp.int32))
+                    dirty_inputs += ch.count()
                     continue
 
                 dirty = graph_ops.edge_dirty(
@@ -179,11 +196,11 @@ class CompiledGraph:
                 parents = [vals[d] for d in nd.deps]
                 old = vals[idx]
                 new = self._recompute(nd, parents, old, dirty)
-                ch = dirty & dirty_from_diff(old, new, nd.block)
+                ch = dirty.meet_diff(old, new, nd.block)
                 vals[idx] = new
                 changed[idx] = ch
-                recomputed += jnp.sum(dirty.astype(jnp.int32))
-                affected += jnp.sum(ch.astype(jnp.int32))
+                recomputed += dirty.count()
+                affected += ch.count()
 
         stats = {"recomputed": recomputed, "affected": affected,
                  "dirty_inputs": dirty_inputs}
@@ -191,18 +208,19 @@ class CompiledGraph:
 
     # ------------------------------------------------------------------
     def _recompute(self, nd: GNode, parents, old, dirty):
+        mask = dirty.to_mask()
         if nd.kind == "escan":
             # nb cheap elements; the masked dense pass IS the fast path.
-            return graph_ops.dense_update(nd, self.nodes, parents, old, dirty)
-        k = min(self.max_sparse, nd.num_blocks)
-        count = jnp.sum(dirty.astype(jnp.int32))
+            return graph_ops.dense_update(nd, self.nodes, parents, old, mask)
+        k = self._ks[nd.idx]
+        count = dirty.count()
 
         def sparse(_):
             return graph_ops.sparse_update(
-                nd, self.nodes, parents, old, dirty, k)
+                nd, self.nodes, parents, old, mask, k)
 
         def dense(_):
-            return self._dense(nd, parents, old, dirty)
+            return self._dense(nd, parents, old, mask)
 
         return jax.lax.cond(count <= k, sparse, dense, None)
 
@@ -219,6 +237,9 @@ class CompiledGraph:
             return False
         if nd.num_blocks % self.pallas_tile != 0:
             return False
+        if nd.kind == "reduce_level" and (
+                self.nodes[nd.deps[0]].num_blocks != 2 * nd.num_blocks):
+            return False                 # identity-padded odd level
         return all(p.dtype == old.dtype for p in parents)
 
     def _pallas_dense(self, nd: GNode, parents, old, dirty):

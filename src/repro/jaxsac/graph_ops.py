@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from .core import broadcast_mask as _bc
+from .dirtyset import DirtySet
 from .graph import GNode
 
 __all__ = ["forward", "edge_dirty", "dense_update", "sparse_update"]
@@ -50,6 +51,16 @@ def _pack(node: GNode, raw: jax.Array) -> jax.Array:
 
 def _parent(node: GNode, nodes) -> GNode:
     return nodes[node.deps[0]]
+
+
+def _identity_row(node: GNode, like: jax.Array) -> jax.Array:
+    """The op identity broadcast to one row of ``like`` ([*feat]).
+
+    Identities may be non-scalar (e.g. the Rabin-Karp combine's neutral
+    pair (h=0, p=1)); broadcasting keeps both forms working everywhere
+    padding is needed."""
+    return jnp.broadcast_to(jnp.asarray(node.identity, like.dtype),
+                            like.shape[1:])
 
 
 # ---------------------------------------------------------------------------
@@ -90,15 +101,22 @@ def forward(node: GNode, nodes, parents: List[jax.Array]) -> jax.Array:
         return _pack(node, jax.vmap(node.fn)(xb, yb))
     if node.kind == "reduce_level":
         x = parents[0]
+        if x.shape[0] % 2:       # odd level: pad with one identity block
+            pad = _identity_row(node, x)[None]
+            x = jnp.concatenate([x, pad], axis=0)
         return node.op(x[0::2], x[1::2])
     if node.kind == "stencil":
         p = _parent(node, nodes)
         win = _windows(node, p, parents[0])
         return _pack(node, jax.vmap(node.fn)(win))
+    if node.kind == "causal":
+        idx = jnp.arange(node.num_blocks)
+        raw = jax.vmap(node.fn, in_axes=(None, 0))(parents[0], idx)
+        return _pack(node, raw)
     if node.kind == "escan":
         x = parents[0]
         inclusive = jax.lax.associative_scan(node.op, x, axis=0)
-        seed = jnp.full_like(x[:1], node.identity)
+        seed = _identity_row(node, x)[None]
         return jnp.concatenate([seed, inclusive[:-1]], axis=0)
     raise ValueError(f"forward of non-op node {node.kind}")
 
@@ -106,28 +124,26 @@ def forward(node: GNode, nodes, parents: List[jax.Array]) -> jax.Array:
 # ---------------------------------------------------------------------------
 # dirty transfer (reader index maps, reversed)
 # ---------------------------------------------------------------------------
-def edge_dirty(node: GNode, changed: List[jax.Array]) -> jax.Array:
-    """Per-out-block dirty mask from the parents' changed masks."""
-    if node.kind in ("map", "stencil", "escan"):
-        d = changed[0]
-    elif node.kind == "zip_map":
-        d = changed[0] | changed[1]
-    elif node.kind == "reduce_level":
-        c = changed[0]
-        return c[0::2] | c[1::2]
-    else:
-        raise ValueError(node.kind)
+def edge_dirty(node: GNode, changed: List[DirtySet]) -> DirtySet:
+    """Push the parents' changed DirtySets through the edge's reader
+    index map.  Representation-agnostic: both the exact per-block mask
+    and the interval hull implement the same transfer methods
+    (see dirtyset.py)."""
+    if node.kind == "map":
+        return changed[0]
+    if node.kind == "zip_map":
+        return changed[0].union(changed[1])
+    if node.kind == "reduce_level":
+        return changed[0].pair_or(node.num_blocks)
     if node.kind == "stencil":
-        out = d
-        for off in range(1, node.radius + 1):
-            out = out | jnp.roll(d, off).at[:off].set(False)
-            out = out | jnp.roll(d, -off).at[-off:].set(False)
-        return out
+        return changed[0].dilate(node.radius)
     if node.kind == "escan":
-        # out block j reads blocks < j: prefix-OR, exclusive.
-        pref = jnp.cumsum(d.astype(jnp.int32)) > 0
-        return jnp.concatenate([jnp.zeros((1,), bool), pref[:-1]])
-    return d
+        # out block j reads blocks < j: exclusive prefix-OR.
+        return changed[0].prefix_shift()
+    if node.kind == "causal":
+        # out block j reads blocks <= j: suffix (the interval edge).
+        return changed[0].suffix()
+    raise ValueError(node.kind)
 
 
 # ---------------------------------------------------------------------------
@@ -155,10 +171,18 @@ def sparse_update(node: GNode, nodes, parents: List[jax.Array],
     (idx,) = jnp.nonzero(dirty, size=k, fill_value=nb)
 
     if node.kind == "reduce_level":
+        # OOB gathers (the odd level's missing right child, and sentinel
+        # lanes) must read the op identity; ``fill_value`` only takes
+        # scalars, so gather with a dummy fill and patch identity rows in
+        # (supports non-scalar identities like the Rabin-Karp pair).
         kids = parents[0]
-        l_kid = kids.at[2 * idx].get(mode="fill", fill_value=node.identity)
-        r_kid = kids.at[2 * idx + 1].get(mode="fill", fill_value=node.identity)
-        vals = node.op(l_kid, r_kid)
+        ident = _identity_row(node, kids)
+
+        def kid(i):
+            g = kids.at[i].get(mode="fill", fill_value=0)
+            return jnp.where(_bc(i >= kids.shape[0], g), ident, g)
+
+        vals = node.op(kid(2 * idx), kid(2 * idx + 1))
         return old.at[idx].set(vals, mode="drop")
 
     if node.kind == "map":
@@ -179,6 +203,10 @@ def sparse_update(node: GNode, nodes, parents: List[jax.Array],
         p = _parent(node, nodes)
         wg = _windows(node, p, parents[0], idx)
         raw = jax.vmap(node.fn)(wg)
+    elif node.kind == "causal":
+        # fn sees the full parent; sentinel lanes (idx == nb) compute a
+        # full-prefix value and are dropped by the scatter below.
+        raw = jax.vmap(node.fn, in_axes=(None, 0))(parents[0], idx)
     else:
         raise ValueError(node.kind)
 

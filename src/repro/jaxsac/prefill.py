@@ -19,6 +19,13 @@ Affected-position analysis per layer type (DESIGN.md §Adaptation):
   * the value-equality write cutoff (paper Algorithm 2) applies at cache
     granularity: unchanged prefix cache blocks are never touched.
 
+The mark phase is no longer hand-rolled: it runs on the graph runtime's
+dirty representations (``jaxsac.dirtyset``) — the edit diff as a
+``MaskDirty``, folded through the per-layer edge chain (token-local =
+identity, causal attention = the interval-carrying edge's suffix
+transfer) as an ``IntervalDirty``.  The serving path and the compiled
+graph runtime therefore share one dirty-set vocabulary.
+
 Work: O((S - p0) / S) of a full prefill per layer — for the common
 "edit near the end" case this is the same order of savings the paper
 reports for its dynamic-sequence benchmarks.  The continuation for the
@@ -51,10 +58,20 @@ from ..models import moe as moe_mod
 from ..models.attention import _blocked_attention, _naive_attention
 from ..models.layers import apply_norm, apply_rope, embed_tokens, lm_logits, mlp_fwd, rope
 from ..models.lm import _res
+from .dirtyset import IntervalDirty, MaskDirty
 
 __all__ = ["incremental_prefill", "continue_prefill", "prefill_distance"]
 
 SUPPORTED = ("dense", "vlm", "moe")
+
+# The per-layer dirty-transfer chain of one transformer block, in the
+# runtime's edge vocabulary (graph_ops.edge_dirty): token-local ops
+# (norms, q/k/v, MLP, MoE routing) are identity edges; causal attention
+# is the interval-carrying "causal" edge whose transfer is the suffix
+# hull.  Residual adds are zip_map edges (union) of two suffixes — also
+# a suffix.  Suffix intervals are a fixed point of every rule, which is
+# why the mark phase of the whole network folds into one IntervalDirty.
+_LAYER_EDGES = ("map", "causal", "map")       # ln/qkv -> attend -> mlp
 
 
 # ---------------------------------------------------------------------------
@@ -64,10 +81,42 @@ def prefill_distance(old_tokens, new_tokens, *, block: int = 512,
                      prefix_offset: int = 0) -> Dict[str, Any]:
     """Computation distance of a prompt edit (Definition 4.2 analogue).
 
-    Returns the first changed position p0 (bucketed down to ``block``),
-    the number of recomputed positions, and the work-savings ratio
-    (positions saved / total) that the interval rule realizes.
+    The mark phase runs on the runtime's DirtySet representations
+    (dirtyset.py): the token-level edit diff becomes a ``MaskDirty``,
+    its hull an ``IntervalDirty``, and the per-layer transfer chain
+    (``_LAYER_EDGES``) folds it to the dirty suffix that causal
+    attention forces — two integers instead of a position mask, for any
+    depth.  Returns the first changed position p0 (bucketed down to
+    ``block``), the number of recomputed positions, and the work-savings
+    ratio (positions saved / total) that the interval rule realizes.
     """
+    import numpy as np
+
+    old = np.asarray(old_tokens)
+    new = np.asarray(new_tokens)
+    assert old.shape == new.shape
+    S = old.shape[-1] + prefix_offset
+    flat_old = old if old.ndim == 2 else old[None]
+    flat_new = new if new.ndim == 2 else new[None]
+    changed = MaskDirty(jnp.asarray((flat_old != flat_new).any(axis=0)))
+    changed_tokens = int(changed.count())
+    if changed_tokens == 0:
+        return dict(p0=S, p0_bucket=S, recompute=0, total=S,
+                    savings=float("inf"), changed_tokens=0)
+    iv = IntervalDirty.from_mask(changed.mask)
+    for kind in _LAYER_EDGES:
+        iv = iv if kind == "map" else iv.suffix()
+    p0 = int(iv.lo) + prefix_offset
+    p0_bucket = (p0 // block) * block
+    rec = S - p0_bucket
+    return dict(p0=p0, p0_bucket=p0_bucket, recompute=rec, total=S,
+                savings=S / rec, changed_tokens=changed_tokens)
+
+
+def _prefill_distance_legacy(old_tokens, new_tokens, *, block: int = 512,
+                             prefix_offset: int = 0) -> Dict[str, Any]:
+    """Pre-redesign hand-rolled mark phase (numpy index scanning); kept
+    verbatim as the equivalence oracle for tests."""
     import numpy as np
 
     old = np.asarray(old_tokens)

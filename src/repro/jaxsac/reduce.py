@@ -4,15 +4,17 @@ The divide-and-conquer sum of the paper keeps one modifiable per internal
 node of a balanced binary tree; updating k of n leaves re-executes
 O(k log(1 + n/k)) readers (Theorem 4.2).
 
-``IncrementalReduce`` is now a thin wrapper over the general SP-dag
-runtime (``graph.py`` / ``graph_compile.py``): the reduction is *traced*
-as one block-local fold plus log2(num_blocks) pairwise combine levels,
-and the compiled ``propagate`` supplies everything this module once
-hand-rolled — upward dirty-mask pushing, the Algorithm-2 value-equality
-cutoff per level, and the sparse-gather vs dense-masked regime switch.
-The hand-built implementation is kept verbatim below as
-``_LegacyIncrementalReduce`` (it is the bitwise-equivalence oracle in
-tests/test_graph.py).
+``IncrementalReduce`` is now a thin wrapper over the ``repro.sac``
+tracing frontend: the reduction is *traced* (``@sac.incremental`` over
+``sac.reduce``) into one block-local fold plus ceil(log2(num_blocks))
+pairwise combine levels, and the compiled ``propagate`` supplies
+everything this module once hand-rolled — upward dirty-mask pushing, the
+Algorithm-2 value-equality cutoff per level, and the sparse-gather vs
+dense-masked regime switch (crossover auto-tuned per level unless
+``max_sparse`` is given).  Any block count works: odd tree levels pad
+with the op identity.  The hand-built implementation is kept verbatim
+below as ``_LegacyIncrementalReduce`` (it is the bitwise-equivalence
+oracle in tests/test_graph.py).
 """
 from __future__ import annotations
 
@@ -34,29 +36,29 @@ class IncrementalReduce:
 
     ``op`` must be associative with ``identity``; the element arrays may
     have trailing feature dims (reduced only over the leading axis).
-    Backed by a compiled SP-dag: ``init`` runs the initial pass, ``update``
-    is the jitted change propagation of the graph runtime.
+    Traced through ``@sac.incremental`` and backed by the compiled
+    SP-dag runtime: ``init`` runs the initial pass, ``update`` is the
+    jitted change propagation.  ``max_sparse="auto"`` (default)
+    calibrates the sparse/dense crossover per level at compile time.
     """
 
     n: int
     block: int = 1
     op: Callable[[jax.Array, jax.Array], jax.Array] = jnp.add
     identity: float = 0.0
-    max_sparse: int = 64          # sparse-path budget per level
+    max_sparse: Any = "auto"      # sparse-path budget per level
     use_pallas: Any = False       # route dense levels through dirty_map
 
     def __post_init__(self):
         assert self.n % self.block == 0
-        nb = self.n // self.block
-        assert nb & (nb - 1) == 0, "block count must be a power of two"
-        from .graph import GraphBuilder
+        from repro import sac
 
-        g = GraphBuilder()
-        x = g.input("x", n=self.n, block=self.block)
-        out = g.reduce_tree(self.op, x, identity=self.identity)
-        g.output(out)
-        cg = g.compile(max_sparse=self.max_sparse, use_pallas=self.use_pallas)
-        object.__setattr__(self, "_cg", cg)
+        prog = sac.incremental(
+            lambda x: sac.reduce(self.op, x, identity=self.identity),
+            block=self.block)
+        handle = prog.compile(x=self.n, max_sparse=self.max_sparse,
+                              use_pallas=self.use_pallas)
+        object.__setattr__(self, "_cg", handle.cg)
 
     @property
     def num_blocks(self) -> int:
@@ -64,7 +66,7 @@ class IncrementalReduce:
 
     @property
     def num_levels(self) -> int:
-        return int(math.log2(self.num_blocks))
+        return max(int(math.ceil(math.log2(self.num_blocks))), 0)
 
     def init(self, data: jax.Array) -> Dict[str, Any]:
         """The initial run: build every level of the aggregation tree."""
@@ -198,11 +200,13 @@ class _LegacyIncrementalReduce:
 
 
 def _fold(op, identity, blocks: jax.Array, axis: int) -> jax.Array:
-    """Balanced reduce over ``axis`` with ``op`` (keeps op generic)."""
+    """Balanced reduce over ``axis`` with ``op`` (keeps op generic;
+    ``identity`` may be a scalar or a per-element [*feat] array)."""
     out = jnp.moveaxis(blocks, axis, 1)
     while out.shape[1] > 1:
         if out.shape[1] % 2:
-            pad = jnp.full_like(out[:, :1], identity)
+            pad = jnp.broadcast_to(jnp.asarray(identity, out.dtype),
+                                   out[:, :1].shape)
             out = jnp.concatenate([out, pad], axis=1)
         out = op(out[:, 0::2], out[:, 1::2])
     return out[:, 0]

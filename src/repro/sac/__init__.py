@@ -1,0 +1,57 @@
+"""repro.sac — one tracing frontend for incremental array programs.
+
+Write the ordinary program once; the system derives the incremental
+version (the language-level framing of self-adjusting computation:
+Acar et al.'s consistent semantics, Hammer et al.'s stack machines).
+A function decorated with ``@sac.incremental`` is traced over
+operator-overloaded ``BlockArray`` tracers into a static SP-dag, then
+lowered onto either execution substrate:
+
+  * ``backend="graph"`` — the jit-compiled TPU runtime
+    (``repro.jaxsac``): level-scheduled dirty-mask propagation, sparse/
+    dense recompute regimes, Pallas dirty-tile routing;
+  * ``backend="host"``  — the paper-faithful host engine
+    (``repro.core``): RSP tree, reader sets, exact work/span accounting.
+
+Same trace, bitwise-identical outputs, one ``run/update/stats`` facade::
+
+    import repro.sac as sac
+
+    @sac.incremental(block=64)
+    def hashed(text):
+        pairs = sac.map_blocks(block_hash, text, out_block=1)
+        return sac.reduce(combine, pairs, identity=0)
+
+    h = hashed.compile(text=65536)        # backend="graph" by default
+    h.run(text=codes)
+    h.update(text=edited_codes)           # change propagation
+    h.stats["recomputed"]                 # realized computation distance
+
+The structured combinators (``reduce``, ``stencil``, ``scan``,
+``causal``) and S/P context managers (``seq``, ``par``) live alongside
+plain operators and intercepted numpy ufuncs (``np.tanh(x)`` lowers to
+``jnp.tanh`` per block).  ``GraphBuilder`` — the imperative,
+method-per-op builder this frontend replaces — remains available as a
+deprecated shim (it is the IR the tracer records into).
+"""
+from .program import GraphHandle, IncrementalProgram, incremental
+from .host import HostHandle
+from .tracer import (BlockArray, causal, elementwise, map_blocks, par,
+                     reduce, scan, seq, stencil, zip_blocks)
+
+__all__ = [
+    "incremental",
+    "IncrementalProgram",
+    "GraphHandle",
+    "HostHandle",
+    "BlockArray",
+    "map_blocks",
+    "zip_blocks",
+    "elementwise",
+    "reduce",
+    "stencil",
+    "scan",
+    "causal",
+    "seq",
+    "par",
+]

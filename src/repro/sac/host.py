@@ -1,0 +1,292 @@
+"""Host-engine backend: the traced dag on the paper-faithful runtime.
+
+``compile(backend="host")`` lowers the same SP-dag that the graph
+backend jits onto ``repro.core.engine.Engine`` — dynamic RSP tree,
+per-block modifiables, reader sets, mark-walks — so one traced program
+yields both the TPU artifact and the paper's exact work/span accounting.
+
+Lowering: every block of every node becomes one ``Mod``.  Per node kind:
+
+  * map / zip_map / stencil — one reader per output block, reading the
+    block's static reader set (the window mods for stencil) and writing
+    the recomputed block; lowered under ``parallel_for`` so the RSP tree
+    records the P-structure (span = max over blocks).
+  * reduce_level — one reader per pair; an odd level's last reader
+    combines its single child with the op identity (same padding rule as
+    the compiled backend).
+  * escan — ONE reader for the whole carry pass: it reads every block
+    aggregate and rewrites all carries with the same
+    ``jax.lax.associative_scan`` the graph backend runs (bitwise parity);
+    the engine's value-equality write cutoff then marks only the readers
+    of carries that actually changed.
+  * causal — out block i reads parent blocks 0..i; rows past the prefix
+    are zero-filled before calling ``fn(x, i)`` (the causal contract:
+    fn must not look at them).
+
+Block values are stored wrapped (``_Blk``) so the engine's Algorithm-2
+write cutoff compares them with numpy array equality (NaN-unequal,
+matching the compiled backend's ``!=`` diff semantics).
+
+Levels execute in sequence (S composition); the nodes of one level run
+under a binary ``par`` tree (P composition) — exactly the schedule the
+compiled backend fuses, so the two backends agree on both values and
+changed-block counts.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import Engine
+from repro.jaxsac.graph import GNode, GraphBuilder, Handle, level_schedule
+from .tracer import BlockArray
+
+__all__ = ["HostHandle"]
+
+
+class _Blk:
+    """A block value with bitwise-style equality for the write cutoff."""
+
+    __slots__ = ("a",)
+
+    def __init__(self, a):
+        self.a = np.asarray(a)
+
+    def __eq__(self, other):
+        return (isinstance(other, _Blk)
+                and self.a.dtype == other.a.dtype
+                and bool(np.array_equal(self.a, other.a)))
+
+    def __ne__(self, other):
+        return not self.__eq__(other)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"_Blk{self.a.shape}"
+
+
+def _store(nd: GNode, res) -> _Blk:
+    """Canonical block layout: [block, *feat] (fns return [*feat] when
+    out_block == 1, mirroring graph_ops._pack)."""
+    a = np.asarray(res)
+    if nd.block == 1:
+        a = a[None]
+    return _Blk(a)
+
+
+class HostHandle:
+    """Compiled program on the host engine (same facade as GraphHandle)."""
+
+    backend = "host"
+
+    def __init__(self, builder: GraphBuilder, outs: List[Handle],
+                 single: bool):
+        self.nodes: List[GNode] = list(builder.nodes)
+        self.input_names: Dict[str, int] = dict(builder.inputs)
+        assert self.input_names, "graph has no inputs"
+        self.out_handles = outs
+        self._single = single
+        # The one level schedule both backends share (graph.py).
+        self.level_of, self.schedule = level_schedule(self.nodes)
+
+        self._eng: Optional[Engine] = None
+        self._comp = None
+        self._mods: List[List] = []
+        self._inputs_np: Dict[str, np.ndarray] = {}
+        self._stats: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------------
+    # Initial run
+    # ------------------------------------------------------------------
+    def run(self, inputs: Optional[Dict[str, Any]] = None, **kw):
+        inputs = {**(inputs or {}), **kw}
+        assert set(inputs) == set(self.input_names), (
+            f"inputs {sorted(inputs)} != declared "
+            f"{sorted(self.input_names)}")
+        self._eng = eng = Engine()
+        self._mods = [[eng.mod(f"{nd.name}[{i}]")
+                       for i in range(nd.num_blocks)] for nd in self.nodes]
+        for name, idx in self.input_names.items():
+            nd = self.nodes[idx]
+            arr = np.asarray(inputs[name])
+            assert arr.shape[0] == nd.n, (
+                f"input {name!r}: leading size {arr.shape[0]}, "
+                f"traced with {nd.n}")
+            self._inputs_np[name] = arr.copy()
+            for i in range(nd.num_blocks):
+                eng.write(self._mods[idx][i],
+                          _Blk(arr[i * nd.block:(i + 1) * nd.block].copy()))
+        self._comp = eng.run(self._program)
+        st = self._comp.initial_stats
+        self._stats = {"phase": "run", "work": st.work, "span": st.span,
+                       "reads": st.reads,
+                       "recomputed": st.reads, "affected": st.writes}
+        return self.outputs()
+
+    def _program(self) -> None:
+        eng = self._eng
+        for lvl in self.schedule:
+            ops = [i for i in lvl if self.nodes[i].kind != "input"]
+            if ops:                      # one level = one P group
+                eng.parallel_for(0, len(ops),
+                                 lambda j, _ops=ops: self._lower(_ops[j]))
+
+    # ------------------------------------------------------------------
+    # Node lowering (readers)
+    # ------------------------------------------------------------------
+    def _lower(self, idx: int) -> None:
+        nd = self.nodes[idx]
+        eng = self._eng
+        out = self._mods[idx]
+        par0 = self._mods[nd.deps[0]]
+
+        if nd.kind == "map":
+            def body(i, _nd=nd, _out=out, _in=par0):
+                eng.read(_in[i], lambda v, _i=i: eng.write(
+                    _out[_i], _store(_nd, _nd.fn(jnp.asarray(v.a)))))
+            eng.parallel_for(0, nd.num_blocks, body)
+
+        elif nd.kind == "zip_map":
+            par1 = self._mods[nd.deps[1]]
+
+            def body(i, _nd=nd, _out=out, _x=par0, _y=par1):
+                eng.read((_x[i], _y[i]), lambda vx, vy, _i=i: eng.write(
+                    _out[_i],
+                    _store(_nd, _nd.fn(jnp.asarray(vx.a),
+                                       jnp.asarray(vy.a)))))
+            eng.parallel_for(0, nd.num_blocks, body)
+
+        elif nd.kind == "reduce_level":
+            nb_in = self.nodes[nd.deps[0]].num_blocks
+
+            def body(i, _nd=nd, _out=out, _in=par0, _nb=nb_in):
+                li, ri = 2 * i, 2 * i + 1
+                if ri < _nb:
+                    eng.read((_in[li], _in[ri]),
+                             lambda vl, vr, _i=i: eng.write(
+                                 _out[_i], _Blk(np.asarray(_nd.op(
+                                     jnp.asarray(vl.a[0]),
+                                     jnp.asarray(vr.a[0])))[None])))
+                else:                    # odd level: identity right child
+                    eng.read(_in[li], lambda vl, _i=i: eng.write(
+                        _out[_i], _Blk(np.asarray(_nd.op(
+                            jnp.asarray(vl.a[0]),
+                            jnp.broadcast_to(
+                                jnp.asarray(_nd.identity, vl.a.dtype),
+                                vl.a[0].shape)))[None])))
+            eng.parallel_for(0, nd.num_blocks, body)
+
+        elif nd.kind == "stencil":
+            p = self.nodes[nd.deps[0]]
+
+            def body(i, _nd=nd, _out=out, _in=par0, _p=p):
+                reads, slots = [], []    # slots: index into reads, or fill
+                for off in range(-_nd.radius, _nd.radius + 1):
+                    j = i + off
+                    oob = j < 0 or j >= _p.num_blocks
+                    if oob and _nd.fill is not None:
+                        slots.append(None)
+                    else:
+                        reads.append(_in[min(max(j, 0), _p.num_blocks - 1)])
+                        slots.append(len(reads) - 1)
+
+                def reader(*vals, _i=i):
+                    ref = vals[0].a      # dtype/shape template
+                    parts = [np.full_like(ref, _nd.fill) if s is None
+                             else vals[s].a for s in slots]
+                    win = jnp.asarray(np.concatenate(parts, axis=0))
+                    eng.write(_out[_i], _store(_nd, _nd.fn(win)))
+
+                eng.read(tuple(reads), reader)
+            eng.parallel_for(0, nd.num_blocks, body)
+
+        elif nd.kind == "escan":
+            # One reader = the whole carry pass (see module docstring).
+            def carry_pass(*vals, _nd=nd, _out=out):
+                x = jnp.asarray(np.concatenate([v.a for v in vals], axis=0))
+                inclusive = jax.lax.associative_scan(_nd.op, x, axis=0)
+                seed = jnp.broadcast_to(jnp.asarray(_nd.identity, x.dtype),
+                                        x[:1].shape)
+                rows = np.asarray(
+                    jnp.concatenate([seed, inclusive[:-1]], axis=0))
+                eng.charge(len(vals) - 1, span=max(len(vals), 1).bit_length())
+                for i, m in enumerate(_out):
+                    eng.write(m, _Blk(rows[i][None]))
+
+            eng.read(tuple(par0), carry_pass)
+
+        elif nd.kind == "causal":
+            p = self.nodes[nd.deps[0]]
+
+            def body(i, _nd=nd, _out=out, _in=par0, _p=p):
+                def reader(*vals, _i=i):
+                    pre = np.concatenate([v.a for v in vals], axis=0)
+                    pad = np.zeros(
+                        ((_p.num_blocks - _i - 1) * _p.block,)
+                        + pre.shape[1:], pre.dtype)
+                    x = jnp.asarray(np.concatenate([pre, pad], axis=0))
+                    eng.write(_out[_i], _store(_nd, _nd.fn(x, _i)))
+
+                eng.read(tuple(_in[:i + 1]), reader)
+            eng.parallel_for(0, nd.num_blocks, body)
+
+        else:
+            raise ValueError(f"cannot lower node kind {nd.kind!r}")
+
+    # ------------------------------------------------------------------
+    # Change propagation
+    # ------------------------------------------------------------------
+    def update(self, inputs: Optional[Dict[str, Any]] = None, **changed):
+        if self._comp is None:
+            raise RuntimeError("update() before run()")
+        changed = {**(inputs or {}), **changed}
+        unknown = set(changed) - set(self.input_names)
+        assert not unknown, f"unknown inputs {sorted(unknown)}"
+        eng = self._eng
+        dirty_inputs = 0
+        for name, new in changed.items():
+            idx = self.input_names[name]
+            nd = self.nodes[idx]
+            arr = np.asarray(new)
+            assert arr.shape == self._inputs_np[name].shape
+            old = self._inputs_np[name]
+            for i in range(nd.num_blocks):
+                sl = slice(i * nd.block, (i + 1) * nd.block)
+                blk = arr[sl]
+                if not np.array_equal(old[sl], blk):
+                    dirty_inputs += 1
+                eng.write(self._mods[idx][i], _Blk(blk.copy()))
+            self._inputs_np[name] = arr.copy()
+        st = self._comp.propagate()
+        self._stats = {
+            "phase": "update",
+            "recomputed": st.affected_readers,
+            "affected": st.changed_writes,
+            "dirty_inputs": dirty_inputs,
+            "work": st.work, "span": st.span, "reads": st.reads,
+            "mark_work": st.mark_work,
+        }
+        return self.outputs()
+
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> Dict[str, Any]:
+        """Counters of the last phase.  ``affected`` (value-changed
+        blocks) matches the graph backend exactly; ``recomputed`` counts
+        re-executed readers (the escan carry pass is one reader);
+        ``work``/``span`` are the paper's exact accounting."""
+        return dict(self._stats)
+
+    def value(self, out) -> jax.Array:
+        h = out._h if isinstance(out, BlockArray) else out
+        return self._node_value(h.idx)
+
+    def outputs(self):
+        vals = tuple(self._node_value(h.idx) for h in self.out_handles)
+        return vals[0] if self._single else vals
+
+    def _node_value(self, idx: int) -> jax.Array:
+        return jnp.asarray(np.concatenate(
+            [m.peek().a for m in self._mods[idx]], axis=0))

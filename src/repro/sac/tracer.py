@@ -1,0 +1,276 @@
+"""BlockArray tracers: ordinary Python expressions -> static SP-dag.
+
+The ``repro.sac`` frontend is jax-style: the user writes a plain Python
+function over arrays; calling it with ``BlockArray`` tracers records a
+static SP-dag of block-granular ops (the IR of ``repro.jaxsac.graph``),
+which then lowers to either the jit-compiled graph runtime or the
+paper-faithful host engine (see program.py / host.py).
+
+A ``BlockArray`` stands for a block-modifiable tensor.  Tracing happens
+through:
+
+  * **operators** — ``+ - * / ** abs neg`` between tracers and/or
+    scalars/arrays lower to ``map``/``zip_map`` nodes whose per-block
+    kernels are the matching jnp ops;
+  * **ufunc interception** — applying a numpy ufunc to a tracer
+    (``np.tanh(x)``, ``np.maximum(x, y)``) is intercepted via
+    ``__array_ufunc__`` and lowered to the *jnp* ufunc of the same name
+    applied per block (so the compiled program runs the XLA kernel, not
+    numpy).  jnp functions themselves eagerly coerce their arguments and
+    cannot see the tracer — calling one raises a pointed error naming
+    the spellings that do trace (``np.tanh(x)``, ``sac.elementwise``);
+  * **named combinators** — ``sac.reduce`` / ``sac.stencil`` /
+    ``sac.scan`` / ``sac.causal`` / ``sac.map_blocks`` /
+    ``sac.zip_blocks`` for the structured ops;
+  * **S/P composition** — ``with sac.seq():`` / ``with sac.par():``
+    context managers mirroring the host engine's S and P nodes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional
+
+import jax.numpy as jnp
+
+from repro.jaxsac.graph import GraphBuilder, Handle
+
+__all__ = [
+    "BlockArray", "map_blocks", "zip_blocks", "elementwise",
+    "reduce", "stencil", "scan", "causal", "seq", "par",
+]
+
+# Ambient trace stack: pushed by IncrementalProgram.compile while the
+# user function runs; consulted by seq()/par() which take no tracer.
+_TRACES: List[GraphBuilder] = []
+
+
+def _current_builder() -> GraphBuilder:
+    if not _TRACES:
+        raise RuntimeError(
+            "sac.seq()/sac.par() used outside an @sac.incremental trace")
+    return _TRACES[-1]
+
+
+class BlockArray:
+    """Tracer for one block-modifiable tensor (wraps a dag Handle)."""
+
+    __slots__ = ("_h",)
+
+    def __init__(self, handle: Handle):
+        self._h = handle
+
+    # ------------------------------------------------------------------
+    @property
+    def num_blocks(self) -> int:
+        return self._h.num_blocks
+
+    @property
+    def block(self) -> int:
+        return self._h.block
+
+    @property
+    def n(self) -> int:
+        return self._h.node.n
+
+    @property
+    def _g(self) -> GraphBuilder:
+        return self._h.builder
+
+    def __repr__(self) -> str:
+        nd = self._h.node
+        return (f"BlockArray(<{nd.kind} '{nd.name}' "
+                f"{nd.num_blocks}x{nd.block}>)")
+
+    # ------------------------------------------------------------------
+    # Elementwise lowering
+    # ------------------------------------------------------------------
+    def _map(self, f: Callable, name: str) -> "BlockArray":
+        return BlockArray(self._g.map(f, self._h, name=name))
+
+    def _binop(self, other: Any, f: Callable, name: str,
+               reverse: bool = False) -> "BlockArray":
+        if isinstance(other, BlockArray):
+            a, b = (other, self) if reverse else (self, other)
+            return BlockArray(a._g.zip_map(f, a._h, b._h, name=name))
+        # Constant operand: bake it into a map kernel.  Scalars and
+        # block-broadcastable arrays both work (jnp broadcasting).
+        if reverse:
+            return self._map(lambda blk, _c=other, _f=f: _f(_c, blk), name)
+        return self._map(lambda blk, _c=other, _f=f: _f(blk, _c), name)
+
+    def __add__(self, o):
+        return self._binop(o, jnp.add, "add")
+
+    def __radd__(self, o):
+        return self._binop(o, jnp.add, "add", reverse=True)
+
+    def __sub__(self, o):
+        return self._binop(o, jnp.subtract, "sub")
+
+    def __rsub__(self, o):
+        return self._binop(o, jnp.subtract, "sub", reverse=True)
+
+    def __mul__(self, o):
+        return self._binop(o, jnp.multiply, "mul")
+
+    def __rmul__(self, o):
+        return self._binop(o, jnp.multiply, "mul", reverse=True)
+
+    def __truediv__(self, o):
+        return self._binop(o, jnp.divide, "div")
+
+    def __rtruediv__(self, o):
+        return self._binop(o, jnp.divide, "div", reverse=True)
+
+    def __pow__(self, o):
+        return self._binop(o, jnp.power, "pow")
+
+    def __rpow__(self, o):
+        return self._binop(o, jnp.power, "pow", reverse=True)
+
+    def __neg__(self):
+        return self._map(jnp.negative, "neg")
+
+    def __abs__(self):
+        return self._map(jnp.abs, "abs")
+
+    # ------------------------------------------------------------------
+    # numpy-ufunc interception: np.tanh(x) etc. lower to the jnp ufunc
+    # of the same name applied per block.
+    # ------------------------------------------------------------------
+    __array_priority__ = 5000            # win over ndarray operands
+
+    def __array_ufunc__(self, ufunc, method, *inputs, **kwargs):
+        if method != "__call__" or kwargs:
+            return NotImplemented
+        jfn = getattr(jnp, ufunc.__name__, None)
+        if jfn is None:
+            return NotImplemented
+        return _lower_elementwise(jfn, inputs, name=ufunc.__name__)
+
+    def __jax_array__(self):
+        raise TypeError(
+            "a sac.BlockArray tracer cannot be materialized as a jax "
+            "array: jnp functions coerce their arguments eagerly.  Use "
+            "the numpy spelling (np.tanh(x) is intercepted and lowered "
+            "to jnp.tanh per block), an operator, or "
+            "sac.elementwise(jnp.tanh)(x).")
+
+    # ------------------------------------------------------------------
+    # Conveniences
+    # ------------------------------------------------------------------
+    def astype(self, dtype) -> "BlockArray":
+        return self._map(lambda b, _d=dtype: b.astype(_d), "astype")
+
+    def sum(self, identity: Any = 0.0) -> "BlockArray":
+        return reduce(jnp.add, self, identity=identity, name="sum")
+
+    def max(self, identity: Any = -jnp.inf) -> "BlockArray":
+        return reduce(jnp.maximum, self, identity=identity, name="max")
+
+    def min(self, identity: Any = jnp.inf) -> "BlockArray":
+        return reduce(jnp.minimum, self, identity=identity, name="min")
+
+
+def _lower_elementwise(jfn: Callable, operands, name: str) -> BlockArray:
+    tracers = [(i, o) for i, o in enumerate(operands)
+               if isinstance(o, BlockArray)]
+    if len(tracers) == 1:
+        (pos, x), = tracers
+        consts = list(operands)
+
+        def kernel(blk, _f=jfn, _consts=consts, _pos=pos):
+            args = list(_consts)
+            args[_pos] = blk
+            return _f(*args)
+
+        return x._map(kernel, name)
+    if len(tracers) == 2:
+        (pa, xa), (pb, xb) = tracers
+        consts = list(operands)
+
+        def kernel2(ba, bb, _f=jfn, _consts=consts, _pa=pa, _pb=pb):
+            args = list(_consts)
+            args[_pa], args[_pb] = ba, bb
+            return _f(*args)
+
+        return BlockArray(xa._g.zip_map(kernel2, xa._h, xb._h, name=name))
+    raise TypeError(
+        f"cannot lower {name}: at most two BlockArray operands supported")
+
+
+def elementwise(fn: Callable, name: str = "") -> Callable:
+    """Lift an arbitrary (jnp) elementwise function to tracers:
+    ``sac.elementwise(jnp.tanh)(x)``."""
+
+    def lowered(*operands):
+        return _lower_elementwise(fn, operands,
+                                  name or getattr(fn, "__name__", "elem"))
+
+    return lowered
+
+
+# ---------------------------------------------------------------------------
+# Structured combinators
+# ---------------------------------------------------------------------------
+def map_blocks(f: Callable, x: BlockArray, out_block: Optional[int] = None,
+               name: str = "") -> BlockArray:
+    """Apply ``f`` to each block ``[block, *feat]`` independently."""
+    return BlockArray(x._g.map(f, x._h, out_block=out_block, name=name))
+
+
+def zip_blocks(f: Callable, x: BlockArray, y: BlockArray,
+               out_block: Optional[int] = None, name: str = "") -> BlockArray:
+    """Apply ``f`` to aligned block pairs of two tracers."""
+    return BlockArray(x._g.zip_map(f, x._h, y._h, out_block=out_block,
+                                   name=name))
+
+
+def reduce(op: Callable, x: BlockArray, identity: Any = 0.0,
+           name: str = "") -> BlockArray:
+    """Balanced-tree reduction of an associative ``op`` (Algorithm 1);
+    any block count (odd levels pad with ``identity``)."""
+    return BlockArray(x._g.reduce_tree(op, x._h, identity=identity,
+                                       name=name))
+
+
+def stencil(f: Callable, x: BlockArray, radius: int = 1, fill: Any = None,
+            name: str = "") -> BlockArray:
+    """Sliding-window op: out block i reads blocks i-r .. i+r."""
+    return BlockArray(x._g.stencil(f, x._h, radius=radius, fill=fill,
+                                   name=name))
+
+
+def scan(op: Callable, x: BlockArray, identity: Any = 0.0,
+         name: str = "") -> BlockArray:
+    """Inclusive prefix scan of an associative ``op``."""
+    return BlockArray(x._g.scan(op, x._h, identity=identity, name=name))
+
+
+def causal(f: Callable, x: BlockArray, out_block: Optional[int] = None,
+           name: str = "") -> BlockArray:
+    """Causal op (the interval-carrying edge): out block i reads blocks
+    0..i; ``f(x_full, i)`` must restrict itself to rows < (i+1)*block."""
+    return BlockArray(x._g.causal(f, x._h, out_block=out_block, name=name))
+
+
+# ---------------------------------------------------------------------------
+# S/P composition
+# ---------------------------------------------------------------------------
+def seq(*thunks: Callable[[], Any]):
+    """S-composition.  ``with sac.seq(): ...`` orders every op traced in
+    the block strictly after the previous one (control edges in the
+    level scheduler); ``sac.seq(f, g)`` is the thunk form."""
+    g = _current_builder()
+    if thunks:
+        return g.seq(*thunks)
+    return g.seq_region()
+
+
+def par(*thunks: Callable[[], Any]):
+    """P-composition.  ``with sac.par(): ...`` makes the ops traced in
+    the block mutually independent (level-sharable), suspending the
+    innermost ``seq`` chain; ``sac.par(f, g)`` is the thunk form."""
+    g = _current_builder()
+    if thunks:
+        return g.par(*thunks)
+    return g.par_region()

@@ -1,0 +1,56 @@
+"""Public API surface: every exported name imports and old paths hold.
+
+Guards the ``repro.sac`` introduction: the new frontend is re-exported
+from ``repro.jaxsac``, while the pre-redesign entry points
+(``IncrementalReduce``, ``incremental_prefill``, ``GraphBuilder``)
+remain importable at their old paths (the last via a deprecation shim).
+"""
+import importlib
+import warnings
+
+import pytest
+
+
+@pytest.mark.parametrize("module", ["repro.sac", "repro.jaxsac"])
+def test_all_public_names_importable(module):
+    mod = importlib.import_module(module)
+    assert mod.__all__, module
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for name in mod.__all__:
+            assert getattr(mod, name) is not None, f"{module}.{name}"
+
+
+def test_old_paths_still_importable():
+    from repro.jaxsac import (BlockTensor, CompiledGraph,  # noqa: F401
+                              IncrementalReduce, dirty_from_diff,
+                              incremental_prefill, prefill_distance)
+    from repro.jaxsac.reduce import IncrementalReduce as IR2
+    from repro.jaxsac.prefill import incremental_prefill as IP2
+    assert IncrementalReduce is IR2
+    assert incremental_prefill is IP2
+
+
+def test_sac_reexported_from_jaxsac():
+    import repro.jaxsac as jx
+    import repro.sac as sac
+    assert jx.sac is sac
+    assert sac.incremental is jx.sac.incremental
+
+
+def test_graphbuilder_old_path_warns_but_works():
+    import repro.jaxsac as jx
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        gb = jx.GraphBuilder
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    from repro.jaxsac.graph import GraphBuilder
+    assert gb is GraphBuilder
+
+
+def test_dirtyset_surface():
+    from repro.jaxsac import MaskDirty, IntervalDirty
+    from repro.jaxsac.dirtyset import DIRTY_REPS, DirtySet
+    assert DIRTY_REPS == {"mask": MaskDirty, "interval": IntervalDirty}
+    assert isinstance(MaskDirty.none(4), DirtySet)
+    assert isinstance(IntervalDirty.none(4), DirtySet)

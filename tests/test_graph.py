@@ -12,9 +12,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.jaxsac import GraphBuilder, IncrementalReduce
+from repro.jaxsac import IncrementalReduce
 from repro.jaxsac.apps import GraphStringHash, stringhash_graph, \
     stringhash_oracle
+from repro.jaxsac.graph import GraphBuilder   # IR level (sac is the API)
 from repro.jaxsac.reduce import _LegacyIncrementalReduce
 
 
@@ -28,7 +29,8 @@ def assert_states_equal(cg, state_a, state_b):
 # ---------------------------------------------------------------------------
 # A ≥3-level pipeline mixing map + stencil + reduce
 # ---------------------------------------------------------------------------
-def make_pipeline(n=1024, block=8, max_sparse=16, use_pallas=False):
+def make_pipeline(n=1024, block=8, max_sparse=16, use_pallas=False,
+                  **compile_kw):
     g = GraphBuilder()
     x = g.input("x", n=n, block=block)
     y = g.map(lambda b: b * 2.0 + 1.0, x, name="affine")
@@ -36,7 +38,8 @@ def make_pipeline(n=1024, block=8, max_sparse=16, use_pallas=False):
                   + 0.5 * (w[:block] + w[2 * block:]), y, radius=1)
     t = g.reduce_tree(jnp.add, s, identity=0.0)
     g.output(t)
-    cg = g.compile(max_sparse=max_sparse, use_pallas=use_pallas)
+    cg = g.compile(max_sparse=max_sparse, use_pallas=use_pallas,
+                   **compile_kw)
     return cg
 
 
@@ -279,20 +282,20 @@ def test_stringhash_graph_complexity():
     """k-block edits touch O(k log(nb/k)) dag blocks (Theorem 4.2)."""
     n, grain = 16384, 64
     nb = n // grain                       # 256 leaf blocks
-    cg, out = stringhash_graph(n, grain, use_pallas=False)
+    h = stringhash_graph(n, grain, use_pallas=False, max_sparse=64)
     rng = np.random.default_rng(0)
     codes = rng.integers(97, 123, n).astype("int32")
     # pass the numpy array itself: CompiledGraph copies numpy inputs, so
     # the in-place edits below cannot alias the stored state
-    state = cg.init(text=codes)
+    h.run(text=codes)
     for k in (1, 4, 16):
         idx = rng.choice(nb, size=k, replace=False)
         for b in idx:
             codes[b * grain + rng.integers(grain)] = rng.integers(97, 123)
-        state, stats = cg.propagate(state, {"text": codes})
-        assert int(cg.result(state)[0, 0]) == stringhash_oracle(codes)
+        out = h.update(text=codes)
+        assert int(out[0, 0]) == stringhash_oracle(codes)
         bound = 3 * k * (1 + math.log2(1 + nb / k)) + 8
-        assert int(stats["recomputed"]) <= bound
+        assert int(h.stats["recomputed"]) <= bound
 
 
 # ---------------------------------------------------------------------------
@@ -302,11 +305,149 @@ def test_builder_rejects_bad_shapes():
     g = GraphBuilder()
     with pytest.raises(AssertionError):
         g.input("x", n=100, block=8)      # not divisible
-    x = g.input("y", n=96, block=8)
-    with pytest.raises(AssertionError):
-        g.reduce_tree(jnp.add, x)         # 12 blocks: not a power of two
     with pytest.raises(AssertionError):
         GraphBuilder().compile()
+
+
+# ---------------------------------------------------------------------------
+# Non-power-of-two block counts (odd levels pad with the op identity)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nb,block", [(12, 8), (7, 4), (13, 4), (3, 1)])
+def test_reduce_tree_odd_blocks(nb, block):
+    g = GraphBuilder()
+    x = g.input("x", n=nb * block, block=block)
+    t = g.reduce_tree(jnp.add, x, identity=0.0)
+    g.output(t)
+    cg = g.compile(max_sparse=4)
+    rng = np.random.default_rng(nb)
+    d = jnp.asarray(rng.integers(-9, 10, nb * block), jnp.float32)
+    state = cg.init(x=d)
+    assert float(cg.result(state)[0]) == float(d.sum())
+    d2 = d.at[rng.integers(nb * block)].add(3.0)
+    state, stats = cg.propagate(state, {"x": d2})
+    assert_states_equal(cg, state, cg.init(x=d2))
+    # one dirty chain up a ceil(log2 nb)-level tree (+ leaf fold)
+    assert int(stats["recomputed"]) <= 2 + math.ceil(math.log2(nb))
+
+
+@pytest.mark.parametrize("nb", [7, 13])
+def test_reduce_tree_odd_max_op(nb):
+    """Identity padding must be neutral for non-sum ops too."""
+    g = GraphBuilder()
+    x = g.input("x", n=nb, block=1)
+    t = g.reduce_tree(jnp.maximum, x, identity=-jnp.inf)
+    g.output(t)
+    cg = g.compile(max_sparse=2)
+    d = -jnp.arange(float(nb))            # max is element 0
+    state = cg.init(x=d)
+    assert float(cg.result(state)[0]) == 0.0
+    d2 = d.at[nb - 1].set(99.0)           # new max in the padded tail
+    state, _ = cg.propagate(state, {"x": d2})
+    assert float(cg.result(state)[0]) == 99.0
+    assert_states_equal(cg, state, cg.init(x=d2))
+
+
+@pytest.mark.parametrize("nb,block", [(11, 8), (5, 4)])
+def test_scan_odd_blocks(nb, block):
+    g = GraphBuilder()
+    x = g.input("x", n=nb * block, block=block)
+    sc = g.scan(jnp.add, x, identity=0.0)
+    g.output(sc)
+    cg = g.compile(max_sparse=4)
+    rng = np.random.default_rng(nb)
+    d = jnp.asarray(rng.integers(-5, 6, nb * block), jnp.float32)
+    state = cg.init(x=d)
+    np.testing.assert_allclose(np.asarray(cg.result(state)),
+                               np.cumsum(np.asarray(d)))
+    d2 = d.at[3].add(1.0)
+    state, _ = cg.propagate(state, {"x": d2})
+    assert_states_equal(cg, state, cg.init(x=d2))
+
+
+def test_incremental_reduce_odd_blocks():
+    r = IncrementalReduce(n=24, block=2, op=jnp.add, identity=0.0,
+                          max_sparse=4)          # 12 blocks: not a pow2
+    x = jnp.arange(24.0)
+    state = r.init(x)
+    assert float(r.result(state)) == float(x.sum())
+    y = x.at[17].set(-3.0)
+    state, _ = jax.jit(r.update)(state, y)
+    assert float(r.result(state)) == float(y.sum())
+
+
+# ---------------------------------------------------------------------------
+# Interval DirtySet + the causal edge kind
+# ---------------------------------------------------------------------------
+def _causal_mean(block):
+    def fn(x, i):
+        pos = jnp.arange(x.shape[0]) // block
+        w = (pos <= i).astype(x.dtype)
+        s = (x * w).sum() / w.sum()
+        return jnp.full((block,), s, x.dtype)
+
+    return fn
+
+
+@pytest.mark.parametrize("rep", ["mask", "interval"])
+def test_causal_update_equals_from_scratch(rep):
+    nb, block = 16, 4
+    g = GraphBuilder()
+    x = g.input("x", n=nb * block, block=block)
+    c = g.causal(_causal_mean(block), x)
+    g.output(c)
+    cg = g.compile(max_sparse=4, dirty=rep)
+    d = jnp.asarray(np.arange(nb * block), jnp.float32)
+    state = cg.init(x=d)
+    d2 = d.at[40].set(-5.0)               # block 10 -> dirty suffix [10, 16)
+    state, stats = cg.propagate(state, {"x": d2})
+    assert_states_equal(cg, state, cg.init(x=d2))
+    assert int(stats["recomputed"]) == nb - 10   # suffix, both reps exact
+
+
+def test_interval_rep_pipeline_matches_mask():
+    """The interval hull over-approximates but must stay bitwise sound."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1024), jnp.float32)
+    cgm = make_pipeline(max_sparse=16)
+    cgi = make_pipeline(max_sparse=16, dirty="interval")
+    sm = cgm.init(x=x)
+    si = cgi.init(x=x)
+    y2 = np.asarray(x).copy()
+    y2[17] += 1.0
+    y2[900] -= 2.0                        # two distant blocks: hull >> mask
+    y2 = jnp.asarray(y2)
+    sm, stm = cgm.propagate(sm, {"x": y2})
+    si, sti = cgi.propagate(si, {"x": y2})
+    assert_states_equal(cgm, sm, si)
+    assert int(sti["recomputed"]) >= int(stm["recomputed"])
+    assert int(sti["affected"]) >= int(stm["affected"])
+
+
+def test_autotuned_max_sparse_per_level():
+    """max_sparse="auto" calibrates a per-node crossover at the first
+    init (when feature widths are known) and stays correct."""
+    g = GraphBuilder()
+    x = g.input("x", n=1024, block=8)
+    t = g.reduce_tree(jnp.add, g.map(lambda b: b * 3.0, x), identity=0.0)
+    g.output(t)
+    cg = g.compile()                      # default: auto
+    assert cg._ks is None                 # resolved lazily at init
+    d = jnp.asarray(np.random.default_rng(1).standard_normal(1024),
+                    jnp.float32)
+    state = cg.init(x=d)
+    op_nodes = [nd for nd in cg.nodes if nd.kind != "input"]
+    assert all(1 <= cg._ks[nd.idx] <= nd.num_blocks for nd in op_nodes)
+    d2 = d.at[100].set(7.0)
+    state, _ = cg.propagate(state, {"x": d2})
+    assert_states_equal(cg, state, cg.init(x=d2))
+
+
+def test_propagate_before_init_rejected():
+    cg = make_pipeline()
+    cg2 = make_pipeline(max_sparse="auto")
+    state = cg.init(x=jnp.zeros(1024, jnp.float32))
+    with pytest.raises(AssertionError, match="init"):
+        cg2.propagate(state, {"x": jnp.zeros(1024, jnp.float32)})
 
 
 def test_propagate_rejects_unknown_input():

@@ -192,6 +192,34 @@ def test_prefill_distance():
     assert info["savings"] == 2.0
 
 
+def test_prefill_distance_equivalence_with_legacy():
+    """The DirtySet-routed mark phase must reproduce the pre-redesign
+    hand-rolled implementation exactly — same buckets, same reported
+    work savings — across random edit patterns."""
+    from repro.jaxsac.prefill import _prefill_distance_legacy
+
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        B = int(rng.integers(1, 3))
+        S = int(rng.integers(8, 200))
+        old = rng.integers(0, 50, (B, S)).astype(np.int32)
+        new = old.copy()
+        for _ in range(int(rng.integers(0, 5))):
+            new[rng.integers(B), rng.integers(S)] = rng.integers(0, 50)
+        block = int(rng.choice([1, 8, 16, 64]))
+        prefix = int(rng.choice([0, 16]))
+        got = prefill_distance(old, new, block=block, prefix_offset=prefix)
+        want = _prefill_distance_legacy(old, new, block=block,
+                                        prefix_offset=prefix)
+        assert got == want, (got, want)
+    # 1-D prompts take the other diff path
+    old = np.arange(32, dtype=np.int32)
+    new = old.copy()
+    new[20] = -1
+    assert (prefill_distance(old, new, block=8)
+            == _prefill_distance_legacy(old, new, block=8))
+
+
 @given(st.integers(0, 63), st.integers(1, 8))
 @settings(max_examples=20, deadline=None)
 def test_prefill_distance_properties(first, extra):

@@ -1,0 +1,316 @@
+"""repro.sac: the tracing frontend over both execution backends.
+
+The API contract under test: an ordinary Python function decorated with
+``@sac.incremental`` traces to one static SP-dag, and the SAME trace
+executes on the jitted graph runtime and on the paper-faithful host
+engine with bitwise-identical outputs and matching changed-block counts.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.sac as sac
+
+
+def _rand(n, seed=0, lo=-5, hi=6):
+    return np.random.default_rng(seed).integers(lo, hi, n).astype(np.float32)
+
+
+@sac.incremental(block=8)
+def pipeline(x):
+    y = x * 2.0 + 1.0
+    s = sac.stencil(lambda w: w[8:16] + 0.5 * (w[:8] + w[16:]), y, radius=1)
+    return sac.reduce(jnp.add, s, identity=0.0)
+
+
+# ---------------------------------------------------------------------------
+# The decorator + handle facade
+# ---------------------------------------------------------------------------
+def test_run_update_stats_facade():
+    h = pipeline.compile(x=512, max_sparse=8)
+    data = _rand(512)
+    out = h.run(x=data)
+    assert h.stats["phase"] == "run"
+    edited = data.copy()
+    edited[100] += 4.0
+    out2 = h.update(x=edited)
+    scratch = pipeline.compile(x=512, max_sparse=8).run(x=edited)
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(scratch))
+    st = h.stats
+    assert st["phase"] == "update" and st["dirty_inputs"] == 1
+    assert 0 < st["recomputed"] < h.cg.total_blocks
+    # stats is a snapshot, not a live view
+    snap = h.stats
+    h.update(x=edited)
+    assert snap["phase"] == "update"
+
+
+def test_compile_requires_all_input_sizes():
+    with pytest.raises(TypeError, match="missing"):
+        pipeline.compile(max_sparse=8)
+
+
+def test_update_before_run_raises():
+    h = pipeline.compile(x=64)
+    with pytest.raises(RuntimeError):
+        h.update(x=np.zeros(64, np.float32))
+
+
+def test_unknown_backend():
+    with pytest.raises(ValueError, match="backend"):
+        pipeline.compile("tpu-v9", x=64)
+
+
+def test_input_spec_forms():
+    data = _rand(256)
+    for spec in (256, (256,), data):
+        h = pipeline.compile(x=spec, max_sparse=4)
+        np.testing.assert_array_equal(np.asarray(h.run(x=data)),
+                                      np.asarray(pipeline.compile(
+                                          x=256, max_sparse=4).run(x=data)))
+
+
+def test_per_input_block_dict():
+    @sac.incremental(block={"a": 8, "b": 4})
+    def prog(a, b):
+        return sac.reduce(jnp.add, a), sac.reduce(jnp.add, b)
+
+    h = prog.compile(a=64, b=32, max_sparse=4)
+    assert h.cg.nodes[h.cg.input_names["a"]].block == 8
+    assert h.cg.nodes[h.cg.input_names["b"]].block == 4
+
+
+# ---------------------------------------------------------------------------
+# Operator overloading + ufunc interception
+# ---------------------------------------------------------------------------
+def test_operators_and_ufuncs_lower_to_jnp():
+    @sac.incremental(block=4)
+    def prog(a, b):
+        u = np.tanh(a)                   # unary numpy ufunc -> jnp.tanh
+        v = np.maximum(a, b)             # binary ufunc, two tracers
+        w = np.add(1.0, v)               # ufunc with a leading constant
+        z = (2.0 * u - w / 4.0) ** 2
+        z = -z + abs(b)
+        return sac.reduce(jnp.add, z)
+
+    h = prog.compile(a=64, b=64, max_sparse=4)
+    a, b = _rand(64, 1), _rand(64, 2)
+    out = h.run(a=a, b=b)
+    want = (-((2 * np.tanh(a) - (1 + np.maximum(a, b)) / 4) ** 2)
+            + np.abs(b)).sum()
+    np.testing.assert_allclose(float(out[0]), float(want), rtol=1e-5)
+
+
+def test_jnp_coercion_raises():
+    # jnp functions coerce eagerly and cannot see the tracer; whether
+    # jax consults __jax_array__ (our pointed message) or rejects the
+    # argument itself, the failure must be a TypeError at trace time,
+    # never a silently-concretized value.
+    @sac.incremental(block=4)
+    def prog(x):
+        return jnp.tanh(x)
+
+    with pytest.raises(TypeError):
+        prog.compile(x=16)
+
+
+def test_elementwise_lifts_arbitrary_fn():
+    @sac.incremental(block=4)
+    def prog(x):
+        return sac.reduce(jnp.add, sac.elementwise(jnp.tanh)(x))
+
+    h = prog.compile(x=32, max_sparse=4)
+    d = _rand(32, 3)
+    np.testing.assert_allclose(float(h.run(x=d)[0]),
+                               float(np.tanh(d).sum()), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# seq/par context managers
+# ---------------------------------------------------------------------------
+def test_seq_context_manager_orders_ops():
+    @sac.incremental(block=4)
+    def prog(x):
+        with sac.seq():
+            a = x + 1.0
+            b = x * 2.0                  # no data edge, but seq-ordered
+        return a, b
+
+    h = prog.compile(x=32)
+    a_h, b_h = h.out_handles
+    assert h.cg.level_of[b_h.idx] > h.cg.level_of[a_h.idx]
+
+
+def test_par_inside_seq_shares_level():
+    @sac.incremental(block=4)
+    def prog(x):
+        with sac.seq():
+            pre = x + 1.0
+            with sac.par():
+                a = pre * 2.0
+                b = pre * 3.0
+            post = sac.zip_blocks(lambda u, v: u + v, a, b)
+        return post, a, b
+
+    h = prog.compile(x=32)
+    post_h, a_h, b_h = h.out_handles
+    assert h.cg.level_of[a_h.idx] == h.cg.level_of[b_h.idx]
+    assert h.cg.level_of[post_h.idx] > h.cg.level_of[a_h.idx]
+
+
+def test_seq_par_outside_trace_raise():
+    with pytest.raises(RuntimeError, match="outside"):
+        sac.seq()
+    with pytest.raises(RuntimeError, match="outside"):
+        sac.par()
+
+
+# ---------------------------------------------------------------------------
+# Backend parity (the core contract; broader sweeps in test_sac_property)
+# ---------------------------------------------------------------------------
+def _both(prog, edits, **inputs):
+    hg = prog.compile(max_sparse=4, **inputs)
+    hh = prog.compile("host", **inputs)
+    arrays = {k: v for k, v in inputs.items()}
+    og, oh = hg.run(**arrays), hh.run(**arrays)
+    yield hg, hh, og, oh
+    for ed in edits:
+        og, oh = hg.update(**ed), hh.update(**ed)
+        yield hg, hh, og, oh
+
+
+def _assert_same(og, oh):
+    if not isinstance(og, tuple):
+        og, oh = (og,), (oh,)
+    for a, b in zip(og, oh):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_host_graph_parity_all_op_kinds():
+    @sac.incremental(block=4)
+    def prog(x, y):
+        with sac.par():
+            u = x + y                    # zip_map
+            v = sac.stencil(lambda w: w[4:8] + w[:4] - w[8:], x,
+                            radius=1)    # stencil (clamped)
+        f = sac.stencil(lambda w: w[4:8] * 0.5 + w[8:], y, radius=1,
+                        fill=1.0)        # stencil (filled)
+        s = sac.scan(jnp.add, u)         # agg + escan + local
+        t = sac.reduce(jnp.maximum, v, identity=-jnp.inf)
+        return s, t, f
+
+    x, y = _rand(48, 5), _rand(48, 6)    # 12 blocks: not a power of two
+    x2 = x.copy(); x2[13] = 9.0
+    y2 = y.copy(); y2[0] -= 1.0; y2[47] += 2.0
+    for hg, hh, og, oh in _both(prog, [dict(x=x2), dict(y=y2)], x=x, y=y):
+        _assert_same(og, oh)
+        if hg.stats.get("phase") == "update":
+            assert hg.stats["affected"] == hh.stats["affected"]
+            assert hg.stats["dirty_inputs"] == hh.stats["dirty_inputs"]
+
+
+def test_host_backend_work_span_accounting():
+    """The host backend reports the paper's exact counters and realizes
+    O(k)-ish propagation work for a 1-block edit."""
+    @sac.incremental(block=4)
+    def prog(x):
+        return sac.reduce(jnp.add, x * 1.5)
+
+    h = prog.compile("host", x=64)
+    d = _rand(64, 7)
+    h.run(x=d)
+    full_work = h.stats["work"]
+    assert full_work > 0 and h.stats["span"] > 0
+    d2 = d.copy(); d2[30] += 1.0
+    h.update(x=d2)
+    st = h.stats
+    assert 0 < st["work"] < full_work
+    assert st["recomputed"] <= 2 + int(np.ceil(np.log2(16)))
+
+
+def test_host_value_cutoff_stops_propagation():
+    @sac.incremental(block=4)
+    def prog(x):
+        return sac.reduce(jnp.add, sac.map_blocks(
+            lambda b: jnp.clip(b, 0.0, 1.0), x))
+
+    h = prog.compile("host", x=64)
+    d = np.full(64, 5.0, np.float32)     # saturates to 1 everywhere
+    h.run(x=d)
+    d2 = d.copy(); d2[10] = 9.0          # still saturates
+    out = h.update(x=d2)
+    assert float(out[0]) == 64.0
+    assert h.stats["recomputed"] == 1    # the map block only
+    assert h.stats["affected"] == 0
+
+
+def test_causal_via_frontend_both_backends():
+    block = 4
+
+    def cmean(x, i):
+        pos = jnp.arange(x.shape[0]) // block
+        w = (pos <= i).astype(x.dtype)
+        return jnp.full((block,), (x * w).sum() / w.sum(), x.dtype)
+
+    @sac.incremental(block=block)
+    def prog(x):
+        return sac.causal(cmean, x)
+
+    x = _rand(32, 8)
+    x2 = x.copy(); x2[20] = 7.0          # block 5 -> suffix [5, 8)
+    for hg, hh, og, oh in _both(prog, [dict(x=x2)], x=x):
+        _assert_same(og, oh)
+    assert hg.stats["recomputed"] == 3   # suffix blocks 5, 6, 7
+
+
+# ---------------------------------------------------------------------------
+# Ports: the named apps go through the frontend (acceptance criteria)
+# ---------------------------------------------------------------------------
+def test_stringhash_via_both_backends():
+    from repro.jaxsac.apps import stringhash_graph, stringhash_oracle
+
+    n, grain = 1024, 64
+    rng = np.random.default_rng(0)
+    codes = rng.integers(97, 123, n).astype(np.int32)
+    hg = stringhash_graph(n, grain, max_sparse=8)
+    hh = stringhash_graph(n, grain, backend="host")
+    og, oh = hg.run(text=codes), hh.run(text=codes)
+    _assert_same(og, oh)
+    assert int(og[0, 0]) == stringhash_oracle(codes)
+    codes[100] = 98
+    og, oh = hg.update(text=codes), hh.update(text=codes)
+    _assert_same(og, oh)
+    assert int(og[0, 0]) == stringhash_oracle(codes)
+    assert hg.stats["affected"] == hh.stats["affected"]
+
+
+def test_stringhash_non_pow2_blocks_matches_oracle():
+    """Regression: the combine's identity is the PAIR (0, 1); a scalar 0
+    would annihilate the hash on identity-padded odd reduce levels."""
+    from repro.jaxsac.apps import stringhash_graph, stringhash_oracle
+
+    n, grain = 960, 64                   # 15 leaf blocks: odd levels
+    rng = np.random.default_rng(1)
+    codes = rng.integers(97, 123, n).astype(np.int32)
+    hg = stringhash_graph(n, grain, max_sparse=4)
+    hh = stringhash_graph(n, grain, backend="host")
+    og, oh = hg.run(text=codes), hh.run(text=codes)
+    _assert_same(og, oh)
+    assert int(og[0, 0]) == stringhash_oracle(codes)
+    codes[900] = 97
+    og = hg.update(text=codes)
+    _assert_same(og, hh.update(text=codes))
+    assert int(og[0, 0]) == stringhash_oracle(codes)
+
+
+def test_graphbuilder_deprecation_shim():
+    import repro.jaxsac as jx
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        gb_cls = jx.GraphBuilder
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    from repro.jaxsac.graph import GraphBuilder
+    assert gb_cls is GraphBuilder        # the shim IS the IR builder
