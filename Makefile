@@ -16,7 +16,10 @@ bench:
 bench-graph:
 	$(PY) -m benchmarks.graph_pipeline
 
-# CI gate: tiny-size update-latency + recompute check against the
-# committed results/bench/BENCH_graph.json baseline (>2x fails).
+# CI gate: tiny-size update-latency / recompute / speedup check against
+# the committed results/bench/BENCH_graph.json baseline (>2x fails),
+# plus the headline gate-row assertion — change propagation must beat
+# from-scratch wall-clock (paired-median speedup >= 1.0 on the pipeline
+# n=2^21 >= 262144, k=1 row).
 bench-check:
 	$(PY) -m benchmarks.graph_pipeline --check

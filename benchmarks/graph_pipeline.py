@@ -1,10 +1,12 @@
 """Graph-runtime benchmark: recomputed blocks + update latency across k.
 
-Traces two programs through the ``@sac.incremental`` frontend —
+Traces three programs through the ``@sac.incremental`` frontend —
 
   * ``pipeline``   — map -> stencil -> balanced reduce (>= 3 dag levels
     mixing elementwise and tree work), the canonical static block program;
   * ``stringhash`` — the Rabin-Karp host app as a traced program;
+  * ``causal``     — a carry-monoid causal op (int32 prefix statistics),
+    the block-skip cached-carry path (``kernels.dirty_causal``);
 
 then, for a sweep of edit sizes k (dirty input blocks), measures
 
@@ -19,13 +21,15 @@ the graph-runtime analogue of the paper's work-savings / self-speedup
 tables.  Results print as rows and merge into
 ``results/bench/BENCH_graph.json`` (keyed by app/n/block/k).
 
-``--check`` runs the tiny size and compares update latency against the
-committed baseline rows instead of overwriting them: any (app, k) whose
-``update_ms`` regresses beyond ``--threshold`` (default 2x) fails the
-process — the `make bench-check` CI gate.
+``--check`` runs the tiny size and compares update latency, recompute
+counts, AND speedup against the committed baseline rows instead of
+overwriting them; it then runs the gate row (pipeline, n = GATE_N =
+2^21 >= 262144, k_blocks = 1) and asserts a paired-median
+``speedup >= 1.0`` — the paper's headline claim that change propagation
+beats from-scratch in wall-clock, enforced in CI (`make bench-check`).
 
 Usage:  PYTHONPATH=src python -m benchmarks.graph_pipeline
-            [--size tiny|quick|full] [--check] [--threshold 2.0]
+            [--size tiny|quick|medium|full] [--check] [--threshold 2.0]
 """
 from __future__ import annotations
 
@@ -45,21 +49,37 @@ BASELINE = RESULTS / "BENCH_graph.json"
 SIZES = {                       # name -> (n, block/grain, ks)
     "tiny": (1 << 10, 16, [1, 4, 16]),
     "quick": (1 << 14, 16, [1, 4, 16, 64]),
-    "full": (1 << 18, 64, [1, 4, 16, 64, 256, 1024]),
+    "medium": (1 << 18, 64, [1, 4, 16, 64, 256]),
+    "full": (1 << 20, 64, [1, 4, 16, 64, 256, 1024]),
+    "xl": (1 << 21, 64, [1]),   # the gate row
 }
+# The CI speedup gate: update must beat from-scratch wall-clock on a
+# row with n >= 262144 and a single-block edit.  On CPU backends the
+# genuine crossover sits around 2^20 (propagation is dispatch-bound
+# while from-scratch grows linearly — see DESIGN.md
+# §Propagation-cost-model), so the gate row uses 2^21 where the margin
+# is ~1.5-1.8x rather than within timer noise.
+GATE_N, GATE_BLOCK = 1 << 21, 64
 # Timer-noise floor for --check: latencies below this many ms are
 # considered equal (CI machines jitter far more than the runtime does).
 NOISE_FLOOR_MS = 1.0
 
 
-def _time(f, *args, reps: int = 5, **kw):
+def _time(f, *args, reps: int = 9, **kw):
+    """Best-of-reps latency: every rep is individually fenced with
+    ``block_until_ready`` and the minimum is reported — the standard
+    interference-robust estimator (first-touch allocator/cache warmup
+    and noisy-neighbour stalls inflate individual reps up to ~3x on
+    shared CI machines, and they only ever inflate)."""
     out = f(*args, **kw)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    jax.block_until_ready(out)          # compile + warm
+    ts = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = f(*args, **kw)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e3, out
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts)) * 1e3, out
 
 
 def _edit(rng, data: np.ndarray, k_blocks: int, block: int) -> np.ndarray:
@@ -86,7 +106,7 @@ def pipeline_program(block: int):
 
 
 def _sweep(handle, total_blocks, levels, app, n, block, ks, data, seed,
-           input_name="x", check=None, reps: int = 3):
+           input_name="x", check=None, reps: int = 5):
     rng = np.random.default_rng(seed)
     scratch_ms, _ = _time(handle.run, {input_name: jnp.asarray(data)})
     rows = []
@@ -99,11 +119,13 @@ def _sweep(handle, total_blocks, levels, app, n, block, ks, data, seed,
         # measure the no-op path).
         jax.block_until_ready(handle.update({input_name: new_j}))
         stats = handle.stats
-        t0 = time.perf_counter()
+        ts = []
         for _ in range(reps):
-            handle.update({input_name: old_j})
+            t0 = time.perf_counter()
+            jax.block_until_ready(handle.update({input_name: old_j}))
             jax.block_until_ready(handle.update({input_name: new_j}))
-        upd_ms = (time.perf_counter() - t0) / (2 * reps) * 1e3
+            ts.append((time.perf_counter() - t0) / 2)
+        upd_ms = float(np.min(ts)) * 1e3      # best-of-reps (see _time)
         data = new
         if check is not None:
             check(app, data)
@@ -143,11 +165,38 @@ def bench_stringhash(n: int, grain: int, ks, seed: int = 0):
     return rows
 
 
+def causal_program(block: int):
+    """Carry-monoid causal op (int32, exact -> block-skip cached-carry
+    path): out block i = block i shifted by the running sum of all
+    previous blocks' aggregates."""
+    from repro import sac
+
+    @sac.incremental(block=block)
+    def causal_app(x):
+        return sac.causal(
+            None, x,
+            lift=lambda b: b.sum(),
+            op=jnp.add,
+            finalize=lambda s, b: (b + s) % jnp.int32(1 << 20),
+            identity=0)
+
+    return causal_app
+
+
+def bench_causal(n: int, block: int, ks, seed: int = 0):
+    h = causal_program(block).compile(x=n, max_sparse=64)
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 120, n).astype(np.int32)
+    return _sweep(h, h.cg.total_blocks, h.cg.num_levels, "causal",
+                  n, block, ks, codes, seed)
+
+
 def run(size: str = "quick", seed: int = 0):
     n, block, ks = SIZES[size]
-    grain = 64 if size == "full" else block * 4
+    grain = block * 4 if size in ("tiny", "quick") else 64
     rows = bench_pipeline(n, block, ks, seed)
     rows += bench_stringhash(n, grain, ks, seed)
+    rows += bench_causal(n, block, ks, seed)
     return rows
 
 
@@ -169,8 +218,10 @@ def write_json(rows) -> Path:
 
 def check_regression(rows, threshold: float) -> int:
     """Compare fresh rows against the committed baseline; returns the
-    number of regressions (update latency beyond threshold, or any
-    increase in recomputed blocks — the machine-independent signal)."""
+    number of regressions: update latency beyond threshold, any increase
+    in recomputed blocks (the machine-independent signal), or a speedup
+    drop beyond threshold on rows where both latencies clear the timer
+    noise floor."""
     if not BASELINE.exists():
         print(f"  no baseline at {BASELINE}; run without --check first")
         return 1
@@ -192,10 +243,62 @@ def check_regression(rows, threshold: float) -> int:
             print(f"  REGRESSION {tag}: update_ms {b['update_ms']} -> "
                   f"{r['update_ms']} (> {threshold}x)")
             bad += 1
+        elif (min(r["update_ms"], r["scratch_ms"]) > NOISE_FLOOR_MS
+                and r["speedup"] * threshold < b["speedup"]):
+            print(f"  REGRESSION {tag}: speedup {b['speedup']} -> "
+                  f"{r['speedup']} (> {threshold}x drop)")
+            bad += 1
         else:
             print(f"  ok {tag}: update_ms {b['update_ms']} -> "
-                  f"{r['update_ms']}, recomputed {r['recomputed']}")
+                  f"{r['update_ms']}, speedup {b['speedup']} -> "
+                  f"{r['speedup']}, recomputed {r['recomputed']}")
     return bad
+
+
+def check_speedup_gate(reps: int = 12) -> int:
+    """The headline gate: on the pipeline gate row (n = GATE_N >=
+    262144, single-block edit) change propagation must beat from-scratch
+    wall-clock — ``speedup >= 1.0``.
+
+    Measurement is *paired and interleaved*: each round times one fenced
+    update pair and one fenced from-scratch run back-to-back, and the
+    gate asserts on the median of the per-round ratios.  Shared CI
+    machines drift by 2-3x on a scale of seconds; pairing makes that
+    common-mode (a stall inflates both sides of the same round) instead
+    of randomly flattering whichever side was measured in the quiet
+    window."""
+    prog = pipeline_program(GATE_BLOCK)
+    upd = prog.compile(x=GATE_N, max_sparse=64)
+    scr = prog.compile(x=GATE_N, max_sparse=64)
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal(GATE_N).astype(np.float32)
+    new = _edit(rng, data, 1, GATE_BLOCK)
+    old_j, new_j = jnp.asarray(data), jnp.asarray(new)
+    jax.block_until_ready(upd.run({"x": old_j}))
+    jax.block_until_ready(scr.run({"x": old_j}))
+    # warm both edit directions' plans
+    jax.block_until_ready(upd.update({"x": new_j}))
+    jax.block_until_ready(upd.update({"x": old_j}))
+    ratios, upds, scrs = [], [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(upd.update({"x": new_j}))
+        jax.block_until_ready(upd.update({"x": old_j}))
+        t_upd = (time.perf_counter() - t0) / 2
+        t0 = time.perf_counter()
+        jax.block_until_ready(scr.run({"x": new_j}))
+        t_scr = time.perf_counter() - t0
+        ratios.append(t_scr / t_upd)
+        upds.append(t_upd)
+        scrs.append(t_scr)
+    speedup = float(np.median(ratios))
+    ok = speedup >= 1.0
+    verdict = "ok" if ok else "FAIL"
+    print(f"  {verdict} speedup gate: pipeline n={GATE_N} k=1 "
+          f"update {np.median(upds)*1e3:.2f}ms vs scratch "
+          f"{np.median(scrs)*1e3:.2f}ms -> paired-median speedup "
+          f"{speedup:.2f} (need >= 1.0)")
+    return 0 if ok else 1
 
 
 def main() -> None:
@@ -204,12 +307,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="alias for --size full")
     ap.add_argument("--check", action="store_true",
-                    help="tiny-size latency check vs the committed baseline")
+                    help="tiny-size latency check vs the committed baseline "
+                         "+ the n=2^21 gate-row speedup assertion")
     ap.add_argument("--threshold", type=float, default=2.0)
     args = ap.parse_args()
     if args.check:
         rows = run(size="tiny")
-        sys.exit(1 if check_regression(rows, args.threshold) else 0)
+        bad = check_regression(rows, args.threshold)
+        bad += check_speedup_gate()
+        sys.exit(1 if bad else 0)
     rows = run(size="full" if args.full else args.size)
     for r in rows:
         print("  " + ", ".join(f"{k}={v}" for k, v in r.items()))

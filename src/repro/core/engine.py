@@ -112,7 +112,12 @@ class Engine:
     # ------------------------------------------------------------------
     # write (Algorithm 2)
     # ------------------------------------------------------------------
-    def write(self, dest: Mod, value: Any) -> None:
+    def write(self, dest: Mod, value: Any, *, counted: bool = True) -> None:
+        """Algorithm-2 write.  ``counted=False`` writes (internal mods of
+        a lowered combinator, e.g. the host backend's Ladner-Fischer scan
+        tree) keep the value-equality cutoff and mark-walk semantics but
+        stay out of ``changed_writes``, so per-block 'affected' counts
+        remain comparable across backends."""
         self.stats.writes += 1
         self.stats.work += 1
         self.stats.span += 1
@@ -127,7 +132,7 @@ class Engine:
                 dest.writer = self.current_scope
                 dest.write_epoch = self.epoch
             dest.val = value
-            if not unwritten:
+            if not unwritten and counted:
                 self.stats.changed_writes += 1
             # Mark all readers (and their ancestors) as pending re-execution.
             for reader in dest.readers:
@@ -419,7 +424,7 @@ class StaticEngine:
         self.stats.work += work
         self.stats.span += work if span is None else span
 
-    def write(self, dest: Mod, value: Any) -> None:
+    def write(self, dest: Mod, value: Any, *, counted: bool = True) -> None:
         self.stats.writes += 1
         self.stats.work += 1
         self.stats.span += 1

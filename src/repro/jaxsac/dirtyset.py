@@ -38,7 +38,10 @@ value-equality cutoff after a recompute: the changed set is the dirty set
 intersected with the blocks whose value actually changed.
 
 Everything is jit-compatible: members are (traced) jax arrays; the
-representation choice itself is static per compilation.
+representation choice itself is static per compilation.  Both
+representations are registered as jax pytrees so DirtySets can flow
+through ``lax.cond`` branches (the compiled propagate's whole-level skip
+returns the level's changed sets from both arms of a cond).
 """
 from __future__ import annotations
 
@@ -66,6 +69,9 @@ class DirtySet(Protocol):
     def dilate(self, radius: int) -> "DirtySet": ...
     def prefix_shift(self) -> "DirtySet": ...
     def suffix(self) -> "DirtySet": ...
+    # first dirty block index (num_blocks when empty) — the seed point of
+    # the block-skip causal/escan recompute
+    def start(self) -> jax.Array: ...
     # Algorithm-2 value cutoff after a recompute
     def meet_diff(self, old: jax.Array, new: jax.Array,
                   block: int) -> "DirtySet": ...
@@ -74,6 +80,7 @@ class DirtySet(Protocol):
 # ---------------------------------------------------------------------------
 # Exact per-block mask (the historical representation)
 # ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class MaskDirty:
     """Exact dirty set: one bool per block."""
@@ -85,9 +92,23 @@ class MaskDirty:
         return cls(jnp.zeros((num_blocks,), bool))
 
     @classmethod
+    def from_mask(cls, mask: jax.Array) -> "MaskDirty":
+        return cls(mask)
+
+    @classmethod
     def from_diff(cls, old: jax.Array, new: jax.Array,
                   block: int) -> "MaskDirty":
         return cls(dirty_from_diff(old, new, block))
+
+    @classmethod
+    def from_changed_lanes(cls, idx: jax.Array, lane_changed: jax.Array,
+                           num_blocks: int) -> "MaskDirty":
+        """Changed set from the sparse regime's lane-local cutoff: the
+        gathered dirty lanes ``idx`` (sentinels == num_blocks) whose
+        recomputed value differed.  O(num_blocks) scatter instead of an
+        O(n) full-array compare."""
+        zero = jnp.zeros((num_blocks,), bool)
+        return cls(zero.at[idx].set(lane_changed, mode="drop"))
 
     @property
     def num_blocks(self) -> int:
@@ -131,6 +152,11 @@ class MaskDirty:
         # out block j reads blocks <= j: inclusive prefix-OR.
         return MaskDirty(jnp.cumsum(self.mask.astype(jnp.int32)) > 0)
 
+    def start(self) -> jax.Array:
+        nb = self.num_blocks
+        idx = jnp.arange(nb)
+        return jnp.min(jnp.where(self.mask, idx, nb)).astype(jnp.int32)
+
     # ---- value cutoff ------------------------------------------------
     def meet_diff(self, old: jax.Array, new: jax.Array,
                   block: int) -> "MaskDirty":
@@ -140,6 +166,7 @@ class MaskDirty:
 # ---------------------------------------------------------------------------
 # Suffix/interval hull (O(1) space; exact for causal programs)
 # ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class IntervalDirty:
     """Dirty set as the half-open block interval hull ``[lo, hi)``.
@@ -170,6 +197,17 @@ class IntervalDirty:
     def from_diff(cls, old: jax.Array, new: jax.Array,
                   block: int) -> "IntervalDirty":
         return cls.from_mask(dirty_from_diff(old, new, block))
+
+    @classmethod
+    def from_changed_lanes(cls, idx: jax.Array, lane_changed: jax.Array,
+                           num_blocks: int) -> "IntervalDirty":
+        """Hull of the changed lanes (sentinels == num_blocks dropped)."""
+        valid = lane_changed & (idx < num_blocks)
+        nonempty = jnp.any(valid)
+        lo = jnp.min(jnp.where(valid, idx, num_blocks))
+        hi = jnp.max(jnp.where(valid, idx + 1, 0))
+        return cls(jnp.where(nonempty, lo, 0).astype(jnp.int32),
+                   jnp.where(nonempty, hi, 0).astype(jnp.int32), num_blocks)
 
     def _make(self, lo, hi, nb=None) -> "IntervalDirty":
         nb = self.num_blocks if nb is None else nb
@@ -217,6 +255,10 @@ class IntervalDirty:
         # (lo, hi) pair (prefill.py).
         return self._make(self.lo,
                           jnp.where(self.any(), self.num_blocks, 0))
+
+    def start(self) -> jax.Array:
+        return jnp.where(self.any(), self.lo,
+                         self.num_blocks).astype(jnp.int32)
 
     # ---- value cutoff ------------------------------------------------
     def meet_diff(self, old: jax.Array, new: jax.Array,

@@ -67,10 +67,12 @@ class GNode:
     deps: Tuple[int, ...]           # data-edge predecessors (node idxs)
     control: Tuple[int, ...] = ()   # S-composition predecessors (node idxs)
     fn: Optional[Callable] = None   # per-block function (map/zip_map/stencil)
-    op: Optional[Callable] = None   # combining op (reduce_level/escan)
+    op: Optional[Callable] = None   # combining op (reduce_level/escan/carry)
     identity: Any = None            # identity of ``op`` (fill / scan seed)
     radius: int = 0                 # stencil radius (blocks)
     fill: Any = None                # stencil boundary fill (None = clamp)
+    lift: Optional[Callable] = None      # carry-causal: block -> state
+    finalize: Optional[Callable] = None  # carry-causal: (state, block) -> out
     name: str = ""
 
     @property
@@ -233,8 +235,12 @@ class GraphBuilder:
         return self._add("stencil", x.num_blocks, x.block, (x.idx,), fn=f,
                          radius=radius, fill=fill, name=name or "stencil")
 
-    def causal(self, f: Callable, x: Handle, out_block: Optional[int] = None,
-               name: str = "") -> Handle:
+    def causal(self, f: Optional[Callable], x: Handle,
+               out_block: Optional[int] = None, name: str = "", *,
+               lift: Optional[Callable] = None,
+               op: Optional[Callable] = None,
+               finalize: Optional[Callable] = None,
+               identity: Any = 0.0) -> Handle:
         """Causal op: out block i reads parent blocks 0 .. i (inclusive).
 
         This is the interval-carrying edge kind: its dirty transfer is
@@ -248,8 +254,32 @@ class GraphBuilder:
         rows ``< (i+1) * block`` (e.g. via a causal mask computed from
         ``i``) — the runtime relies on that contract for incremental
         soundness and may zero-fill rows beyond the prefix.
+
+        **Carry form** (``lift``/``op``/``finalize`` given, ``f`` may be
+        None): the prefix dependence is declared as a monoid —
+
+            out block i = finalize(states[i], block_i),
+            states[i]   = fold(op, lift(block_0) .. lift(block_i))
+
+        with ``op`` associative and ``identity`` its identity.  The
+        runtime then caches the per-block carry ``states`` in the
+        propagation state: a dirty suffix recombines the cached prefix
+        state in O(suffix) work instead of rescanning the full prefix per
+        block (the flash-style block-skip; the running-softmax state of
+        streaming attention is exactly such a monoid).  Propagation cost
+        drops from O(suffix * n) to O(n) dense work, and on the Pallas
+        path clean tiles are skipped entirely
+        (``repro.kernels.dirty_causal``).
         """
         ob = x.block if out_block is None else out_block
+        if lift is not None or op is not None or finalize is not None:
+            assert lift is not None and op is not None \
+                and finalize is not None, (
+                    "carry-causal needs all of lift/op/finalize")
+            return self._add("causal", x.num_blocks, ob, (x.idx,), fn=f,
+                             lift=lift, op=op, finalize=finalize,
+                             identity=identity, name=name or "causal")
+        assert f is not None, "causal needs f(x, i) or a carry spec"
         return self._add("causal", x.num_blocks, ob, (x.idx,), fn=f,
                          name=name or "causal")
 
@@ -348,7 +378,9 @@ class GraphBuilder:
 
     def compile(self, max_sparse="auto", use_pallas="auto",
                 interpret: Optional[bool] = None, pallas_tile: int = 8,
-                dirty: str = "mask"):
+                dirty: str = "mask", donate: bool = True,
+                block_skip="auto", level_skip: bool = True,
+                plan: bool = True):
         """Level-schedule the dag and build the jitted runtime.
 
         ``max_sparse="auto"`` calibrates the sparse/dense crossover per
@@ -356,12 +388,41 @@ class GraphBuilder:
         the old constant behaviour.  ``dirty`` picks the DirtySet
         representation: ``"mask"`` (exact per-block) or ``"interval"``
         (suffix/interval hull — O(1) space, exact for causal programs).
+
+        ``donate=True`` (default) donates the state to the jitted
+        propagate, so untouched node values alias through and sparse
+        recomputes scatter in place instead of copying every node's
+        buffer; a state read (``value``/``result``) becomes invalid once
+        that state is passed to a later ``propagate`` — copy first if you
+        need it across updates.  ``donate=False`` restores the old
+        copying behaviour.
+
+        ``block_skip`` routes escan / carry-causal recomputes through the
+        block-skip path that reseeds from cached carry state:
+        ``"auto"`` enables it only for exactly-associative dtypes (ints /
+        bools — bitwise-safe re-bracketing), ``True`` forces it (floats
+        re-associate at ulp level), ``False`` keeps the dense rescan.
+
+        ``plan=True`` (default) splits propagation into the paper's mark
+        and recompute phases: a tiny jitted mark pass over-approximates
+        every node's dirty count (no value cutoff), the host freezes a
+        per-node skip/sparse/dense plan from it, and a plan-specialized
+        recompute executable runs with no in-graph branching — clean
+        nodes simply do not appear in it.  One executable is compiled
+        and cached per distinct plan.  ``plan=False`` keeps the single
+        executable with runtime ``lax.cond`` regime picks.
+
+        ``level_skip=True`` additionally wraps all-tiny schedule levels
+        of the plan=False executable in one ``lax.cond`` on their
+        aggregate dirty count (clean level = one scalar compare).
         """
         from .graph_compile import CompiledGraph
 
         return CompiledGraph(self, max_sparse=max_sparse,
                              use_pallas=use_pallas, interpret=interpret,
-                             pallas_tile=pallas_tile, dirty=dirty)
+                             pallas_tile=pallas_tile, dirty=dirty,
+                             donate=donate, block_skip=block_skip,
+                             level_skip=level_skip, plan=plan)
 
 
 class _SeqRegion:

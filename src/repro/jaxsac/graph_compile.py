@@ -20,15 +20,43 @@ proceed in parallel under P nodes — so their masked recomputes execute in
 one fused pass per level under jit (XLA sees a straight-line program with
 no cross-node ordering inside a level).
 
+The propagation *latency* model (DESIGN.md §Propagation-cost-model) is
+what shapes the hot path; a small edit must beat from-scratch in
+wall-clock, not just in blocks recomputed:
+
+  * **donated, in-place state** — the state tuple is donated to the
+    jitted propagate (``donate_argnums=0``), so untouched node values
+    alias straight through to the output and the sparse regime's scatter
+    updates the node's buffer in place.  Without donation every update
+    paid one full copy of every node's value (O(total state) memcpy —
+    the dominant fixed cost at medium sizes).
+  * **lane-local value cutoff** — the sparse regime compares only the
+    <= k recomputed lanes against their old values (O(k) + an O(nb)
+    scatter), never a full O(n) array compare.
+  * **whole-level skip** — each level's recomputes run under one
+    ``lax.cond`` on the level's aggregate dirty count: once the cutoff
+    kills propagation, every remaining level costs one scalar compare.
+  * **level packing** — same-kind nodes of a level that share the same
+    per-block function (common under ``par``: parallel reduce trees,
+    replicated map pipelines) are recomputed by ONE batched
+    gather -> fn -> scatter, one kernel launch per level instead of per
+    node.
+  * **block-skip carries** — ``escan`` and carry-causal nodes reseed
+    from the cached carry state of the previous run instead of
+    rescanning their prefix (``graph_ops.escan_block_skip`` /
+    ``causal_carry_refold``; the Pallas tile-skipping variant is
+    ``kernels.dirty_causal``), gated to exactly-associative dtypes so
+    the bitwise cutoff stays sound.
+
 Per node, per update, the runtime picks between two identical-result
 regimes by dirty count (the TPU translation of the paper's observation
 that from-scratch wins past a crossover update size, generalized from
 ``reduce.py``):
 
   * sparse — gather the <= max_sparse dirty blocks, recompute, scatter;
-  * dense  — one masked pass over all blocks; elementwise/pair levels
-    (map / zip_map / reduce_level) route through the Pallas dirty-tile
-    kernel (``kernels.dirty_map``) when eligible, which skips clean tiles
+  * dense  — one masked pass over all blocks; elementwise/pair/stencil
+    levels route through the Pallas dirty-tile kernel
+    (``kernels.dirty_map``) when eligible, which skips clean tiles
     entirely via scalar-prefetched flags.
 
 ``stats['recomputed']`` counts recomputed blocks (the realized computation
@@ -36,6 +64,7 @@ distance W_delta), ``stats['affected']`` the value-changed blocks.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -71,12 +100,24 @@ def _own_inputs(inputs: Dict[str, Any]) -> Dict[str, Any]:
             for k, v in inputs.items()}
 
 
+def _is_carry(nd: GNode) -> bool:
+    return nd.kind == "causal" and nd.op is not None
+
+
 class CompiledGraph:
+    # Nodes with at most this many blocks always take the plain dense
+    # masked pass: recomputing every row is cheaper than the sparse
+    # regime's gather/scatter op chain (see _recompute).
+    TINY_NB = 64
+
     def __init__(self, builder: GraphBuilder, *, max_sparse="auto",
                  use_pallas="auto", interpret: Optional[bool] = None,
-                 pallas_tile: int = 8, dirty: str = "mask"):
+                 pallas_tile: int = 8, dirty: str = "mask",
+                 donate: bool = True, block_skip="auto",
+                 level_skip: bool = True, plan: bool = True):
         assert builder.inputs, "graph has no inputs"
         assert dirty in DIRTY_REPS, f"unknown dirty rep {dirty!r}"
+        assert block_skip in ("auto", True, False), block_skip
         self.nodes: List[GNode] = list(builder.nodes)
         self.input_names: Dict[str, int] = dict(builder.inputs)
         self.outputs: List[int] = list(builder.outputs) or builder.sinks()
@@ -97,6 +138,13 @@ class CompiledGraph:
             use_pallas = jax.default_backend() == "tpu"
         self.use_pallas = bool(use_pallas)
         self.interpret = interpret
+        self.donate = bool(donate)
+        self.block_skip = block_skip
+        self.level_skip = bool(level_skip)
+        # Carry-causal nodes cache their per-block carry states in the
+        # propagation state (state["c"]), keyed by node idx.
+        self.carry_nodes: Tuple[int, ...] = tuple(
+            nd.idx for nd in self.nodes if _is_carry(nd))
 
         # ---- level schedule (data edges + seq control edges) ----------
         self.level_of, self.schedule = level_schedule(self.nodes)
@@ -104,22 +152,76 @@ class CompiledGraph:
         # from-scratch work in blocks (every op node recomputes everything)
         self.total_blocks = sum(
             nd.num_blocks for nd in self.nodes if nd.kind != "input")
+        # Same-kind level packing: nodes of one level sharing the same
+        # per-block function and block geometry batch into one
+        # gather->fn->scatter (keys are static; shapes re-checked at
+        # trace time when the real feature dims are known).
+        self._level_groups = [self._pack_level(lvl) for lvl in self.schedule]
 
+        self.plan_mode = bool(plan)
         self._init_fn = jax.jit(self._init_impl)
-        self._prop_fn = jax.jit(self._propagate_impl)
+        # Legacy single-executable propagate (runtime lax.cond regimes);
+        # kept as the plan=False path and the planned mode's oracle.
+        self._prop_fn = jax.jit(self._propagate_impl,
+                                donate_argnums=(0,) if self.donate else ())
+        # Planned mode: mark jit (reads state, tiny outputs) + one
+        # recompute executable per distinct plan tuple (jit cache).
+        self._mark_fn = jax.jit(self._mark_impl)
+        self._prop_planned_fn = jax.jit(
+            self._prop_planned_impl, static_argnums=(4,),
+            donate_argnums=(0,) if self.donate else ())
+
+    # ------------------------------------------------------------------
+    def _pack_level(self, lvl: Sequence[int]) -> List[List[int]]:
+        """Group a level's op nodes by batchable identity (same kind,
+        same traced fn/op object, same block geometry)."""
+        groups: Dict[Any, List[int]] = {}
+        order: List[Any] = []
+        for idx in lvl:
+            nd = self.nodes[idx]
+            if nd.kind in ("map", "zip_map", "reduce_level"):
+                parents_meta = tuple(
+                    (self.nodes[d].num_blocks, self.nodes[d].block)
+                    for d in nd.deps)
+                try:
+                    ia = np.asarray(nd.identity)
+                    # Bitwise identity key: repr would truncate/summarize
+                    # and could falsely pack trees whose identities
+                    # differ below print precision.
+                    ident_key = (str(ia.dtype), ia.shape, ia.tobytes())
+                except Exception:       # pragma: no cover - exotic identity
+                    ident_key = id(nd.identity)
+                key = (nd.kind, id(nd.fn), id(nd.op), ident_key,
+                       nd.num_blocks, nd.block, parents_meta)
+            else:
+                key = ("solo", idx)
+            if key not in groups:
+                groups[key] = []
+                order.append(key)
+            groups[key].append(idx)
+        return [groups[k] for k in order]
 
     # ------------------------------------------------------------------
     # Initial run
     # ------------------------------------------------------------------
     def _init_impl(self, inputs: Dict[str, jax.Array]):
         values: List[Any] = [None] * len(self.nodes)
+        carries: Dict[str, jax.Array] = {}
         for nd in self.nodes:
             if nd.kind == "input":
                 values[nd.idx] = jnp.asarray(inputs[nd.name])
+            elif _is_carry(nd):
+                parent = values[nd.deps[0]]
+                states = graph_ops.causal_carry_states(nd, self.nodes, parent)
+                carries[str(nd.idx)] = states
+                p = self.nodes[nd.deps[0]]
+                xb = parent.reshape((p.num_blocks, p.block) + parent.shape[1:])
+                raw = jax.vmap(nd.finalize)(states, xb)
+                values[nd.idx] = graph_ops._pack(nd, raw)
             else:
                 parents = [values[d] for d in nd.deps]
                 values[nd.idx] = graph_ops.forward(nd, self.nodes, parents)
-        return {"v": tuple(values)}
+        return {"v": tuple(values), "c": carries}
 
     def init(self, inputs: Optional[Dict[str, jax.Array]] = None, **kw):
         inputs = {**(inputs or {}), **kw}
@@ -132,7 +234,7 @@ class CompiledGraph:
                 f"input {name!r}: leading size {got}, traced with {nd.n}")
         state = self._init_fn(_own_inputs(inputs))
         if self._ks is None:             # auto crossover: calibrate once
-            # escan always takes the dense path (_recompute), so its
+            # escan always takes a dense/block-skip carry pass, so its
             # crossover is dead — don't pay timed runs for it.
             self._ks = [
                 0 if nd.kind in ("input", "escan") else
@@ -146,6 +248,9 @@ class CompiledGraph:
     # Accessors
     # ------------------------------------------------------------------
     def value(self, state, handle: Handle) -> jax.Array:
+        """Read a node's value.  Under ``donate=True`` the returned array
+        aliases the live state: it becomes invalid once this state is
+        passed to a later ``propagate`` (copy first to keep it)."""
         return state["v"][handle.idx]
 
     def result(self, state, handle: Optional[Handle] = None) -> jax.Array:
@@ -161,86 +266,493 @@ class CompiledGraph:
         Numpy inputs are copied before dispatch (see ``_own_inputs``);
         don't pass a zero-copy jax view (``jnp.asarray``) of a buffer you
         then mutate in place — the standard JAX aliasing rule.
+
+        Under ``donate=True`` (the default) ``state`` is DONATED: its
+        buffers are reused in place for the returned state, so the passed
+        state (and any arrays previously read out of it) must not be used
+        afterwards.  Chain states linearly — exactly what the stateful
+        facades (``GraphHandle``, ``IncrementalReduce``) do.
         """
         unknown = set(new_inputs) - set(self.input_names)
         assert not unknown, f"unknown inputs {sorted(unknown)}"
         assert self._ks is not None, "propagate() before init()"
-        return self._prop_fn(state, _own_inputs(new_inputs))
+        if "c" not in state:             # pre-donation states (old pickles)
+            state = {**state, "c": {}}
+        inputs = _own_inputs(new_inputs)
+        traced = any(isinstance(leaf, jax.core.Tracer)
+                     for leaf in jax.tree_util.tree_leaves((state, inputs)))
+        if not self.plan_mode or traced:
+            # Under an outer jit (propagate composed into a caller's
+            # traced function) the planned mode's host sync is
+            # impossible — and unnecessary: the legacy cond executable
+            # inlines into the caller's trace.
+            return self._prop_fn(state, inputs)
+        # Two-phase planned propagation (the paper's mark-then-propagate,
+        # made executable-shaped): a small jitted MARK pass pushes the
+        # input diff through the reader maps WITHOUT the value cutoff —
+        # a sound over-approximation of every node's dirty count — the
+        # host reads the counts (one tiny device sync) and freezes a
+        # per-node plan (skip / sparse / dense), and a plan-specialized
+        # recompute executable runs with no in-graph branching at all:
+        # clean nodes simply don't appear in it, and every sparse
+        # scatter updates the donated state in place.  This is what
+        # removes the O(value) branch-result copies XLA conditionals
+        # cost on big nodes (see DESIGN.md §Propagation-cost-model).
+        masks, counts, node_masks = self._mark_fn(state, inputs)
+        plan = self._make_plan(np.asarray(counts))
+        sparse_idx = self._host_indices(state, node_masks, plan)
+        return self._prop_planned_fn(state, inputs, masks, sparse_idx, plan)
+
+    def _mark_impl(self, state, new_inputs: Dict[str, jax.Array]):
+        """Mark phase: exact per-block diffs at the inputs, pure mask
+        pushing above (no recomputes, no value cutoff — over-approximate
+        and cheap: O(num_blocks) per node).  Returns the input masks (the
+        recompute phase reuses them instead of re-diffing), every node's
+        dirty-count upper bound, and the per-node dirty masks the host
+        turns into gather indices (``np.flatnonzero`` on a few-KB mask is
+        microseconds, while ``jnp.nonzero`` inside a jit lowers to a full
+        sort on CPU and dominates the whole propagate)."""
+        D = self._dirty_cls
+        dirty: List[Any] = [None] * len(self.nodes)
+        masks: Dict[str, jax.Array] = {}
+        node_masks: Dict[str, jax.Array] = {}
+        for nd in self.nodes:
+            if nd.kind == "input":
+                if nd.name in new_inputs:
+                    new = jnp.asarray(new_inputs[nd.name]).astype(
+                        state["v"][nd.idx].dtype)
+                    ch = D.from_diff(state["v"][nd.idx], new, nd.block)
+                    masks[nd.name] = ch.to_mask()
+                else:
+                    ch = D.none(nd.num_blocks)
+                dirty[nd.idx] = ch
+            else:
+                dirty[nd.idx] = graph_ops.edge_dirty(
+                    nd, [dirty[d] for d in nd.deps])
+                node_masks[str(nd.idx)] = dirty[nd.idx].to_mask()
+        counts = jnp.stack([dirty[nd.idx].count() for nd in self.nodes])
+        return masks, counts, node_masks
+
+    def _host_indices(self, state, node_masks, plan: Tuple[str, ...]):
+        """Pad each sparse-planned node's dirty block indices (host
+        ``flatnonzero`` of its mark mask) to its static budget; packed
+        groups get one concatenated index array.  Sound because the mark
+        masks over-approximate the post-cutoff dirty sets: extra lanes
+        recompute to bitwise-equal values and fail the lane diff."""
+        vals = list(state["v"])
+        sparse_idx: Dict[str, jax.Array] = {}
+        for lvl, groups in zip(self.schedule, self._level_groups):
+            for grp in groups:
+                if self.nodes[grp[0]].kind == "input":
+                    continue
+                live = [i for i in grp if plan[i] != "skip"]
+                if (len(live) > 1
+                        and all(plan[i] == "sparse" for i in live)
+                        and self._group_batchable(live, vals)):
+                    nb = self.nodes[live[0]].num_blocks
+                    k = min(sum(self._ks[i] for i in live), len(live) * nb)
+                    cat = np.concatenate(
+                        [np.asarray(node_masks[str(i)]) for i in live])
+                    ix = np.flatnonzero(cat)
+                    arr = np.full((k,), len(live) * nb, np.int32)
+                    arr[:len(ix)] = ix
+                    sparse_idx[f"g{live[0]}"] = jnp.asarray(arr)
+                    continue
+                for i in live:
+                    if plan[i] != "sparse":
+                        continue
+                    nb = self.nodes[i].num_blocks
+                    ix = np.flatnonzero(np.asarray(node_masks[str(i)]))
+                    arr = np.full((self._ks[i],), nb, np.int32)
+                    arr[:len(ix)] = ix
+                    sparse_idx[str(i)] = jnp.asarray(arr)
+        return sparse_idx
+
+    def _make_plan(self, counts: np.ndarray) -> Tuple[str, ...]:
+        """Freeze per-node regimes from the mark phase's upper bounds.
+        ``counts`` over-approximates the post-cutoff dirty sets, so
+        "skip" (count 0) is sound, and "sparse" (count <= k) can never
+        under-gather."""
+        plan = []
+        for nd in self.nodes:
+            c = int(counts[nd.idx])
+            if c == 0:
+                plan.append("skip")
+            elif nd.kind == "input":
+                plan.append("update")
+            elif nd.kind == "escan":
+                plan.append("live")      # its own carry-pass machinery
+            elif (nd.num_blocks <= self.TINY_NB
+                  or c > self._ks[nd.idx]):
+                plan.append("dense")
+            else:
+                plan.append("sparse")
+        return tuple(plan)
+
+    def _prop_planned_impl(self, state, new_inputs, in_masks, sparse_idx,
+                           plan):
+        """Plan-specialized recompute: one straight-line executable per
+        distinct plan (cached by jit on the static plan tuple).  Skipped
+        nodes pass through untouched; nothing branches at runtime."""
+        D = self._dirty_cls
+        vals = list(state["v"])
+        carries = dict(state["c"])
+        changed: List[Any] = [None] * len(self.nodes)
+        recomputed = jnp.int32(0)
+        affected = jnp.int32(0)
+        dirty_inputs = jnp.int32(0)
+
+        for lvl, groups in zip(self.schedule, self._level_groups):
+            for idx in lvl:
+                nd = self.nodes[idx]
+                if nd.kind != "input":
+                    continue
+                if plan[idx] == "skip":
+                    changed[idx] = D.none(nd.num_blocks)
+                    continue
+                old = vals[idx]
+                new = jnp.asarray(new_inputs[nd.name]).astype(old.dtype)
+                ch = self._from_mask(in_masks[nd.name])
+                vals[idx] = new
+                changed[idx] = ch
+                dirty_inputs += ch.count()
+
+            for grp in groups:
+                if self.nodes[grp[0]].kind == "input":
+                    continue
+                live = [i for i in grp if plan[i] != "skip"]
+                for i in grp:
+                    if plan[i] == "skip":
+                        changed[i] = D.none(self.nodes[i].num_blocks)
+                if not live:
+                    continue
+                dirties = {i: graph_ops.edge_dirty(
+                    self.nodes[i],
+                    [changed[d] for d in self.nodes[i].deps])
+                    for i in live}
+                if (len(live) > 1
+                        and all(plan[i] == "sparse" for i in live)
+                        and self._group_batchable(live, vals)):
+                    k = min(sum(self._ks[i] for i in live),
+                            len(live) * self.nodes[live[0]].num_blocks)
+                    news, idxs, lcs = graph_ops.sparse_update_group(
+                        [self.nodes[i] for i in live], self.nodes,
+                        [[vals[d] for d in self.nodes[i].deps]
+                         for i in live],
+                        [vals[i] for i in live],
+                        [dirties[i].to_mask() for i in live], k,
+                        gidx=sparse_idx[f"g{live[0]}"])
+                    for i, nv, ix, lc in zip(live, news, idxs, lcs):
+                        nb = self.nodes[i].num_blocks
+                        vals[i] = nv
+                        changed[i] = D.from_changed_lanes(ix, lc, nb)
+                        recomputed += dirties[i].count()
+                        affected += changed[i].count()
+                    continue
+                for i in live:
+                    nd = self.nodes[i]
+                    parents = [vals[d] for d in nd.deps]
+                    regime = ("sparse" if plan[i] == "sparse" else "dense")
+                    nv, ch, st = self._recompute(
+                        nd, parents, vals[i], dirties[i],
+                        carries.get(str(i)), regime=regime,
+                        idx=sparse_idx.get(str(i)))
+                    vals[i] = nv
+                    changed[i] = ch
+                    if st is not None:
+                        carries[str(i)] = st
+                    recomputed += dirties[i].count()
+                    affected += ch.count()
+
+        stats = {"recomputed": recomputed, "affected": affected,
+                 "dirty_inputs": dirty_inputs}
+        return {"v": tuple(vals), "c": carries}, stats
+
+    def _from_mask(self, mask: jax.Array):
+        return self._dirty_cls.from_mask(mask)
 
     def _propagate_impl(self, state, new_inputs: Dict[str, jax.Array]):
         D = self._dirty_cls
         vals = list(state["v"])
+        carries = dict(state["c"])
         changed: List[Any] = [None] * len(self.nodes)   # DirtySets
         recomputed = jnp.int32(0)
         affected = jnp.int32(0)
         dirty_inputs = jnp.int32(0)
 
-        for lvl in self.schedule:
+        for lvl, groups in zip(self.schedule, self._level_groups):
+            ops = [i for i in lvl if self.nodes[i].kind != "input"]
             for idx in lvl:
                 nd = self.nodes[idx]
-                if nd.kind == "input":
-                    old = vals[idx]
-                    if nd.name in new_inputs:
-                        new = jnp.asarray(new_inputs[nd.name]).astype(
-                            old.dtype)
-                        ch = D.from_diff(old, new, nd.block)
-                        vals[idx] = new
-                    else:
-                        ch = D.none(nd.num_blocks)
-                    changed[idx] = ch
-                    dirty_inputs += ch.count()
+                if nd.kind != "input":
                     continue
-
-                dirty = graph_ops.edge_dirty(
-                    nd, [changed[d] for d in nd.deps])
-                parents = [vals[d] for d in nd.deps]
                 old = vals[idx]
-                new = self._recompute(nd, parents, old, dirty)
-                ch = dirty.meet_diff(old, new, nd.block)
-                vals[idx] = new
+                if nd.name in new_inputs:
+                    new = jnp.asarray(new_inputs[nd.name]).astype(old.dtype)
+                    ch = D.from_diff(old, new, nd.block)
+                    vals[idx] = new
+                else:
+                    ch = D.none(nd.num_blocks)
                 changed[idx] = ch
-                recomputed += dirty.count()
-                affected += ch.count()
+                dirty_inputs += ch.count()
+            if not ops:
+                continue
+
+            # Incoming dirty sets (cheap O(nb) mask pushing), then one
+            # cond for the whole level: a clean level costs one compare.
+            dirties = {i: graph_ops.edge_dirty(
+                self.nodes[i], [changed[d] for d in self.nodes[i].deps])
+                for i in ops}
+            level_any = functools.reduce(
+                jnp.logical_or, [dirties[i].any() for i in ops])
+
+            lvl_groups = [g for g in groups
+                          if self.nodes[g[0]].kind != "input"]
+
+            def live(_, _ops=ops, _groups=lvl_groups, _dirties=dirties,
+                     _vals=vals, _carries=carries):
+                out_vals, out_changed, out_carries = {}, {}, {}
+                rec = jnp.int32(0)
+                for grp in _groups:
+                    if len(grp) > 1 and self._group_batchable(grp, _vals):
+                        news, chs = self._recompute_group(
+                            grp, _vals, [_dirties[i] for i in grp])
+                        for i, nv, ch in zip(grp, news, chs):
+                            out_vals[i], out_changed[i] = nv, ch
+                            rec += _dirties[i].count()
+                        continue
+                    for i in grp:
+                        nd = self.nodes[i]
+                        parents = [_vals[d] for d in nd.deps]
+                        old_states = _carries.get(str(i))
+                        nv, ch, st = self._recompute(
+                            nd, parents, _vals[i], _dirties[i], old_states)
+                        out_vals[i], out_changed[i] = nv, ch
+                        if st is not None:
+                            out_carries[str(i)] = st
+                        rec += _dirties[i].count()
+                aff = functools.reduce(
+                    jnp.add, [out_changed[i].count() for i in _ops])
+                return (tuple(out_vals[i] for i in _ops),
+                        tuple(out_changed[i] for i in _ops),
+                        tuple(out_carries[str(i)] for i in _ops
+                              if _is_carry(self.nodes[i])),
+                        rec, aff)
+
+            def skip(_, _ops=ops, _vals=vals, _carries=carries):
+                return (tuple(_vals[i] for i in _ops),
+                        tuple(D.none(self.nodes[i].num_blocks)
+                              for i in _ops),
+                        tuple(_carries[str(i)] for i in _ops
+                              if _is_carry(self.nodes[i])),
+                        jnp.int32(0), jnp.int32(0))
+
+            # Whole-level skip — but only where it pays.  XLA lowers a
+            # cond by copying the taken branch's roots into the cond's
+            # output buffers, so wrapping a level that carries big node
+            # values costs O(value) memcpy per update even when live;
+            # a big node's *sparse* path is already near-free when the
+            # level is clean (k sentinel lanes, all dropped).  Tiny
+            # levels — every reduce tree's upper tail, where a cutoff
+            # kill strands the most dispatch — skip for one compare.
+            tiny_level = all(self.nodes[i].num_blocks <= self.TINY_NB
+                             for i in ops)
+            if self.level_skip and tiny_level:
+                lvl_vals, lvl_changed, lvl_carries, rec, aff = jax.lax.cond(
+                    level_any, live, skip, None)
+            else:
+                lvl_vals, lvl_changed, lvl_carries, rec, aff = live(None)
+            for i, nv, ch in zip(ops, lvl_vals, lvl_changed):
+                vals[i] = nv
+                changed[i] = ch
+            carry_ops = [i for i in ops if _is_carry(self.nodes[i])]
+            for i, st in zip(carry_ops, lvl_carries):
+                carries[str(i)] = st
+            recomputed += rec
+            affected += aff
 
         stats = {"recomputed": recomputed, "affected": affected,
                  "dirty_inputs": dirty_inputs}
-        return {"v": tuple(vals)}, stats
+        return {"v": tuple(vals), "c": carries}, stats
 
     # ------------------------------------------------------------------
-    def _recompute(self, nd: GNode, parents, old, dirty):
-        mask = dirty.to_mask()
+    # Per-node recompute: regime pick + value cutoff
+    # ------------------------------------------------------------------
+    def _recompute(self, nd: GNode, parents, old, dirty, old_states=None,
+                   regime: Optional[str] = None,
+                   idx: Optional[jax.Array] = None):
+        """Returns ``(new_value, changed_dirtyset, new_carry_or_None)``.
+
+        ``regime`` forces the sparse/dense pick (the planned propagate —
+        no in-graph cond, so no O(value) branch-result copies) and
+        ``idx`` supplies host-extracted dirty lane indices for the sparse
+        path; ``None`` keeps the legacy runtime ``lax.cond`` on the
+        dirty count with in-graph ``nonzero``.
+        """
+        D = self._dirty_cls
+        nb = nd.num_blocks
+
         if nd.kind == "escan":
-            # nb cheap elements; the masked dense pass IS the fast path.
-            return graph_ops.dense_update(nd, self.nodes, parents, old, mask)
+            new = self._recompute_escan(nd, parents, old, dirty)
+            return new, dirty.meet_diff(old, new, nd.block), None
+
+        if _is_carry(nd):
+            states = self._refold_states(nd, parents[0], old_states, dirty)
+            k = self._ks[nd.idx]
+            mask = dirty.to_mask()
+
+            def sparse(_):
+                new, ix, lc = graph_ops.causal_finalize_sparse(
+                    nd, self.nodes, parents[0], states, old, mask, k,
+                    idx=idx)
+                return new, D.from_changed_lanes(ix, lc, nb)
+
+            def dense(_):
+                new = graph_ops.causal_finalize_dense(
+                    nd, self.nodes, parents[0], states, old, mask)
+                return new, dirty.meet_diff(old, new, nd.block)
+
+            if regime is not None:
+                new, ch = sparse(None) if regime == "sparse" else dense(None)
+            else:
+                new, ch = jax.lax.cond(
+                    dirty.count() <= k, sparse, dense, None)
+            return new, ch, states
+
+        mask = dirty.to_mask()
         k = self._ks[nd.idx]
-        count = dirty.count()
+
+        # Tiny nodes (the upper levels of every reduce tree): the dense
+        # masked pass is 4-5 XLA ops, the sparse regime 9-10 — on a
+        # dispatch-bound propagate the regime machinery costs more than
+        # recomputing all <= TINY_NB rows.
+        if nb <= self.TINY_NB:
+            new = graph_ops.dense_update(nd, self.nodes, parents, old, mask)
+            return new, dirty.meet_diff(old, new, nd.block), None
 
         def sparse(_):
-            return graph_ops.sparse_update(
-                nd, self.nodes, parents, old, mask, k)
+            new, ix, lc = graph_ops.sparse_update(
+                nd, self.nodes, parents, old, mask, k, idx=idx)
+            return new, D.from_changed_lanes(ix, lc, nb)
 
         def dense(_):
-            return self._dense(nd, parents, old, mask)
+            new = self._dense(nd, parents, old, mask)
+            return new, dirty.meet_diff(old, new, nd.block)
 
-        return jax.lax.cond(count <= k, sparse, dense, None)
+        if regime is not None:
+            new, ch = sparse(None) if regime == "sparse" else dense(None)
+        else:
+            new, ch = jax.lax.cond(dirty.count() <= k, sparse, dense, None)
+        return new, ch, None
 
+    def _block_skip_ok(self, dtype) -> bool:
+        if self.block_skip == "auto":
+            return graph_ops.exact_dtype(dtype)
+        return bool(self.block_skip)
+
+    def _refold_states(self, nd: GNode, parent, old_states, dirty):
+        """Carry states of a carry-causal node: block-skip reseed from the
+        cache when bitwise-safe (Pallas tile-skip when routed), else the
+        dense rescan oracle."""
+        if not self._block_skip_ok(old_states.dtype):
+            return graph_ops.causal_carry_states(nd, self.nodes, parent)
+        if self.use_pallas:
+            from repro.kernels.ops import dirty_causal_scan
+
+            p = self.nodes[nd.deps[0]]
+            xb = parent.reshape((p.num_blocks, p.block) + parent.shape[1:])
+            contrib = jax.vmap(nd.lift)(xb)
+            return dirty_causal_scan(
+                contrib, old_states, dirty.start(), nd.op,
+                identity=nd.identity, block=self.pallas_tile,
+                interpret=self.interpret)
+        return graph_ops.causal_carry_refold(
+            nd, self.nodes, parent, old_states, dirty.start(), True)
+
+    def _recompute_escan(self, nd: GNode, parents, old, dirty):
+        """Carry pass: block-skip reseed from the cached carries when the
+        dtype's arithmetic is exact (or forced), else the dense
+        ``associative_scan`` oracle.  Pallas tile-skip when routed."""
+        if not self._block_skip_ok(old.dtype):
+            return graph_ops.dense_update(
+                nd, self.nodes, parents, old, dirty.to_mask())
+        if self.use_pallas:
+            return self._pallas_escan(nd, parents[0], old, dirty)
+        new = graph_ops.escan_block_skip(nd, parents[0], old, dirty.start())
+        mask = dirty.to_mask()
+        nb = nd.num_blocks
+        new_b = new.reshape((nb, nd.block) + new.shape[1:])
+        old_b = old.reshape((nb, nd.block) + old.shape[1:])
+        sel = mask.reshape((nb,) + (1,) * (new_b.ndim - 1))
+        return jnp.where(sel, new_b, old_b).reshape(old.shape)
+
+    # ------------------------------------------------------------------
+    # Level packing: batched sparse recompute of same-fn nodes
+    # ------------------------------------------------------------------
+    def _group_batchable(self, grp: List[int], vals) -> bool:
+        """Static keys matched at compile; re-check the value shapes and
+        dtypes now that they are known (trace time)."""
+        ref = vals[grp[0]]
+        if not all(vals[i].shape == ref.shape and vals[i].dtype == ref.dtype
+                   for i in grp[1:]):
+            return False
+        pref = [vals[d] for d in self.nodes[grp[0]].deps]
+        for i in grp[1:]:
+            ps = [vals[d] for d in self.nodes[i].deps]
+            if not all(a.shape == b.shape and a.dtype == b.dtype
+                       for a, b in zip(pref, ps)):
+                return False
+        return True
+
+    def _recompute_group(self, grp: List[int], vals, dirties):
+        """One batched gather -> fn -> scatter for m same-fn nodes, under
+        one regime cond for the whole group."""
+        D = self._dirty_cls
+        nd0 = self.nodes[grp[0]]
+        nb = nd0.num_blocks
+        masks = [d.to_mask() for d in dirties]
+        count = functools.reduce(jnp.add, [d.count() for d in dirties])
+        k = sum(self._ks[i] for i in grp)
+        k = min(k, len(grp) * nb)
+
+        def sparse(_):
+            news, idxs, lcs = graph_ops.sparse_update_group(
+                [self.nodes[i] for i in grp], self.nodes,
+                [[vals[d] for d in self.nodes[i].deps] for i in grp],
+                [vals[i] for i in grp], masks, k)
+            chs = [D.from_changed_lanes(ix, lc, nb)
+                   for ix, lc in zip(idxs, lcs)]
+            return tuple(news), tuple(chs)
+
+        def dense(_):
+            news, chs = [], []
+            for i, dirty, mask in zip(grp, dirties, masks):
+                nd = self.nodes[i]
+                parents = [vals[d] for d in nd.deps]
+                new = self._dense(nd, parents, vals[i], mask)
+                news.append(new)
+                chs.append(dirty.meet_diff(vals[i], new, nd.block))
+            return tuple(news), tuple(chs)
+
+        news, chs = jax.lax.cond(count <= k, sparse, dense, None)
+        return list(news), list(chs)
+
+    # ------------------------------------------------------------------
     def _dense(self, nd: GNode, parents, old, dirty):
         if self.use_pallas and self._pallas_eligible(nd, parents, old):
             return self._pallas_dense(nd, parents, old, dirty)
         return graph_ops.dense_update(nd, self.nodes, parents, old, dirty)
 
     # ------------------------------------------------------------------
-    # Pallas dirty-tile routing (elementwise / pair levels)
+    # Pallas dirty-tile routing (elementwise / pair / stencil levels)
     # ------------------------------------------------------------------
     def _pallas_eligible(self, nd: GNode, parents, old) -> bool:
-        if nd.kind not in ELEMENTWISE_KINDS:
-            return False
-        if nd.num_blocks % self.pallas_tile != 0:
+        if nd.kind not in ELEMENTWISE_KINDS + ("stencil",):
             return False
         if nd.kind == "reduce_level" and (
                 self.nodes[nd.deps[0]].num_blocks != 2 * nd.num_blocks):
             return False                 # identity-padded odd level
-        return all(p.dtype == old.dtype for p in parents)
+        return True
 
     def _pallas_dense(self, nd: GNode, parents, old, dirty):
         from repro.kernels.ops import dirty_map
@@ -250,11 +762,28 @@ class CompiledGraph:
         rows, shapes = [], []
         for d, val in zip(nd.deps, parents):
             p = self.nodes[d]
+            # Mixed parent dtypes stay on the Pallas path (the old
+            # eligibility check bailed to XLA): each input ref keeps its
+            # ORIGINAL dtype — ``fn`` is traced into the kernel body on
+            # exactly the dtypes the XLA dense path gives it, so any
+            # promotion (or integer-exact work) happens inside ``fn``
+            # identically, and the kernel's trailing astype covers the
+            # output dtype.  Pre-casting here would silently change fns
+            # that do dtype-sensitive work before promoting.
             if nd.kind == "reduce_level":
                 bshape = (2,) + val.shape[1:]          # pair per out block
+                rows.append(val.reshape(nb, int(math.prod(bshape))))
+            elif nd.kind == "stencil":
+                # Halo-aware: materialize each output block's
+                # neighbourhood window as its row payload, so the tile
+                # function stays local (the halo gather happens once,
+                # outside the kernel).
+                win = graph_ops._windows(nd, p, val)
+                bshape = win.shape[1:]
+                rows.append(win.reshape(nb, int(math.prod(bshape))))
             else:
                 bshape = (p.block,) + val.shape[1:]
-            rows.append(val.reshape(nb, int(math.prod(bshape))))
+                rows.append(val.reshape(nb, int(math.prod(bshape))))
             shapes.append(bshape)
 
         def tile_fn(*tiles):
@@ -266,13 +795,45 @@ class CompiledGraph:
                 raw = jax.vmap(nd.fn)(*blocks)
             return raw.reshape(t, w_out)
 
-        out = dirty_map(tile_fn, rows, old.reshape(nb, w_out), dirty,
-                        block=self.pallas_tile, interpret=self.interpret)
+        old_rows = old.reshape(nb, w_out)
+        tile = self.pallas_tile
+        pad = (-nb) % tile
+        if pad:
+            # Identity-pad the tail tile: padded lanes are never dirty,
+            # so the tail tile only executes when its real rows are.
+            rows = [jnp.concatenate(
+                [r, jnp.zeros((pad, r.shape[1]), r.dtype)]) for r in rows]
+            old_rows_p = jnp.concatenate(
+                [old_rows, jnp.zeros((pad, w_out), old_rows.dtype)])
+            dirty_p = jnp.concatenate([dirty, jnp.zeros((pad,), bool)])
+        else:
+            old_rows_p, dirty_p = old_rows, dirty
+
+        out = dirty_map(tile_fn, rows, old_rows_p, dirty_p,
+                        block=tile, interpret=self.interpret)
+        if pad:
+            out = out[:nb]
         # The kernel recomputes *whole* dirty tiles, including their clean
         # blocks.  By determinism those recompute to equal values — but
         # only modulo compiled-kernel-vs-XLA fusion differences (FMA can
         # shift a ulp).  Mask them back to `old` so clean blocks stay
         # bitwise stable and the changed-mask cutoff remains sound.
-        old_rows = old.reshape(nb, w_out)
         out = jnp.where(dirty[:, None], out, old_rows)
         return out.reshape(old.shape)
+
+    def _pallas_escan(self, nd: GNode, agg, old, dirty):
+        """Carry pass through the block-skip Pallas kernel: clean tiles
+        before the dirty suffix copy their cached carries without
+        executing; the boundary tile reseeds from the cached prefix."""
+        from repro.kernels.ops import dirty_causal_scan
+
+        nb = nd.num_blocks
+        ident = graph_ops._identity_row(nd, agg)[None]
+        shifted = jnp.concatenate([ident, agg[:-1]], axis=0)
+        out = dirty_causal_scan(
+            shifted, old, dirty.start(), nd.op,
+            identity=nd.identity, block=self.pallas_tile,
+            interpret=self.interpret)
+        mask = dirty.to_mask()
+        sel = mask.reshape((nb,) + (1,) * (old.ndim - 1))
+        return jnp.where(sel, out, old)

@@ -11,15 +11,26 @@ runtime (graph_compile.py) assembles:
   * ``dense_update``                 — recompute every block under a mask
     (one fused pass; clean blocks keep their old value bitwise).
   * ``sparse_update``                — gather the <= k dirty blocks,
-    recompute just those lanes, scatter back (O(k) work).
+    recompute just those lanes, scatter back (O(k) work).  Also returns
+    the *lane-local* Algorithm-2 cutoff — which of the gathered lanes
+    actually changed value — so the runtime never has to run an O(n)
+    full-array compare after an O(k) recompute.
 
 Both recompute regimes produce identical values; the runtime picks per
 node per update by dirty count, generalizing the regime switch of
 ``reduce.py``.
+
+Carry-causal nodes (``causal`` with a declared carry monoid — see
+``GraphBuilder.causal``) additionally get ``causal_carry_states`` /
+``causal_carry_update``: the per-block inclusive carry states are cached
+in the propagation state, so a dirty suffix recombines the cached prefix
+state in O(suffix) instead of rescanning its full prefix per block (the
+flash-style block-skip; the Pallas tile-skipping variant lives in
+``repro.kernels.dirty_causal``).
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +39,19 @@ from .core import broadcast_mask as _bc
 from .dirtyset import DirtySet
 from .graph import GNode
 
-__all__ = ["forward", "edge_dirty", "dense_update", "sparse_update"]
+__all__ = ["forward", "edge_dirty", "dense_update", "sparse_update",
+           "sparse_update_group", "causal_carry_states",
+           "causal_carry_refold", "causal_finalize_sparse",
+           "causal_finalize_dense", "escan_block_skip", "exact_dtype"]
+
+
+def exact_dtype(dtype) -> bool:
+    """True when the dtype's arithmetic is exactly associative, so any
+    re-bracketing of a fold (the block-skip recombination) is bitwise
+    equal to the from-scratch ``associative_scan``.  Floats re-associate
+    at ulp level, which would break the bitwise value cutoff — they stay
+    on the dense oracle path unless the user forces ``block_skip``."""
+    return jnp.issubdtype(dtype, jnp.integer) or jnp.issubdtype(dtype, jnp.bool_)
 
 
 def _as_blocks(x: jax.Array, num_blocks: int, block: int) -> jax.Array:
@@ -110,6 +133,11 @@ def forward(node: GNode, nodes, parents: List[jax.Array]) -> jax.Array:
         win = _windows(node, p, parents[0])
         return _pack(node, jax.vmap(node.fn)(win))
     if node.kind == "causal":
+        if node.op is not None:          # carry-causal: scan + finalize
+            p = _parent(node, nodes)
+            xb = _as_blocks(parents[0], p.num_blocks, p.block)
+            states = causal_carry_states(node, nodes, parents[0])
+            return _pack(node, jax.vmap(node.finalize)(states, xb))
         idx = jnp.arange(node.num_blocks)
         raw = jax.vmap(node.fn, in_axes=(None, 0))(parents[0], idx)
         return _pack(node, raw)
@@ -159,16 +187,36 @@ def dense_update(node: GNode, nodes, parents: List[jax.Array],
 
 
 # ---------------------------------------------------------------------------
-# sparse recompute (gather dirty lanes, scatter back)
+# sparse recompute (gather dirty lanes, scatter back, lane-local cutoff)
 # ---------------------------------------------------------------------------
+def _lane_changed(old_lanes: jax.Array, vals_b: jax.Array) -> jax.Array:
+    """[k] bool: did the recomputed lane's value change (bitwise)?"""
+    diff = old_lanes != vals_b
+    return jnp.any(diff, axis=tuple(range(1, diff.ndim)))
+
+
 def sparse_update(node: GNode, nodes, parents: List[jax.Array],
-                  old: jax.Array, dirty: jax.Array, k: int) -> jax.Array:
+                  old: jax.Array, dirty: jax.Array, k: int,
+                  idx: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather the <= k dirty blocks, recompute, scatter back.
+
+    Returns ``(new, idx, lane_changed)``: the updated value, the gathered
+    lane indices (sentinel ``num_blocks`` for unused lanes), and which of
+    those lanes' values actually changed — the Algorithm-2 cutoff applied
+    to O(k) lanes instead of the whole array.
+
+    ``idx`` supplies the dirty lane indices directly (the planned
+    propagate extracts them on the host from the mark phase's masks —
+    ``jnp.nonzero`` inside a jit lowers to a full sort on CPU and costs
+    more than the recompute it feeds); when None they are computed
+    in-graph from ``dirty``.
+    """
     nb = node.num_blocks
-    if node.kind == "escan":
-        # Carries are nb scalars-per-feature; the dense masked pass IS the
-        # cheap path (and a gather-based one would serialize the prefix).
-        return dense_update(node, nodes, parents, old, dirty)
-    (idx,) = jnp.nonzero(dirty, size=k, fill_value=nb)
+    if idx is None:
+        (idx,) = jnp.nonzero(dirty, size=k, fill_value=nb)
+    else:
+        k = idx.shape[0]
 
     if node.kind == "reduce_level":
         # OOB gathers (the odd level's missing right child, and sentinel
@@ -183,7 +231,9 @@ def sparse_update(node: GNode, nodes, parents: List[jax.Array],
             return jnp.where(_bc(i >= kids.shape[0], g), ident, g)
 
         vals = node.op(kid(2 * idx), kid(2 * idx + 1))
-        return old.at[idx].set(vals, mode="drop")
+        old_lanes = old.at[idx].get(mode="fill", fill_value=0)
+        changed = _lane_changed(old_lanes, vals)
+        return old.at[idx].set(vals, mode="drop"), idx, changed
 
     if node.kind == "map":
         p = _parent(node, nodes)
@@ -215,4 +265,197 @@ def sparse_update(node: GNode, nodes, parents: List[jax.Array],
         vals_b = raw.reshape((k, 1) + raw.shape[1:])
     else:
         vals_b = raw
-    return _from_blocks(old_b.at[idx].set(vals_b, mode="drop"))
+    old_lanes = old_b.at[idx].get(mode="fill", fill_value=0)
+    changed = _lane_changed(old_lanes, vals_b)
+    return _from_blocks(old_b.at[idx].set(vals_b, mode="drop")), idx, changed
+
+
+# ---------------------------------------------------------------------------
+# Level packing: batched sparse recompute for m same-fn nodes
+# ---------------------------------------------------------------------------
+def sparse_update_group(gnodes: List[GNode], nodes,
+                        parents_per: List[List[jax.Array]],
+                        olds: List[jax.Array], masks: List[jax.Array],
+                        k: int, gidx: Optional[jax.Array] = None):
+    """One batched gather -> fn -> scatter for ``m`` same-kind nodes of a
+    level that share the same per-block function and block geometry
+    (parallel reduce trees, replicated map pipelines under ``par``).
+
+    One ``nonzero`` over the concatenated masks and ONE vmapped ``fn``
+    application cover all m nodes (one kernel launch per level instead of
+    per node); gathers/scatters stay per member so each node's buffer
+    still updates in place under donation.  Returns
+    ``(new_values, per_node_idx, per_node_lane_changed)``.
+    """
+    m = len(gnodes)
+    nd = gnodes[0]
+    nb = nd.num_blocks
+    if gidx is None:
+        mask_st = jnp.concatenate(masks)                # [m*nb]
+        (gidx,) = jnp.nonzero(mask_st, size=k, fill_value=m * nb)
+    else:
+        k = gidx.shape[0]
+    g = gidx // nb                                      # member (m = sentinel)
+    i = jnp.where(g < m, gidx - g * nb, nb)             # block (nb = sentinel)
+
+    def member_select(per_member):
+        """[k, ...] lanes: member g's gather at lane positions, 0 else."""
+        out = None
+        for j, got in enumerate(per_member):
+            sel = _bc((g == j), got)
+            out = jnp.where(sel, got, 0) if out is None else (
+                jnp.where(sel, got, out))
+        return out
+
+    if nd.kind == "reduce_level":
+        ident = _identity_row(nd, parents_per[0][0])
+
+        def kid(member_kids, ci):
+            gg = member_kids.at[ci].get(mode="fill", fill_value=0)
+            return jnp.where(_bc(ci >= member_kids.shape[0], gg), ident, gg)
+
+        left = member_select([kid(p[0], 2 * i) for p in parents_per])
+        right = member_select([kid(p[0], 2 * i + 1) for p in parents_per])
+        vals = nd.op(left, right)
+        vals_b = vals          # reduce_level values are [nb, *feat] rows
+        olds_rows = olds
+    else:
+        gathered = []
+        for dep_pos, d in enumerate(nd.deps):
+            p = nodes[d]
+            per_member = [
+                _as_blocks(parents_per[j][dep_pos], p.num_blocks,
+                           p.block).at[i].get(mode="fill", fill_value=0)
+                for j in range(m)]
+            gathered.append(member_select(per_member))
+        raw = jax.vmap(nd.fn)(*gathered)
+        if nd.block == 1:
+            vals_b = raw.reshape((k, 1) + raw.shape[1:])
+        else:
+            vals_b = raw
+        olds_rows = [_as_blocks(o, nb, nd.block) for o in olds]
+
+    old_lanes = member_select(
+        [o.at[i].get(mode="fill", fill_value=0) for o in olds_rows])
+    lane_changed = _lane_changed(old_lanes, vals_b)
+
+    news, idxs, lcs = [], [], []
+    for j in range(m):
+        idx_j = jnp.where(g == j, i, nb)                # drop other members
+        scat = olds_rows[j].at[idx_j].set(vals_b, mode="drop")
+        news.append(scat if nd.kind == "reduce_level" else
+                    _from_blocks(scat))
+        idxs.append(idx_j)
+        lcs.append(lane_changed & (g == j))
+    return news, idxs, lcs
+def causal_carry_states(node: GNode, nodes, parent: jax.Array) -> jax.Array:
+    """[nb, *state_feat] inclusive carry states of a carry-causal node:
+    ``states[i] = fold(lift(block_0) .. lift(block_i))`` under ``op``."""
+    p = _parent(node, nodes)
+    xb = _as_blocks(parent, p.num_blocks, p.block)
+    contrib = jax.vmap(node.lift)(xb)
+    return jax.lax.associative_scan(node.op, contrib, axis=0)
+
+
+def _seed_row(node: GNode, old_states: jax.Array,
+              start: jax.Array) -> jax.Array:
+    """``states[start-1]`` (the cached clean prefix state just before the
+    dirty suffix), or the op identity when ``start == 0``."""
+    prev = jnp.take(old_states, jnp.maximum(start - 1, 0), axis=0,
+                    mode="clip")
+    ident = jnp.broadcast_to(
+        jnp.asarray(node.identity, old_states.dtype), prev.shape)
+    return jnp.where(start > 0, prev, ident)
+
+
+def _masked_refold(node: GNode, contrib: jax.Array, seed: jax.Array,
+                   old_states: jax.Array, start: jax.Array) -> jax.Array:
+    """Recombine: keep states < start, recompute the suffix from the
+    cached ``seed = states[start-1]`` instead of rescanning the prefix.
+
+    Clean-prefix contributions are replaced by the op identity, so the
+    masked scan's row i (i >= start) is ``fold(contrib[start..i])`` and
+    ``op(seed, ·)`` completes the state.  ``op(identity, x) == x`` and
+    exact associativity are assumed (the caller gates on ``exact_dtype``
+    or an explicit ``block_skip`` force); under those, the result is
+    bitwise equal to the from-scratch scan.
+    """
+    nb = contrib.shape[0]
+    in_suffix = jnp.arange(nb) >= start
+    ident = _identity_row(node, contrib)
+    masked = jnp.where(_bc(in_suffix, contrib), contrib, ident)
+    suffix_fold = jax.lax.associative_scan(node.op, masked, axis=0)
+    recombined = jax.vmap(node.op, in_axes=(None, 0))(seed, suffix_fold)
+    return jnp.where(_bc(in_suffix, old_states), recombined, old_states)
+
+
+def causal_carry_refold(node: GNode, nodes, parent: jax.Array,
+                        old_states: jax.Array, start: jax.Array,
+                        block_skip: bool) -> jax.Array:
+    """Updated carry states of a carry-causal node.
+
+    ``block_skip=True`` recombines the cached prefix state (bitwise-safe
+    for exact dtypes only); otherwise the states are rescanned from
+    scratch, which is bitwise identical to ``forward`` for any dtype.
+    """
+    if not block_skip:
+        return causal_carry_states(node, nodes, parent)
+    p = _parent(node, nodes)
+    xb = _as_blocks(parent, p.num_blocks, p.block)
+    contrib = jax.vmap(node.lift)(xb)
+    seed = _seed_row(node, old_states, start)
+    return _masked_refold(node, contrib, seed, old_states, start)
+
+
+def causal_finalize_dense(node: GNode, nodes, parent: jax.Array,
+                          states: jax.Array, old: jax.Array,
+                          dirty: jax.Array) -> jax.Array:
+    """Masked dense finalize pass of a carry-causal node."""
+    p = _parent(node, nodes)
+    xb = _as_blocks(parent, p.num_blocks, p.block)
+    new = _pack(node, jax.vmap(node.finalize)(states, xb))
+    nb = node.num_blocks
+    new_b = _as_blocks(new, nb, node.block)
+    old_b = _as_blocks(old, nb, node.block)
+    return _from_blocks(jnp.where(_bc(dirty, new_b), new_b, old_b))
+
+
+def causal_finalize_sparse(node: GNode, nodes, parent: jax.Array,
+                           states: jax.Array, old: jax.Array,
+                           dirty: jax.Array, k: int,
+                           idx: Optional[jax.Array] = None,
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather the <= k dirty blocks' states + input blocks, finalize just
+    those lanes, scatter; returns ``(new, idx, lane_changed)``.
+    ``idx`` as in ``sparse_update``."""
+    nb = node.num_blocks
+    if idx is None:
+        (idx,) = jnp.nonzero(dirty, size=k, fill_value=nb)
+    else:
+        k = idx.shape[0]
+    p = _parent(node, nodes)
+    xb = _as_blocks(parent, p.num_blocks, p.block)
+    sg = states.at[idx].get(mode="fill", fill_value=0)
+    xg = xb.at[idx].get(mode="fill", fill_value=0)
+    raw = jax.vmap(node.finalize)(sg, xg)
+    old_b = _as_blocks(old, nb, node.block)
+    if node.block == 1:
+        vals_b = raw.reshape((k, 1) + raw.shape[1:])
+    else:
+        vals_b = raw
+    old_lanes = old_b.at[idx].get(mode="fill", fill_value=0)
+    changed = _lane_changed(old_lanes, vals_b)
+    return _from_blocks(old_b.at[idx].set(vals_b, mode="drop")), idx, changed
+
+
+def escan_block_skip(node: GNode, agg: jax.Array, old_c: jax.Array,
+                     start: jax.Array) -> jax.Array:
+    """Block-skip recompute of an exclusive carry scan: keep carries
+    before the dirty suffix, reseed the suffix from the cached carry
+    ``old_c[start-1]`` (pure-jnp reference of the ``dirty_causal`` Pallas
+    kernel; bitwise equal to the dense path for exact dtypes).
+    """
+    ident = _identity_row(node, agg)[None]
+    shifted = jnp.concatenate([ident, agg[:-1]], axis=0)
+    seed = _seed_row(node, old_c, start)
+    return _masked_refold(node, shifted, seed, old_c, start)

@@ -138,6 +138,29 @@ def _prefill_distance_legacy(old_tokens, new_tokens, *, block: int = 512,
 # ---------------------------------------------------------------------------
 # Continuation layers (the re-executed readers)
 # ---------------------------------------------------------------------------
+def _flash_continue(q, k, v, p0: int):
+    """Suffix-query attention through the Pallas flash kernel: query row i
+    sits at absolute position p0+i (``offset``), and the kernel's causal
+    block-skip never touches kv tiles beyond each query tile's frontier —
+    the same cached-prefix block skip the graph runtime's ``dirty_causal``
+    kernel applies to carry monoids, here on the running-softmax state.
+
+    q: [B, Sq, H, hd]; k/v: [B, S, KV, hd] -> [B, Sq, H, hv].
+    """
+    import math
+
+    from repro.kernels.ops import flash_attention
+
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    S = k.shape[1]
+    qg = q.reshape(B, Sq, KV, H // KV, hd)
+    o = flash_attention(qg, k, v, causal=True, offset=p0,
+                        q_block=math.gcd(Sq, 128),
+                        kv_block=math.gcd(S, 128))
+    return o.reshape(B, Sq, H, o.shape[-1])
+
+
 def _attn_continue(cfg, p, x, positions, cache_k, cache_v, p0: int,
                    *, impl: str):
     """GQA attention for suffix queries against (prefix cache + new kv).
@@ -158,7 +181,10 @@ def _attn_continue(cfg, p, x, positions, cache_k, cache_v, p0: int,
         cache_v, v_suf.astype(cache_v.dtype), p0, axis=1)
     # End-aligned attention: query i sits at absolute position p0 + i.
     Sq = q.shape[1]
-    if impl == "blocked" and Sq >= 1024:
+    if impl == "flash":
+        o = _flash_continue(q, k_full.astype(q.dtype),
+                            v_full.astype(q.dtype), p0)
+    elif impl == "blocked" and Sq >= 1024:
         o = _blocked_attention(q, k_full.astype(q.dtype), v_full.astype(q.dtype),
                                causal=True, window=0, q_block=512, kv_block=512)
     else:
@@ -191,7 +217,10 @@ def _mla_continue(cfg, p, x, positions, cache_ckv, cache_krope, p0: int,
         [k_nope, jnp.broadcast_to(krope.astype(x.dtype)[:, :, None, :],
                                   (B, S, H, dr))], axis=-1)
     Sq = q.shape[1]
-    if impl == "blocked" and Sq >= 1024:
+    if impl == "flash":
+        # Expanded MLA heads attend ungrouped: KV = H, G = 1.
+        o = _flash_continue(q, k, v, p0)
+    elif impl == "blocked" and Sq >= 1024:
         o = _blocked_attention(q, k, v, causal=True, window=0,
                                q_block=512, kv_block=512)
     else:

@@ -6,14 +6,17 @@
     propagation's "skip unmarked subtrees" as BlockSpec machinery.
   * dirty_map       — the generalized dirty-tile kernel (arbitrary
     combining function, N inputs); the graph runtime's dense-path lane.
+  * dirty_causal    — block-skip causal carry scan: clean tiles copy
+    their cached carry states without executing; the dirty suffix
+    reseeds from the cached prefix (escan / carry-causal fast path).
   * grouped_matmul  — block-diagonal expert GEMM (dropless MoE tile map).
 
 Each kernel is written against TPU (pl.pallas_call + BlockSpec VMEM
 tiling) and validated on CPU via interpret mode against the pure-jnp
 oracles in ``ref.py`` (tests/test_kernels.py sweeps shapes and dtypes).
 """
-from .ops import (dirty_map, dirty_reduce_level, flash_attention,
-                  grouped_matmul)
+from .ops import (dirty_causal_scan, dirty_map, dirty_reduce_level,
+                  flash_attention, grouped_matmul)
 
 __all__ = ["flash_attention", "dirty_reduce_level", "dirty_map",
-           "grouped_matmul"]
+           "dirty_causal_scan", "grouped_matmul"]

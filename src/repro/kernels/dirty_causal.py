@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: block-skip causal carry scan.
+
+The flash-style fast path of the interval-carrying ``causal`` edge and
+the ``escan`` carry pass (``repro.jaxsac``): an edit dirties a *suffix*
+of blocks, so the carry states of every block before the suffix are
+exactly the states memoized by the previous run.  Instead of rescanning
+the full prefix, the kernel
+
+  * copies clean tiles (tile index < the scalar-prefetched dirty start)
+    straight from the cached states — their body never executes the
+    combine;
+  * reseeds the boundary tile from the cached state just before the
+    suffix (``seeds[t] = states[t*block - 1]``, gathered outside the
+    kernel);
+  * recomputes only the dirty suffix sequentially, carrying the running
+    state across grid steps in a VMEM scratch accumulator (the TPU grid
+    is sequential, so the scratch persists between tiles — the same
+    pattern flash attention uses for its running softmax state, which is
+    itself such a carry monoid).
+
+Work for a k-block dirty suffix is O(k) combines instead of the O(P)
+rescan of the dense path — the kernel-level realization of the paper's
+computation-distance bound for suffix-shaped edits.
+
+Bitwise contract: re-bracketing a fold is only bitwise-stable for
+exactly-associative dtypes (ints/bools); the graph runtime gates routing
+accordingly (``block_skip="auto"``) and keeps the dense
+``associative_scan`` path as the oracle — ``tests/test_kernels.py``
+property-tests the kernel against it over random edit suffixes.
+
+Layout: contributions and cached states are [P, W] rows (row i = block
+i's flattened contribution / state); ``state_shape`` restores the real
+per-block state shape inside the kernel so ``op`` sees what it was
+traced with.  W should be a multiple of 128 lanes on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["dirty_causal_scan_call"]
+
+
+@functools.partial(jax.jit, static_argnames=("op", "state_shape", "block",
+                                             "interpret"))
+def dirty_causal_scan_call(
+    contrib: jax.Array,      # [P, W] per-block contributions m[i]
+    old_states: jax.Array,   # [P, W] cached inclusive states s[i]
+    seeds: jax.Array,        # [tiles, W] cached state before each tile
+    start_tile: jax.Array,   # [1] int32 — first tile with a dirty block
+    *,
+    op,                      # associative combine on state_shape arrays
+    state_shape: tuple,
+    block: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """New inclusive states: ``s'[i] = old`` for tiles before
+    ``start_tile``; from the boundary tile on, ``s'[i] = op(s'[i-1],
+    contrib[i])`` seeded with ``seeds[start_tile]``."""
+    P, W = contrib.shape
+    assert old_states.shape == (P, W)
+    assert P % block == 0, (P, block)
+    tiles = P // block
+    assert seeds.shape == (tiles, W)
+
+    def kernel(start_ref, contrib_ref, old_ref, seeds_ref, out_ref,
+               carry_ref):
+        t = pl.program_id(0)
+        s = start_ref[0]
+
+        @pl.when(t < s)
+        def _keep():
+            out_ref[...] = old_ref[...]
+
+        @pl.when(t >= s)
+        def _recompute():
+            # Reseed at the boundary tile from the cached prefix state;
+            # later tiles continue from the scratch carry.
+            carry = jnp.where(t == s, seeds_ref[...], carry_ref[...])
+            c = carry[0].reshape(state_shape)
+            for r in range(block):
+                c = op(c, contrib_ref[r].reshape(state_shape))
+                out_ref[r, :] = c.reshape(W)
+            carry_ref[...] = c.reshape(1, W)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(tiles,),
+            in_specs=[
+                pl.BlockSpec((block, W), lambda t, s: (t, 0)),
+                pl.BlockSpec((block, W), lambda t, s: (t, 0)),
+                pl.BlockSpec((1, W), lambda t, s: (t, 0)),
+            ],
+            out_specs=pl.BlockSpec((block, W), lambda t, s: (t, 0)),
+            scratch_shapes=[pltpu.VMEM((1, W), old_states.dtype)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((P, W), old_states.dtype),
+        interpret=interpret,
+    )(start_tile, contrib, old_states, seeds)

@@ -8,15 +8,18 @@ Every op has a pure-jnp oracle in ``ref.py`` and an allclose sweep in
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention_kernel_call
+from .dirty_causal import dirty_causal_scan_call
 from .dirty_reduce import dirty_map_call, dirty_reduce_level_call
 from .grouped_matmul import grouped_matmul_call
 
 __all__ = ["flash_attention", "dirty_reduce_level", "dirty_map",
-           "grouped_matmul"]
+           "dirty_causal_scan", "grouped_matmul"]
 
 
 def _default_interpret() -> bool:
@@ -66,6 +69,50 @@ def dirty_map(fn, inputs, old_out: jax.Array, dirty: jax.Array, *,
     return dirty_map_call(
         fn, inputs, old_out, dirty, block=block,
         interpret=_default_interpret() if interpret is None else interpret)
+
+
+def dirty_causal_scan(contrib: jax.Array, old_states: jax.Array,
+                      start_block: jax.Array, op, *, identity=0.0,
+                      block: int = 8,
+                      interpret: bool | None = None) -> jax.Array:
+    """Block-skip causal carry scan (see ``dirty_causal.py``).
+
+    ``contrib``: [P, *feat] per-block contributions; ``old_states``:
+    [P, *feat] cached inclusive states from the previous run;
+    ``start_block``: first dirty block (P = all clean).  Returns the new
+    inclusive states — cached before the dirty suffix, recomputed from
+    the cached seed onward.  Exact (int/bool) dtypes only for bitwise
+    parity with the dense scan (the caller gates).
+    """
+    P = contrib.shape[0]
+    state_shape = contrib.shape[1:]
+    W = max(int(math.prod(state_shape)), 1)
+    rows = contrib.reshape(P, W)
+    old_rows = old_states.reshape(P, W)
+    pad = (-P) % block
+    if pad:
+        ident = jnp.broadcast_to(
+            jnp.asarray(identity, contrib.dtype),
+            (pad,) + state_shape).reshape(pad, W)
+        rows = jnp.concatenate([rows, ident])
+        old_rows = jnp.concatenate(
+            [old_rows, jnp.zeros((pad, W), old_rows.dtype)])
+    tiles = (P + pad) // block
+    # Cached state just before each tile boundary (identity before t=0):
+    # only the boundary tile's seed is read, the rest ride along.
+    boundary = jnp.maximum(jnp.arange(tiles) * block - 1, 0)
+    seeds = old_rows[boundary]
+    ident_row = jnp.broadcast_to(
+        jnp.asarray(identity, old_states.dtype),
+        state_shape).reshape(1, W)
+    seeds = jnp.where(jnp.arange(tiles)[:, None] == 0, ident_row, seeds)
+    start_tile = (jnp.minimum(jnp.asarray(start_block, jnp.int32), P)
+                  // block).reshape(1)
+    out = dirty_causal_scan_call(
+        rows, old_rows, seeds, start_tile, op=op, state_shape=state_shape,
+        block=block,
+        interpret=_default_interpret() if interpret is None else interpret)
+    return out[:P].reshape(old_states.shape)
 
 
 def grouped_matmul(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,

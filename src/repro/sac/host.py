@@ -14,14 +14,22 @@ Lowering: every block of every node becomes one ``Mod``.  Per node kind:
   * reduce_level — one reader per pair; an odd level's last reader
     combines its single child with the op identity (same padding rule as
     the compiled backend).
-  * escan — ONE reader for the whole carry pass: it reads every block
-    aggregate and rewrites all carries with the same
-    ``jax.lax.associative_scan`` the graph backend runs (bitwise parity);
-    the engine's value-equality write cutoff then marks only the readers
-    of carries that actually changed.
+  * escan — a **Ladner-Fischer reader tree**: the carry pass lowers into
+    O(n) two-input combine readers arranged exactly like
+    ``jax.lax.associative_scan``'s odd/even recursion (pairwise reduce ->
+    recursive scan -> even interleave), so values stay bitwise identical
+    to the graph backend while propagation gets the paper's bounds — a
+    late edit re-executes O(log n) combines instead of the whole carry
+    pass, and the critical path of the tree is O(log n) per recursion
+    level instead of the O(n) monolithic reader the backend used to
+    lower.  Internal tree mods write with ``counted=False`` so
+    'affected' (changed node blocks) stays comparable across backends.
   * causal — out block i reads parent blocks 0..i; rows past the prefix
     are zero-filled before calling ``fn(x, i)`` (the causal contract:
-    fn must not look at them).
+    fn must not look at them).  Carry-causal nodes (a declared monoid)
+    lower as lift readers -> a Ladner-Fischer scan tree over the lifted
+    states -> per-block finalize readers, matching the graph backend's
+    cached-carry structure reader-for-reader.
 
 Block values are stored wrapped (``_Blk``) so the engine's Algorithm-2
 write cutoff compares them with numpy array equality (NaN-unequal,
@@ -203,19 +211,46 @@ class HostHandle:
             eng.parallel_for(0, nd.num_blocks, body)
 
         elif nd.kind == "escan":
-            # One reader = the whole carry pass (see module docstring).
-            def carry_pass(*vals, _nd=nd, _out=out):
-                x = jnp.asarray(np.concatenate([v.a for v in vals], axis=0))
-                inclusive = jax.lax.associative_scan(_nd.op, x, axis=0)
-                seed = jnp.broadcast_to(jnp.asarray(_nd.identity, x.dtype),
-                                        x[:1].shape)
-                rows = np.asarray(
-                    jnp.concatenate([seed, inclusive[:-1]], axis=0))
-                eng.charge(len(vals) - 1, span=max(len(vals), 1).bit_length())
-                for i, m in enumerate(_out):
-                    eng.write(m, _Blk(rows[i][None]))
+            inclusive = self._lf_scan_tree(nd, par0)
+            # Exclusive outputs: out[0] = identity (its reader only looks
+            # at leaf 0 for dtype/shape and always rewrites the identity,
+            # so the cutoff kills it); out[j] copies inclusive[j-1].
 
-            eng.read(tuple(par0), carry_pass)
+            def seed_reader(v, _nd=nd, _out=out):
+                row = np.broadcast_to(
+                    np.asarray(np.asarray(_nd.identity), v.a.dtype),
+                    v.a[0].shape)
+                eng.write(_out[0], _Blk(row[None]))
+
+            eng.read(par0[0], seed_reader)
+
+            def body(j, _out=out, _inc=inclusive):
+                eng.read(_inc[j], lambda v, _j=j: eng.write(
+                    _out[_j + 1], _Blk(v.a)))
+            eng.parallel_for(0, nd.num_blocks - 1, body)
+
+        elif nd.kind == "causal" and nd.op is not None:
+            # Carry-causal: lift each block into its state contribution,
+            # scan the contributions through the reader tree, finalize
+            # per block from (state, own block).
+            lifted = [eng.mod(f"{nd.name}.lift[{i}]")
+                      for i in range(nd.num_blocks)]
+
+            def lift_body(i, _nd=nd, _in=par0, _lift=lifted):
+                eng.read(_in[i], lambda v, _i=i: eng.write(
+                    _lift[_i],
+                    _Blk(np.asarray(_nd.lift(jnp.asarray(v.a)))),
+                    counted=False))
+            eng.parallel_for(0, nd.num_blocks, lift_body)
+
+            states = self._lf_scan_tree(nd, lifted, rows=False)
+
+            def fin_body(i, _nd=nd, _out=out, _in=par0, _st=states):
+                def reader(vs, vx, _i=i):
+                    res = _nd.finalize(jnp.asarray(vs.a), jnp.asarray(vx.a))
+                    eng.write(_out[_i], _store(_nd, res))
+                eng.read((_st[i], _in[i]), reader)
+            eng.parallel_for(0, nd.num_blocks, fin_body)
 
         elif nd.kind == "causal":
             p = self.nodes[nd.deps[0]]
@@ -234,6 +269,72 @@ class HostHandle:
 
         else:
             raise ValueError(f"cannot lower node kind {nd.kind!r}")
+
+    # ------------------------------------------------------------------
+    # Ladner-Fischer scan tree (escan / carry-causal)
+    # ------------------------------------------------------------------
+    def _lf_scan_tree(self, nd: GNode, leaves: List, rows: bool = True):
+        """Lower an inclusive scan over ``leaves`` as a reader tree with
+        the exact odd/even recursion of ``jax.lax.associative_scan`` —
+        combine-for-combine, so the values are bitwise identical to the
+        graph backend's scan for any dtype.
+
+        Work is O(n) combine readers; a change in leaf i re-executes only
+        the combines whose fold covers i at each of the O(log n)
+        recursion depths (plus whatever the value cutoff lets through
+        downstream), and each depth's combines run under ``parallel_for``
+        — O(log n) span per depth instead of the O(n) monolithic carry
+        reader.  Internal mods write ``counted=False``.
+
+        ``rows=True`` treats values as one-row blocks (``v.a[0]``,
+        escan); ``rows=False`` combines raw state arrays (carry-causal).
+        """
+        eng = self._eng
+        op = nd.op
+
+        def combine(a, b, name):
+            m = eng.mod(name)
+
+            if rows:
+                def reader(va, vb, _m=m):
+                    eng.write(_m, _Blk(np.asarray(
+                        op(jnp.asarray(va.a[0]), jnp.asarray(vb.a[0])))[None]),
+                        counted=False)
+            else:
+                def reader(va, vb, _m=m):
+                    eng.write(_m, _Blk(np.asarray(
+                        op(jnp.asarray(va.a), jnp.asarray(vb.a)))),
+                        counted=False)
+            eng.read((a, b), reader)
+            return m
+
+        def scan(elems, depth):
+            n = len(elems)
+            if n < 2:
+                return list(elems)
+            red = [None] * (n // 2)
+
+            def mk_red(i, _elems=elems, _red=red, _d=depth):
+                _red[i] = combine(_elems[2 * i], _elems[2 * i + 1],
+                                  f"{nd.name}.lf{_d}[{i}]")
+            eng.parallel_for(0, n // 2, mk_red)
+            odd = scan(red, depth + 1)
+            n_even = len(range(2, n, 2))
+            even = [None] * n_even
+
+            def mk_even(i, _elems=elems, _odd=odd, _even=even, _d=depth):
+                _even[i] = combine(_odd[i], _elems[2 * i + 2],
+                                   f"{nd.name}.lfe{_d}[{i}]")
+            eng.parallel_for(0, n_even, mk_even)
+            res = [None] * n
+            res[0] = elems[0]
+            for i, m in enumerate(odd):
+                res[2 * i + 1] = m
+            for i, m in enumerate(even):
+                res[2 * i + 2] = m
+            return res
+
+        return scan(list(leaves), 0)
 
     # ------------------------------------------------------------------
     # Change propagation

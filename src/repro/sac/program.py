@@ -113,15 +113,23 @@ class IncrementalProgram:
     # ------------------------------------------------------------------
     def compile(self, backend: str = "graph", *, max_sparse="auto",
                 use_pallas="auto", interpret: Optional[bool] = None,
-                pallas_tile: int = 8, dirty: str = "mask", **input_specs):
+                pallas_tile: int = 8, dirty: str = "mask",
+                donate: bool = True, block_skip="auto", plan: bool = True,
+                **input_specs):
         """Trace and lower.  ``input_specs`` give every input's leading
         size (int, shape tuple, or example array); remaining kwargs are
-        backend options (see ``GraphBuilder.compile``)."""
+        backend options (see ``GraphBuilder.compile``): ``donate``
+        donates the propagation state to the jitted update (in-place
+        scatters, no per-update copy of untouched node values — reads
+        from a superseded state become invalid), ``block_skip`` routes
+        escan/carry-causal recomputes through the cached-carry block-skip
+        path (``"auto"`` = exact dtypes only)."""
         g, outs, single = self.trace(**input_specs)
         if backend == "graph":
             cg = g.compile(max_sparse=max_sparse, use_pallas=use_pallas,
                            interpret=interpret, pallas_tile=pallas_tile,
-                           dirty=dirty)
+                           dirty=dirty, donate=donate, block_skip=block_skip,
+                           plan=plan)
             return GraphHandle(cg, outs, single)
         if backend == "host":
             from .host import HostHandle

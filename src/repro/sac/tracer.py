@@ -246,11 +246,23 @@ def scan(op: Callable, x: BlockArray, identity: Any = 0.0,
     return BlockArray(x._g.scan(op, x._h, identity=identity, name=name))
 
 
-def causal(f: Callable, x: BlockArray, out_block: Optional[int] = None,
-           name: str = "") -> BlockArray:
+def causal(f: Optional[Callable], x: BlockArray,
+           out_block: Optional[int] = None, name: str = "", *,
+           lift: Optional[Callable] = None, op: Optional[Callable] = None,
+           finalize: Optional[Callable] = None,
+           identity: Any = 0.0) -> BlockArray:
     """Causal op (the interval-carrying edge): out block i reads blocks
-    0..i; ``f(x_full, i)`` must restrict itself to rows < (i+1)*block."""
-    return BlockArray(x._g.causal(f, x._h, out_block=out_block, name=name))
+    0..i; ``f(x_full, i)`` must restrict itself to rows < (i+1)*block.
+
+    Carry form: pass ``lift``/``op``/``finalize`` (and ``op``'s
+    ``identity``) to declare the prefix dependence as a monoid —
+    ``out_i = finalize(fold(op, lift(b_0)..lift(b_i)), b_i)``.  The
+    runtime caches the per-block carry states so a dirty suffix reseeds
+    from the cached prefix instead of rescanning it (the flash-style
+    block-skip; see ``GraphBuilder.causal``)."""
+    return BlockArray(x._g.causal(f, x._h, out_block=out_block, name=name,
+                                  lift=lift, op=op, finalize=finalize,
+                                  identity=identity))
 
 
 # ---------------------------------------------------------------------------

@@ -455,3 +455,200 @@ def test_propagate_rejects_unknown_input():
     state = cg.init(x=jnp.zeros(1024, jnp.float32))
     with pytest.raises(AssertionError):
         cg.propagate(state, {"bogus": jnp.zeros(1024, jnp.float32)})
+
+
+# ---------------------------------------------------------------------------
+# Propagation fast path: donation, level skip, packing, block-skip carries
+# ---------------------------------------------------------------------------
+def test_donation_chained_propagates_bitwise():
+    """Donation-aliasing regression: chaining several propagates from one
+    init (the steady-state in-place path) must stay bitwise identical to
+    the copying runtime (donate=False), with no use-after-donate error
+    anywhere along the chain."""
+    rng = np.random.default_rng(0)
+    x0 = rng.standard_normal(1024).astype(np.float32)
+    edits, x = [], x0
+    for i in range(4):
+        x = x.copy()
+        x[(137 * (i + 1)) % 1024] += 1.0 + i
+        edits.append(x)
+    cgd = make_pipeline(donate=True)
+    cgc = make_pipeline(donate=False)
+    sd = cgd.init(x=jnp.asarray(x0))
+    sc = cgc.init(x=jnp.asarray(x0))
+    for e in edits:
+        sd, std = cgd.propagate(sd, {"x": jnp.asarray(e)})
+        sc, stc = cgc.propagate(sc, {"x": jnp.asarray(e)})
+        assert int(std["recomputed"]) == int(stc["recomputed"])
+    assert_states_equal(cgd, sd, sc)
+    assert_states_equal(cgd, sd, cgd.init(x=jnp.asarray(edits[-1])))
+
+
+def test_donation_invalidates_superseded_state():
+    """The documented aliasing rule: once a state is donated to a later
+    propagate, its buffers are dead — reading them raises instead of
+    silently returning stale data."""
+    cg = make_pipeline(donate=True)
+    d = jnp.asarray(np.random.default_rng(3).standard_normal(1024),
+                    jnp.float32)
+    s0 = cg.init(x=d)
+    s1, _ = cg.propagate(s0, {"x": d.at[5].set(9.0)})
+    # node 1 (the map) is recomputed in place: its old buffer is donated
+    # and dead.  (Leaves the executable never consumes — e.g. the input
+    # value, whose diff ran in the mark phase — may survive as pruned
+    # arguments, but the contract covers the whole state.)
+    with pytest.raises(RuntimeError):
+        np.asarray(s0["v"][1])
+    # the live state stays readable
+    assert np.asarray(s1["v"][1]).shape == (1024,)
+
+
+def test_level_skip_noop_update_touches_nothing():
+    """A propagate whose input diff is empty must report zero recomputed
+    blocks and leave every value bitwise intact (the whole-level skip:
+    each clean level costs one scalar compare)."""
+    for level_skip in (True, False):
+        cg = make_pipeline(level_skip=level_skip)
+        d = jnp.asarray(np.random.default_rng(5).standard_normal(1024),
+                        jnp.float32)
+        state = cg.init(x=d)
+        ref = cg.init(x=d)
+        state, stats = cg.propagate(state, {"x": d + 0.0})
+        assert int(stats["recomputed"]) == 0
+        assert int(stats["affected"]) == 0
+        assert_states_equal(cg, state, ref)
+
+
+def test_level_packing_batches_same_fn_nodes():
+    """Two parallel reduce trees (same op) and two same-fn maps pack into
+    per-level groups; the batched gather->fn->scatter stays bitwise equal
+    to from-scratch."""
+    rng = np.random.default_rng(7)
+    f = lambda b: b * 3.0 + 1.0          # shared per-block function
+
+    g = GraphBuilder()
+    x = g.input("x", n=512, block=4)
+    y = g.input("y", n=512, block=4)
+    u, v = g.map(f, x), g.map(f, y)
+    g.output(g.reduce_tree(jnp.add, u, identity=0.0))
+    g.output(g.reduce_tree(jnp.add, v, identity=0.0))
+    cg = g.compile(max_sparse=8)
+    packed = [grp for lvl in cg._level_groups for grp in lvl if len(grp) > 1]
+    assert packed, "same-fn nodes of a level must form packed groups"
+
+    dx = rng.standard_normal(512).astype(np.float32)
+    dy = rng.standard_normal(512).astype(np.float32)
+    state = cg.init(x=jnp.asarray(dx), y=jnp.asarray(dy))
+    dx2 = dx.copy(); dx2[37] += 1.0
+    dy2 = dy.copy(); dy2[411] -= 2.0
+    state, stats = cg.propagate(
+        state, {"x": jnp.asarray(dx2), "y": jnp.asarray(dy2)})
+    assert_states_equal(cg, state,
+                        cg.init(x=jnp.asarray(dx2), y=jnp.asarray(dy2)))
+    assert int(stats["recomputed"]) < cg.total_blocks // 4
+
+
+def test_escan_block_skip_matches_scratch_int():
+    """Integer scans route through the block-skip carry path (cached
+    prefix reseed) under both dirty representations and both backends of
+    the dense kernel, staying bitwise equal to from-scratch."""
+    rng = np.random.default_rng(11)
+    d = rng.integers(0, 1000, 264).astype(np.int32)   # 33 blocks: tail pad
+
+    def build(**kw):
+        g = GraphBuilder()
+        x = g.input("x", n=264, block=8)
+        g.output(g.scan(jnp.add, x, identity=0))
+        return g.compile(max_sparse=4, **kw)
+
+    for kw in (dict(dirty="mask"), dict(dirty="interval"),
+               dict(dirty="mask", use_pallas=True, interpret=True,
+                    pallas_tile=4)):
+        cg = build(**kw)
+        state = cg.init(x=jnp.asarray(d))
+        d2 = d.copy(); d2[100] += 7
+        state, stats = cg.propagate(state, {"x": jnp.asarray(d2)})
+        assert_states_equal(cg, state, cg.init(x=jnp.asarray(d2)))
+        d3 = d2.copy(); d3[260] -= 3                  # tail-block edit
+        state, _ = cg.propagate(state, {"x": jnp.asarray(d3)})
+        assert_states_equal(cg, state, cg.init(x=jnp.asarray(d3)))
+
+
+def test_carry_causal_cached_states():
+    """Carry-causal nodes cache their per-block carry states in the
+    propagation state and keep them in sync with from-scratch."""
+    g = GraphBuilder()
+    x = g.input("x", n=128, block=8)
+    h = g.causal(None, x, lift=lambda b: b.sum(), op=jnp.add,
+                 finalize=lambda s, b: b + s, identity=0)
+    g.output(h)
+    cg = g.compile(max_sparse=4)
+    rng = np.random.default_rng(13)
+    d = rng.integers(0, 100, 128).astype(np.int32)
+    state = cg.init(x=jnp.asarray(d))
+    assert str(h.idx) in state["c"]
+    d2 = d.copy(); d2[77] += 5
+    state, stats = cg.propagate(state, {"x": jnp.asarray(d2)})
+    ref = cg.init(x=jnp.asarray(d2))
+    assert_states_equal(cg, state, ref)
+    np.testing.assert_array_equal(np.asarray(state["c"][str(h.idx)]),
+                                  np.asarray(ref["c"][str(h.idx)]))
+    # suffix semantics: blocks before the edit stay untouched
+    assert int(stats["recomputed"]) == 128 // 8 - 77 // 8
+
+
+def test_pallas_stencil_and_mixed_dtype_routing():
+    """The Pallas dense path now serves stencil windows (halo-aware row
+    payloads), pads non-tile-multiple block counts, and upcasts mixed
+    parent dtypes — all bitwise equal to the XLA dense path."""
+    rng = np.random.default_rng(17)
+
+    def build(use_pallas):
+        g = GraphBuilder()
+        x = g.input("x", n=88, block=8)              # 11 blocks: tail pad
+        y = g.input("y", n=88, block=8)
+        xi = g.map(lambda b: (b * 10).astype(jnp.int32), x)
+        z = g.zip_map(lambda a, b: a + b, y, xi)     # f32 + i32 -> f32
+        s = g.stencil(lambda w: w[8:16] + 0.5 * (w[:8] + w[16:]), z,
+                      radius=1)
+        g.output(s)
+        return g.compile(max_sparse=1, use_pallas=use_pallas,
+                         interpret=True, pallas_tile=4)
+
+    dx = rng.standard_normal(88).astype(np.float32)
+    dy = rng.standard_normal(88).astype(np.float32)
+    cgp, cgx = build(True), build(False)
+    sp = cgp.init(x=jnp.asarray(dx), y=jnp.asarray(dy))
+    sx = cgx.init(x=jnp.asarray(dx), y=jnp.asarray(dy))
+    dx2 = dx.copy(); dx2[3] += 1.0; dx2[70] -= 2.0; dx2[85] += 0.5
+    sp, _ = cgp.propagate(sp, {"x": jnp.asarray(dx2)})
+    sx, _ = cgx.propagate(sx, {"x": jnp.asarray(dx2)})
+    assert_states_equal(cgp, sp, sx)
+
+
+def test_planned_matches_legacy_cond_propagate():
+    """The planned two-phase propagate (mark -> host plan -> branch-free
+    executable) must stay bitwise identical to the legacy lax.cond
+    runtime across regimes (skip/sparse/dense plans) and report the same
+    stats."""
+    rng = np.random.default_rng(23)
+    d = rng.standard_normal(1024).astype(np.float32)
+    cgp = make_pipeline(max_sparse=16, plan=True)
+    cgl = make_pipeline(max_sparse=16, plan=False)
+    sp = cgp.init(x=jnp.asarray(d))
+    sl = cgl.init(x=jnp.asarray(d))
+    cur = d
+    for k in (1, 5, 400):                # sparse, sparse, dense plans
+        new = cur.copy()
+        for j in rng.choice(1024, k, replace=False):
+            new[j] += 1.0
+        sp, stp = cgp.propagate(sp, {"x": jnp.asarray(new)})
+        sl, stl = cgl.propagate(sl, {"x": jnp.asarray(new)})
+        assert_states_equal(cgp, sp, sl)
+        for key in ("recomputed", "affected", "dirty_inputs"):
+            assert int(stp[key]) == int(stl[key]), (k, key)
+        cur = new
+    # no-op edit: the planned executable is just the mark pass
+    sp, stp = cgp.propagate(sp, {"x": jnp.asarray(cur)})
+    assert int(stp["recomputed"]) == 0
+    assert_states_equal(cgp, sp, sl)

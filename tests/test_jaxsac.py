@@ -233,3 +233,24 @@ def test_prefill_distance_properties(first, extra):
     assert info["p0_bucket"] <= first
     assert info["p0_bucket"] % 8 == 0
     assert info["recompute"] + info["p0_bucket"] == 64
+
+
+def test_incremental_prefill_flash_impl():
+    """impl="flash" routes the continuation's causal attention through
+    the Pallas flash kernel with the query offset at p0 — the kernel's
+    causal block skip never touches kv tiles beyond each query tile's
+    frontier (the serving-path form of the cached-carry block skip)."""
+    cfg, model, params, tok, batch, extra = _setup("yi_6b")
+    _, cache0 = _full_prefill(cfg, model, params, batch)
+    new_tok = tok.at[:, 40].set((tok[:, 40] + 1) % cfg.vocab_size)
+    logits_naive, _, _ = incremental_prefill(
+        model, params, tok, new_tok, cache0, batch_extra=extra,
+        block=16, impl="naive")
+    _, cache0b = _full_prefill(cfg, model, params, batch)
+    logits_flash, cache_flash, info = incremental_prefill(
+        model, params, tok, new_tok, cache0b, batch_extra=extra,
+        block=16, impl="flash")
+    assert info["savings"] > 1.0
+    np.testing.assert_allclose(
+        np.asarray(logits_naive, np.float32),
+        np.asarray(logits_flash, np.float32), rtol=3e-2, atol=3e-2)

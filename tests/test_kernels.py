@@ -176,3 +176,92 @@ def test_grouped_matmul_matches_ragged_dot():
     want = jax.lax.ragged_dot(x, w, gs)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dirty_causal: block-skip carry scan vs the dense associative_scan oracle
+# ---------------------------------------------------------------------------
+def _dense_scan_oracle(op, contrib):
+    return jax.lax.associative_scan(op, contrib, axis=0)
+
+
+def _check_block_skip(contrib, start, op, identity, block, state_shape=()):
+    """Edit-suffix protocol: old states memoize the pre-edit scan; the
+    kernel must rebuild the post-edit scan bitwise from the cached
+    prefix, and keep every pre-suffix row bitwise stable."""
+    old_states = _dense_scan_oracle(op, contrib)
+    edited = contrib.at[start:].add(jnp.asarray(3, contrib.dtype)) \
+        if start < contrib.shape[0] else contrib
+    want = _dense_scan_oracle(op, edited)
+    got = ops.dirty_causal_scan(edited, old_states, jnp.int32(start), op,
+                                identity=identity, block=block,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # clean-block stability under the changed-mask cutoff: rows before
+    # the dirty suffix are the cached rows, bit for bit
+    np.testing.assert_array_equal(np.asarray(got)[:start],
+                                  np.asarray(old_states)[:start])
+
+
+def test_dirty_causal_basic_suffixes():
+    for P, block in [(16, 4), (10, 4), (33, 8), (7, 8)]:
+        contrib = jnp.asarray(RNG.integers(0, 1000, (P, 3)), jnp.int32)
+        for start in (0, 1, P // 2, P - 1, P):
+            _check_block_skip(contrib, start, jnp.add, 0, block)
+
+
+def test_dirty_causal_scalar_state_and_float_exact():
+    # scalar per-block states
+    contrib = jnp.asarray(RNG.integers(0, 100, (24,)), jnp.int32)
+    _check_block_skip(contrib, 9, jnp.add, 0, 8)
+    # float32 holding small integers: addition is exact, so any
+    # re-bracketing is bitwise stable — the float case the block-skip
+    # contract covers
+    contrib = jnp.asarray(RNG.integers(0, 64, (24, 2)), jnp.float32)
+    _check_block_skip(contrib, 13, jnp.add, 0.0, 4)
+
+
+def test_dirty_causal_modular_op():
+    # Rabin-Karp-style modular combine (non-commutative pair state).
+    # NB: Python-int modulus — ops traced into a Pallas kernel body must
+    # not capture array constants (same contract as dirty_map's fn) —
+    # and M < sqrt(2^31) so products stay in int32 (overflow wraparound
+    # is deterministic but not associative across re-bracketings).
+    M = 46_337
+
+    def combine(a, b):
+        return jnp.stack([(a[..., 0] * b[..., 1] + b[..., 0]) % M,
+                          (a[..., 1] * b[..., 1]) % M], axis=-1)
+
+    contrib = jnp.stack(
+        [jnp.asarray(RNG.integers(0, 1000, (20,)), jnp.int32),
+         jnp.full((20,), 31, jnp.int32)], axis=-1)
+    old = _dense_scan_oracle(combine, contrib)
+    edited = contrib.at[11, 0].set(999)
+    want = _dense_scan_oracle(combine, edited)
+    got = ops.dirty_causal_scan(edited, old, jnp.int32(11), combine,
+                                identity=jnp.asarray([0, 1], jnp.int32),
+                                block=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(2, 48), st.integers(0, 2**31 - 1), st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_dirty_causal_block_skip_property(P, seed, blk_pow):
+    """Property: for ANY length, tile size, and random edit suffix, the
+    block-skip kernel rebuilds the dense oracle's scan bitwise from the
+    cached prefix states."""
+    block = 2 ** blk_pow
+    r = np.random.default_rng(seed)
+    contrib = jnp.asarray(r.integers(-1000, 1000, (P, 2)), jnp.int32)
+    old_states = _dense_scan_oracle(jnp.add, contrib)
+    start = int(r.integers(0, P + 1))
+    edited = contrib.at[start:].add(jnp.int32(r.integers(1, 100))) \
+        if start < P else contrib
+    want = _dense_scan_oracle(jnp.add, edited)
+    got = ops.dirty_causal_scan(edited, old_states, jnp.int32(start),
+                                jnp.add, identity=0, block=block,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got)[:start],
+                                  np.asarray(old_states)[:start])

@@ -314,3 +314,80 @@ def test_graphbuilder_deprecation_shim():
     assert any(issubclass(x.category, DeprecationWarning) for x in w)
     from repro.jaxsac.graph import GraphBuilder
     assert gb_cls is GraphBuilder        # the shim IS the IR builder
+
+
+# ---------------------------------------------------------------------------
+# Ladner-Fischer escan reader tree + carry-causal lowering (host backend)
+# ---------------------------------------------------------------------------
+def test_host_escan_ladner_fischer_span():
+    """The carry pass lowers as a reader tree: a late single-element edit
+    re-executes O(log n) combines with polylog span, instead of the O(n)
+    monolithic carry reader (work *and* span accounting must shrink)."""
+    n = 256
+
+    @sac.incremental(block=1)
+    def prog(x):
+        return sac.scan(jnp.add, x)
+
+    h = prog.compile("host", x=n)
+    d = _rand(n, 23)
+    h.run(x=d)
+    full_work, full_span = h.stats["work"], h.stats["span"]
+    d2 = d.copy(); d2[n - 1] += 1.0      # last element: log-depth cover
+    h.update(x=d2)
+    st = h.stats
+    lg = int(np.ceil(np.log2(n)))
+    # the whole update (marks + re-executed combines + finalizes):
+    assert st["recomputed"] <= 4 * lg, st
+    assert st["work"] <= 32 * lg, st
+    assert st["span"] <= 4 * lg, st
+    assert st["span"] < full_span
+    assert st["work"] < full_work // 4
+
+
+def test_host_escan_tree_bitwise_parity_floats():
+    """The reader tree mirrors jax.lax.associative_scan's odd/even
+    recursion combine-for-combine, so float scans stay bitwise equal to
+    the graph backend (including non-power-of-two block counts)."""
+    for n, block in [(48, 4), (64, 4), (104, 8)]:
+        @sac.incremental(block=block)
+        def prog(x):
+            return sac.scan(jnp.add, x)
+
+        hg = prog.compile("graph", x=n, max_sparse=8)
+        hh = prog.compile("host", x=n)
+        d = _rand(n, n)
+        og, oh = hg.run(x=d), hh.run(x=d)
+        _assert_same(og, oh)
+        d2 = d.copy(); d2[n // 3] += 1.0; d2[n - 1] -= 2.0
+        og, oh = hg.update(x=d2), hh.update(x=d2)
+        _assert_same(og, oh)
+        assert hg.stats["affected"] == hh.stats["affected"]
+
+
+def test_carry_causal_parity_both_backends():
+    """Carry-causal (declared monoid) lowers on both backends with the
+    same scan bracketing: bitwise-identical outputs and matching
+    affected counts, floats included."""
+    block = 4
+
+    @sac.incremental(block=block)
+    def prog(x):
+        return sac.causal(
+            None, x,
+            lift=lambda b: jnp.stack([b.sum(), jnp.float32(b.shape[0])]),
+            op=jnp.add,
+            finalize=lambda s, b: jnp.full((block,), s[0] / s[1],
+                                           jnp.float32),
+            identity=0.0)
+
+    hg = prog.compile("graph", x=48, max_sparse=4)
+    hh = prog.compile("host", x=48)
+    d = _rand(48, 31)
+    og, oh = hg.run(x=d), hh.run(x=d)
+    _assert_same(og, oh)
+    d2 = d.copy(); d2[30] += 1.0
+    og, oh = hg.update(x=d2), hh.update(x=d2)
+    _assert_same(og, oh)
+    assert hg.stats["affected"] == hh.stats["affected"]
+    assert hg.stats["dirty_inputs"] == hh.stats["dirty_inputs"]
