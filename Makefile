@@ -2,13 +2,25 @@
 # default fast lane: pytest.ini deselects tests marked `slow`).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all bench bench-graph bench-check
+.PHONY: test test-all fuzz cov bench bench-graph bench-check
 
 test:
 	$(PY) -m pytest -x -q
 
 test-all:
 	$(PY) -m pytest -q -m "slow or not slow"
+
+# Bounded differential fuzz lane (fixed seeds, reproducible): the
+# graph/host/hybrid bitwise-parity sweep at CI width.  The default
+# `make test` runs the same checker over 10 seeds; this widens it.
+fuzz:
+	FUZZ_CASES=200 $(PY) -m pytest -q tests/test_fuzz_differential.py
+
+# Fast lane under coverage with the CI floor for the runtime packages
+# (requires pytest-cov, see requirements-dev.txt).
+cov:
+	$(PY) -m pytest -q --cov=repro.sac --cov=repro.jaxsac \
+	  --cov-report=term --cov-fail-under=85
 
 bench:
 	$(PY) -m benchmarks.run

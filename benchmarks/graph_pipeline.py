@@ -26,7 +26,11 @@ counts, AND speedup against the committed baseline rows instead of
 overwriting them; it then runs the gate row (pipeline, n = GATE_N =
 2^21 >= 262144, k_blocks = 1) and asserts a paired-median
 ``speedup >= 1.0`` — the paper's headline claim that change propagation
-beats from-scratch in wall-clock, enforced in CI (`make bench-check`).
+beats from-scratch in wall-clock, enforced in CI (`make bench-check`) —
+plus the hybrid-runtime gate: the ``trees``/``filter`` apps' hybrid
+update latency must beat the pure host engine by >= 2x at the benched
+sizes (``HYBRID_APPS``; rows ``trees-hybrid`` / ``filter-hybrid``,
+where ``scratch_ms`` is the pure-host update being displaced).
 
 Usage:  PYTHONPATH=src python -m benchmarks.graph_pipeline
             [--size tiny|quick|medium|full] [--check] [--threshold 2.0]
@@ -191,12 +195,107 @@ def bench_causal(n: int, block: int, ks, seed: int = 0):
                   n, block, ks, codes, seed)
 
 
+# ---------------------------------------------------------------------------
+# Hybrid apps: compiled interior vs pure-host update latency
+# ---------------------------------------------------------------------------
+# The benched sizes of the hybrid acceptance gate: at these (n, k) the
+# hybrid runtime must beat the pure host engine's update latency by
+# >= HYBRID_GATE_X.  filter uses modulus=16 (a selective predicate: the
+# hybrid win is proportional to the fraction of edits that do NOT flip
+# a keep flag, since those re-run zero skeleton readers).
+HYBRID_APPS = {
+    "trees": dict(n=512, k=64),
+    "filter": dict(n=8191, k=512, modulus=16),
+}
+HYBRID_GATE_X = 2.0
+
+
+def bench_hybrid_apps(reps: int = 8, seed: int = 0):
+    """trees/filterbst rows: hybrid vs pure-host update latency.
+
+    Measurement is paired and interleaved (same discipline as
+    ``check_speedup_gate``): both engines get the *same* edit sequence
+    (same app seed), each round times one hybrid propagate and one
+    pure-host propagate back to back, and the speedup is the median of
+    per-round ratios, so shared-machine drift is common-mode.
+    """
+    from repro.apps import FilterApp, TreeContractionApp
+    from repro.core import Engine
+
+    rows = []
+    for name, cfg in HYBRID_APPS.items():
+        cls = TreeContractionApp if name == "trees" else FilterApp
+        kwargs = {k: v for k, v in cfg.items() if k != "k"}
+        k = cfg["k"]
+        apps, engines, comps = {}, {}, {}
+        for mode in (True, False):
+            app = cls(seed=seed, hybrid=mode, **kwargs)
+            eng = Engine()
+            app.build_input(eng)
+            comp = app.run(eng)
+            app.apply_update(eng, k)        # warm (hybrid: jit compile)
+            comp.propagate()
+            assert app.output() == app.expected(), (name, mode)
+            apps[mode], engines[mode], comps[mode] = app, eng, comp
+        ratios, hyb, host = [], [], []
+        for _ in range(reps):
+            for mode in (True, False):
+                apps[mode].apply_update(engines[mode], k)
+            t0 = time.perf_counter()
+            comps[True].propagate()
+            t_h = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            comps[False].propagate()
+            t_p = time.perf_counter() - t0
+            ratios.append(t_p / t_h)
+            hyb.append(t_h)
+            host.append(t_p)
+        for mode in (True, False):
+            assert apps[mode].output() == apps[mode].expected(), (
+                name, mode)
+        frag = apps[True].fragment
+        st = frag.last_stats
+        rows.append({
+            "app": f"{name}-hybrid", "n": cfg["n"], "block": 1,
+            "levels": frag.cg.num_levels, "k_blocks": k,
+            "recomputed": int(st["recomputed"]),
+            "affected": int(st["affected"]),
+            "total_blocks": frag.cg.total_blocks,
+            "work_savings": round(
+                frag.cg.total_blocks / max(int(st["recomputed"]), 1), 2),
+            # update_ms = hybrid update; scratch_ms = the PURE-HOST
+            # update (the baseline this gate displaces), so speedup =
+            # paired-median host/hybrid.
+            "update_ms": round(float(np.median(hyb)) * 1e3, 3),
+            "scratch_ms": round(float(np.median(host)) * 1e3, 3),
+            "speedup": round(float(np.median(ratios)), 2),
+        })
+    return rows
+
+
+def check_hybrid_gate(reps: int = 10) -> int:
+    """The hybrid acceptance gate: at the benched sizes, hybrid update
+    latency must beat the pure host engine by >= HYBRID_GATE_X."""
+    bad = 0
+    for r in bench_hybrid_apps(reps=reps):
+        ok = r["speedup"] >= HYBRID_GATE_X
+        verdict = "ok" if ok else "FAIL"
+        print(f"  {verdict} hybrid gate: {r['app']} n={r['n']} "
+              f"k={r['k_blocks']} hybrid {r['update_ms']}ms vs host "
+              f"{r['scratch_ms']}ms -> paired-median speedup "
+              f"{r['speedup']} (need >= {HYBRID_GATE_X})")
+        bad += 0 if ok else 1
+    return bad
+
+
 def run(size: str = "quick", seed: int = 0):
     n, block, ks = SIZES[size]
     grain = block * 4 if size in ("tiny", "quick") else 64
     rows = bench_pipeline(n, block, ks, seed)
     rows += bench_stringhash(n, grain, ks, seed)
     rows += bench_causal(n, block, ks, seed)
+    if size != "tiny":                  # hybrid app rows (host engine is
+        rows += bench_hybrid_apps(seed=seed)   # too slow for the tiny lane)
     return rows
 
 
@@ -315,6 +414,7 @@ def main() -> None:
         rows = run(size="tiny")
         bad = check_regression(rows, args.threshold)
         bad += check_speedup_gate()
+        bad += check_hybrid_gate()
         sys.exit(1 if bad else 0)
     rows = run(size="full" if args.full else args.size)
     for r in rows:

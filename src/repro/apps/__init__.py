@@ -11,6 +11,12 @@ a pure-python oracle for correctness checks.
   * sequence   — randomized list contraction (Table 4)
   * trees      — tree contraction via rake/compress (Table 5)
   * filter     — BST filter by predicate (Table 6)
+
+``trees`` and ``filter`` run HYBRID by default: their statically-shaped
+per-round phases execute on the jitted graph runtime (embedded via
+``repro.sac.host.EngineFragment``) while the data-dependent skeleton
+stays host readers; ``hybrid=False`` restores the all-host originals
+(bitwise-identical outputs, tested in tests/test_hybrid.py).
 """
 from .spellcheck import SpellcheckApp
 from .raytracer import RaytracerApp

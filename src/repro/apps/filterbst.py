@@ -1,14 +1,28 @@
 """BST filter benchmark (paper Table 6).
 
 Filters the elements of a binary search tree with respect to a predicate,
-returning a new BST.  Nodes are modifiables holding (key, left, right);
-the filter recursion forks over children (par) and reads node mods, so
-updating a node's key re-runs only the readers on its root path.
+returning a new BST.  Nodes are modifiables holding values; the filter
+recursion forks over children (par) and reads node mods, so updating a
+node's key re-runs only the readers on its root path.
+
+**Hybrid mode (default)**: the per-level predicate sweep is statically
+shaped — n lanes, data-dependent values — so it lowers onto the jitted
+graph runtime as one ``map`` fragment producing per-node *keep* flags,
+embedded in the host engine via ``EngineFragment``.  The data-dependent
+skeleton — the recursion over tree shape that builds the filtered BST
+(as a tree of node indices) — stays host readers over the keep-flag
+boundary mods.  The boundary write cutoff is what makes this fast: a
+value edit that does not flip the node's keep flag changes NO boundary
+mod, so zero skeleton readers re-run; a flipped flag re-runs exactly
+the root path, as in the pure host program.  ``hybrid=False`` keeps the
+original all-host program; both filter the same multiset of values.
 """
 from __future__ import annotations
 
 import random
 from typing import Optional
+
+import numpy as np
 
 __all__ = ["FilterApp"]
 
@@ -16,8 +30,10 @@ __all__ = ["FilterApp"]
 class FilterApp:
     name = "filter"
 
-    def __init__(self, n: int = 4095, seed: int = 0, modulus: int = 3):
+    def __init__(self, n: int = 4095, seed: int = 0, modulus: int = 3,
+                 hybrid: bool = True):
         self.n = n
+        self.hybrid = hybrid
         self.rng = random.Random(seed)
         self.modulus = modulus  # predicate: value % modulus != 0
 
@@ -35,6 +51,65 @@ class FilterApp:
         return self.mods
 
     def program(self, eng):
+        if self.hybrid:
+            return self._program_hybrid(eng)
+        return self._program_host(eng)
+
+    # ------------------------------------------------------------------
+    # Hybrid: keep flags compiled, tree recursion host
+    # ------------------------------------------------------------------
+    def _traced_keep(self):
+        import jax.numpy as jnp
+
+        import repro.sac as sac
+
+        m = self.modulus
+
+        @sac.incremental(block=1)
+        def keepmask(vals):
+            return sac.map_blocks(
+                lambda b: (b[0] % m != 0).astype(jnp.int32), vals,
+                name="keep")
+
+        return keepmask
+
+    def _program_hybrid(self, eng):
+        from repro.sac.host import EngineFragment
+
+        self.fragment = EngineFragment(
+            self._traced_keep(), {"vals": self.mods},
+            dtypes={"vals": np.int32},
+            cache_key=("filter", self.n, self.modulus),
+            max_sparse=32, plan=False)
+        (keep,) = self.fragment.install(eng)
+
+        def filt(i, res):
+            if i >= self.n:
+                eng.write(res, None)
+                return
+            lres, rres = eng.mod(), eng.mod()
+            eng.par(lambda: filt(2 * i + 1, lres),
+                    lambda: filt(2 * i + 2, rres))
+
+            def combine_node(k, l, r, _i=i):
+                eng.charge(1)
+                if int(k.a[0]):
+                    # the filtered BST carries node *indices*; values
+                    # stay interior (read out of the fragment at output
+                    # time), so an edit that keeps the flag re-runs
+                    # nothing out here.
+                    eng.write(res, (_i, l, r))
+                else:
+                    eng.write(res, self._merge(l, r))
+
+            eng.read((keep[i], lres, rres), combine_node)
+
+        filt(0, self.result)
+
+    # ------------------------------------------------------------------
+    # Pure host: values in the tree (the paper's program, kept verbatim)
+    # ------------------------------------------------------------------
+    def _program_host(self, eng):
         def filt(i, res):
             if i >= self.n:
                 eng.write(res, None)
@@ -89,7 +164,8 @@ class FilterApp:
                 return
             v, l, r = node
             walk(l)
-            out.append(v)
+            # hybrid trees hold node indices; host trees hold values
+            out.append(self.values[v] if self.hybrid else v)
             walk(r)
 
         walk(self.result.peek())

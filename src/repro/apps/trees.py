@@ -22,12 +22,28 @@ candidate — so the payload graph stays consistent without multi-hop reads.
 A batch update (changing values or moving subtrees) re-runs O(h) readers
 per changed node, h = O(log n) rounds, matching the contraction analyses
 of [2] translated into this framework (Section 4).
+
+**Hybrid mode (default)**: the per-round phases are statically shaped —
+a fixed n-lane sweep whose *values* are data-dependent, with contracted
+nodes encoded as dead masked lanes — so they lower onto the jitted
+graph runtime as ``gather`` nodes (state rows ``[par, cl, cr, acc,
+live]``, decision rows ``[kind, par, a, b, acc]``; a lane reads itself
+plus its parent/child lanes, exactly the single-hop pattern above).
+The whole contraction pipeline embeds in the host engine as ONE
+``EngineFragment``; the data-dependent skeleton — input mods, the
+full-contraction check, the result consumer — stays host readers, and
+dirty sets cross the boundary in both directions (mod writes mark the
+fragment reader; only value-changed output blocks are written back).
+``hybrid=False`` keeps the pure host-reader program; the two produce
+identical results round for round (same coins, same decisions).
 """
 from __future__ import annotations
 
 import math
 import random
 from typing import List, Optional, Tuple
+
+import numpy as np
 
 __all__ = ["TreeContractionApp"]
 
@@ -39,8 +55,10 @@ DEAD = ("dead", None)
 class TreeContractionApp:
     name = "trees"
 
-    def __init__(self, n: int = 512, seed: int = 0):
+    def __init__(self, n: int = 512, seed: int = 0, hybrid: bool = True):
         self.n = n
+        self.seed = seed
+        self.hybrid = hybrid
         self.rng = random.Random(seed)
         # Random rooted binary tree: node 0 is the root; each later node
         # attaches under a uniformly random node with a free child slot.
@@ -127,6 +145,150 @@ class TreeContractionApp:
 
     # ------------------------------------------------------------------
     def program(self, eng):
+        if self.hybrid:
+            return self._program_hybrid(eng)
+        return self._program_host(eng)
+
+    # ------------------------------------------------------------------
+    # Hybrid: contraction rounds as one compiled fragment
+    # ------------------------------------------------------------------
+    def _traced_contraction(self):
+        """The statically-shaped interior: ``rounds`` decision/state
+        phase pairs as ``gather`` nodes over [n, 5] int32 lanes."""
+        import jax.numpy as jnp
+
+        import repro.sac as sac
+
+        n = self.n
+        coins = [jnp.asarray(np.asarray(c, bool)) for c in self.coins]
+
+        def init_fn(s, v):
+            # s [1,3] struct, v [1] value -> [par, cl, cr, acc, live]
+            return jnp.concatenate(
+                [s[0], jnp.stack([v[0], jnp.int32(1)])]).astype(jnp.int32)
+
+        def decide_idx(xb):
+            s = xb[:, 0]
+            i = jnp.arange(s.shape[0])
+            par, cl, cr, live = s[:, 0], s[:, 1], s[:, 2], s[:, 4]
+            c = jnp.where(cl != -1, cl, cr)
+            pi = jnp.where((live > 0) & (par != -1), par, i)
+            ci = jnp.where((live > 0) & (c != -1), c, i)
+            return jnp.stack([pi, ci], axis=1)
+
+        def decide_fn(cj):
+            def fn(x, i):
+                row = x[i]
+                par, cl, cr, acc, live = (row[0], row[1], row[2],
+                                          row[3], row[4])
+                live_b = live > 0
+                nk = ((cl != -1).astype(jnp.int32)
+                      + (cr != -1).astype(jnp.int32))
+                is_rake = live_b & (nk == 0) & (par != -1)
+                c = jnp.where(cl != -1, cl, cr)
+                cand = live_b & (nk == 1) & (par != -1) & cj[i]
+                pi = jnp.clip(par, 0, x.shape[0] - 1)
+                ci = jnp.clip(c, 0, x.shape[0] - 1)
+                prow, crow = x[pi], x[ci]
+                # Neighbour rows are only *used* under ``cand`` — the
+                # same predicate the idx_fn uses to include them in the
+                # reader set (the gather soundness contract).
+                c_is_leaf = (crow[1] == -1) & (crow[2] == -1)
+                p_unary = (prow[1] == -1) ^ (prow[2] == -1)
+                p_cand = p_unary & (prow[0] != -1) & cj[pi]
+                c_unary = (crow[1] == -1) ^ (crow[2] == -1)
+                c_cand = c_unary & cj[ci]
+                is_comp = cand & ~c_is_leaf & ~p_cand & ~c_cand
+                kind = jnp.where(
+                    ~live_b, 0,
+                    jnp.where(is_rake, 2, jnp.where(is_comp, 3, 1)))
+                a = jnp.where(kind == 1, cl, jnp.where(kind == 3, c, -1))
+                b = jnp.where(kind == 1, cr, -1)
+                return jnp.stack(
+                    [kind, jnp.where(kind == 0, -1, par), a, b,
+                     jnp.where(kind == 0, 0, acc)]).astype(jnp.int32)
+
+            return fn
+
+        def advance_idx(xb):
+            d = xb[:, 0]
+            i = jnp.arange(d.shape[0])
+            kind, par, a, b = d[:, 0], d[:, 1], d[:, 2], d[:, 3]
+            surv = kind == 1
+            return jnp.stack(
+                [jnp.where(surv & (par != -1), par, i),
+                 jnp.where(surv & (a != -1), a, i),
+                 jnp.where(surv & (b != -1), b, i)], axis=1)
+
+        def advance_fn(x, i):
+            row = x[i]
+            kind, par, cl, cr, acc = (row[0], row[1], row[2], row[3],
+                                      row[4])
+            hi = x.shape[0] - 1
+            prow = x[jnp.clip(par, 0, hi)]
+            new_par = jnp.where(
+                par == -1, -1, jnp.where(prow[0] == 3, prow[1], par))
+
+            def child(c):
+                crow = x[jnp.clip(c, 0, hi)]
+                exists = c != -1
+                raked = exists & (crow[0] == 2)
+                compressed = exists & (crow[0] == 3)
+                newc = jnp.where(~exists | raked, -1,
+                                 jnp.where(compressed, crow[2], c))
+                dacc = jnp.where(raked | compressed, crow[4], 0)
+                return newc, dacc
+
+            la, da = child(cl)
+            lb, db = child(cr)
+            live_row = jnp.stack(
+                [new_par, jnp.where(la != -1, la, lb),
+                 jnp.where(la != -1, lb, -1), acc + da + db,
+                 jnp.int32(1)])
+            dead_row = jnp.asarray([-1, -1, -1, 0, 0], jnp.int32)
+            return jnp.where(kind == 1, live_row,
+                             dead_row).astype(jnp.int32)
+
+        @sac.incremental(block=1)
+        def contract(st, val):
+            s = sac.zip_blocks(init_fn, st, val, name="init")
+            for r in range(self.rounds):
+                d = sac.gather(decide_fn(coins[r]), decide_idx, s,
+                               arity=2, name=f"decide{r}")
+                s = sac.gather(advance_fn, advance_idx, d,
+                               arity=3, name=f"advance{r}")
+            return s
+
+        return contract
+
+    def _program_hybrid(self, eng):
+        from repro.sac.host import EngineFragment
+
+        # plan=False: the contraction's dirty pattern differs per edit,
+        # so the planned mode would compile one executable per distinct
+        # plan; the single cond-based executable compiles once and is
+        # shared across instances of the same (n, seed) trace.
+        self.fragment = EngineFragment(
+            self._traced_contraction(),
+            {"st": self.struct_mods, "val": self.val_mods},
+            dtypes={"st": np.int32, "val": np.int32},
+            cache_key=("trees", self.n, self.seed, self.rounds),
+            max_sparse=32, plan=False)
+        (final,) = self.fragment.install(eng)
+
+        def finish(blk):
+            st = blk.a[0]                  # [par, cl, cr, acc, live]
+            if int(st[1]) != -1 or int(st[2]) != -1 or int(st[4]) != 1:
+                raise RuntimeError(
+                    "tree did not fully contract — increase rounds")
+            eng.write(self.result, int(st[3]))
+
+        eng.read(final[0], finish)
+
+    # ------------------------------------------------------------------
+    # Pure host: per-round readers (the paper's program, kept verbatim)
+    # ------------------------------------------------------------------
+    def _program_host(self, eng):
         n = self.n
         states: List[List] = [eng.alloc_array(n, f"s{r}")
                               for r in range(self.rounds + 1)]

@@ -29,6 +29,8 @@ propagate are representation-agnostic:
   escan         ``prefix_shift``                exact (suffix)
   causal        ``suffix``                      exact (suffix) — the
                                                 interval-carrying edge
+  gather        ``gather(idx)``                 re-hull of the exact
+                                                mask transfer
   ============  ==============================  =========================
 
 Soundness: a transfer may over-approximate (recompute extra blocks — by
@@ -69,6 +71,7 @@ class DirtySet(Protocol):
     def dilate(self, radius: int) -> "DirtySet": ...
     def prefix_shift(self) -> "DirtySet": ...
     def suffix(self) -> "DirtySet": ...
+    def gather(self, idx: jax.Array) -> "DirtySet": ...
     # first dirty block index (num_blocks when empty) — the seed point of
     # the block-skip causal/escan recompute
     def start(self) -> jax.Array: ...
@@ -151,6 +154,12 @@ class MaskDirty:
     def suffix(self) -> "MaskDirty":
         # out block j reads blocks <= j: inclusive prefix-OR.
         return MaskDirty(jnp.cumsum(self.mask.astype(jnp.int32)) > 0)
+
+    def gather(self, idx: jax.Array) -> "MaskDirty":
+        # gather edge: out i reads {i} | idx[i, :] — identity OR the
+        # reverse neighbour map (a gather of the mask at idx).
+        jc = jnp.clip(idx, 0, self.num_blocks - 1)
+        return MaskDirty(self.mask | jnp.any(self.mask[jc], axis=1))
 
     def start(self) -> jax.Array:
         nb = self.num_blocks
@@ -255,6 +264,14 @@ class IntervalDirty:
         # (lo, hi) pair (prefill.py).
         return self._make(self.lo,
                           jnp.where(self.any(), self.num_blocks, 0))
+
+    def gather(self, idx: jax.Array) -> "IntervalDirty":
+        # Route through the exact mask transfer and re-hull: data-
+        # dependent neighbour maps have no useful closed interval form,
+        # and nb is small where gather nodes appear (per-lane apps).
+        jc = jnp.clip(idx, 0, self.num_blocks - 1)
+        m = self.to_mask()
+        return IntervalDirty.from_mask(m | jnp.any(m[jc], axis=1))
 
     def start(self) -> jax.Array:
         return jnp.where(self.any(), self.lo,

@@ -20,6 +20,8 @@ blocks of the input does block ``i`` of the output read:
   reduce_level  in blocks 2i, 2i+1                         pairwise OR
   stencil(r)    in blocks i-r .. i+r (clamped)             dilation by r
   scan carry    in blocks 0 .. i-1                         prefix OR
+  gather(A)     block i + A data-dependent neighbours      identity OR
+                (indices from block i's own contents)      mask[idx].any
   ============  =========================================  ================
 
 This is the static special case the paper itself singles out ("the RSP
@@ -53,7 +55,8 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple
 __all__ = ["GraphBuilder", "Handle", "GNode", "level_schedule"]
 
 ELEMENTWISE_KINDS = ("map", "zip_map", "reduce_level")
-KINDS = ("input",) + ELEMENTWISE_KINDS + ("stencil", "escan", "causal")
+KINDS = ("input",) + ELEMENTWISE_KINDS + ("stencil", "escan", "causal",
+                                          "gather")
 
 
 @dataclasses.dataclass
@@ -73,6 +76,9 @@ class GNode:
     fill: Any = None                # stencil boundary fill (None = clamp)
     lift: Optional[Callable] = None      # carry-causal: block -> state
     finalize: Optional[Callable] = None  # carry-causal: (state, block) -> out
+    idx_fn: Optional[Callable] = None    # gather: blocked parent -> [nb, A]
+    arity: int = 0                       # gather: neighbour count per lane
+    region: Optional[str] = None         # hybrid-runtime region tag
     name: str = ""
 
     @property
@@ -136,6 +142,10 @@ class GraphBuilder:
         # Region stack for the context-manager form of S/P composition
         # (seq_region / par_region, used by the repro.sac frontend).
         self._regions: List[Any] = []
+        # Hybrid-runtime region tags (static_region): ops traced while a
+        # tag is active carry it; the hybrid backend compiles each
+        # maximal same-tag run as one CompiledGraph fragment.
+        self._region_tags: List[str] = []
 
     # ------------------------------------------------------------------
     def _add(self, kind: str, num_blocks: int, block: int,
@@ -146,7 +156,8 @@ class GraphBuilder:
             control = control + tuple(i for i in extra if i not in control)
         node = GNode(idx=len(self.nodes), kind=kind, num_blocks=num_blocks,
                      block=block, deps=tuple(deps), control=control,
-                     **kw)
+                     region=self._region_tags[-1] if self._region_tags
+                     else None, **kw)
         self.nodes.append(node)
         if self._regions:
             self._regions[-1].note(node.idx)
@@ -283,6 +294,41 @@ class GraphBuilder:
         return self._add("causal", x.num_blocks, ob, (x.idx,), fn=f,
                          name=name or "causal")
 
+    def gather(self, fn: Callable, idx_fn: Callable, x: Handle,
+               arity: int = 1, out_block: Optional[int] = None,
+               name: str = "") -> Handle:
+        """Data-dependent reader sets with statically-bounded arity.
+
+        The dynamic-dependency edge kind: out block i reads block i of the
+        parent plus up to ``arity`` *data-dependent* neighbour blocks —
+        the static-reader-map relaxation that covers the paper's
+        tree-contraction / BST workloads (a node reads its parent's and
+        children's state, and who those are is itself data).
+
+          * ``idx_fn(xb)`` maps the blocked parent ``[nb, block, *feat]``
+            to int32 neighbour indices ``[nb, arity]``.  Row i may depend
+            ONLY on block i (so an index change always makes lane i dirty
+            through the implicit identity edge), and out-of-range slots
+            should be clamped to i (self-reads are free).
+          * ``fn(x_full, i)`` receives the full parent array plus the
+            (traced) output block index and must restrict its *value*
+            dependence to blocks ``{i} | set(idx_fn(xb)[i])`` — the
+            runtime relies on that contract for incremental soundness
+            (guard every neighbour use with the predicate that selected
+            the neighbour).
+
+        Dirty transfer is the identity map unioned with the reverse
+        neighbour map evaluated on cached values: out i is dirty iff
+        block i changed or any block in ``idx[i]`` changed.  Evaluating
+        on pre-edit values is sound because a lane whose indices changed
+        is dirty through the identity component.
+        """
+        assert arity >= 1
+        ob = x.block if out_block is None else out_block
+        return self._add("gather", x.num_blocks, ob, (x.idx,), fn=fn,
+                         idx_fn=idx_fn, arity=int(arity),
+                         name=name or "gather")
+
     def scan(self, op: Callable, x: Handle, identity: Any = 0.0,
              name: str = "") -> Handle:
         """Inclusive prefix scan of an associative ``op`` over the leading
@@ -363,6 +409,20 @@ class GraphBuilder:
             self._regions.pop()
             if self._regions:
                 self._regions[-1].absorb(region.created)
+
+    @contextlib.contextmanager
+    def static_region(self, tag: str):
+        """Tag every op traced inside as belonging to hybrid-runtime
+        region ``tag``.  The graph and host backends ignore tags; the
+        hybrid backend (``repro.sac.hybrid``) compiles each maximal
+        same-tag run of the dag as one ``CompiledGraph`` fragment and
+        keeps the cross-region boundary as host-orchestrated dirty
+        transfer.  Nesting replaces the tag for the inner extent."""
+        self._region_tags.append(str(tag))
+        try:
+            yield
+        finally:
+            self._region_tags.pop()
 
     def output(self, *handles: Handle) -> None:
         """Mark result nodes (defaults to dag sinks when never called)."""

@@ -328,7 +328,8 @@ class CompiledGraph:
                 dirty[nd.idx] = ch
             else:
                 dirty[nd.idx] = graph_ops.edge_dirty(
-                    nd, [dirty[d] for d in nd.deps])
+                    nd, [dirty[d] for d in nd.deps],
+                    [state["v"][d] for d in nd.deps])
                 node_masks[str(nd.idx)] = dirty[nd.idx].to_mask()
         counts = jnp.stack([dirty[nd.idx].count() for nd in self.nodes])
         return masks, counts, node_masks
@@ -428,7 +429,8 @@ class CompiledGraph:
                     continue
                 dirties = {i: graph_ops.edge_dirty(
                     self.nodes[i],
-                    [changed[d] for d in self.nodes[i].deps])
+                    [changed[d] for d in self.nodes[i].deps],
+                    [vals[d] for d in self.nodes[i].deps])
                     for i in live}
                 if (len(live) > 1
                         and all(plan[i] == "sparse" for i in live)
@@ -465,8 +467,22 @@ class CompiledGraph:
                     affected += ch.count()
 
         stats = {"recomputed": recomputed, "affected": affected,
-                 "dirty_inputs": dirty_inputs}
+                 "dirty_inputs": dirty_inputs,
+                 **self._boundary_stats(changed)}
         return {"v": tuple(vals), "c": carries}, stats
+
+    def _boundary_stats(self, changed: List[Any]) -> Dict[str, Any]:
+        """Per-output changed masks and per-input dirty counts — the
+        boundary currency of the hybrid runtime (sac/hybrid.py): an
+        embedding skeleton re-runs a downstream reader / fragment only
+        for outputs whose mask is non-empty, and attributes
+        ``dirty_inputs`` to real program inputs without re-diffing."""
+        return {
+            "out_changed": {str(i): changed[i].to_mask()
+                            for i in self.outputs},
+            "in_dirty": {name: changed[idx].count()
+                         for name, idx in self.input_names.items()},
+        }
 
     def _from_mask(self, mask: jax.Array):
         return self._dirty_cls.from_mask(mask)
@@ -501,7 +517,8 @@ class CompiledGraph:
             # Incoming dirty sets (cheap O(nb) mask pushing), then one
             # cond for the whole level: a clean level costs one compare.
             dirties = {i: graph_ops.edge_dirty(
-                self.nodes[i], [changed[d] for d in self.nodes[i].deps])
+                self.nodes[i], [changed[d] for d in self.nodes[i].deps],
+                [vals[d] for d in self.nodes[i].deps])
                 for i in ops}
             level_any = functools.reduce(
                 jnp.logical_or, [dirties[i].any() for i in ops])
@@ -572,7 +589,8 @@ class CompiledGraph:
             affected += aff
 
         stats = {"recomputed": recomputed, "affected": affected,
-                 "dirty_inputs": dirty_inputs}
+                 "dirty_inputs": dirty_inputs,
+                 **self._boundary_stats(changed)}
         return {"v": tuple(vals), "c": carries}, stats
 
     # ------------------------------------------------------------------

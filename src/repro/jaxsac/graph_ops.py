@@ -39,8 +39,8 @@ from .core import broadcast_mask as _bc
 from .dirtyset import DirtySet
 from .graph import GNode
 
-__all__ = ["forward", "edge_dirty", "dense_update", "sparse_update",
-           "sparse_update_group", "causal_carry_states",
+__all__ = ["forward", "edge_dirty", "gather_indices", "dense_update",
+           "sparse_update", "sparse_update_group", "causal_carry_states",
            "causal_carry_refold", "causal_finalize_sparse",
            "causal_finalize_dense", "escan_block_skip", "exact_dtype"]
 
@@ -141,6 +141,10 @@ def forward(node: GNode, nodes, parents: List[jax.Array]) -> jax.Array:
         idx = jnp.arange(node.num_blocks)
         raw = jax.vmap(node.fn, in_axes=(None, 0))(parents[0], idx)
         return _pack(node, raw)
+    if node.kind == "gather":
+        idx = jnp.arange(node.num_blocks)
+        raw = jax.vmap(node.fn, in_axes=(None, 0))(parents[0], idx)
+        return _pack(node, raw)
     if node.kind == "escan":
         x = parents[0]
         inclusive = jax.lax.associative_scan(node.op, x, axis=0)
@@ -152,11 +156,19 @@ def forward(node: GNode, nodes, parents: List[jax.Array]) -> jax.Array:
 # ---------------------------------------------------------------------------
 # dirty transfer (reader index maps, reversed)
 # ---------------------------------------------------------------------------
-def edge_dirty(node: GNode, changed: List[DirtySet]) -> DirtySet:
+def edge_dirty(node: GNode, changed: List[DirtySet],
+               parents: Optional[List[jax.Array]] = None) -> DirtySet:
     """Push the parents' changed DirtySets through the edge's reader
     index map.  Representation-agnostic: both the exact per-block mask
     and the interval hull implement the same transfer methods
-    (see dirtyset.py)."""
+    (see dirtyset.py).
+
+    ``parents`` supplies the parent *values* for the one edge kind whose
+    reader map is data-dependent (``gather``): the neighbour indices are
+    recomputed from the cached parent, which is sound whether the values
+    are pre- or post-edit — a lane whose indices changed is dirty
+    through the identity component either way (see
+    ``GraphBuilder.gather``)."""
     if node.kind == "map":
         return changed[0]
     if node.kind == "zip_map":
@@ -171,7 +183,24 @@ def edge_dirty(node: GNode, changed: List[DirtySet]) -> DirtySet:
     if node.kind == "causal":
         # out block j reads blocks <= j: suffix (the interval edge).
         return changed[0].suffix()
+    if node.kind == "gather":
+        assert parents is not None, "gather dirty transfer needs values"
+        return changed[0].gather(gather_indices(node, parents[0]))
     raise ValueError(node.kind)
+
+
+def gather_indices(node: GNode, parent: jax.Array) -> jax.Array:
+    """[nb, arity] int32 neighbour block indices of a gather node,
+    evaluated on the given parent value and clamped in-range.  A gather
+    node has as many output blocks as its parent, so the parent's block
+    size falls out of the value shape."""
+    xb = _as_blocks(parent, node.num_blocks, parent.shape[0]
+                    // node.num_blocks)
+    idx = jnp.asarray(node.idx_fn(xb), jnp.int32)
+    assert idx.shape == (node.num_blocks, node.arity), (
+        f"gather {node.name}: idx_fn returned {idx.shape}, expected "
+        f"{(node.num_blocks, node.arity)}")
+    return jnp.clip(idx, 0, node.num_blocks - 1)
 
 
 # ---------------------------------------------------------------------------
@@ -253,9 +282,9 @@ def sparse_update(node: GNode, nodes, parents: List[jax.Array],
         p = _parent(node, nodes)
         wg = _windows(node, p, parents[0], idx)
         raw = jax.vmap(node.fn)(wg)
-    elif node.kind == "causal":
+    elif node.kind in ("causal", "gather"):
         # fn sees the full parent; sentinel lanes (idx == nb) compute a
-        # full-prefix value and are dropped by the scatter below.
+        # clamped-index value and are dropped by the scatter below.
         raw = jax.vmap(node.fn, in_axes=(None, 0))(parents[0], idx)
     else:
         raise ValueError(node.kind)

@@ -35,15 +35,19 @@ method-per-op builder this frontend replaces — remains available as a
 deprecated shim (it is the IR the tracer records into).
 """
 from .program import GraphHandle, IncrementalProgram, incremental
-from .host import HostHandle
-from .tracer import (BlockArray, causal, elementwise, map_blocks, par,
-                     reduce, scan, seq, stencil, zip_blocks)
+from .host import EngineFragment, HostHandle
+from .hybrid import HybridHandle
+from .tracer import (BlockArray, causal, elementwise, gather, map_blocks,
+                     par, reduce, scan, seq, static_region, stencil,
+                     zip_blocks)
 
 __all__ = [
     "incremental",
     "IncrementalProgram",
     "GraphHandle",
     "HostHandle",
+    "HybridHandle",
+    "EngineFragment",
     "BlockArray",
     "map_blocks",
     "zip_blocks",
@@ -52,6 +56,8 @@ __all__ = [
     "stencil",
     "scan",
     "causal",
+    "gather",
     "seq",
     "par",
+    "static_region",
 ]

@@ -42,7 +42,7 @@ changed-block counts.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +52,7 @@ from repro.core.engine import Engine
 from repro.jaxsac.graph import GNode, GraphBuilder, Handle, level_schedule
 from .tracer import BlockArray
 
-__all__ = ["HostHandle"]
+__all__ = ["HostHandle", "EngineFragment"]
 
 
 class _Blk:
@@ -267,6 +267,40 @@ class HostHandle:
                 eng.read(tuple(_in[:i + 1]), reader)
             eng.parallel_for(0, nd.num_blocks, body)
 
+        elif nd.kind == "gather":
+            # Data-dependent reader sets, host-natively: an outer reader
+            # on the lane's own block recomputes the neighbour indices
+            # and (re)issues an inner reader on exactly those mods — the
+            # dynamic dependency tracking the engine was built for.  The
+            # inner reader zero-fills the blocks outside the reader set
+            # (the gather contract: fn must not depend on them).
+            p = self.nodes[nd.deps[0]]
+
+            def body(i, _nd=nd, _out=out, _in=par0, _p=p):
+                def outer(v, _i=i):
+                    # idx_fn sees the full blocked shape (it may use
+                    # positions), with only block i live — row i depends
+                    # only on block i by the gather contract.
+                    xb = np.zeros((_p.num_blocks,) + v.a.shape, v.a.dtype)
+                    xb[_i] = v.a
+                    idx = np.asarray(_nd.idx_fn(jnp.asarray(xb)))[_i]
+                    js = sorted({_i} | {int(j) for j in
+                                        np.clip(idx, 0, _p.num_blocks - 1)})
+
+                    def inner(*vals, _i=_i, _js=js):
+                        full = np.zeros((_p.num_blocks * _p.block,)
+                                        + vals[0].a.shape[1:],
+                                        vals[0].a.dtype)
+                        for j, vb in zip(_js, vals):
+                            full[j * _p.block:(j + 1) * _p.block] = vb.a
+                        eng.write(_out[_i], _store(
+                            _nd, _nd.fn(jnp.asarray(full), _i)))
+
+                    eng.read(tuple(_in[j] for j in js), inner)
+
+                eng.read(_in[i], outer)
+            eng.parallel_for(0, nd.num_blocks, body)
+
         else:
             raise ValueError(f"cannot lower node kind {nd.kind!r}")
 
@@ -391,3 +425,151 @@ class HostHandle:
     def _node_value(self, idx: int) -> jax.Array:
         return jnp.asarray(np.concatenate(
             [m.peek().a for m in self._mods[idx]], axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Engine-embedded fragments (the hybrid runtime's dynamic-skeleton side)
+# ---------------------------------------------------------------------------
+class EngineFragment:
+    """A ``CompiledGraph`` fragment embedded as a *reader* inside a
+    dynamic host-engine program.
+
+    This is the hybrid runtime for apps whose skeleton is genuinely
+    data-dependent (tree contraction, BST filter): the statically-shaped
+    hot loop — fixed lane count, data-dependent values including
+    dead/None payloads encoded as masked lanes — runs on the jitted
+    graph runtime, while recursion over tree shape and the final
+    consumers stay ordinary engine readers.  Dirty sets cross the
+    boundary in both directions:
+
+      * **host -> fragment**: the fragment installs one reader over all
+        of its input mods; any input write marks it, and on re-execution
+        it hands the reassembled arrays to ``CompiledGraph.propagate``,
+        whose mark phase re-diffs them into exact per-block masks.
+      * **fragment -> host**: only output blocks whose lanes actually
+        changed (``stats["out_changed"]``) are written back to the
+        per-block boundary mods, so downstream host readers re-run
+        exactly as if the fragment had been a host subtree with the
+        Algorithm-2 write cutoff.
+
+    The realized computation distance (``stats["recomputed"]`` blocks)
+    is charged to the engine via ``charge``, keeping work/span
+    accounting meaningful across the boundary.
+
+    Usage, inside the host program (while ``eng.run`` is tracing)::
+
+        frag = EngineFragment(traced_program, {"x": mods}, ...)
+        out_mods = frag.install(eng)      # [per-output] per-block mods
+        eng.read(out_mods[0][0], consumer)
+    """
+
+    # Process-wide fragment cache: (cache_key) -> (CompiledGraph, outs).
+    # A CompiledGraph is stateless apart from its jitted executables, so
+    # app instances with identical traces (same n / seed / coins) share
+    # one compilation; each fragment still owns its propagation state.
+    _CG_CACHE: Dict[Any, Tuple[Any, List[Handle]]] = {}
+
+    def __init__(self, program, input_mods: Dict[str, List],
+                 dtypes: Optional[Dict[str, Any]] = None,
+                 cache_key: Any = None, **compile_opts):
+        self.program = program            # an IncrementalProgram
+        self.input_mods = {k: list(v) for k, v in input_mods.items()}
+        self.dtypes = dict(dtypes or {})
+        self._opts = compile_opts
+        self._cache_key = cache_key
+        self._order = list(self.input_mods)
+        self.cg = None                    # compiled lazily at install
+        self._state = None
+        self.out_handles: List[Handle] = []
+        self.out_mods: List[List] = []
+        self.last_stats: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------------
+    def _n_of(self, name: str) -> int:
+        return len(self.input_mods[name]) * self.program._block_of(name)
+
+    def _assemble(self, vals) -> Dict[str, np.ndarray]:
+        arrays, pos = {}, 0
+        for name in self._order:
+            k = len(self.input_mods[name])
+            rows = np.asarray([v for v in vals[pos:pos + k]])
+            pos += k
+            block = self.program._block_of(name)
+            if block > 1:       # mods hold [block, *feat] rows
+                rows = rows.reshape((k * block,) + rows.shape[2:])
+            dt = self.dtypes.get(name)
+            arrays[name] = rows.astype(dt) if dt is not None else rows
+        return arrays
+
+    def install(self, eng) -> List[List]:
+        """Compile the fragment, allocate its per-block boundary mods,
+        and install the boundary reader.  Must be called while the host
+        program is tracing (inside ``eng.run``); the boundary mods are
+        allocated in the *calling* scope, so they persist as long as the
+        caller does (a re-executed fragment reader rewrites them, it
+        does not reallocate them)."""
+        if self.cg is None:
+            # Compile options are part of the cache identity: two
+            # fragments sharing a caller key but compiled differently
+            # (plan, dirty rep, max_sparse) must not share executables.
+            full_key = None
+            if self._cache_key is not None:
+                full_key = (self._cache_key,
+                            tuple(sorted(self._opts.items())),
+                            tuple(sorted((k, np.dtype(v).name)
+                                         for k, v in self.dtypes.items())))
+            cached = (self._CG_CACHE.get(full_key)
+                      if full_key is not None else None)
+            if cached is not None:
+                self.cg, self.out_handles = cached
+            else:
+                g, outs, _single = self.program.trace(
+                    **{n: self._n_of(n) for n in self._order})
+                self.cg = g.compile(**self._opts)
+                self.out_handles = outs
+                if full_key is not None:
+                    self._CG_CACHE[full_key] = (self.cg, outs)
+        # A (re)install starts a fresh computation over fresh boundary
+        # mods: forget any previous propagation state so the first
+        # reader execution initializes and writes every block.
+        self._state = None
+        self.out_mods = [
+            [eng.mod(f"{self.program.__name__}.out{j}[{b}]")
+             for b in range(h.node.num_blocks)]
+            for j, h in enumerate(self.out_handles)]
+        all_mods = tuple(m for name in self._order
+                         for m in self.input_mods[name])
+        eng.read(all_mods, self._reader(eng))
+        return self.out_mods
+
+    def _reader(self, eng):
+        def reader(*vals):
+            arrays = self._assemble(vals)
+            if self._state is None:
+                self._state = self.cg.init(arrays)
+                eng.charge(self.cg.total_blocks, self.cg.num_levels)
+                for j, h in enumerate(self.out_handles):
+                    self._write_blocks(eng, j, h, None)
+            else:
+                self._state, stats = self.cg.propagate(self._state,
+                                                       arrays)
+                self.last_stats = stats
+                eng.charge(int(stats["recomputed"]), self.cg.num_levels)
+                for j, h in enumerate(self.out_handles):
+                    mask = np.asarray(stats["out_changed"][str(h.idx)])
+                    self._write_blocks(eng, j, h, np.flatnonzero(mask))
+        return reader
+
+    def _write_blocks(self, eng, j: int, h: Handle, blocks) -> None:
+        nd = h.node
+        v = np.asarray(self._state["v"][h.idx])
+        vb = v.reshape((nd.num_blocks, nd.block) + v.shape[1:])
+        if blocks is None:
+            blocks = range(nd.num_blocks)
+        for b in blocks:
+            # Copy each written row: np.asarray of a CPU jax array is
+            # zero-copy, and the mod holds this value across updates as
+            # the write-cutoff baseline — it must not alias the donated
+            # state a later propagate reuses in place (the same
+            # copy-on-handoff rule as hybrid.py's boundary values).
+            eng.write(self.out_mods[j][int(b)], _Blk(vb[int(b)].copy()))

@@ -1,0 +1,276 @@
+"""Hybrid skeleton/interior runtime: compiled fragments, host boundary.
+
+``compile(backend="hybrid")`` lowers a traced program onto *both*
+substrates at once: every maximal statically-shaped region of the SP-dag
+becomes its own jit-compiled ``CompiledGraph`` fragment (the interior),
+while the cross-region structure — which fragment feeds which, and
+whether anything a fragment produced actually changed — stays on the
+host (the skeleton).  Dirty sets cross the boundary in both directions:
+
+  * **host -> fragment**: an update hands each fragment only the inputs
+    that changed (graph inputs named in the update, boundary arrays
+    whose producing fragment reported changed lanes); the fragment's own
+    mark phase re-diffs them into exact per-block masks — the
+    Algorithm-2 value cutoff at the boundary comes for free.
+  * **fragment -> host**: ``propagate`` reports per-output changed-lane
+    masks (``stats["out_changed"]``); a downstream fragment whose every
+    upstream mask is empty is *skipped entirely* — the skeleton analogue
+    of an unaffected reader.  Because lanes outside a fragment's dirty
+    set are never recomputed, the boundary re-diff recovers exactly the
+    post-cutoff changed set the monolithic graph backend would have
+    pushed, so ``recomputed`` / ``affected`` / outputs are identical
+    across graph, host, and hybrid backends (fuzz-tested).
+
+Regions come from ``sac.static_region`` tags: a region is a maximal run
+of same-tag nodes (untagged programs form one region per tag-change
+layer — one fragment in the common case, so hybrid degrades to the
+graph backend plus a thin shell).  Cross-region edges always point from
+an earlier tag-change layer to a later one, so regions execute in a
+fixed topological order.
+
+The engine-embedded sibling — a fragment as a *reader* inside a dynamic
+host-engine program, for apps whose skeleton is genuinely
+data-dependent (tree contraction, BST filter) — is
+``repro.sac.host.EngineFragment``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.jaxsac.graph import GraphBuilder, Handle
+from .tracer import BlockArray
+
+__all__ = ["HybridHandle", "partition_regions", "Region"]
+
+
+@dataclasses.dataclass
+class Region:
+    """One statically-shaped region of the dag: a CompiledGraph fragment
+    plus its boundary (external inputs read, nodes exported)."""
+
+    key: Tuple[Optional[str], int]      # (tag, tag-change layer)
+    nodes: List[int]                    # member op nodes (topo order)
+    ext_inputs: List[Tuple[int, str]] = dataclasses.field(
+        default_factory=list)           # (source node idx, input name)
+    out_nodes: List[int] = dataclasses.field(default_factory=list)
+    local: Dict[int, int] = dataclasses.field(default_factory=dict)
+    cg: Any = None                      # CompiledGraph
+
+
+def partition_regions(nodes) -> List[Region]:
+    """Group op nodes into maximal same-tag regions.
+
+    A node's *layer* counts the tag changes along its longest path from
+    an input (over data and control edges); a region is one (tag, layer)
+    class.  Any cross-region edge strictly increases the layer (same-tag
+    edges keep it, cross-tag edges bump it), so sorting regions by layer
+    yields a topological order of the region dag — the fixed schedule
+    the hybrid skeleton walks.
+    """
+    layer: Dict[int, int] = {}
+    for nd in nodes:
+        if nd.kind == "input":
+            layer[nd.idx] = 0
+            continue
+        r = 0
+        for p in tuple(nd.deps) + tuple(nd.control):
+            pn = nodes[p]
+            if pn.kind == "input":
+                continue
+            r = max(r, layer[p] + (0 if pn.region == nd.region else 1))
+        layer[nd.idx] = r
+    groups: Dict[Tuple[Optional[str], int], List[int]] = {}
+    for nd in nodes:
+        if nd.kind != "input":
+            groups.setdefault((nd.region, layer[nd.idx]),
+                              []).append(nd.idx)
+    return [Region(key=k, nodes=v) for k, v in
+            sorted(groups.items(), key=lambda kv: (kv[0][1], kv[1][0]))]
+
+
+class HybridHandle:
+    """Compiled program on the hybrid runtime (same facade as
+    GraphHandle / HostHandle)."""
+
+    backend = "hybrid"
+
+    def __init__(self, builder: GraphBuilder, outs: List[Handle],
+                 single: bool, **compile_opts):
+        self.nodes = list(builder.nodes)
+        self.input_names: Dict[str, int] = dict(builder.inputs)
+        assert self.input_names, "graph has no inputs"
+        self.out_handles = outs
+        self._single = single
+        self._opts = compile_opts
+
+        prog_outputs = [h.idx for h in outs]
+        self.regions = partition_regions(self.nodes)
+        owner: Dict[int, int] = {}
+        for pos, reg in enumerate(self.regions):
+            for i in reg.nodes:
+                owner[i] = pos
+        self._owner = owner
+        # Nodes that must cross a boundary: read by another region, or
+        # program outputs (the facade reads them).
+        exported = {i for i in prog_outputs
+                    if self.nodes[i].kind != "input"}
+        for nd in self.nodes:
+            for d in nd.deps:
+                if (self.nodes[d].kind != "input"
+                        and owner[d] != owner.get(nd.idx, owner[d])):
+                    exported.add(d)
+        for reg in self.regions:
+            self._build_fragment(reg, exported)
+
+        self.total_blocks = sum(r.cg.total_blocks for r in self.regions)
+        self.num_fragments = len(self.regions)
+        self._states: List[Any] = []
+        self._inp: Dict[str, jax.Array] = {}
+        self._bvals: Dict[int, jax.Array] = {}
+        self._stats: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------------
+    def _build_fragment(self, reg: Region, exported) -> None:
+        sub = GraphBuilder()
+        region_set = set(reg.nodes)
+        for i in reg.nodes:
+            nd = self.nodes[i]
+            for d in nd.deps:
+                if d in reg.local:
+                    continue
+                dn = self.nodes[d]
+                name = dn.name if dn.kind == "input" else f"__b{d}"
+                h = sub.input(name, n=dn.n, block=dn.block)
+                reg.local[d] = h.idx
+                reg.ext_inputs.append((d, name))
+            # Intra-region control edges survive; cross-region ordering
+            # is the skeleton's fixed region schedule.
+            control = tuple(reg.local[c] for c in nd.control
+                            if c in region_set)
+            clone = dataclasses.replace(
+                nd, idx=len(sub.nodes),
+                deps=tuple(reg.local[d] for d in nd.deps),
+                control=control)
+            sub.nodes.append(clone)
+            reg.local[i] = clone.idx
+        reg.out_nodes = [i for i in reg.nodes if i in exported]
+        sub.output(*[Handle(sub, reg.local[i]) for i in reg.out_nodes])
+        reg.cg = sub.compile(**self._opts)
+
+    # ------------------------------------------------------------------
+    def run(self, inputs: Optional[Dict[str, Any]] = None, **kw):
+        inputs = {**(inputs or {}), **kw}
+        assert set(inputs) == set(self.input_names), (
+            f"inputs {sorted(inputs)} != declared "
+            f"{sorted(self.input_names)}")
+        self._inp = {k: jnp.asarray(v) for k, v in inputs.items()}
+        self._states = []
+        self._bvals = {}
+        for reg in self.regions:
+            ins = {name: self._fresh(d) for d, name in reg.ext_inputs}
+            st = reg.cg.init(ins)
+            self._states.append(st)
+            for i in reg.out_nodes:
+                self._bvals[i] = jnp.array(st["v"][reg.local[i]])
+        self._stats = {"phase": "run", "recomputed": self.total_blocks,
+                       "affected": self.total_blocks,
+                       "fragments_run": len(self.regions)}
+        return self.outputs()
+
+    def _fresh(self, d: int) -> jax.Array:
+        """A private copy of an external input's current value.  Every
+        hand-off is copied because the receiving fragment stores the
+        array in its (donated) state: sharing one buffer across
+        fragments would let one fragment's donation invalidate
+        another's memoized input."""
+        nd = self.nodes[d]
+        src = self._inp[nd.name] if nd.kind == "input" else self._bvals[d]
+        return jnp.array(src)
+
+    # ------------------------------------------------------------------
+    def update(self, inputs: Optional[Dict[str, Any]] = None, **changed):
+        if not self._states:
+            raise RuntimeError("update() before run()")
+        changed = {**(inputs or {}), **changed}
+        unknown = set(changed) - set(self.input_names)
+        assert not unknown, f"unknown inputs {sorted(unknown)}"
+        new_inp = dict(self._inp)
+        for k, v in changed.items():
+            new_inp[k] = jnp.asarray(v)
+        old_inp, self._inp = self._inp, new_inp
+
+        changed_nodes: set = set()
+        rec = aff = 0
+        in_dirty: Dict[str, int] = {}
+        frags_run = 0
+        for pos, reg in enumerate(self.regions):
+            ins = {}
+            for d, name in reg.ext_inputs:
+                nd = self.nodes[d]
+                if nd.kind == "input":
+                    if nd.name in changed:
+                        ins[name] = self._fresh(d)
+                elif d in changed_nodes:
+                    ins[name] = self._fresh(d)
+            if not ins:
+                continue        # skeleton skip: no upstream change
+            frags_run += 1
+            st, stats = reg.cg.propagate(self._states[pos], ins)
+            self._states[pos] = st
+            rec += int(stats["recomputed"])
+            aff += int(stats["affected"])
+            for d, name in reg.ext_inputs:
+                nd = self.nodes[d]
+                if nd.kind == "input" and nd.name in changed:
+                    in_dirty[nd.name] = int(stats["in_dirty"][name])
+            for i in reg.out_nodes:
+                mask = np.asarray(stats["out_changed"][str(reg.local[i])])
+                if mask.any():
+                    changed_nodes.add(i)
+                    self._bvals[i] = jnp.array(st["v"][reg.local[i]])
+        # Inputs no fragment reads still count toward dirty_inputs
+        # (parity with the monolithic backends, which diff every input).
+        for name in changed:
+            if name not in in_dirty:
+                in_dirty[name] = self._count_diff(name, old_inp[name],
+                                                  self._inp[name])
+        self._stats = {
+            "phase": "update", "recomputed": rec, "affected": aff,
+            "dirty_inputs": sum(in_dirty.values()),
+            "fragments_run": frags_run,
+        }
+        return self.outputs()
+
+    def _count_diff(self, name: str, old, new) -> int:
+        nd = self.nodes[self.input_names[name]]
+        o = np.asarray(old).reshape((nd.num_blocks, -1))
+        n = np.asarray(new).reshape((nd.num_blocks, -1))
+        return int(np.any(o != n, axis=1).sum())
+
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> Dict[str, Any]:
+        """Counters of the last phase; ``recomputed`` / ``affected`` /
+        ``dirty_inputs`` match the graph backend exactly.
+        ``fragments_run`` counts fragments the skeleton did not skip."""
+        return dict(self._stats)
+
+    def value(self, out: Union[BlockArray, Handle]) -> jax.Array:
+        h = out._h if isinstance(out, BlockArray) else out
+        return self._node_value(h.idx)
+
+    def outputs(self):
+        vals = tuple(self._node_value(h.idx) for h in self.out_handles)
+        return vals[0] if self._single else vals
+
+    def _node_value(self, idx: int) -> jax.Array:
+        nd = self.nodes[idx]
+        if nd.kind == "input":
+            return self._inp[nd.name]
+        reg = self.regions[self._owner[idx]]
+        return self._states[self._owner[idx]]["v"][reg.local[idx]]

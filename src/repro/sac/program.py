@@ -118,7 +118,12 @@ class IncrementalProgram:
                 **input_specs):
         """Trace and lower.  ``input_specs`` give every input's leading
         size (int, shape tuple, or example array); remaining kwargs are
-        backend options (see ``GraphBuilder.compile``): ``donate``
+        backend options (see ``GraphBuilder.compile``).  ``backend``
+        picks the substrate: ``"graph"`` (jitted runtime), ``"host"``
+        (paper-faithful engine), or ``"hybrid"`` — every maximal
+        ``sac.static_region`` run compiled as its own ``CompiledGraph``
+        fragment with host-orchestrated boundary dirty transfer
+        (repro.sac.hybrid).  Remaining options: ``donate``
         donates the propagation state to the jitted update (in-place
         scatters, no per-update copy of untouched node values — reads
         from a superseded state become invalid), ``block_skip`` routes
@@ -135,8 +140,16 @@ class IncrementalProgram:
             from .host import HostHandle
 
             return HostHandle(g, outs, single)
+        if backend == "hybrid":
+            from .hybrid import HybridHandle
+
+            return HybridHandle(g, outs, single, max_sparse=max_sparse,
+                                use_pallas=use_pallas, interpret=interpret,
+                                pallas_tile=pallas_tile, dirty=dirty,
+                                donate=donate, block_skip=block_skip,
+                                plan=plan)
         raise ValueError(f"unknown backend {backend!r} "
-                         "(expected 'graph' or 'host')")
+                         "(expected 'graph', 'host', or 'hybrid')")
 
 
 class GraphHandle:

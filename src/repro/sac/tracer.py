@@ -35,7 +35,8 @@ from repro.jaxsac.graph import GraphBuilder, Handle
 
 __all__ = [
     "BlockArray", "map_blocks", "zip_blocks", "elementwise",
-    "reduce", "stencil", "scan", "causal", "seq", "par",
+    "reduce", "stencil", "scan", "causal", "gather", "seq", "par",
+    "static_region",
 ]
 
 # Ambient trace stack: pushed by IncrementalProgram.compile while the
@@ -265,9 +266,33 @@ def causal(f: Optional[Callable], x: BlockArray,
                                   identity=identity))
 
 
+def gather(f: Callable, idx_fn: Callable, x: BlockArray, arity: int = 1,
+           out_block: Optional[int] = None, name: str = "") -> BlockArray:
+    """Data-dependent reader sets with statically-bounded arity: out
+    block i reads block i plus up to ``arity`` neighbour blocks chosen
+    by ``idx_fn`` from block i's own contents (tree parent/child
+    pointers, linked-list successors).  ``f(x_full, i)`` computes the
+    block from the full parent but must restrict its value dependence to
+    the declared reader set — see ``GraphBuilder.gather`` for the exact
+    contract.  This is the edge kind the hybrid apps (tree contraction,
+    BST filter) lower their per-round phases onto."""
+    return BlockArray(x._g.gather(f, idx_fn, x._h, arity=arity,
+                                  out_block=out_block, name=name))
+
+
 # ---------------------------------------------------------------------------
 # S/P composition
 # ---------------------------------------------------------------------------
+def static_region(tag: str):
+    """Hybrid-runtime region annotation: ``with sac.static_region("a"):``
+    tags every op traced inside as one statically-shaped region.  The
+    graph and host backends ignore tags; ``compile(backend="hybrid")``
+    compiles each maximal same-tag run as one jitted ``CompiledGraph``
+    fragment and carries dirty sets across the region boundary on the
+    host (see repro.sac.hybrid)."""
+    return _current_builder().static_region(tag)
+
+
 def seq(*thunks: Callable[[], Any]):
     """S-composition.  ``with sac.seq(): ...`` orders every op traced in
     the block strictly after the previous one (control edges in the

@@ -1,0 +1,220 @@
+"""DirtySet conformance suite: algebraic laws for every representation.
+
+Replaces the ad-hoc mask-vs-interval equivalence checks (the old
+``test_interval_rep_pipeline_matches_mask``) with property-based laws
+against independent numpy references.  For every edge transfer T of the
+SP-dag vocabulary (zip ``union``, reduce ``pair_or``, stencil
+``dilate``, escan ``prefix_shift``, causal ``suffix``, data-dependent
+``gather``) and random masks m:
+
+  * **exactness** (MaskDirty):  T_mask(m) == T_ref(m) bitwise;
+  * **abstraction soundness** (IntervalDirty):  the transfer of the
+    hull concretizes to a superset of the reference on the hull —
+    an interval propagate may recompute more, never less;
+  * **exact-on-suffix**: causal/escan transfers of suffix-shaped sets
+    are exact for the interval rep (the O(1)-space serving-path claim);
+  * **meet** (the Algorithm-2 value cutoff): ``meet_diff`` equals
+    dirty ∩ diff for masks, and the hull thereof for intervals;
+  * **lattice laws**: union is commutative/associative/idempotent with
+    ``none`` as identity, and every transfer is monotone.
+
+Seeded sweeps keep the laws checked without dev deps; hypothesis (when
+installed) widens the case space with shrinking.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.jaxsac.dirtyset import DIRTY_REPS, IntervalDirty, MaskDirty
+
+NBS = [1, 2, 3, 5, 8, 13]
+
+
+# ---------------------------------------------------------------------------
+# Independent numpy references for every transfer
+# ---------------------------------------------------------------------------
+def ref_union(a, b):
+    return a | b
+
+
+def ref_pair_or(m, out_blocks):
+    c = m
+    if len(c) % 2:
+        c = np.concatenate([c, [False]])
+    out = c[0::2] | c[1::2]
+    assert len(out) == out_blocks
+    return out
+
+
+def ref_dilate(m, r):
+    out = m.copy()
+    for off in range(1, r + 1):
+        out[:-off] |= m[off:]
+        out[off:] |= m[:-off]
+    return out
+
+
+def ref_prefix_shift(m):
+    out = np.zeros_like(m)
+    out[1:] = np.cumsum(m[:-1]) > 0
+    return out
+
+
+def ref_suffix(m):
+    return np.cumsum(m) > 0
+
+
+def ref_gather(m, idx):
+    return m | m[np.clip(idx, 0, len(m) - 1)].any(axis=1)
+
+
+def _rand_mask(rng, nb):
+    density = rng.choice([0.0, 0.1, 0.5, 1.0])
+    return rng.random(nb) < density
+
+
+def _rand_idx(rng, nb, arity):
+    return rng.integers(0, nb, (nb, arity)).astype(np.int32)
+
+
+def _mask_of(d):
+    return np.asarray(d.to_mask())
+
+
+def _mk(rep, m):
+    return DIRTY_REPS[rep].from_mask(jnp.asarray(m))
+
+
+def _hull(m):
+    """Minimal interval hull of a mask, as a mask."""
+    if not m.any():
+        return np.zeros_like(m)
+    lo, hi = np.flatnonzero(m)[0], np.flatnonzero(m)[-1] + 1
+    out = np.zeros_like(m)
+    out[lo:hi] = True
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The conformance checker (shared by seeded sweep and hypothesis)
+# ---------------------------------------------------------------------------
+def check_laws(seed: int):
+    rng = np.random.default_rng(seed)
+    nb = int(NBS[rng.integers(len(NBS))])
+    m = _rand_mask(rng, nb)
+    m2 = _rand_mask(rng, nb)
+    idx = _rand_idx(rng, nb, int(rng.integers(1, 4)))
+    r = int(rng.integers(1, 3))
+    def _rep_of(d):
+        return "mask" if isinstance(d, MaskDirty) else "interval"
+
+    transfers = {
+        "union": (lambda d: d.union(_mk(_rep_of(d), m2)),
+                  lambda mm: ref_union(mm, m2)),
+        "pair_or": (lambda d: d.pair_or((nb + 1) // 2),
+                    lambda mm: ref_pair_or(mm, (nb + 1) // 2)),
+        "dilate": (lambda d: d.dilate(r), lambda mm: ref_dilate(mm, r)),
+        "prefix_shift": (lambda d: d.prefix_shift(), ref_prefix_shift),
+        "suffix": (lambda d: d.suffix(), ref_suffix),
+        "gather": (lambda d: d.gather(jnp.asarray(idx)),
+                   lambda mm: ref_gather(mm, idx)),
+    }
+
+    dm, di = _mk("mask", m), _mk("interval", m)
+    # roundtrip / scalar views
+    np.testing.assert_array_equal(_mask_of(dm), m)
+    np.testing.assert_array_equal(_mask_of(di), _hull(m))
+    for d in (dm, di):
+        mk = _mask_of(d)
+        assert int(d.count()) == int(mk.sum())
+        assert bool(d.any()) == bool(mk.any())
+        start = int(d.start())
+        assert start == (int(np.flatnonzero(mk)[0]) if mk.any() else nb)
+
+    for name, (tf, ref) in transfers.items():
+        exact = ref(m)
+        got_m = _mask_of(tf(dm))
+        np.testing.assert_array_equal(got_m, exact,
+                                      err_msg=f"mask {name} seed {seed}")
+        got_i = _mask_of(tf(di))
+        # abstraction soundness: interval-of-hull covers the reference
+        assert (got_i | exact == got_i).all(), (name, seed, m, got_i,
+                                                exact)
+        # precision bound: never exceeds the hull of the reference
+        # applied to the hull (the best an interval rep can do)
+        over = _hull(ref(_hull(m)))
+        assert (got_i | over == over).all(), (name, seed, m, got_i, over)
+
+    # exact-on-suffix: causal/escan transfers of suffix sets
+    sm = ref_suffix(m)                  # a suffix-shaped mask
+    dsm = _mk("interval", sm)
+    np.testing.assert_array_equal(_mask_of(dsm.suffix()), ref_suffix(sm))
+    np.testing.assert_array_equal(_mask_of(dsm.prefix_shift()),
+                                  ref_prefix_shift(sm))
+
+    # meet_diff == dirty ∩ diff (mask) / hull thereof (interval)
+    block = int(rng.integers(1, 3))
+    old = rng.integers(-3, 4, nb * block).astype(np.float32)
+    new = old.copy()
+    flip = rng.random(nb * block) < 0.3
+    new[flip] += 1.0
+    diff = (old.reshape(nb, block) != new.reshape(nb, block)).any(axis=1)
+    got = _mask_of(dm.meet_diff(jnp.asarray(old), jnp.asarray(new), block))
+    np.testing.assert_array_equal(got, m & diff)
+    got_i = _mask_of(di.meet_diff(jnp.asarray(old), jnp.asarray(new),
+                                  block))
+    np.testing.assert_array_equal(got_i, _hull(_hull(m) & diff))
+
+    # lattice laws: union commutative/associative/idempotent, none = id
+    for rep in ("mask", "interval"):
+        a, b = _mk(rep, m), _mk(rep, m2)
+        none = DIRTY_REPS[rep].none(nb)
+        np.testing.assert_array_equal(_mask_of(a.union(b)),
+                                      _mask_of(b.union(a)))
+        np.testing.assert_array_equal(_mask_of(a.union(a)), _mask_of(a))
+        np.testing.assert_array_equal(_mask_of(a.union(none)),
+                                      _mask_of(a))
+        c = _mk(rep, _rand_mask(rng, nb))
+        np.testing.assert_array_equal(
+            _mask_of(a.union(b).union(c)), _mask_of(a.union(b.union(c))))
+
+    # monotonicity: m ⊆ m|m2 must survive every transfer
+    big_m = m | m2
+    for name, (tf, _refn) in transfers.items():
+        small = _mask_of(tf(dm))
+        large = _mask_of(tf(_mk("mask", big_m)))
+        assert (small | large == large).all(), (name, seed)
+
+    # from_changed_lanes == scatter reference.  Lane indices are unique
+    # (+ sentinel padding): the runtime derives them from nonzero(dirty),
+    # so that is the representation contract.
+    k = int(rng.integers(1, nb + 1))
+    lanes = np.concatenate([rng.permutation(nb)[:k],
+                            np.full(2, nb)]).astype(np.int32)
+    lc = rng.random(k + 2) < 0.5
+    refm = np.zeros(nb, bool)
+    for i, c in zip(lanes, lc):
+        if i < nb and c:
+            refm[i] = True
+    gm = MaskDirty.from_changed_lanes(jnp.asarray(lanes), jnp.asarray(lc),
+                                      nb)
+    np.testing.assert_array_equal(_mask_of(gm), refm)
+    gi = IntervalDirty.from_changed_lanes(jnp.asarray(lanes),
+                                          jnp.asarray(lc), nb)
+    np.testing.assert_array_equal(_mask_of(gi), _hull(refm))
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_dirtyset_laws_seeded(seed):
+    check_laws(seed)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_dirtyset_laws_hypothesis(seed):
+    check_laws(seed)
+
+
+if HAVE_HYPOTHESIS:  # keep the shim import "used" for linters
+    pass

@@ -1,0 +1,336 @@
+"""Differential SP-dag fuzzer: graph vs host vs hybrid, one semantics.
+
+Random traced programs — the full frontend combinator vocabulary
+(map/zip_map/reduce/stencil/scan/causal, plain + carry form) under
+random ``sac.seq``/``sac.par`` nesting and random ``sac.static_region``
+tags, over random block counts *including primes* — are run through all
+three backends with random edit batches.  The invariants:
+
+  * outputs are **bitwise identical** across graph, host, and hybrid,
+    after every edit;
+  * post-cutoff changed-block counts (``affected``) and input diff
+    counts (``dirty_inputs``) agree across all three;
+  * realized computation distance (``recomputed``) agrees between the
+    monolithic graph backend and the hybrid fragments — the boundary
+    re-diff must recover exactly the in-graph changed sets.
+
+Programs are generated from a JSON-able *spec* (a plain dict), so
+failures are reproducible artifacts: shrunk specs are checked into
+``tests/corpus/`` and replayed on every run.  A seeded sweep keeps the
+invariant exercised without dev dependencies (``FUZZ_CASES`` widens it
+— the CI fuzz lane runs ~200 cases); when hypothesis is installed, a
+composite strategy drives the same checker with real shrinking.
+
+The same corpus also gates the graph runtime's internal parities:
+``plan=True`` vs ``plan=False`` and ``donate=True`` vs ``donate=False``
+must be bitwise identical (previously covered only by hand-written
+cases in test_graph.py).
+"""
+import json
+import os
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st
+
+import repro.sac as sac
+
+CORPUS = Path(__file__).parent / "corpus"
+
+# Value-bounded vocabulary: small-integer-valued f32 stays exactly
+# representable through every op, so bitwise equality across backends
+# tests the lowering, not float edge cases (same rationale as
+# test_sac_property.py).
+UNARY = ["affine", "halve", "neg", "abs", "clip"]
+BINARY = ["add", "sub", "min", "max"]
+SHAPED = ["stencil", "scan", "causal_mean", "carry_causal"]
+OP_KINDS = UNARY + BINARY + SHAPED
+
+
+def _apply_op(pool, op, block):
+    kind = op["kind"]
+    src = pool[op["src"] % len(pool)]
+    if kind == "affine":
+        return src * 2.0 + 1.0
+    if kind == "halve":
+        return src / 2.0
+    if kind == "neg":
+        return -src
+    if kind == "abs":
+        return abs(src)
+    if kind == "clip":
+        return sac.elementwise(jnp.clip)(src, -3.0, 3.0)
+    if kind in BINARY:
+        other = pool[op.get("src2", 0) % len(pool)]
+        f = {"add": lambda a, b: a + b, "sub": lambda a, b: a - b,
+             "min": lambda a, b: np.minimum(a, b),
+             "max": lambda a, b: np.maximum(a, b)}[kind]
+        return f(src, other)
+    if kind == "stencil":
+        return sac.stencil(
+            lambda w: w[block:2 * block]
+            + 0.5 * (w[:block] + w[2 * block:]), src, radius=1)
+    if kind == "scan":
+        return sac.scan(jnp.add, src, identity=0.0)
+    if kind == "causal_mean":
+        def fn(x, i, _b=block):
+            pos = jnp.arange(x.shape[0]) // _b
+            w = (pos <= i).astype(x.dtype)
+            return jnp.full((_b,), (x * w).sum() / w.sum(), x.dtype)
+
+        return sac.causal(fn, src)
+    if kind == "carry_causal":
+        return sac.causal(
+            None, src, lift=lambda b: b.sum(), op=jnp.add,
+            finalize=lambda s, b: b + s, identity=0.0)
+    raise ValueError(kind)
+
+
+def build_program(spec):
+    """Spec dict -> (@sac.incremental program over x0/x1, n, block)."""
+    block = spec["block"]
+    n = spec["nb"] * block
+
+    @sac.incremental(block=block)
+    def prog(x0, x1):
+        pool = [x0, x1]
+
+        def run_segment(seg):
+            ctx = seg.get("comp")
+            region = seg.get("region")
+
+            def body():
+                for op in seg["ops"]:
+                    pool.append(_apply_op(pool, op, block))
+
+            def regioned():
+                if region is not None:
+                    with sac.static_region(region):
+                        body()
+                else:
+                    body()
+
+            if ctx == "seq":
+                with sac.seq():
+                    regioned()
+            elif ctx == "par":
+                with sac.par():
+                    regioned()
+            else:
+                regioned()
+
+        for seg in spec["segments"]:
+            run_segment(seg)
+        last = pool[-1]
+        outs = [sac.reduce(jnp.add, last, identity=0.0),
+                sac.reduce(jnp.maximum, pool[2 % len(pool)],
+                           identity=-jnp.inf)]
+        return tuple(outs)
+
+    return prog, n, block
+
+
+def _inputs(spec):
+    rng = np.random.default_rng(spec.get("data_seed", 0))
+    n = spec["nb"] * spec["block"]
+    return (rng.integers(-5, 6, n).astype(np.float32),
+            rng.integers(-5, 6, n).astype(np.float32))
+
+
+def _apply_edit(x0, x1, edit, n):
+    x0, x1 = x0.copy(), x1.copy()
+    target = x0 if edit["input"] == 0 else x1
+    for lane, val in zip(edit["lanes"], edit["vals"]):
+        target[lane % n] = np.float32(val)
+    return x0, x1
+
+
+def check_spec(spec):
+    """The differential invariant for one spec."""
+    prog, n, block = build_program(spec)
+    hg = prog.compile(x0=n, x1=n, max_sparse=4)
+    hh = prog.compile("host", x0=n, x1=n)
+    hy = prog.compile("hybrid", x0=n, x1=n, max_sparse=4)
+    x0, x1 = _inputs(spec)
+    outs = [h.run(x0=x0, x1=x1) for h in (hg, hh, hy)]
+    for name, o in zip(("host", "hybrid"), outs[1:]):
+        for a, b in zip(outs[0], o):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{name} initial run, spec={spec}")
+    if any(seg.get("region") for seg in spec["segments"]):
+        assert hy.num_fragments >= 2, (hy.num_fragments, spec)
+    for r, edit in enumerate(spec["edits"]):
+        x0, x1 = _apply_edit(x0, x1, edit, n)
+        outs = [h.update(x0=x0, x1=x1) for h in (hg, hh, hy)]
+        for name, o in zip(("host", "hybrid"), outs[1:]):
+            for a, b in zip(outs[0], o):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{name} edit {r}, spec={spec}")
+        sg, sh, sy = hg.stats, hh.stats, hy.stats
+        assert int(sg["affected"]) == int(sh["affected"]) \
+            == int(sy["affected"]), (r, sg, sh, sy, spec)
+        assert int(sg["dirty_inputs"]) == int(sh["dirty_inputs"]) \
+            == int(sy["dirty_inputs"]), (r, sg, sh, sy, spec)
+        assert int(sg["recomputed"]) == int(sy["recomputed"]), (
+            r, sg, sy, spec)
+
+
+# ---------------------------------------------------------------------------
+# Spec generation (seeded — runs everywhere; hypothesis drives the same
+# checker with real shrinking when installed)
+# ---------------------------------------------------------------------------
+BLOCKS = [1, 2, 3, 4]
+# Prime and >TINY_NB block counts included: primes hit every odd-level
+# padding path, 67 forces the sparse/dense regime machinery live.
+NBS = [4, 5, 7, 8, 11, 13, 16, 67]
+
+
+def random_spec(rng) -> dict:
+    block = int(rng.choice(BLOCKS))
+    nb = int(NBS[rng.integers(len(NBS))])
+    n = nb * block
+    pool = 2
+    segments = []
+    for _ in range(int(rng.integers(1, 4))):
+        ops = []
+        for _ in range(int(rng.integers(1, 4))):
+            kind = OP_KINDS[rng.integers(len(OP_KINDS))]
+            ops.append({"kind": kind, "src": int(rng.integers(pool)),
+                        "src2": int(rng.integers(pool))})
+            pool += 1
+        segments.append({
+            "comp": [None, "seq", "par"][rng.integers(3)],
+            "region": [None, "a", "b"][rng.integers(3)],
+            "ops": ops,
+        })
+    edits = []
+    for _ in range(int(rng.integers(2, 4))):
+        k = int(rng.integers(1, max(2, n // 2)))
+        edits.append({
+            "input": int(rng.integers(2)),
+            "lanes": [int(l) for l in rng.integers(0, n, k)],
+            "vals": [int(v) for v in rng.integers(-5, 6, k)],
+        })
+    return {"block": block, "nb": nb, "data_seed": int(rng.integers(10**6)),
+            "segments": segments, "edits": edits}
+
+
+# Bounded sweep: default size keeps the fast lane fast; the CI fuzz lane
+# sets FUZZ_CASES=200 (fixed seeds, so failures are reproducible).
+FUZZ_CASES = int(os.environ.get("FUZZ_CASES", "10"))
+
+
+@pytest.mark.parametrize("seed", range(FUZZ_CASES))
+def test_fuzz_differential_seeded(seed):
+    check_spec(random_spec(np.random.default_rng(seed)))
+
+
+# ---------------------------------------------------------------------------
+# Corpus replay: shrunk specs from past fuzz findings + structural
+# minima that pin each boundary mechanism.
+# ---------------------------------------------------------------------------
+def _corpus_files():
+    return sorted(CORPUS.glob("*.json"))
+
+
+@pytest.mark.parametrize("path", _corpus_files(),
+                         ids=lambda p: p.stem)
+def test_fuzz_corpus(path):
+    case = json.loads(path.read_text())
+    check_spec(case["spec"])
+
+
+# ---------------------------------------------------------------------------
+# Plan/legacy and donate parity under the same corpus (satellite of the
+# hybrid PR: these were only covered by hand-written cases before)
+# ---------------------------------------------------------------------------
+VARIANTS = [
+    {"plan": True, "donate": True},      # the default fast path
+    {"plan": True, "donate": False},
+    {"plan": False, "donate": True},     # legacy cond executable
+    {"plan": False, "donate": False},
+]
+
+
+def check_variants(spec):
+    prog, n, _block = build_program(spec)
+    handles = [prog.compile(x0=n, x1=n, max_sparse=4, **kw)
+               for kw in VARIANTS]
+    x0, x1 = _inputs(spec)
+    outs = [h.run(x0=x0, x1=x1) for h in handles]
+    for kw, o in zip(VARIANTS[1:], outs[1:]):
+        for a, b in zip(outs[0], o):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{kw} initial run")
+    for r, edit in enumerate(spec["edits"]):
+        x0, x1 = _apply_edit(x0, x1, edit, n)
+        outs = [h.update(x0=x0, x1=x1) for h in handles]
+        ref = handles[0].stats
+        for kw, h, o in zip(VARIANTS[1:], handles[1:], outs[1:]):
+            for a, b in zip(outs[0], o):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{kw} edit {r}, spec={spec}")
+            assert int(h.stats["affected"]) == int(ref["affected"]), (
+                kw, r, spec)
+            assert int(h.stats["recomputed"]) == int(ref["recomputed"]), (
+                kw, r, spec)
+
+
+@pytest.mark.parametrize("path", _corpus_files(),
+                         ids=lambda p: p.stem)
+def test_plan_donate_parity_corpus(path):
+    case = json.loads(path.read_text())
+    check_variants(case["spec"])
+
+
+@pytest.mark.parametrize("seed", range(min(FUZZ_CASES, 6)))
+def test_plan_donate_parity_seeded(seed):
+    check_variants(random_spec(np.random.default_rng(seed + 1000)))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis strategy (drives the same checker with real shrinking)
+# ---------------------------------------------------------------------------
+@st.composite
+def spec_strategy(draw):
+    block = draw(st.sampled_from(BLOCKS))
+    nb = draw(st.sampled_from(NBS))
+    n = nb * block
+    pool = 2
+    segments = []
+    for _ in range(draw(st.integers(1, 3))):
+        ops = []
+        for _ in range(draw(st.integers(1, 3))):
+            ops.append({"kind": draw(st.sampled_from(OP_KINDS)),
+                        "src": draw(st.integers(0, pool - 1)),
+                        "src2": draw(st.integers(0, pool - 1))})
+            pool += 1
+        segments.append({"comp": draw(st.sampled_from(
+                             [None, "seq", "par"])),
+                         "region": draw(st.sampled_from(
+                             [None, "a", "b"])),
+                         "ops": ops})
+    edits = [{"input": draw(st.integers(0, 1)),
+              "lanes": draw(st.lists(st.integers(0, n - 1), min_size=1,
+                                     max_size=max(1, n // 2))),
+              "vals": draw(st.lists(st.integers(-5, 5), min_size=n,
+                                    max_size=n))}
+             for _ in range(draw(st.integers(1, 3)))]
+    return {"block": block, "nb": nb,
+            "data_seed": draw(st.integers(0, 10**6)),
+            "segments": segments, "edits": edits}
+
+
+@given(spec_strategy())
+@settings(max_examples=15, deadline=None)
+def test_fuzz_differential_hypothesis(spec):
+    check_spec(spec)
+
+
+if HAVE_HYPOTHESIS:  # keep the shim import "used" for linters
+    pass
