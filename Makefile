@@ -2,13 +2,21 @@
 # default fast lane: pytest.ini deselects tests marked `slow`).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all fuzz cov bench bench-graph bench-check
+.PHONY: test test-all test-sharded fuzz cov bench bench-graph bench-check
 
 test:
 	$(PY) -m pytest -x -q
 
 test-all:
 	$(PY) -m pytest -q -m "slow or not slow"
+
+# Sharded-propagation lane: the mesh parity suite + the fuzz corpus
+# under an explicit 8-CPU-device topology (tests/conftest.py defaults
+# the flag, but the lane pins it so the device count is not
+# environment-dependent).
+test-sharded:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	  $(PY) -m pytest -q tests/test_shard.py tests/test_fuzz_differential.py
 
 # Bounded differential fuzz lane (fixed seeds, reproducible): the
 # graph/host/hybrid bitwise-parity sweep at CI width.  The default
@@ -32,6 +40,8 @@ bench-graph:
 # the committed results/bench/BENCH_graph.json baseline (>2x fails),
 # plus the headline gate-row assertion — change propagation must beat
 # from-scratch wall-clock (paired-median speedup >= 1.0 on the pipeline
-# n=2^21 >= 262144, k=1 row).
+# n=2^21 >= 262144, k=1 row) — plus the hybrid-app gate (>= 2x vs pure
+# host) and the sharded gate (shards=8 batch update >= 1.0x the
+# single-device update on the n=2^21 row, 8 host devices).
 bench-check:
 	$(PY) -m benchmarks.graph_pipeline --check

@@ -78,6 +78,7 @@ class GNode:
     finalize: Optional[Callable] = None  # carry-causal: (state, block) -> out
     idx_fn: Optional[Callable] = None    # gather: blocked parent -> [nb, A]
     arity: int = 0                       # gather: neighbour count per lane
+    packed_fn: Optional[Callable] = None  # gather: (own, nbrs) -> out block
     region: Optional[str] = None         # hybrid-runtime region tag
     name: str = ""
 
@@ -294,9 +295,9 @@ class GraphBuilder:
         return self._add("causal", x.num_blocks, ob, (x.idx,), fn=f,
                          name=name or "causal")
 
-    def gather(self, fn: Callable, idx_fn: Callable, x: Handle,
+    def gather(self, fn: Optional[Callable], idx_fn: Callable, x: Handle,
                arity: int = 1, out_block: Optional[int] = None,
-               name: str = "") -> Handle:
+               name: str = "", packed: Optional[Callable] = None) -> Handle:
         """Data-dependent reader sets with statically-bounded arity.
 
         The dynamic-dependency edge kind: out block i reads block i of the
@@ -322,11 +323,25 @@ class GraphBuilder:
         block i changed or any block in ``idx[i]`` changed.  Evaluating
         on pre-edit values is sound because a lane whose indices changed
         is dirty through the identity component.
+
+        **Packed form** (``packed`` given; ``fn`` may be None):
+        ``packed(own, nbrs)`` receives the lane's own block
+        ``[block, *feat]`` plus exactly its declared neighbour blocks
+        ``[arity, block, *feat]`` in ``idx_fn`` row order (clamped
+        in-range).  The sparse recompute then gathers only the
+        ``k * (1 + arity)`` blocks the dirty lanes actually read instead
+        of reassembling the full parent per lane — same dirty transfer,
+        same recomputed-block counts.  The packed contract tightens
+        ``idx_fn``: it must be row-wise *position-independent* (the
+        runtime evaluates it on gathered row subsets, so an ``idx_fn``
+        reading ``arange`` positions would see subset positions).
         """
         assert arity >= 1
+        assert fn is not None or packed is not None, (
+            "gather needs fn(x_full, i) or a packed(own, nbrs) form")
         ob = x.block if out_block is None else out_block
         return self._add("gather", x.num_blocks, ob, (x.idx,), fn=fn,
-                         idx_fn=idx_fn, arity=int(arity),
+                         idx_fn=idx_fn, arity=int(arity), packed_fn=packed,
                          name=name or "gather")
 
     def scan(self, op: Callable, x: Handle, identity: Any = 0.0,
@@ -440,7 +455,7 @@ class GraphBuilder:
                 interpret: Optional[bool] = None, pallas_tile: int = 8,
                 dirty: str = "mask", donate: bool = True,
                 block_skip="auto", level_skip: bool = True,
-                plan: bool = True):
+                plan: bool = True, mesh=None, plan_cache: int = 64):
         """Level-schedule the dag and build the jitted runtime.
 
         ``max_sparse="auto"`` calibrates the sparse/dense crossover per
@@ -475,6 +490,16 @@ class GraphBuilder:
         ``level_skip=True`` additionally wraps all-tiny schedule levels
         of the plan=False executable in one ``lax.cond`` on their
         aggregate dirty count (clean level = one scalar compare).
+
+        ``mesh`` (a one-axis ``jax.sharding.Mesh``, or an int shard
+        count resolved via ``repro.shardlib.block_mesh``) shards the
+        block axis of every node whose block count divides the mesh
+        size over the mesh devices; propagation then runs as one
+        ``shard_map`` program with per-shard dirty masks and
+        collectives only at level barriers (see DESIGN.md §Sharded
+        propagation).  Outputs and stats stay bitwise identical to the
+        single-device runtime.  ``plan_cache`` bounds the planned
+        mode's dirty-signature LRU (distinct frozen plans kept live).
         """
         from .graph_compile import CompiledGraph
 
@@ -482,7 +507,8 @@ class GraphBuilder:
                              use_pallas=use_pallas, interpret=interpret,
                              pallas_tile=pallas_tile, dirty=dirty,
                              donate=donate, block_skip=block_skip,
-                             level_skip=level_skip, plan=plan)
+                             level_skip=level_skip, plan=plan, mesh=mesh,
+                             plan_cache=plan_cache)
 
 
 class _SeqRegion:

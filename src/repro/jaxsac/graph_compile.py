@@ -47,6 +47,16 @@ wall-clock, not just in blocks recomputed:
     ``causal_carry_refold``; the Pallas tile-skipping variant is
     ``kernels.dirty_causal``), gated to exactly-associative dtypes so
     the bitwise cutoff stays sound.
+  * **dirty-signature plan cache** — planned mode quantizes the mark
+    counts into a signature and memoizes the frozen plan + executable
+    behind an LRU (``plancache.py``); gather indices come from the mark
+    masks on device (``graph_ops.mask_indices``), so a signature hit
+    performs zero host plan-freeze syncs.
+  * **mesh sharding** — ``mesh=`` partitions every node's block axis
+    into per-device chunks and runs the planned executable as one
+    ``shard_map`` program with per-shard dirty sets and collectives
+    only at level barriers (``shard_ops.py``; bitwise-identical to
+    single-device, see DESIGN.md §Sharded-propagation).
 
 Per node, per update, the runtime picks between two identical-result
 regimes by dirty count (the TPU translation of the paper's observation
@@ -77,6 +87,7 @@ from .autotune import calibrated_max_sparse
 from .dirtyset import DIRTY_REPS
 from .graph import (ELEMENTWISE_KINDS, GNode, GraphBuilder, Handle,
                     level_schedule)
+from .plancache import PlanCache, PlanEntry, next_pow2
 
 __all__ = ["CompiledGraph"]
 
@@ -114,7 +125,8 @@ class CompiledGraph:
                  use_pallas="auto", interpret: Optional[bool] = None,
                  pallas_tile: int = 8, dirty: str = "mask",
                  donate: bool = True, block_skip="auto",
-                 level_skip: bool = True, plan: bool = True):
+                 level_skip: bool = True, plan: bool = True,
+                 mesh=None, plan_cache: int = 64):
         assert builder.inputs, "graph has no inputs"
         assert dirty in DIRTY_REPS, f"unknown dirty rep {dirty!r}"
         assert block_skip in ("auto", True, False), block_skip
@@ -138,6 +150,25 @@ class CompiledGraph:
             use_pallas = jax.default_backend() == "tpu"
         self.use_pallas = bool(use_pallas)
         self.interpret = interpret
+        # ---- mesh sharding (see shard_ops.py / DESIGN.md) -------------
+        self.mesh = None
+        self.shard_axis: Optional[str] = None
+        self.num_shards = 1
+        if mesh is not None:
+            from repro.shardlib import block_mesh
+
+            if isinstance(mesh, int):
+                mesh = block_mesh(mesh)
+            axes = tuple(mesh.axis_names)
+            assert len(axes) == 1, (
+                f"CompiledGraph shards the block axis over a ONE-axis "
+                f"mesh; got axes {axes}")
+            self.mesh = mesh
+            self.shard_axis = axes[0]
+            self.num_shards = int(np.prod(mesh.devices.shape))
+            # Pallas dirty-tile routing inside the shard_map body is
+            # not wired up; the sharded executable uses the XLA paths.
+            self.use_pallas = False
         self.donate = bool(donate)
         self.block_skip = block_skip
         self.level_skip = bool(level_skip)
@@ -164,12 +195,18 @@ class CompiledGraph:
         # kept as the plan=False path and the planned mode's oracle.
         self._prop_fn = jax.jit(self._propagate_impl,
                                 donate_argnums=(0,) if self.donate else ())
+        # Under a mesh the legacy oracle runs GSPMD-partitioned over the
+        # sharded state without donation (input/output layouts are the
+        # compiler's choice there, so aliasing cannot be guaranteed).
+        self._prop_mesh_fn = (jax.jit(self._propagate_impl)
+                              if self.mesh is not None else None)
         # Planned mode: mark jit (reads state, tiny outputs) + one
-        # recompute executable per distinct plan tuple (jit cache).
+        # recompute executable per distinct quantized plan, memoized in
+        # the dirty-signature LRU (each entry owns its jit wrapper, so
+        # eviction really frees the executable).
         self._mark_fn = jax.jit(self._mark_impl)
-        self._prop_planned_fn = jax.jit(
-            self._prop_planned_impl, static_argnums=(4,),
-            donate_argnums=(0,) if self.donate else ())
+        self._plan_cache = PlanCache(cap=plan_cache)
+        self._sharder = None             # built at init under a mesh
 
     # ------------------------------------------------------------------
     def _pack_level(self, lvl: Sequence[int]) -> List[List[int]]:
@@ -242,6 +279,16 @@ class CompiledGraph:
                     nd.num_blocks,
                     nd.block * _feat_size(state["v"][nd.idx].shape))
                 for nd in self.nodes]
+        if self.mesh is not None:
+            # The shard layout needs the realized dtypes (the carry /
+            # escan exact-dtype gate), so it is decided here, at first
+            # init, and the state laid out over the mesh in one
+            # device_put.
+            if self._sharder is None:
+                from .shard_ops import ShardedPropagator
+
+                self._sharder = ShardedPropagator(self, state)
+            state = self._sharder.place(state)
         return state
 
     # ------------------------------------------------------------------
@@ -286,22 +333,41 @@ class CompiledGraph:
             # traced function) the planned mode's host sync is
             # impossible — and unnecessary: the legacy cond executable
             # inlines into the caller's trace.
+            if self.mesh is not None and not traced:
+                return self._prop_mesh_fn(state, inputs)
             return self._prop_fn(state, inputs)
         # Two-phase planned propagation (the paper's mark-then-propagate,
         # made executable-shaped): a small jitted MARK pass pushes the
         # input diff through the reader maps WITHOUT the value cutoff —
         # a sound over-approximation of every node's dirty count — the
-        # host reads the counts (one tiny device sync) and freezes a
-        # per-node plan (skip / sparse / dense), and a plan-specialized
-        # recompute executable runs with no in-graph branching at all:
-        # clean nodes simply don't appear in it, and every sparse
-        # scatter updates the donated state in place.  This is what
-        # removes the O(value) branch-result copies XLA conditionals
-        # cost on big nodes (see DESIGN.md §Propagation-cost-model).
-        masks, counts, node_masks = self._mark_fn(state, inputs)
-        plan = self._make_plan(np.asarray(counts))
-        sparse_idx = self._host_indices(state, node_masks, plan)
-        return self._prop_planned_fn(state, inputs, masks, sparse_idx, plan)
+        # host reads the counts (one tiny device sync: the only host
+        # read an update ever makes) and QUANTIZES them into the dirty
+        # signature = the per-node skip / sparse-bucket / dense plan.
+        # The signature keys an LRU of plan-specialized executables
+        # (plancache.py): a hit dispatches straight into the cached
+        # executable — sparse gather indices are extracted on device
+        # from the mark masks (graph_ops.mask_indices), so no plan is
+        # re-frozen and the masks never leave the device; a miss builds
+        # the executable once.  The executable runs with no in-graph
+        # branching at all: clean nodes simply don't appear in it, and
+        # every sparse scatter updates the donated state in place
+        # (see DESIGN.md §Propagation-cost-model).
+        mark = (self._sharder.mark if self.mesh is not None
+                else self._mark_fn)
+        masks, counts, node_masks = mark(state, inputs)
+        plan = self._make_plan(np.asarray(counts), frozenset(inputs))
+        entry = self._plan_cache.lookup(plan)
+        if entry is None:
+            if self.mesh is not None:
+                fn = self._sharder.planned_fn(plan)
+            else:
+                fn = jax.jit(
+                    functools.partial(self._prop_planned_impl, plan=plan),
+                    donate_argnums=(0,) if self.donate else ())
+            entry = self._plan_cache.insert(plan, PlanEntry(plan, fn))
+        new_state, stats = entry.fn(state, inputs, masks, node_masks)
+        return new_state, {**stats,
+                           "plan_cache": self._plan_cache.snapshot()}
 
     def _mark_impl(self, state, new_inputs: Dict[str, jax.Array]):
         """Mark phase: exact per-block diffs at the inputs, pure mask
@@ -334,67 +400,38 @@ class CompiledGraph:
         counts = jnp.stack([dirty[nd.idx].count() for nd in self.nodes])
         return masks, counts, node_masks
 
-    def _host_indices(self, state, node_masks, plan: Tuple[str, ...]):
-        """Pad each sparse-planned node's dirty block indices (host
-        ``flatnonzero`` of its mark mask) to its static budget; packed
-        groups get one concatenated index array.  Sound because the mark
-        masks over-approximate the post-cutoff dirty sets: extra lanes
-        recompute to bitwise-equal values and fail the lane diff."""
-        vals = list(state["v"])
-        sparse_idx: Dict[str, jax.Array] = {}
-        for lvl, groups in zip(self.schedule, self._level_groups):
-            for grp in groups:
-                if self.nodes[grp[0]].kind == "input":
-                    continue
-                live = [i for i in grp if plan[i] != "skip"]
-                if (len(live) > 1
-                        and all(plan[i] == "sparse" for i in live)
-                        and self._group_batchable(live, vals)):
-                    nb = self.nodes[live[0]].num_blocks
-                    k = min(sum(self._ks[i] for i in live), len(live) * nb)
-                    cat = np.concatenate(
-                        [np.asarray(node_masks[str(i)]) for i in live])
-                    ix = np.flatnonzero(cat)
-                    arr = np.full((k,), len(live) * nb, np.int32)
-                    arr[:len(ix)] = ix
-                    sparse_idx[f"g{live[0]}"] = jnp.asarray(arr)
-                    continue
-                for i in live:
-                    if plan[i] != "sparse":
-                        continue
-                    nb = self.nodes[i].num_blocks
-                    ix = np.flatnonzero(np.asarray(node_masks[str(i)]))
-                    arr = np.full((self._ks[i],), nb, np.int32)
-                    arr[:len(ix)] = ix
-                    sparse_idx[str(i)] = jnp.asarray(arr)
-        return sparse_idx
-
-    def _make_plan(self, counts: np.ndarray) -> Tuple[str, ...]:
-        """Freeze per-node regimes from the mark phase's upper bounds.
-        ``counts`` over-approximates the post-cutoff dirty sets, so
-        "skip" (count 0) is sound, and "sparse" (count <= k) can never
-        under-gather."""
+    def _make_plan(self, counts: np.ndarray, provided: frozenset):
+        """Freeze the quantized per-node plan — the dirty *signature*
+        the plan cache keys on.  ``counts`` over-approximates the
+        post-cutoff dirty sets, so "skip" (count 0) is sound and a
+        sparse budget can never under-gather; sparse counts round up to
+        the next power of two (the node's gather width for this plan),
+        so nearby edit sizes share one signature and one executable."""
         plan = []
         for nd in self.nodes:
             c = int(counts[nd.idx])
-            if c == 0:
+            if nd.kind == "input":
+                plan.append("update" if c and nd.name in provided
+                            else "skip")
+            elif c == 0:
                 plan.append("skip")
-            elif nd.kind == "input":
-                plan.append("update")
             elif nd.kind == "escan":
                 plan.append("live")      # its own carry-pass machinery
             elif (nd.num_blocks <= self.TINY_NB
                   or c > self._ks[nd.idx]):
                 plan.append("dense")
             else:
-                plan.append("sparse")
+                plan.append(("sparse", min(next_pow2(c), self._ks[nd.idx],
+                                           nd.num_blocks)))
         return tuple(plan)
 
-    def _prop_planned_impl(self, state, new_inputs, in_masks, sparse_idx,
+    def _prop_planned_impl(self, state, new_inputs, in_masks, node_masks,
                            plan):
         """Plan-specialized recompute: one straight-line executable per
-        distinct plan (cached by jit on the static plan tuple).  Skipped
-        nodes pass through untouched; nothing branches at runtime."""
+        distinct plan (each owned by its plan-cache entry).  Skipped
+        nodes pass through untouched; nothing branches at runtime, and
+        sparse gather indices come from the mark masks on device
+        (``mask_indices``), never from a host read."""
         D = self._dirty_cls
         vals = list(state["v"])
         carries = dict(state["c"])
@@ -433,17 +470,20 @@ class CompiledGraph:
                     [vals[d] for d in self.nodes[i].deps])
                     for i in live}
                 if (len(live) > 1
-                        and all(plan[i] == "sparse" for i in live)
+                        and all(isinstance(plan[i], tuple) for i in live)
                         and self._group_batchable(live, vals)):
-                    k = min(sum(self._ks[i] for i in live),
+                    k = min(sum(plan[i][1] for i in live),
                             len(live) * self.nodes[live[0]].num_blocks)
+                    gidx = graph_ops.mask_indices(
+                        jnp.concatenate(
+                            [node_masks[str(i)] for i in live]), k)
                     news, idxs, lcs = graph_ops.sparse_update_group(
                         [self.nodes[i] for i in live], self.nodes,
                         [[vals[d] for d in self.nodes[i].deps]
                          for i in live],
                         [vals[i] for i in live],
                         [dirties[i].to_mask() for i in live], k,
-                        gidx=sparse_idx[f"g{live[0]}"])
+                        gidx=gidx)
                     for i, nv, ix, lc in zip(live, news, idxs, lcs):
                         nb = self.nodes[i].num_blocks
                         vals[i] = nv
@@ -454,11 +494,14 @@ class CompiledGraph:
                 for i in live:
                     nd = self.nodes[i]
                     parents = [vals[d] for d in nd.deps]
-                    regime = ("sparse" if plan[i] == "sparse" else "dense")
+                    sp = isinstance(plan[i], tuple)
                     nv, ch, st = self._recompute(
                         nd, parents, vals[i], dirties[i],
-                        carries.get(str(i)), regime=regime,
-                        idx=sparse_idx.get(str(i)))
+                        carries.get(str(i)),
+                        regime="sparse" if sp else "dense",
+                        idx=(graph_ops.mask_indices(node_masks[str(i)],
+                                                    plan[i][1])
+                             if sp else None))
                     vals[i] = nv
                     changed[i] = ch
                     if st is not None:

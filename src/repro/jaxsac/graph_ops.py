@@ -39,10 +39,50 @@ from .core import broadcast_mask as _bc
 from .dirtyset import DirtySet
 from .graph import GNode
 
-__all__ = ["forward", "edge_dirty", "gather_indices", "dense_update",
-           "sparse_update", "sparse_update_group", "causal_carry_states",
-           "causal_carry_refold", "causal_finalize_sparse",
-           "causal_finalize_dense", "escan_block_skip", "exact_dtype"]
+__all__ = ["forward", "edge_dirty", "gather_indices", "mask_indices",
+           "dense_update", "sparse_update", "sparse_update_group",
+           "causal_carry_states", "causal_carry_refold",
+           "causal_finalize_sparse", "causal_finalize_dense",
+           "escan_block_skip", "exact_dtype"]
+
+
+def mask_indices(mask: jax.Array, k: int) -> jax.Array:
+    """Indices of the first <= k set bits of ``mask``, ascending, padded
+    with the sentinel ``num_blocks`` — the device-side twin of the
+    host's ``np.flatnonzero`` + pad.
+
+    The j-th set bit is the first position whose running count reaches
+    j+1 (``searchsorted`` on the running sum; a query past the total
+    lands at the sentinel).  No scatter and no sort: in-jit
+    ``jnp.nonzero(size=k)`` lowers to a full sort on CPU and a
+    scatter-based extraction serializes one update per block — either
+    by itself can cost more than the sparse recompute it feeds.  Large
+    masks take a two-level form — per-row counts, a tiny row cumsum,
+    then the ``searchsorted`` recursion within the <= k touched rows —
+    because one flat O(num_blocks) cumsum alone costs more than a
+    small sparse recompute at serving block counts.  Keeping the
+    extraction on device is what lets the plan cache skip the host
+    plan-freeze round-trip entirely on a signature hit.
+    """
+    nb = mask.shape[0]
+    queries = jnp.arange(1, k + 1, dtype=jnp.int32)
+    if nb <= 2048:
+        csum = jnp.cumsum(mask.astype(jnp.int32))
+        idx = jnp.searchsorted(csum, queries, side="left")
+        return jnp.minimum(idx, nb).astype(jnp.int32)
+    C = 128                              # row width of the two-level form
+    pad = (-nb) % C
+    m2 = (jnp.concatenate([mask, jnp.zeros((pad,), bool)]) if pad
+          else mask).reshape(-1, C)
+    rows_csum = jnp.cumsum(jnp.sum(m2.astype(jnp.int32), axis=1))
+    row = jnp.searchsorted(rows_csum, queries, side="left")
+    rowc = jnp.clip(row, 0, m2.shape[0] - 1)
+    before = jnp.where(rowc > 0, rows_csum[rowc - 1], 0)
+    within = jnp.cumsum(m2[rowc].astype(jnp.int32), axis=1)   # [k, C]
+    col = jax.vmap(
+        lambda c, q: jnp.searchsorted(c, q, side="left"))(
+            within, queries - before)
+    return jnp.minimum(rowc * C + col, nb).astype(jnp.int32)
 
 
 def exact_dtype(dtype) -> bool:
@@ -142,6 +182,14 @@ def forward(node: GNode, nodes, parents: List[jax.Array]) -> jax.Array:
         raw = jax.vmap(node.fn, in_axes=(None, 0))(parents[0], idx)
         return _pack(node, raw)
     if node.kind == "gather":
+        if node.packed_fn is not None:
+            # Packed form: the per-lane function receives the lane's own
+            # block plus exactly its ``arity`` neighbour blocks — no
+            # full-parent view to assemble (see GraphBuilder.gather).
+            p = _parent(node, nodes)
+            xb = _as_blocks(parents[0], p.num_blocks, p.block)
+            nbrs = xb[gather_indices(node, parents[0])]
+            return _pack(node, jax.vmap(node.packed_fn)(xb, nbrs))
         idx = jnp.arange(node.num_blocks)
         raw = jax.vmap(node.fn, in_axes=(None, 0))(parents[0], idx)
         return _pack(node, raw)
@@ -282,6 +330,20 @@ def sparse_update(node: GNode, nodes, parents: List[jax.Array],
         p = _parent(node, nodes)
         wg = _windows(node, p, parents[0], idx)
         raw = jax.vmap(node.fn)(wg)
+    elif node.kind == "gather" and node.packed_fn is not None:
+        # Packed sparse recompute: gather ONLY the k dirty lanes' own
+        # blocks plus the arity neighbour blocks their cached indices
+        # name — O(k * (1 + arity)) block reads instead of threading the
+        # full parent into every lane.  ``idx_fn`` is row-wise by the
+        # packed contract, so evaluating it on the gathered subset gives
+        # each dirty lane its own neighbour row.
+        p = _parent(node, nodes)
+        xb = _as_blocks(parents[0], p.num_blocks, p.block)
+        own = xb.at[idx].get(mode="fill", fill_value=0)
+        nidx = jnp.clip(jnp.asarray(node.idx_fn(own), jnp.int32),
+                        0, node.num_blocks - 1)
+        assert nidx.shape == (k, node.arity), (nidx.shape, k, node.arity)
+        raw = jax.vmap(node.packed_fn)(own, xb[nidx])
     elif node.kind in ("causal", "gather"):
         # fn sees the full parent; sentinel lanes (idx == nb) compute a
         # clamped-index value and are dropped by the scatter below.

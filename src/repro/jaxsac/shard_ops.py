@@ -1,0 +1,709 @@
+"""Mesh-sharded change propagation: the block axis over devices.
+
+``CompiledGraph(mesh=...)`` partitions every node's block axis into
+contiguous per-device chunks and runs the planned recompute as ONE
+``shard_map`` program (``ShardedPropagator.planned_fn``).  The layout
+rule is per node:
+
+  * **sharded** — ``num_blocks % S == 0`` (S = mesh size): the value
+    (and a carry node's cached states) live as ``[num_blocks/S]``-block
+    chunks, one per device, and recompute work is local to each shard;
+  * **replicated** — everything else (a reduce tree's upper levels once
+    a level's blocks drop below the shard count, odd levels a prime
+    block count produces, and — soundness, not shape — ``escan`` /
+    carry-``causal`` nodes whose dtype is not exactly associative, see
+    below): every device holds the full value and recomputes it
+    identically, which is bitwise-trivially equal to single-device.
+
+Cross-shard communication is confined to level barriers, one collective
+pattern per edge kind:
+
+  * a replicated node reading a sharded parent **all-gathers** it and
+    combines locally (the reduce-tree tail switches to
+    all-gather-then-local-combine exactly when a level stops dividing);
+  * ``stencil`` exchanges ``radius`` **edge blocks per neighbour**
+    (``ppermute`` halos; global edges keep their clamp/fill semantics);
+  * ``escan`` / carry-``causal`` exchange **one carry state per shard
+    boundary per level**: each shard scans its own chunk with the
+    cached-carry block-skip recombination, shard totals are
+    all-gathered and folded into a per-shard prefix (the Ladner-Fischer
+    step across shards), and one ``op`` application seeds each chunk.
+    The cross-shard fold re-brackets the monoid, so this path is gated
+    to exactly-associative dtypes (ints/bools) — the same
+    ``block_skip`` soundness rule the single-device runtime applies —
+    and float scans stay replicated, keeping every output bitwise
+    identical to the single-device runtime;
+  * dirty *masks* are pushed on their full (replicated) form — they are
+    ``num_blocks`` bools, a per-level all-gather of each recomputed
+    node's changed chunk — so the transfer algebra (dirtyset.py) is
+    byte-for-byte the single-device one and ``affected`` /
+    ``recomputed`` counts cannot drift.
+
+Sparse recomputes stay per-shard: each device extracts its local dirty
+lane indices from its mask chunk (``graph_ops.mask_indices``) and
+gathers/scatters only its own blocks, so a plan-cache hit dispatches
+the whole sharded update with no host round-trip at all.
+``stats["recomputed_per_shard"]`` reports each shard's local masked
+work ([S] vector; replicated nodes charge their full count to every
+shard, so its sum can exceed ``recomputed`` when a program has
+replicated tails).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import shardlib
+from repro.jaxsac.core import broadcast_mask as _bc
+from repro.jaxsac.core import dirty_from_diff
+
+from . import graph_ops
+from .graph_ops import _identity_row, _lane_changed, _windows, mask_indices
+
+try:                                     # jax >= 0.4.31 spelling
+    from jax.sharding import NamedSharding, PartitionSpec as P
+except ImportError:  # pragma: no cover - ancient jax
+    from jax.experimental.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardedPropagator"]
+
+
+def _is_carry(nd) -> bool:
+    return nd.kind == "causal" and nd.op is not None
+
+
+class _Changed:
+    """One node's changed set, held in whichever form it was produced —
+    a per-shard local mask chunk (sharded recomputes) or a full
+    replicated DirtySet — with the other form materialized lazily and
+    memoized.  This is what keeps collectives at the shard boundaries:
+    a map -> map chain of sharded nodes passes local masks along with
+    ZERO communication, and an all-gather happens only where a consumer
+    genuinely needs the full set (a replicated node, a stencil dilate, a
+    data-dependent gather edge, an output mask)."""
+
+    __slots__ = ("sh", "nb", "_local", "_full")
+
+    def __init__(self, sh, nb, local=None, full=None):
+        assert (local is None) != (full is None)
+        self.sh = sh
+        self.nb = nb
+        self._local = local
+        self._full = full
+
+    @property
+    def is_local(self):
+        return self._local is not None
+
+    def full(self, D):
+        if self._full is None:
+            m = jax.lax.all_gather(self._local, self.sh.axis, axis=0,
+                                   tiled=True)
+            self._full = D.from_mask(m)
+        return self._full
+
+    def local(self):
+        if self._local is None:
+            self._local = self.sh._local_mask(self._full.to_mask(),
+                                              self.nb // self.sh.S)
+        return self._local
+
+
+class ShardedPropagator:
+    """Per-compiled-graph sharding layout + shard_map executables."""
+
+    def __init__(self, cg, state):
+        self.cg = cg
+        self.mesh = cg.mesh
+        self.axis = cg.shard_axis
+        self.S = cg.num_shards
+        nodes = cg.nodes
+        sharded: List[bool] = []
+        for nd in nodes:
+            ok = nd.num_blocks % self.S == 0
+            if nd.kind == "escan":
+                ok = ok and cg._block_skip_ok(state["v"][nd.idx].dtype)
+            elif _is_carry(nd):
+                ok = ok and cg._block_skip_ok(
+                    state["c"][str(nd.idx)].dtype)
+            sharded.append(ok)
+        self.sharded = sharded
+        # Chunk views: every divisible node as a [num_blocks/S]-block
+        # node, so graph_ops' per-node recomputes run unchanged on one
+        # shard's chunk (sentinels, reshapes, and identity padding all
+        # key off num_blocks).
+        self.cnodes = [
+            dataclasses.replace(nd, num_blocks=nd.num_blocks // self.S)
+            if nd.num_blocks % self.S == 0 else nd for nd in nodes]
+        self.vspec = tuple(P(self.axis) if sharded[nd.idx] else P()
+                           for nd in nodes)
+        self.cspec = {k: (P(self.axis) if sharded[int(k)] else P())
+                      for k in state["c"]}
+        self.state_spec = {"v": self.vspec, "c": self.cspec}
+        self._mark_fns: Dict[Any, Any] = {}  # edited-input key set -> jit
+
+    # ------------------------------------------------------------------
+    # State placement
+    # ------------------------------------------------------------------
+    def place(self, state):
+        """Lay the init state out over the mesh (one device_put)."""
+        ns = functools.partial(NamedSharding, self.mesh)
+        sh = {"v": tuple(ns(self.vspec[i]) for i in range(len(state["v"]))),
+              "c": {k: ns(self.cspec[k]) for k in state["c"]}}
+        return jax.device_put(state, sh)
+
+    # ------------------------------------------------------------------
+    # Executables
+    # ------------------------------------------------------------------
+    def mark(self, state, inputs):
+        """Sharded mark pass: same outputs as ``CompiledGraph._mark_impl``
+        (input masks, per-node dirty-count bounds, per-node mark masks).
+
+        The only O(n) work in a mark is the input value diff — that runs
+        on each shard's chunk in parallel, one tiny mask all-gather per
+        edited input.  The mask-pushing algebra above the inputs is
+        O(num_blocks) bools per node and runs replicated on the full
+        masks, so it is byte-for-byte the single-device transfer code
+        (letting GSPMD partition it instead costs more in collectives
+        than the whole mark).  One executable is cached per edited-input
+        key set."""
+        key = frozenset(inputs)
+        fn = self._mark_fns.get(key)
+        if fn is None:
+            names = sorted(key)
+            smap = shardlib.shard_map(
+                self._mark_body, mesh=self.mesh,
+                in_specs=({"v": self.vspec, "c": self.cspec},
+                          {n: self.vspec[self.cg.input_names[n]]
+                           for n in names}),
+                out_specs=({n: P() for n in names}, P(),
+                           {str(nd.idx): P() for nd in self.cg.nodes
+                            if nd.kind != "input"}))
+            fn = jax.jit(smap)
+            self._mark_fns[key] = fn
+        return fn(state, inputs)
+
+    def _mark_body(self, state, new_inputs):
+        cg = self.cg
+        D = cg._dirty_cls
+        dirty = [None] * len(cg.nodes)
+        masks = {}
+        node_masks = {}
+        for nd in cg.nodes:
+            if nd.kind == "input":
+                if nd.name in new_inputs:
+                    old = state["v"][nd.idx]
+                    new = jnp.asarray(new_inputs[nd.name]).astype(
+                        old.dtype)
+                    dm = dirty_from_diff(old, new, nd.block)
+                    if self.sharded[nd.idx]:
+                        dm = jax.lax.all_gather(dm, self.axis, axis=0,
+                                                tiled=True)
+                    ch = D.from_mask(dm)
+                    masks[nd.name] = ch.to_mask()
+                else:
+                    ch = D.none(nd.num_blocks)
+                dirty[nd.idx] = ch
+            else:
+                pv = ([self._full(d, state["v"]) for d in nd.deps]
+                      if nd.kind == "gather" else None)
+                dirty[nd.idx] = graph_ops.edge_dirty(
+                    nd, [dirty[d] for d in nd.deps], pv)
+                node_masks[str(nd.idx)] = dirty[nd.idx].to_mask()
+        counts = jnp.stack([dirty[nd.idx].count() for nd in cg.nodes])
+        return masks, counts, node_masks
+
+    def planned_fn(self, plan):
+        """One jitted shard_map executable specialized to ``plan``
+        (same plan vocabulary as the single-device planned propagate).
+
+        The wrapper narrows the argument dicts to exactly the leaves
+        this plan reads — updated inputs and sparse-planned mark masks
+        — so the shard_map in_specs are structurally fixed per plan.
+        """
+        cg = self.cg
+        upd = [nd.name for nd in cg.nodes
+               if nd.kind == "input" and plan[nd.idx] == "update"]
+        sparse_keys = [str(i) for i, p in enumerate(plan)
+                       if isinstance(p, tuple)]
+        stats_spec = {
+            "recomputed": P(), "affected": P(), "dirty_inputs": P(),
+            "recomputed_per_shard": P(self.axis),
+            "out_changed": {str(i): P() for i in cg.outputs},
+            "in_dirty": {name: P() for name in cg.input_names},
+        }
+        smap = shardlib.shard_map(
+            functools.partial(self._body, plan=plan), mesh=self.mesh,
+            in_specs=({"v": self.vspec, "c": self.cspec},
+                      {n: self.vspec[cg.input_names[n]] for n in upd},
+                      {n: P() for n in upd},
+                      {k: P() for k in sparse_keys}),
+            out_specs=({"v": self.vspec, "c": self.cspec}, stats_spec))
+        jfn = jax.jit(smap, donate_argnums=(0,) if cg.donate else ())
+
+        def fn(state, new_inputs, in_masks, node_masks):
+            return jfn(state, {n: new_inputs[n] for n in upd},
+                       {n: in_masks[n] for n in upd},
+                       {k: node_masks[k] for k in sparse_keys})
+
+        return fn
+
+    # ------------------------------------------------------------------
+    # Shard-local helpers
+    # ------------------------------------------------------------------
+    def _sidx(self):
+        return jax.lax.axis_index(self.axis)
+
+    def _full(self, d: int, vals):
+        """The full value of node ``d`` on every shard (all-gather a
+        sharded chunk; replicated values already are full)."""
+        if self.sharded[d]:
+            return jax.lax.all_gather(vals[d], self.axis, axis=0,
+                                      tiled=True)
+        return vals[d]
+
+    def _chunk(self, d: int, vals):
+        """This shard's contiguous chunk of node ``d``'s value (the
+        value itself when sharded, a dynamic slice of the replicated
+        full array otherwise).  Requires a divisible block count."""
+        if self.sharded[d]:
+            return vals[d]
+        nd = self.cg.nodes[d]
+        assert nd.num_blocks % self.S == 0, (nd.name, nd.num_blocks)
+        ln = nd.n // self.S
+        return jax.lax.dynamic_slice_in_dim(
+            vals[d], self._sidx() * ln, ln, axis=0)
+
+    def _local_mask(self, full_mask, lnb: int):
+        return jax.lax.dynamic_slice_in_dim(
+            full_mask, self._sidx() * lnb, lnb, axis=0)
+
+    def _local_slice_rows(self, full, nd):
+        ln = nd.n // self.S
+        return jax.lax.dynamic_slice_in_dim(
+            full, self._sidx() * ln, ln, axis=0)
+
+    def _global_start(self, entry: "_Changed", nb: int):
+        """First globally dirty block index of a changed set (``nb``
+        when empty) — the scalar a suffix edge (causal / escan) needs.
+        A local entry costs one ``pmin``; a full entry is free."""
+        if not entry.is_local:
+            return entry.full(self.cg._dirty_cls).start()
+        lmask = entry.local()
+        lnb = lmask.shape[0]
+        pos = self._sidx() * lnb + jnp.arange(lnb)
+        lmin = jnp.min(jnp.where(lmask, pos, nb)).astype(jnp.int32)
+        return jax.lax.pmin(lmin, self.axis)
+
+    def _transfer_local(self, nd, changed):
+        """Shard-local dirty transfer for edges whose reader map does
+        not cross chunk boundaries (exact per-block mask rep only):
+        returns ``(local_mask, start_or_None, repl_count_or_None)`` or
+        None when the edge needs the full-set path.  ``map``/``zip``/
+        aligned ``reduce_level`` transfers are pure chunk algebra (zero
+        communication); suffix edges (``causal``/``escan``) reduce to
+        one scalar ``pmin`` of the parent's first dirty block, with the
+        suffix count reported as a replicated scalar."""
+        kind = nd.kind
+        nb = nd.num_blocks
+        lnb = nb // self.S
+        if kind == "map":
+            return changed[nd.deps[0]].local(), None, None
+        if kind == "zip_map":
+            return (changed[nd.deps[0]].local()
+                    | changed[nd.deps[1]].local()), None, None
+        if kind == "reduce_level":
+            p = self.cg.nodes[nd.deps[0]]
+            if p.num_blocks != 2 * nb:
+                return None              # odd level: full path
+            c = changed[nd.deps[0]].local()
+            return c[0::2] | c[1::2], None, None
+        if kind in ("causal", "escan"):
+            s = self._global_start(changed[nd.deps[0]], nb)
+            if kind == "escan":          # out j reads blocks < j
+                s = jnp.minimum(s + 1, nb)
+            pos = self._sidx() * lnb + jnp.arange(lnb)
+            count = (nb - jnp.minimum(s, nb)).astype(jnp.int32)
+            return (pos >= s), s, count
+        return None                      # stencil / gather: full path
+
+    def _global_row(self, x_local, gidx, ident_row):
+        """Row ``gidx`` (a global block index) of a sharded per-block
+        array; ``ident_row`` when ``gidx < 0``.  One tiny all-gather of
+        each shard's clamped candidate row — dtype-agnostic."""
+        lnb = x_local.shape[0]
+        j = jnp.clip(gidx - self._sidx() * lnb, 0, lnb - 1)
+        cand = jnp.take(x_local, j, axis=0)
+        rows = jax.lax.all_gather(cand, self.axis)          # [S, *feat]
+        src = jnp.clip(gidx, 0, self.S * lnb - 1) // lnb
+        row = jnp.take(rows, src, axis=0)
+        return jnp.where(gidx >= 0, row, ident_row)
+
+    def _scatter_lanes(self, nd_local, old_local, idx_local, raw):
+        """Scatter k recomputed lanes into the local chunk; returns
+        ``(new_local, lane_changed)`` (the lane-local cutoff)."""
+        nb = nd_local.num_blocks
+        old_b = old_local.reshape((nb, nd_local.block)
+                                  + old_local.shape[1:])
+        if nd_local.block == 1:
+            vals_b = raw.reshape((idx_local.shape[0], 1) + raw.shape[1:])
+        else:
+            vals_b = raw
+        old_lanes = old_b.at[idx_local].get(mode="fill", fill_value=0)
+        lc = _lane_changed(old_lanes, vals_b)
+        new = old_b.at[idx_local].set(vals_b, mode="drop")
+        return new.reshape(old_local.shape), lc
+
+    def _masked_local(self, nd_local, old_local, new_local, lmask):
+        nb = nd_local.num_blocks
+        new_b = new_local.reshape((nb, nd_local.block)
+                                  + new_local.shape[1:])
+        old_b = old_local.reshape(new_b.shape)
+        return jnp.where(_bc(lmask, new_b), new_b,
+                         old_b).reshape(old_local.shape)
+
+    # ------------------------------------------------------------------
+    # Stencil halos
+    # ------------------------------------------------------------------
+    def _stencil_windows(self, nd, vals, idx_local=None):
+        """Neighbourhood windows of this shard's output blocks.  When
+        the parent chunk is resident and the radius fits, halos arrive
+        by ``ppermute`` — ``radius`` edge blocks per neighbour — with
+        the mesh-global edges keeping the clamp/fill semantics of the
+        single-device ``_windows``.  Otherwise (replicated parent, or a
+        radius wider than a chunk) windows come from the full parent
+        with global indices, which is bitwise the same construction.
+        """
+        cg = self.cg
+        p = cg.nodes[nd.deps[0]]
+        lnb = nd.num_blocks // self.S
+        li = jnp.arange(lnb) if idx_local is None else idx_local
+        if not self.sharded[nd.deps[0]] or nd.radius > lnb:
+            xf = self._full(nd.deps[0], vals)
+            return _windows(nd, p, xf, idx=self._sidx() * lnb + li)
+        x = vals[nd.deps[0]]
+        xb = x.reshape((lnb, p.block) + x.shape[1:])
+        r, S = nd.radius, self.S
+        left = jax.lax.ppermute(xb[lnb - r:], self.axis,
+                                [(j, j + 1) for j in range(S - 1)])
+        right = jax.lax.ppermute(xb[:r], self.axis,
+                                 [(j, j - 1) for j in range(1, S)])
+        if nd.fill is None:              # clamp to the global edge block
+            edge_l = jnp.broadcast_to(xb[0:1], left.shape)
+            edge_r = jnp.broadcast_to(xb[lnb - 1:lnb], right.shape)
+        else:
+            fill = jnp.asarray(nd.fill, x.dtype)
+            edge_l = jnp.full(left.shape, fill)
+            edge_r = jnp.full(right.shape, fill)
+        sidx = self._sidx()
+        left = jnp.where(sidx == 0, edge_l, left)
+        right = jnp.where(sidx == S - 1, edge_r, right)
+        padded = jnp.concatenate([left, xb, right], axis=0)
+        parts = [padded[li + off + r] for off in range(-r, r + 1)]
+        return jnp.concatenate(parts, axis=1)
+
+    # ------------------------------------------------------------------
+    # Distributed carry recombination (escan / carry-causal)
+    # ------------------------------------------------------------------
+    def _dist_refold(self, nd, contrib, old_local, start):
+        """Sharded twin of ``graph_ops._masked_refold``: local masked
+        inclusive scans, an all-gather of the S shard totals folded into
+        per-shard prefixes (the cross-shard Ladner-Fischer step), and
+        one seed combine per chunk.  Exact-dtype only (gated by the
+        caller): the fold is re-bracketed across shard boundaries."""
+        lnb = contrib.shape[0]
+        pos = self._sidx() * lnb + jnp.arange(lnb)
+        in_suffix = pos >= start
+        ident = _identity_row(nd, contrib)
+        masked = jnp.where(_bc(in_suffix, contrib), contrib, ident)
+        local = jax.lax.associative_scan(nd.op, masked, axis=0)
+        tots = jax.lax.all_gather(local[-1], self.axis)     # [S, *feat]
+        incl = jax.lax.associative_scan(nd.op, tots, axis=0)
+        sidx = self._sidx()
+        prefix = jnp.where(sidx > 0,
+                           jnp.take(incl, jnp.maximum(sidx - 1, 0), axis=0),
+                           jnp.broadcast_to(ident, contrib.shape[1:]))
+        seed = self._global_row(old_local, start - 1,
+                                jnp.broadcast_to(ident, contrib.shape[1:]))
+        base = nd.op(seed, prefix)
+        rec = jax.vmap(nd.op, in_axes=(None, 0))(base, local)
+        return jnp.where(_bc(in_suffix, old_local), rec, old_local)
+
+    def _escan_local(self, nd, vals, old_local, start, lmask):
+        """Block-skip escan chunk: the previous shard's last aggregate
+        row crosses the boundary by ppermute (shard 0 seeds from the op
+        identity), then the distributed refold reseeds the dirty suffix
+        from the cached carries."""
+        agg_local = self._chunk(nd.deps[0], vals)
+        ident = _identity_row(nd, agg_local)
+        prev = jax.lax.ppermute(agg_local[-1], self.axis,
+                                [(j, j + 1) for j in range(self.S - 1)])
+        first = jnp.where(self._sidx() == 0,
+                          jnp.broadcast_to(ident, prev.shape), prev)
+        shifted = jnp.concatenate([first[None], agg_local[:-1]], axis=0)
+        new = self._dist_refold(nd, shifted, old_local, start)
+        lnb = nd.num_blocks // self.S
+        sel = lmask.reshape((lnb,) + (1,) * (old_local.ndim - 1))
+        return jnp.where(sel, new, old_local)
+
+    def _carry_states_local(self, nd, vals, old_states_local, start):
+        p = self.cg.nodes[nd.deps[0]]
+        lnb = nd.num_blocks // self.S
+        plocal = self._chunk(nd.deps[0], vals)
+        xb = plocal.reshape((lnb, p.block) + plocal.shape[1:])
+        contrib = jax.vmap(nd.lift)(xb)
+        return self._dist_refold(nd, contrib, old_states_local, start)
+
+    # ------------------------------------------------------------------
+    # Per-node local recompute
+    # ------------------------------------------------------------------
+    def _recompute_local(self, i, vals, carries, lmask, start, plan_i):
+        """Recompute node ``i``'s local chunk from its local transfer
+        mask (plus the global suffix ``start`` for escan/carry);
+        returns ``(new_local, changed_local_mask, new_states_or_None)``.
+        The changed mask is the lane-local Algorithm-2 cutoff applied on
+        this shard's chunk only — no communication here."""
+        cg = self.cg
+        nd = cg.nodes[i]
+        cn = self.cnodes[i]
+        lnb = cn.num_blocks
+        old_local = vals[i]
+        sparse = isinstance(plan_i, tuple)
+        if sparse:
+            k = min(plan_i[1], lnb)
+            li = mask_indices(lmask, k)
+
+        def lanes_changed(li, lc):
+            return jnp.zeros((lnb,), bool).at[li].set(lc, mode="drop")
+
+        def diff_changed(new):
+            return dirty_from_diff(old_local, new, nd.block) & lmask
+
+        if nd.kind == "escan":
+            new = self._escan_local(nd, vals, old_local, start, lmask)
+            return new, diff_changed(new), None
+
+        if _is_carry(nd):
+            states = self._carry_states_local(nd, vals, carries[str(i)],
+                                              start)
+            plocal = self._chunk(nd.deps[0], vals)
+            if sparse:
+                new, _, lc = graph_ops.causal_finalize_sparse(
+                    cn, self.cnodes, plocal, states, old_local, lmask,
+                    k, idx=li)
+                return new, lanes_changed(li, lc), states
+            new = graph_ops.causal_finalize_dense(
+                cn, self.cnodes, plocal, states, old_local, lmask)
+            return new, diff_changed(new), states
+
+        if nd.kind in ("map", "zip_map") or (
+                nd.kind == "reduce_level"
+                and cg.nodes[nd.deps[0]].num_blocks == 2 * nd.num_blocks):
+            parents = [self._chunk(d, vals) for d in nd.deps]
+            if sparse:
+                new, _, lc = graph_ops.sparse_update(
+                    cn, self.cnodes, parents, old_local, lmask, k, idx=li)
+                return new, lanes_changed(li, lc), None
+            new = graph_ops.dense_update(
+                cn, self.cnodes, parents, old_local, lmask)
+            return new, diff_changed(new), None
+
+        if nd.kind == "reduce_level":
+            # Non-aligned level (identity-padded odd parent): combine
+            # from the all-gathered parent — the reduce tree's
+            # all-gather-then-local-combine fallback.
+            pf = self._full(nd.deps[0], vals)
+            full = graph_ops.forward(nd, cg.nodes, [pf])
+            new_rows = self._local_slice_rows(full, nd)
+            new = self._masked_local(cn, old_local, new_rows, lmask)
+            return new, diff_changed(new), None
+
+        if nd.kind == "stencil":
+            if sparse:
+                win = self._stencil_windows(nd, vals, idx_local=li)
+                raw = jax.vmap(nd.fn)(win)
+                new, lc = self._scatter_lanes(cn, old_local, li, raw)
+                return new, lanes_changed(li, lc), None
+            win = self._stencil_windows(nd, vals)
+            raw = jax.vmap(nd.fn)(win)
+            new = self._masked_local(
+                cn, old_local, graph_ops._pack(cn, raw), lmask)
+            return new, diff_changed(new), None
+
+        if nd.kind in ("causal", "gather"):
+            # Full-prefix / data-dependent readers: the parent must be
+            # visible in full; output lanes stay shard-local.
+            xf = self._full(nd.deps[0], vals)
+            g0 = self._sidx() * lnb
+            if sparse:
+                raw = self._lane_fn(nd, xf, g0, li, k)
+                new, lc = self._scatter_lanes(cn, old_local, li, raw)
+                return new, lanes_changed(li, lc), None
+            raw = self._lane_fn(nd, xf, g0, jnp.arange(lnb), lnb)
+            new = self._masked_local(
+                cn, old_local, graph_ops._pack(cn, raw), lmask)
+            return new, diff_changed(new), None
+
+        raise ValueError(nd.kind)        # pragma: no cover
+
+    def _lane_fn(self, nd, x_full, g0, li, k: int):
+        """Per-lane recompute of causal / gather lanes at local indices
+        ``li`` (global ``g0 + li``); packed gather reads only its own +
+        neighbour blocks."""
+        p = self.cg.nodes[nd.deps[0]]
+        if nd.kind == "gather" and nd.packed_fn is not None:
+            xb = x_full.reshape((p.num_blocks, p.block) + x_full.shape[1:])
+            own = xb.at[g0 + li].get(mode="fill", fill_value=0)
+            nidx = jnp.clip(jnp.asarray(nd.idx_fn(own), jnp.int32),
+                            0, nd.num_blocks - 1)
+            return jax.vmap(nd.packed_fn)(own, xb[nidx])
+        gi = jnp.minimum(g0 + li, nd.num_blocks)  # keep sentinel OOB-safe
+        return jax.vmap(nd.fn, in_axes=(None, 0))(x_full, gi)
+
+    # ------------------------------------------------------------------
+    # Replicated recompute (every shard runs the single-device path)
+    # ------------------------------------------------------------------
+    def _recompute_repl(self, i, vals, carries, dirty, plan_i,
+                        node_masks):
+        cg = self.cg
+        nd = cg.nodes[i]
+        parents = [self._full(d, vals) for d in nd.deps]
+        idx = None
+        regime = "dense"
+        if isinstance(plan_i, tuple):
+            regime = "sparse"
+            idx = mask_indices(node_masks[str(i)], plan_i[1])
+        return cg._recompute(nd, parents, vals[i], dirty,
+                             carries.get(str(i)), regime=regime, idx=idx)
+
+    # ------------------------------------------------------------------
+    # The shard_map body
+    # ------------------------------------------------------------------
+    def _body(self, state, new_inputs, in_masks, node_masks, *, plan):
+        """The shard_map body of one planned update.
+
+        Dirty bookkeeping is two-tier: ``_Changed`` entries hold each
+        node's changed set in per-shard local form where it was produced
+        locally, and counts accumulate into replicated scalars
+        (``*_repl``, from full sets) plus per-shard scalars (``*_loc``,
+        from local masks) that ONE final ``psum`` folds together — so a
+        chain of aligned sharded nodes propagates with no collectives
+        at all, and the totals are still exactly the single-device
+        counts (local masks partition the global mask)."""
+        cg = self.cg
+        D = cg._dirty_cls
+        # Local-mask shortcuts are exact only for the exact per-block
+        # mask rep; the interval rep's transfers are hulls, so parity
+        # requires running its (full-set) algebra verbatim.
+        local_ok = cg.dirty_rep == "mask"
+        nodes = cg.nodes
+        vals = list(state["v"])
+        carries = dict(state["c"])
+        changed: List[Optional[_Changed]] = [None] * len(nodes)
+        rec_repl = jnp.int32(0)
+        aff_repl = jnp.int32(0)
+        rec_loc = jnp.int32(0)           # per-shard, psummed at the end
+        aff_loc = jnp.int32(0)
+        dirty_inputs = jnp.int32(0)
+        local_rec = jnp.int32(0)         # per-shard work stat
+        any_local = False
+
+        def full_of(e):
+            return e.full(D)
+
+        for lvl in cg.schedule:
+            for idx in lvl:
+                nd = nodes[idx]
+                if nd.kind != "input":
+                    continue
+                if plan[idx] != "update":
+                    changed[idx] = _Changed(self, nd.num_blocks,
+                                            full=D.none(nd.num_blocks))
+                    continue
+                vals[idx] = jnp.asarray(new_inputs[nd.name]).astype(
+                    vals[idx].dtype)
+                ch = D.from_mask(in_masks[nd.name])
+                changed[idx] = _Changed(self, nd.num_blocks, full=ch)
+                dirty_inputs += ch.count()
+
+            for i in lvl:
+                nd = nodes[i]
+                if nd.kind == "input":
+                    continue
+                if plan[i] == "skip":
+                    changed[i] = _Changed(self, nd.num_blocks,
+                                          full=D.none(nd.num_blocks))
+                    continue
+                lnb = nd.num_blocks // self.S
+                loc = (self._transfer_local(nd, changed)
+                       if self.sharded[i] and local_ok else None)
+                if loc is not None:
+                    lmask, start, repl_count = loc
+                    lrec = jnp.sum(lmask.astype(jnp.int32))
+                    if repl_count is not None:   # suffix edge: exact
+                        rec_repl += repl_count
+                    else:
+                        rec_loc += lrec
+                    nv, chl, st = self._recompute_local(
+                        i, vals, carries, lmask, start, plan[i])
+                    changed[i] = _Changed(self, nd.num_blocks, local=chl)
+                    aff_loc += jnp.sum(chl.astype(jnp.int32))
+                    any_local = True
+                    local_rec += lrec
+                else:
+                    pv = ([self._full(d, vals) for d in nd.deps]
+                          if nd.kind == "gather" else None)
+                    dirty = graph_ops.edge_dirty(
+                        nd, [full_of(changed[d]) for d in nd.deps], pv)
+                    rec_repl += dirty.count()
+                    if self.sharded[i]:
+                        lmask = self._local_mask(dirty.to_mask(), lnb)
+                        nv, chl, st = self._recompute_local(
+                            i, vals, carries, lmask, dirty.start(),
+                            plan[i])
+                        if local_ok:
+                            changed[i] = _Changed(self, nd.num_blocks,
+                                                  local=chl)
+                            aff_loc += jnp.sum(chl.astype(jnp.int32))
+                            any_local = True
+                        else:
+                            # Interval parity: hull the changed set on
+                            # its full form, count the hull.
+                            ch = _Changed(self, nd.num_blocks,
+                                          local=chl).full(D)
+                            changed[i] = _Changed(self, nd.num_blocks,
+                                                  full=ch)
+                            aff_repl += ch.count()
+                        local_rec += jnp.sum(lmask.astype(jnp.int32))
+                    else:
+                        nv, ch, st = self._recompute_repl(
+                            i, vals, carries, dirty, plan[i], node_masks)
+                        changed[i] = _Changed(self, nd.num_blocks,
+                                              full=ch)
+                        aff_repl += ch.count()
+                        local_rec += dirty.count()
+                vals[i] = nv
+                if st is not None:
+                    carries[str(i)] = st
+
+        if any_local:
+            tot = jax.lax.psum(jnp.stack([rec_loc, aff_loc]), self.axis)
+            recomputed = rec_repl + tot[0]
+            affected = aff_repl + tot[1]
+        else:
+            recomputed, affected = rec_repl, aff_repl
+
+        stats = {
+            "recomputed": recomputed, "affected": affected,
+            "dirty_inputs": dirty_inputs,
+            "recomputed_per_shard": local_rec[None],
+            "out_changed": {str(i): full_of(changed[i]).to_mask()
+                            for i in cg.outputs},
+            "in_dirty": {name: full_of(changed[idx]).count()
+                         for name, idx in cg.input_names.items()},
+        }
+        return {"v": tuple(vals), "c": carries}, stats

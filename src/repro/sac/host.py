@@ -267,6 +267,36 @@ class HostHandle:
                 eng.read(tuple(_in[:i + 1]), reader)
             eng.parallel_for(0, nd.num_blocks, body)
 
+        elif nd.kind == "gather" and nd.packed_fn is not None:
+            # Packed gather: the outer reader recomputes the neighbour
+            # indices from the lane's own block; the inner reader hands
+            # ``packed_fn`` the own block plus exactly the ``arity``
+            # neighbour blocks in idx_fn row order — no full-parent
+            # reassembly at all (idx_fn is row-wise by the packed
+            # contract, so it sees a one-row view here).
+            p = self.nodes[nd.deps[0]]
+
+            def body(i, _nd=nd, _out=out, _in=par0, _p=p):
+                def outer(v, _i=i):
+                    idx = np.asarray(_nd.idx_fn(
+                        jnp.asarray(v.a[None])))[0]
+                    js = [int(j) for j in
+                          np.clip(idx, 0, _p.num_blocks - 1)]
+                    uniq = sorted({_i, *js})
+
+                    def inner(*vals, _i=_i, _js=js, _uniq=uniq):
+                        by = dict(zip(_uniq, vals))
+                        own = jnp.asarray(by[_i].a)
+                        nbrs = jnp.stack(
+                            [jnp.asarray(by[j].a) for j in _js])
+                        eng.write(_out[_i], _store(
+                            _nd, _nd.packed_fn(own, nbrs)))
+
+                    eng.read(tuple(_in[j] for j in uniq), inner)
+
+                eng.read(_in[i], outer)
+            eng.parallel_for(0, nd.num_blocks, body)
+
         elif nd.kind == "gather":
             # Data-dependent reader sets, host-natively: an outer reader
             # on the lane's own block recomputes the neighbour indices

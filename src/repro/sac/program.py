@@ -115,7 +115,8 @@ class IncrementalProgram:
                 use_pallas="auto", interpret: Optional[bool] = None,
                 pallas_tile: int = 8, dirty: str = "mask",
                 donate: bool = True, block_skip="auto", plan: bool = True,
-                **input_specs):
+                mesh=None, shards: Optional[int] = None,
+                plan_cache: int = 64, **input_specs):
         """Trace and lower.  ``input_specs`` give every input's leading
         size (int, shape tuple, or example array); remaining kwargs are
         backend options (see ``GraphBuilder.compile``).  ``backend``
@@ -128,15 +129,34 @@ class IncrementalProgram:
         scatters, no per-update copy of untouched node values — reads
         from a superseded state become invalid), ``block_skip`` routes
         escan/carry-causal recomputes through the cached-carry block-skip
-        path (``"auto"`` = exact dtypes only)."""
+        path (``"auto"`` = exact dtypes only).
+
+        ``shards=N`` (or an explicit one-axis ``mesh=``) shards the
+        block axis of the compiled program over N devices: per-shard
+        dirty masks and recomputes, collectives only at level barriers,
+        outputs and stats bitwise identical to single-device (graph and
+        hybrid backends; see DESIGN.md §Sharded-propagation).  On a
+        CPU-only host expose devices with
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+        ``plan_cache`` bounds the dirty-signature LRU of frozen
+        propagation plans (``stats["plan_cache"]`` reports
+        hits/misses/evictions)."""
+        if shards is not None:
+            assert mesh is None, "pass shards= or mesh=, not both"
+            from repro.shardlib import block_mesh
+
+            mesh = block_mesh(shards)
         g, outs, single = self.trace(**input_specs)
         if backend == "graph":
             cg = g.compile(max_sparse=max_sparse, use_pallas=use_pallas,
                            interpret=interpret, pallas_tile=pallas_tile,
                            dirty=dirty, donate=donate, block_skip=block_skip,
-                           plan=plan)
+                           plan=plan, mesh=mesh, plan_cache=plan_cache)
             return GraphHandle(cg, outs, single)
         if backend == "host":
+            assert mesh is None, (
+                "backend='host' runs on the host engine; sharding applies "
+                "to the graph and hybrid backends")
             from .host import HostHandle
 
             return HostHandle(g, outs, single)
@@ -147,7 +167,7 @@ class IncrementalProgram:
                                 use_pallas=use_pallas, interpret=interpret,
                                 pallas_tile=pallas_tile, dirty=dirty,
                                 donate=donate, block_skip=block_skip,
-                                plan=plan)
+                                plan=plan, mesh=mesh, plan_cache=plan_cache)
         raise ValueError(f"unknown backend {backend!r} "
                          "(expected 'graph', 'host', or 'hybrid')")
 
@@ -189,10 +209,20 @@ class GraphHandle:
     def stats(self) -> Dict[str, Any]:
         """Counters of the last phase (graph backend: ``recomputed`` =
         realized computation distance in blocks, ``affected`` =
-        value-changed blocks post-cutoff).  Reading this property syncs
-        with the device (the counters materialize as Python ints)."""
-        return {k: int(v) if hasattr(v, "dtype") else v
-                for k, v in self._stats.items()}
+        value-changed blocks post-cutoff; under ``shards=`` also
+        ``recomputed_per_shard``, each shard's local masked work, and
+        ``plan_cache`` hit/miss/eviction counters).  Reading this
+        property syncs with the device (the counters materialize as
+        Python ints)."""
+        def conv(v):
+            if hasattr(v, "dtype"):
+                import numpy as _np
+
+                a = _np.asarray(v)
+                return int(a) if a.ndim == 0 else a.tolist()
+            return v
+
+        return {k: conv(v) for k, v in self._stats.items()}
 
     def value(self, out: Union[BlockArray, Handle]) -> jax.Array:
         h = out._h if isinstance(out, BlockArray) else out

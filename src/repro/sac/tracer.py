@@ -266,8 +266,9 @@ def causal(f: Optional[Callable], x: BlockArray,
                                   identity=identity))
 
 
-def gather(f: Callable, idx_fn: Callable, x: BlockArray, arity: int = 1,
-           out_block: Optional[int] = None, name: str = "") -> BlockArray:
+def gather(f: Optional[Callable], idx_fn: Callable, x: BlockArray,
+           arity: int = 1, out_block: Optional[int] = None,
+           name: str = "", packed: Optional[Callable] = None) -> BlockArray:
     """Data-dependent reader sets with statically-bounded arity: out
     block i reads block i plus up to ``arity`` neighbour blocks chosen
     by ``idx_fn`` from block i's own contents (tree parent/child
@@ -275,9 +276,17 @@ def gather(f: Callable, idx_fn: Callable, x: BlockArray, arity: int = 1,
     block from the full parent but must restrict its value dependence to
     the declared reader set — see ``GraphBuilder.gather`` for the exact
     contract.  This is the edge kind the hybrid apps (tree contraction,
-    BST filter) lower their per-round phases onto."""
+    BST filter) lower their per-round phases onto.
+
+    The **packed form** — ``packed(own, nbrs)`` with ``f=None`` —
+    receives the lane's own block plus exactly its ``arity`` neighbour
+    blocks in ``idx_fn`` row order; the sparse recompute then gathers
+    only the ``k * (1 + arity)`` blocks the dirty lanes read instead of
+    assembling a full-parent view per lane (same recomputed counts;
+    ``idx_fn`` must be row-wise position-independent)."""
     return BlockArray(x._g.gather(f, idx_fn, x._h, arity=arity,
-                                  out_block=out_block, name=name))
+                                  out_block=out_block, name=name,
+                                  packed=packed))
 
 
 # ---------------------------------------------------------------------------

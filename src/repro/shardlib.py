@@ -22,6 +22,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
     "make_mesh",
+    "block_mesh",
     "shard_map",
     "ShardCtx",
     "shard_ctx",
@@ -62,6 +63,25 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
         return jax.make_mesh(tuple(shape), tuple(axes))
     devices = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
     return Mesh(devices, tuple(axes))
+
+
+def block_mesh(shards: int, axis: str = "blocks", devices=None) -> Mesh:
+    """One-axis mesh over the first ``shards`` devices — the layout the
+    graph runtime shards a traced program's block axis over
+    (``CompiledGraph(mesh=...)`` / ``sac ... .compile(shards=N)``).
+
+    On a CPU-only host, expose multiple devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before
+    jax import); on real accelerators the default devices are used.
+    """
+    devices = list(jax.devices() if devices is None else devices)
+    if shards > len(devices):
+        raise ValueError(
+            f"block_mesh(shards={shards}) needs {shards} devices but only "
+            f"{len(devices)} are visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={shards} before "
+            f"importing jax")
+    return Mesh(np.asarray(devices[:shards]), (axis,))
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):

@@ -1,0 +1,19 @@
+"""Test-session environment: expose multiple CPU devices.
+
+The sharded-propagation tests (test_shard.py, the mesh lanes of
+test_fuzz_differential.py) need more than one device.  XLA only reads
+``--xla_force_host_platform_device_count`` at backend initialization,
+so it must be in the environment BEFORE jax is first imported — pytest
+imports conftest.py ahead of every test module, which makes this the
+one reliable place to set it.
+
+An operator who already set their own device-count flag (the CI sharded
+lane does, explicitly) is left alone; tests that need N devices skip
+when fewer are visible, so the suite stays runnable everywhere.
+"""
+import os
+
+_FLAG = "xla_force_host_platform_device_count"
+_flags = os.environ.get("XLA_FLAGS", "")
+if _FLAG not in _flags:
+    os.environ["XLA_FLAGS"] = (_flags + f" --{_FLAG}=8").strip()

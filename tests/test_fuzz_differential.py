@@ -12,7 +12,14 @@ three backends with random edit batches.  The invariants:
     counts (``dirty_inputs``) agree across all three;
   * realized computation distance (``recomputed``) agrees between the
     monolithic graph backend and the hybrid fragments — the boundary
-    re-diff must recover exactly the in-graph changed sets.
+    re-diff must recover exactly the in-graph changed sets;
+  * the **mesh-sharded** graph runtime (2 and 3 host devices, see
+    conftest.py) is bitwise identical to single-device on outputs AND
+    on affected / dirty_inputs / recomputed — sharding must be
+    observationally invisible.  The spec generator emits
+    shard-boundary-straddling edits (contiguous lane runs centred on
+    n/2 and n/3 cut points) so the halo / carry-exchange collectives
+    are exercised, not just chunk-interior scatters.
 
 Programs are generated from a JSON-able *spec* (a plain dict), so
 failures are reproducible artifacts: shrunk specs are checked into
@@ -30,6 +37,7 @@ import json
 import os
 from pathlib import Path
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -38,6 +46,11 @@ from _hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st
 import repro.sac as sac
 
 CORPUS = Path(__file__).parent / "corpus"
+
+# Mesh-sharded lanes run at these shard counts when the devices exist
+# (conftest.py forces 8 host CPU devices; an externally pinned
+# XLA_FLAGS may expose fewer, in which case the lanes drop out).
+SHARD_COUNTS = [s for s in (2, 3) if s <= len(jax.devices())]
 
 # Value-bounded vocabulary: small-integer-valued f32 stays exactly
 # representable through every op, so bitwise equality across backends
@@ -147,16 +160,22 @@ def _apply_edit(x0, x1, edit, n):
     return x0, x1
 
 
-def check_spec(spec):
-    """The differential invariant for one spec."""
+def check_spec(spec, shards=None):
+    """The differential invariant for one spec.  ``shards`` adds
+    mesh-sharded graph lanes (default: every count in SHARD_COUNTS)."""
     prog, n, block = build_program(spec)
+    shards = SHARD_COUNTS if shards is None else shards
     hg = prog.compile(x0=n, x1=n, max_sparse=4)
     hh = prog.compile("host", x0=n, x1=n)
     hy = prog.compile("hybrid", x0=n, x1=n, max_sparse=4)
+    hss = [(f"shards={s}", prog.compile(x0=n, x1=n, max_sparse=4,
+                                        shards=s)) for s in shards]
+    named = [("host", hh), ("hybrid", hy)] + hss
     x0, x1 = _inputs(spec)
-    outs = [h.run(x0=x0, x1=x1) for h in (hg, hh, hy)]
-    for name, o in zip(("host", "hybrid"), outs[1:]):
-        for a, b in zip(outs[0], o):
+    outs = {name: h.run(x0=x0, x1=x1) for name, h in named}
+    ref = hg.run(x0=x0, x1=x1)
+    for name, o in outs.items():
+        for a, b in zip(ref, o):
             np.testing.assert_array_equal(
                 np.asarray(a), np.asarray(b),
                 err_msg=f"{name} initial run, spec={spec}")
@@ -164,9 +183,10 @@ def check_spec(spec):
         assert hy.num_fragments >= 2, (hy.num_fragments, spec)
     for r, edit in enumerate(spec["edits"]):
         x0, x1 = _apply_edit(x0, x1, edit, n)
-        outs = [h.update(x0=x0, x1=x1) for h in (hg, hh, hy)]
-        for name, o in zip(("host", "hybrid"), outs[1:]):
-            for a, b in zip(outs[0], o):
+        ref = hg.update(x0=x0, x1=x1)
+        outs = {name: h.update(x0=x0, x1=x1) for name, h in named}
+        for name, o in outs.items():
+            for a, b in zip(ref, o):
                 np.testing.assert_array_equal(
                     np.asarray(a), np.asarray(b),
                     err_msg=f"{name} edit {r}, spec={spec}")
@@ -177,6 +197,14 @@ def check_spec(spec):
             == int(sy["dirty_inputs"]), (r, sg, sh, sy, spec)
         assert int(sg["recomputed"]) == int(sy["recomputed"]), (
             r, sg, sy, spec)
+        for name, h in hss:
+            ss = h.stats
+            assert int(sg["affected"]) == int(ss["affected"]), (
+                name, r, sg, ss, spec)
+            assert int(sg["recomputed"]) == int(ss["recomputed"]), (
+                name, r, sg, ss, spec)
+            assert int(sg["dirty_inputs"]) == int(ss["dirty_inputs"]), (
+                name, r, sg, ss, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -215,6 +243,17 @@ def random_spec(rng) -> dict:
             "lanes": [int(l) for l in rng.integers(0, n, k)],
             "vals": [int(v) for v in rng.integers(-5, 6, k)],
         })
+    # One shard-boundary-straddling edit: a contiguous lane run centred
+    # on an n/2 or n/3 cut point, so the sharded lanes exercise halo
+    # exchange and carry hand-off rather than chunk-interior scatters.
+    cut = n // int(rng.choice([2, 3]))
+    width = int(rng.integers(1, 4))
+    lanes = [l % n for l in range(max(cut - width, 0), cut + width)]
+    edits.append({
+        "input": int(rng.integers(2)),
+        "lanes": lanes,
+        "vals": [int(v) for v in rng.integers(-5, 6, len(lanes))],
+    })
     return {"block": block, "nb": nb, "data_seed": int(rng.integers(10**6)),
             "segments": segments, "edits": edits}
 

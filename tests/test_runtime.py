@@ -197,7 +197,9 @@ def test_reshard_state_local():
     mesh = make_local_mesh()
     out = reshard_state(state, axes, mesh)
     np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(state["w"]))
-    assert out["w"].sharding.mesh.shape["data"] == 1
+    # The local mesh spans every visible device (conftest.py exposes 8
+    # host CPU devices for the sharded-propagation tests).
+    assert out["w"].sharding.mesh.shape["data"] == len(jax.devices())
 
 
 # ---------------------------------------------------------------------------

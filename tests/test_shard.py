@@ -1,0 +1,436 @@
+"""Sharded propagation + plan cache + packed gather.
+
+The sharded runtime's contract is *bitwise invisibility*: for any
+traced program, ``compile(shards=N)`` must produce the same outputs,
+the same post-cutoff ``affected`` counts, and the same realized
+``recomputed`` distance as the single-device runtime, for every edit —
+the shards only change where the work runs.  These tests pin that
+contract on every edge kind (including the distributed carry exchange,
+the stencil halo ppermute, and the reduce tree's
+all-gather-then-local-combine tail), plus the dirty-signature plan
+cache's zero-refreeze steady state and the packed gather's
+recompute-count preservation.
+
+Multi-device CPU comes from conftest.py
+(``--xla_force_host_platform_device_count=8``); tests skip when fewer
+devices are visible (e.g. an externally pinned XLA_FLAGS).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.sac as sac
+from repro.jaxsac.graph_ops import mask_indices
+from repro.shardlib import block_mesh
+
+BLOCK = 4
+
+
+def _devices_or_skip(n):
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} devices, have {len(jax.devices())}")
+
+
+def _pipeline():
+    @sac.incremental(block=BLOCK)
+    def prog(x):
+        y = x * 2.0 + 1.0
+        s = sac.stencil(lambda w: w[BLOCK:2 * BLOCK]
+                        + 0.5 * (w[:BLOCK] + w[2 * BLOCK:]), y, radius=1)
+        return sac.reduce(jnp.add, s, identity=0.0)
+
+    return prog
+
+
+def _carry():
+    @sac.incremental(block=BLOCK)
+    def prog(x):
+        return sac.causal(None, x, lift=lambda b: b.sum(), op=jnp.add,
+                          finalize=lambda s, b: b + s, identity=0)
+
+    return prog
+
+
+def _scan(identity):
+    @sac.incremental(block=BLOCK)
+    def prog(x):
+        return sac.scan(jnp.add, x, identity=identity)
+
+    return prog
+
+
+def _edit(rng, data, k=1):
+    new = data.copy()
+    for lane in rng.choice(data.shape[0], size=k, replace=False):
+        new[lane] = new[lane] + 1
+    return new
+
+
+def _parity(prog, n, shards, dtype=np.float32, reps=4, edits=None,
+            seed=0, **kw):
+    """Run prog single-device and sharded through ``reps`` edits and
+    assert bitwise outputs + identical stats."""
+    h1 = prog.compile(x=n, max_sparse=4, **kw)
+    h2 = prog.compile(x=n, max_sparse=4, shards=shards, **kw)
+    rng = np.random.default_rng(seed)
+    data = rng.integers(-5, 6, n).astype(dtype)
+    a, b = h1.run(x=data), h2.run(x=data)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for r in range(reps):
+        new = (_edit(rng, data, 1 + r % 3) if edits is None
+               else edits(rng, data, r))
+        a, b = h1.update(x=new), h2.update(x=new)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"edit {r}")
+        s1, s2 = h1.stats, h2.stats
+        for key in ("recomputed", "affected", "dirty_inputs"):
+            assert s1[key] == s2[key], (key, r, s1, s2)
+        data = new
+    return h1, h2
+
+
+# ---------------------------------------------------------------------------
+# Bitwise parity per edge kind
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shards", [2, 4, 8])
+def test_pipeline_parity(shards):
+    _devices_or_skip(shards)
+    _parity(_pipeline(), 64 * BLOCK, shards)
+
+
+@pytest.mark.parametrize("nb", [12, 13, 67])
+def test_pipeline_parity_awkward_counts(nb):
+    # 13 is prime (every level replicated), 12 mixes sharded levels with
+    # an odd identity-padded one, 67 forces the sparse regime live.
+    _devices_or_skip(3)
+    _parity(_pipeline(), nb * BLOCK, 3)
+
+
+def test_carry_causal_distributed_exact():
+    # int32 carry monoid: the cross-shard Ladner-Fischer exchange runs
+    # (exact dtype) and must stay bitwise equal to the single-device
+    # block-skip refold.
+    _devices_or_skip(4)
+    h1, h2 = _parity(_carry(), 16 * BLOCK, 4, dtype=np.int32)
+    assert h2.cg._sharder.sharded[1], "carry node should be sharded"
+
+
+def test_scan_int_distributed_float_replicated():
+    _devices_or_skip(4)
+    _parity(_scan(0), 16 * BLOCK, 4, dtype=np.int32)
+    h1, h2 = _parity(_scan(0.0), 16 * BLOCK, 4, dtype=np.float32)
+    escan = [nd.idx for nd in h2.cg.nodes if nd.kind == "escan"]
+    # float escan re-bracketing is unsound for the bitwise cutoff: the
+    # node must have fallen back to replicated compute.
+    assert not h2.cg._sharder.sharded[escan[0]]
+
+
+def test_stencil_fill_and_wide_radius():
+    _devices_or_skip(8)
+
+    @sac.incremental(block=BLOCK)
+    def prog(x):
+        s = sac.stencil(lambda w: w[2 * BLOCK:3 * BLOCK]
+                        + w[:BLOCK] + w[4 * BLOCK:], x, radius=2,
+                        fill=1.5)
+        return sac.reduce(jnp.add, s, identity=0.0)
+
+    # nb=16 over 8 shards -> 2 local blocks = radius: ppermute halo path;
+    # the same program over 8 shards with nb=8 -> 1 local block < radius:
+    # full-gather fallback.  Both must be bitwise.
+    _parity(prog, 16 * BLOCK, 8)
+    _parity(prog, 8 * BLOCK, 8)
+
+
+def test_boundary_straddling_edits():
+    # Edits that straddle shard boundaries (the halo / carry exchange
+    # paths) rather than landing inside one chunk.
+    _devices_or_skip(4)
+    n = 32 * BLOCK
+
+    def edits(rng, data, r):
+        new = data.copy()
+        cut = (r % 3 + 1) * (n // 4)           # a shard boundary
+        for lane in range(max(cut - 3, 0), min(cut + 3, n)):
+            new[lane] = new[lane] + 1
+        return new
+
+    _parity(_pipeline(), n, 4, edits=edits)
+    _parity(_carry(), n, 4, dtype=np.int32, edits=edits)
+
+
+def test_interval_rep_and_legacy_plan_and_nodonate():
+    _devices_or_skip(2)
+    _parity(_scan(0), 16 * BLOCK, 2, dtype=np.int32, dirty="interval")
+    _parity(_pipeline(), 16 * BLOCK, 2, plan=False)
+    _parity(_pipeline(), 16 * BLOCK, 2, donate=False)
+
+
+def test_multi_input_zip():
+    _devices_or_skip(2)
+
+    @sac.incremental(block=BLOCK)
+    def prog(x, y):
+        z = x + y * 2.0
+        return sac.reduce(jnp.maximum, z, identity=-jnp.inf)
+
+    n = 24 * BLOCK
+    h1 = prog.compile(x=n, y=n, max_sparse=4)
+    h2 = prog.compile(x=n, y=n, max_sparse=4, shards=2)
+    rng = np.random.default_rng(0)
+    x = rng.integers(-5, 6, n).astype(np.float32)
+    y = rng.integers(-5, 6, n).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(h1.run(x=x, y=y)),
+                                  np.asarray(h2.run(x=x, y=y)))
+    for r in range(3):
+        tgt = [x, y][r % 2].copy()
+        tgt[rng.integers(n)] += 1.0
+        kw = {"x": tgt} if r % 2 == 0 else {"y": tgt}
+        np.testing.assert_array_equal(np.asarray(h1.update(**kw)),
+                                      np.asarray(h2.update(**kw)))
+        assert h1.stats["affected"] == h2.stats["affected"]
+        if r % 2 == 0:
+            x = tgt
+        else:
+            y = tgt
+
+
+def test_per_shard_recompute_counts():
+    _devices_or_skip(4)
+    prog = _pipeline()
+    h = prog.compile(x=64 * BLOCK, max_sparse=4, shards=4)
+    rng = np.random.default_rng(0)
+    data = rng.integers(-5, 6, 64 * BLOCK).astype(np.float32)
+    h.run(x=data)
+    new = data.copy()
+    new[0] += 1.0                        # one block in shard 0
+    h.update(x=new)
+    per = h.stats["recomputed_per_shard"]
+    assert len(per) == 4
+    # Shard 0 owns the edited chunk: it must do at least as much local
+    # masked work as any other shard, and some work must have happened.
+    assert per[0] == max(per) and sum(per) > 0
+
+
+def test_mesh_arg_and_errors():
+    _devices_or_skip(2)
+    prog = _pipeline()
+    h = prog.compile(x=16 * BLOCK, max_sparse=4,
+                     mesh=block_mesh(2))    # explicit mesh object
+    data = np.arange(16 * BLOCK, dtype=np.float32)
+    h.run(x=data)
+    with pytest.raises(ValueError):
+        block_mesh(10 ** 6)
+    with pytest.raises(AssertionError):
+        prog.compile("host", x=16 * BLOCK, shards=2)
+
+
+def test_hybrid_fragments_accept_mesh():
+    _devices_or_skip(2)
+
+    @sac.incremental(block=BLOCK)
+    def prog(x):
+        with sac.static_region("a"):
+            y = x * 2.0
+        with sac.static_region("b"):
+            return sac.reduce(jnp.add, y, identity=0.0)
+
+    n = 16 * BLOCK
+    h1 = prog.compile("hybrid", x=n, max_sparse=4)
+    h2 = prog.compile("hybrid", x=n, max_sparse=4, shards=2)
+    rng = np.random.default_rng(0)
+    data = rng.integers(-5, 6, n).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(h1.run(x=data)),
+                                  np.asarray(h2.run(x=data)))
+    new = data.copy()
+    new[7] += 1.0
+    np.testing.assert_array_equal(np.asarray(h1.update(x=new)),
+                                  np.asarray(h2.update(x=new)))
+    assert h1.stats["recomputed"] == h2.stats["recomputed"]
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+def test_plan_cache_zero_refreeze_on_repeated_pattern():
+    """The serving steady state: a repeated edit pattern must stop
+    freezing plans after its first update — only hits afterwards."""
+    prog = _pipeline()
+    h = prog.compile(x=64 * BLOCK, max_sparse=8)
+    rng = np.random.default_rng(0)
+    data = rng.integers(-5, 6, 64 * BLOCK).astype(np.float32)
+    h.run(x=data)
+    new = data.copy()
+    new[130] += 1.0                      # interior single-block edit
+    h.update(x=new)
+    h.update(x=data)                     # revert: same dirty signature
+    frozen = h.stats["plan_cache"]["misses"]
+    for _ in range(6):                   # steady state: hits only
+        h.update(x=new)
+        h.update(x=data)
+    pc = h.stats["plan_cache"]
+    assert pc["misses"] == frozen, pc
+    assert pc["hits"] >= 12, pc
+    assert pc["evictions"] == 0, pc
+
+
+def test_plan_cache_sharded_zero_refreeze():
+    _devices_or_skip(2)
+    prog = _pipeline()
+    h = prog.compile(x=64 * BLOCK, max_sparse=8, shards=2)
+    rng = np.random.default_rng(0)
+    data = rng.integers(-5, 6, 64 * BLOCK).astype(np.float32)
+    h.run(x=data)
+    new = data.copy()
+    new[200] += 1.0
+    h.update(x=new)
+    h.update(x=data)
+    frozen = h.stats["plan_cache"]["misses"]
+    for _ in range(4):
+        h.update(x=new)
+        h.update(x=data)
+    assert h.stats["plan_cache"]["misses"] == frozen
+
+
+def test_plan_cache_lru_eviction():
+    # nb must exceed TINY_NB so the sparse buckets differentiate the
+    # signatures (tiny nodes are always planned dense).
+    prog = _pipeline()
+    h = prog.compile(x=256 * BLOCK, max_sparse=8, plan_cache=2)
+    rng = np.random.default_rng(0)
+    data = rng.integers(-5, 6, 256 * BLOCK).astype(np.float32)
+    h.run(x=data)
+    # Three clearly distinct signatures: 1, 2 and 33 dirty blocks (33 >
+    # max_sparse -> dense) cycled through a cap-2 cache must evict.
+    variants = []
+    for k in (1, 2, 33):
+        new = data.copy()
+        for b in range(k):
+            new[8 + b * BLOCK] += 1.0
+        variants.append(new)
+    for _ in range(3):
+        for v in variants:
+            h.update(x=v)
+            h.update(x=data)
+    pc = h.stats["plan_cache"]
+    assert pc["size"] <= 2 and pc["evictions"] > 0, pc
+    # Evicted plans must still produce correct results when refrozen.
+    ref = prog.compile(x=256 * BLOCK, max_sparse=8)
+    ref.run(x=data)
+    for v in variants:
+        np.testing.assert_array_equal(np.asarray(h.update(x=v)),
+                                      np.asarray(ref.update(x=v)))
+        np.testing.assert_array_equal(np.asarray(h.update(x=data)),
+                                      np.asarray(ref.update(x=data)))
+
+
+def test_quantized_budget_still_covers_all_dirty_lanes():
+    # Edit sizes within one power-of-two bucket share a signature; the
+    # bucket's gather budget must still cover every dirty lane (nb >
+    # TINY_NB so the sparse regime is actually planned).
+    prog = _pipeline()
+    h = prog.compile(x=256 * BLOCK, max_sparse=16)
+    ref = prog.compile(x=256 * BLOCK, max_sparse=16)
+    rng = np.random.default_rng(0)
+    data = rng.integers(-5, 6, 256 * BLOCK).astype(np.float32)
+    h.run(x=data)
+    ref.run(x=data)
+    misses = []
+    for k in (5, 6, 7):
+        # Contiguous k-block edits: every node's count lands in the same
+        # power-of-two bucket for k in 5..7 (input/map 8, stencil 8
+        # after dilation, each reduce level its own shared bucket), so
+        # only the first edit may freeze.
+        new = data.copy()
+        for b in range(k):
+            new[b * BLOCK] += 1.0
+        np.testing.assert_array_equal(np.asarray(h.update(x=new)),
+                                      np.asarray(ref.update(x=new)))
+        np.testing.assert_array_equal(np.asarray(h.update(x=data)),
+                                      np.asarray(ref.update(x=data)))
+        misses.append(h.stats["plan_cache"]["misses"])
+    assert misses[-1] == misses[0], misses
+
+
+# ---------------------------------------------------------------------------
+# Device-side index extraction
+# ---------------------------------------------------------------------------
+def test_mask_indices_matches_flatnonzero():
+    rng = np.random.default_rng(0)
+    for nb in (1, 5, 64, 257):
+        for _ in range(20):
+            mask = rng.random(nb) < 0.3
+            k = int(rng.integers(1, nb + 1))
+            got = np.asarray(mask_indices(jnp.asarray(mask), k))
+            want = np.full((k,), nb, np.int32)
+            ix = np.flatnonzero(mask)[:k]
+            want[:len(ix)] = ix
+            np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Packed gather
+# ---------------------------------------------------------------------------
+def _packed_progs():
+    def idx_fn(xb):
+        return jnp.abs(xb.sum(axis=1, keepdims=True)).astype(jnp.int32) % 7
+
+    def packed(own, nbrs):
+        return own + 0.5 * nbrs[0]
+
+    def full_fn(xf, i, _b=BLOCK):
+        nb = xf.shape[0] // _b
+        xb = xf.reshape(nb, _b)
+        j = jnp.clip(jnp.abs(xb[i].sum()).astype(jnp.int32) % 7,
+                     0, nb - 1)
+        return xb[i] + 0.5 * xb[j]
+
+    @sac.incremental(block=BLOCK)
+    def packed_prog(x):
+        g = sac.gather(None, idx_fn, x, arity=1, packed=packed)
+        return sac.reduce(jnp.add, g, identity=0.0)
+
+    @sac.incremental(block=BLOCK)
+    def full_prog(x):
+        g = sac.gather(full_fn, idx_fn, x, arity=1)
+        return sac.reduce(jnp.add, g, identity=0.0)
+
+    return packed_prog, full_prog
+
+
+def test_packed_gather_parity_and_counts():
+    """Packed form: identical outputs across graph/host/hybrid AND
+    identical recomputed-block counts to the full-parent form."""
+    packed_prog, full_prog = _packed_progs()
+    n = 14 * BLOCK
+    handles = {
+        "graph": packed_prog.compile(x=n, max_sparse=4),
+        "host": packed_prog.compile("host", x=n),
+        "hybrid": packed_prog.compile("hybrid", x=n, max_sparse=4),
+        "full": full_prog.compile(x=n, max_sparse=4),
+    }
+    rng = np.random.default_rng(3)
+    data = rng.integers(-5, 6, n).astype(np.float32)
+    outs = {k: h.run(x=data) for k, h in handles.items()}
+    for k, o in outs.items():
+        np.testing.assert_array_equal(np.asarray(outs["graph"]),
+                                      np.asarray(o), err_msg=k)
+    for r in range(5):
+        new = _edit(rng, data, 1 + r % 2)
+        outs = {k: h.update(x=new) for k, h in handles.items()}
+        for k, o in outs.items():
+            np.testing.assert_array_equal(np.asarray(outs["graph"]),
+                                          np.asarray(o),
+                                          err_msg=f"{k} edit {r}")
+        sg = handles["graph"].stats
+        assert sg["recomputed"] == handles["full"].stats["recomputed"]
+        assert sg["affected"] == handles["host"].stats["affected"]
+        data = new
+
+
+def test_packed_gather_sharded():
+    _devices_or_skip(2)
+    packed_prog, _ = _packed_progs()
+    _parity(packed_prog, 14 * BLOCK, 2, seed=3)
