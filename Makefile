@@ -2,7 +2,8 @@
 # default fast lane: pytest.ini deselects tests marked `slow`).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all test-sharded fuzz cov bench bench-graph bench-check
+.PHONY: test test-all test-sharded fuzz cov bench bench-graph bench-check \
+	profile
 
 test:
 	$(PY) -m pytest -x -q
@@ -45,3 +46,11 @@ bench-graph:
 # single-device update on the n=2^21 row, 8 host devices).
 bench-check:
 	$(PY) -m benchmarks.graph_pipeline --check
+
+# Per-level attribution of one deep-traced update (trace="deep"): the
+# per-level table on stdout, the structured record at
+# results/profile/ATTRIB_pipeline.json, and a Chrome-trace export at
+# results/profile/trace_pipeline.json (open in chrome://tracing or
+# Perfetto).  See DESIGN.md §Observability.
+profile:
+	$(PY) -m benchmarks.report --trace results/profile/trace_pipeline.json

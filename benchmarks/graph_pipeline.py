@@ -101,6 +101,20 @@ def _time(f, *args, reps: int = 9, **kw):
     return float(np.min(ts)) * 1e3, out
 
 
+def _provenance(reps: int, paired: bool, estimator: str):
+    """Measurement-provenance fields carried on every benchmark row so
+    a committed number can be audited later: how it was fenced, how
+    many reps, whether the baseline was interleaved in the same rounds,
+    which estimator collapsed the reps, and on how many devices."""
+    return {
+        "fence": "block_until_ready",
+        "reps": reps,
+        "paired_interleave": paired,
+        "devices": len(jax.devices()),
+        "estimator": estimator,
+    }
+
+
 def _edit(rng, data: np.ndarray, k_blocks: int, block: int) -> np.ndarray:
     nb = data.shape[0] // block
     out = data.copy()
@@ -157,6 +171,7 @@ def _sweep(handle, total_blocks, levels, app, n, block, ks, data, seed,
             "work_savings": round(total_blocks / max(rec, 1), 2),
             "update_ms": round(upd_ms, 3), "scratch_ms": round(scratch_ms, 3),
             "speedup": round(scratch_ms / max(upd_ms, 1e-9), 2),
+            **_provenance(reps, paired=False, estimator="best_of_reps"),
         })
     return rows
 
@@ -290,6 +305,7 @@ def bench_pipeline_sharded(n: int = GATE_N, block: int = GATE_BLOCK,
             "update_ms": round(float(np.median(upd)) * 1e3, 3),
             "scratch_ms": round(float(np.median(sgl)) * 1e3, 3),
             "speedup": round(float(np.median(ratios)), 2),
+            **_provenance(reps, paired=True, estimator="paired_median"),
         })
         if h is not base:
             del h            # free the sharded state before the next row
@@ -430,6 +446,7 @@ def bench_hybrid_apps(reps: int = 8, seed: int = 0):
             "update_ms": round(float(np.median(hyb)) * 1e3, 3),
             "scratch_ms": round(float(np.median(host)) * 1e3, 3),
             "speedup": round(float(np.median(ratios)), 2),
+            **_provenance(reps, paired=True, estimator="paired_median"),
         })
     return rows
 

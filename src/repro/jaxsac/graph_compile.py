@@ -82,6 +82,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import syncpoints
+from repro.obs.record import LevelRecord, PhaseSpan, PropagationRecord
+from repro.obs.recorder import regime_label
+
 from . import graph_ops
 from .autotune import calibrated_max_sparse
 from .dirtyset import DIRTY_REPS
@@ -207,6 +211,17 @@ class CompiledGraph:
         self._mark_fn = jax.jit(self._mark_impl)
         self._plan_cache = PlanCache(cap=plan_cache)
         self._sharder = None             # built at init under a mesh
+        # ---- observability (repro.obs) --------------------------------
+        # Recorder is OFF by default: with no recorder attached the
+        # planned path takes zero extra host syncs (the only host read
+        # stays the mark-counts read, now routed through
+        # obs.syncpoints so tests can assert exactly that).
+        self._recorder = None
+        # Deep-mode per-level executables, keyed (plan, level).  Non-
+        # donating: deep mode trades the in-place update for per-level
+        # fences and is never the benchmarked path.
+        self._deep_fns: Dict[Any, Any] = {}
+        self._deep_boundary_fn = jax.jit(self._deep_boundary_impl)
 
     # ------------------------------------------------------------------
     def _pack_level(self, lvl: Sequence[int]) -> List[List[int]]:
@@ -304,6 +319,20 @@ class CompiledGraph:
         idx = self.outputs[0] if handle is None else handle.idx
         return state["v"][idx]
 
+    def attach_recorder(self, recorder) -> None:
+        """Attach (or detach with ``None``) a ``PropagationRecorder``;
+        every subsequent ``propagate`` emits one ``PropagationRecord``."""
+        self._recorder = recorder
+        if recorder is None:
+            self._plan_cache.on_event = None
+        else:
+            reg = recorder.registry
+            self._plan_cache.on_event = (
+                lambda kind: reg.counter(f"plan_cache.{kind}_events").inc())
+
+    def plan_cache_snapshot(self) -> Dict[str, int]:
+        return self._plan_cache.snapshot()
+
     # ------------------------------------------------------------------
     # Change propagation
     # ------------------------------------------------------------------
@@ -328,14 +357,26 @@ class CompiledGraph:
         inputs = _own_inputs(new_inputs)
         traced = any(isinstance(leaf, jax.core.Tracer)
                      for leaf in jax.tree_util.tree_leaves((state, inputs)))
+        rec = self._recorder
         if not self.plan_mode or traced:
             # Under an outer jit (propagate composed into a caller's
             # traced function) the planned mode's host sync is
             # impossible — and unnecessary: the legacy cond executable
-            # inlines into the caller's trace.
-            if self.mesh is not None and not traced:
-                return self._prop_mesh_fn(state, inputs)
-            return self._prop_fn(state, inputs)
+            # inlines into the caller's trace.  Traced calls are never
+            # recorded (there is no host boundary to time).
+            if traced:
+                return self._prop_fn(state, inputs)
+            t0 = rec.clock() if rec is not None else 0.0
+            fn = self._prop_mesh_fn if self.mesh is not None else self._prop_fn
+            new_state, stats = fn(state, inputs)
+            if rec is not None:
+                if rec.mode == "deep":
+                    syncpoints.fence(new_state, "execute")
+                rec.emit(self._build_record(
+                    rec, plan=None, counts_np=None, hit=None,
+                    t_start=t0, t_mark=t0, t_plan=t0, t_end=rec.clock(),
+                    stats=stats, level_ms=None, input_key=frozenset(inputs)))
+            return new_state, stats
         # Two-phase planned propagation (the paper's mark-then-propagate,
         # made executable-shaped): a small jitted MARK pass pushes the
         # input diff through the reader maps WITHOUT the value cutoff —
@@ -352,11 +393,19 @@ class CompiledGraph:
         # branching at all: clean nodes simply don't appear in it, and
         # every sparse scatter updates the donated state in place
         # (see DESIGN.md §Propagation-cost-model).
+        t_start = rec.clock() if rec is not None else 0.0
         mark = (self._sharder.mark if self.mesh is not None
                 else self._mark_fn)
         masks, counts, node_masks = mark(state, inputs)
-        plan = self._make_plan(np.asarray(counts), frozenset(inputs))
+        # THE host sync of the planned path.  Routed through
+        # obs.syncpoints so the zero-extra-syncs guarantee of counters
+        # mode is testable: with tracing on, a hooked run must see this
+        # one read and nothing else.
+        counts_np = syncpoints.host_read(counts, "mark_counts")
+        t_mark = rec.clock() if rec is not None else 0.0
+        plan = self._make_plan(counts_np, frozenset(inputs))
         entry = self._plan_cache.lookup(plan)
+        hit = entry is not None
         if entry is None:
             if self.mesh is not None:
                 fn = self._sharder.planned_fn(plan)
@@ -365,9 +414,71 @@ class CompiledGraph:
                     functools.partial(self._prop_planned_impl, plan=plan),
                     donate_argnums=(0,) if self.donate else ())
             entry = self._plan_cache.insert(plan, PlanEntry(plan, fn))
-        new_state, stats = entry.fn(state, inputs, masks, node_masks)
-        return new_state, {**stats,
-                           "plan_cache": self._plan_cache.snapshot()}
+        t_plan = rec.clock() if rec is not None else 0.0
+        deep = rec is not None and rec.mode == "deep"
+        level_ms = None
+        if deep and self.mesh is None:
+            # Deep mode: per-level executables with a fence after each
+            # level — real per-level wall-clock, at the cost of losing
+            # donation and cross-level fusion.  Same math per level
+            # (_planned_level), so stats stay bitwise-identical.
+            new_state, stats, level_ms = self._propagate_deep(
+                state, inputs, masks, node_masks, plan, rec)
+        else:
+            new_state, stats = entry.fn(state, inputs, masks, node_masks)
+            if deep:                     # mesh: fence the one executable
+                syncpoints.fence(new_state, "execute")
+        stats = {**stats, "plan_cache": self._plan_cache.snapshot()}
+        if rec is not None:
+            rec.emit(self._build_record(
+                rec, plan=plan, counts_np=counts_np, hit=hit,
+                t_start=t_start, t_mark=t_mark, t_plan=t_plan,
+                t_end=rec.clock(), stats=stats, level_ms=level_ms,
+                input_key=frozenset(inputs)))
+        return new_state, stats
+
+    def _build_record(self, rec, *, plan, counts_np, hit, t_start, t_mark,
+                      t_plan, t_end, stats, level_ms, input_key):
+        """One PropagationRecord from host-known values only: counts_np
+        is already on the host, stats values stay device-resident until
+        the record is finalized by a reader — building and emitting the
+        record never syncs."""
+        deep = rec.mode == "deep"
+        phases = [PhaseSpan("execute", t_plan, t_end - t_plan)]
+        if plan is not None:             # planned path: all three phases
+            phases = [PhaseSpan("mark", t_start, t_mark - t_start),
+                      PhaseSpan("plan", t_mark, t_plan - t_mark)] + phases
+        levels = []
+        for li, lvl in enumerate(self.schedule):
+            ops = [i for i in lvl if self.nodes[i].kind != "input"]
+            regimes: Dict[str, int] = {}
+            for i in lvl:
+                lab = (regime_label(plan[i]) if plan is not None
+                       else "cond")
+                regimes[lab] = regimes.get(lab, 0) + 1
+            levels.append(LevelRecord(
+                level=li, nodes=len(ops), regimes=regimes,
+                dirty=(int(sum(int(counts_np[i]) for i in lvl))
+                       if counts_np is not None else None),
+                ms=(level_ms[li] if level_ms is not None else None)))
+        counters = {k: stats[k] for k in
+                    ("recomputed", "affected", "dirty_inputs",
+                     "rec_per_level", "aff_per_level",
+                     "recomputed_per_shard") if k in stats}
+        if plan is not None:
+            counters["plan_hit"] = int(bool(hit))
+        collectives = None
+        if self._sharder is not None:
+            collectives = {
+                "mark": dict(self._sharder.mark_tallies.get(input_key, {})),
+                "propagate": dict(self._sharder.tallies.get(plan, {}))
+                if plan is not None else {}}
+        return PropagationRecord(
+            substrate="graph", seq=rec.next_seq(), mode=rec.mode,
+            t_start=t_start, phases=phases, levels=levels,
+            counters=counters, plan_cache=stats.get("plan_cache"),
+            collectives=collectives, shards=self.num_shards,
+            fenced=deep and self.mesh is None)
 
     def _mark_impl(self, state, new_inputs: Dict[str, jax.Array]):
         """Mark phase: exact per-block diffs at the inputs, pure mask
@@ -432,48 +543,83 @@ class CompiledGraph:
         nodes pass through untouched; nothing branches at runtime, and
         sparse gather indices come from the mark masks on device
         (``mask_indices``), never from a host read."""
-        D = self._dirty_cls
         vals = list(state["v"])
         carries = dict(state["c"])
         changed: List[Any] = [None] * len(self.nodes)
+        rec_lvls: List[jax.Array] = []
+        aff_lvls: List[jax.Array] = []
         recomputed = jnp.int32(0)
         affected = jnp.int32(0)
         dirty_inputs = jnp.int32(0)
 
-        for lvl, groups in zip(self.schedule, self._level_groups):
-            for idx in lvl:
-                nd = self.nodes[idx]
-                if nd.kind != "input":
-                    continue
-                if plan[idx] == "skip":
-                    changed[idx] = D.none(nd.num_blocks)
-                    continue
-                old = vals[idx]
-                new = jnp.asarray(new_inputs[nd.name]).astype(old.dtype)
-                ch = self._from_mask(in_masks[nd.name])
-                vals[idx] = new
-                changed[idx] = ch
-                dirty_inputs += ch.count()
+        for li in range(self.num_levels):
+            r, a, di = self._planned_level(
+                li, vals, carries, changed, new_inputs, in_masks,
+                node_masks, plan)
+            rec_lvls.append(r)
+            aff_lvls.append(a)
+            # int32 adds are associative, so per-level partial sums then
+            # a total is bitwise-identical to the old running sum.
+            recomputed += r
+            affected += a
+            dirty_inputs += di
 
-            for grp in groups:
-                if self.nodes[grp[0]].kind == "input":
-                    continue
-                live = [i for i in grp if plan[i] != "skip"]
-                for i in grp:
-                    if plan[i] == "skip":
-                        changed[i] = D.none(self.nodes[i].num_blocks)
-                if not live:
-                    continue
-                dirties = {i: graph_ops.edge_dirty(
-                    self.nodes[i],
-                    [changed[d] for d in self.nodes[i].deps],
-                    [vals[d] for d in self.nodes[i].deps])
-                    for i in live}
-                if (len(live) > 1
-                        and all(isinstance(plan[i], tuple) for i in live)
-                        and self._group_batchable(live, vals)):
-                    k = min(sum(plan[i][1] for i in live),
-                            len(live) * self.nodes[live[0]].num_blocks)
+        stats = {"recomputed": recomputed, "affected": affected,
+                 "dirty_inputs": dirty_inputs,
+                 "rec_per_level": jnp.stack(rec_lvls),
+                 "aff_per_level": jnp.stack(aff_lvls),
+                 **self._boundary_stats(changed)}
+        return {"v": tuple(vals), "c": carries}, stats
+
+    def _planned_level(self, li: int, vals, carries, changed, new_inputs,
+                       in_masks, node_masks, plan):
+        """One level of the plan-specialized recompute.  Mutates
+        ``vals`` / ``carries`` / ``changed`` in place and returns this
+        level's (recomputed, affected, dirty_inputs) int32 deltas.
+        Shared verbatim by the single planned executable and the
+        deep-mode per-level executables, so trace modes are the same
+        math by construction."""
+        D = self._dirty_cls
+        lvl = self.schedule[li]
+        groups = self._level_groups[li]
+        recomputed = jnp.int32(0)
+        affected = jnp.int32(0)
+        dirty_inputs = jnp.int32(0)
+
+        for idx in lvl:
+            nd = self.nodes[idx]
+            if nd.kind != "input":
+                continue
+            if plan[idx] == "skip":
+                changed[idx] = D.none(nd.num_blocks)
+                continue
+            old = vals[idx]
+            new = jnp.asarray(new_inputs[nd.name]).astype(old.dtype)
+            ch = self._from_mask(in_masks[nd.name])
+            vals[idx] = new
+            changed[idx] = ch
+            dirty_inputs += ch.count()
+
+        for grp in groups:
+            if self.nodes[grp[0]].kind == "input":
+                continue
+            live = [i for i in grp if plan[i] != "skip"]
+            for i in grp:
+                if plan[i] == "skip":
+                    changed[i] = D.none(self.nodes[i].num_blocks)
+            if not live:
+                continue
+            dirties = {i: graph_ops.edge_dirty(
+                self.nodes[i],
+                [changed[d] for d in self.nodes[i].deps],
+                [vals[d] for d in self.nodes[i].deps])
+                for i in live}
+            if (len(live) > 1
+                    and all(isinstance(plan[i], tuple) for i in live)
+                    and self._group_batchable(live, vals)):
+                k = min(sum(plan[i][1] for i in live),
+                        len(live) * self.nodes[live[0]].num_blocks)
+                with jax.named_scope(self._scope(self.nodes[live[0]])):
                     gidx = graph_ops.mask_indices(
                         jnp.concatenate(
                             [node_masks[str(i)] for i in live]), k)
@@ -484,17 +630,18 @@ class CompiledGraph:
                         [vals[i] for i in live],
                         [dirties[i].to_mask() for i in live], k,
                         gidx=gidx)
-                    for i, nv, ix, lc in zip(live, news, idxs, lcs):
-                        nb = self.nodes[i].num_blocks
-                        vals[i] = nv
-                        changed[i] = D.from_changed_lanes(ix, lc, nb)
-                        recomputed += dirties[i].count()
-                        affected += changed[i].count()
-                    continue
-                for i in live:
-                    nd = self.nodes[i]
-                    parents = [vals[d] for d in nd.deps]
-                    sp = isinstance(plan[i], tuple)
+                for i, nv, ix, lc in zip(live, news, idxs, lcs):
+                    nb = self.nodes[i].num_blocks
+                    vals[i] = nv
+                    changed[i] = D.from_changed_lanes(ix, lc, nb)
+                    recomputed += dirties[i].count()
+                    affected += changed[i].count()
+                continue
+            for i in live:
+                nd = self.nodes[i]
+                parents = [vals[d] for d in nd.deps]
+                sp = isinstance(plan[i], tuple)
+                with jax.named_scope(self._scope(nd)):
                     nv, ch, st = self._recompute(
                         nd, parents, vals[i], dirties[i],
                         carries.get(str(i)),
@@ -502,17 +649,95 @@ class CompiledGraph:
                         idx=(graph_ops.mask_indices(node_masks[str(i)],
                                                     plan[i][1])
                              if sp else None))
-                    vals[i] = nv
-                    changed[i] = ch
-                    if st is not None:
-                        carries[str(i)] = st
-                    recomputed += dirties[i].count()
-                    affected += ch.count()
+                vals[i] = nv
+                changed[i] = ch
+                if st is not None:
+                    carries[str(i)] = st
+                recomputed += dirties[i].count()
+                affected += ch.count()
+        return recomputed, affected, dirty_inputs
 
-        stats = {"recomputed": recomputed, "affected": affected,
-                 "dirty_inputs": dirty_inputs,
-                 **self._boundary_stats(changed)}
-        return {"v": tuple(vals), "c": carries}, stats
+    @staticmethod
+    def _scope(nd: GNode) -> str:
+        """HLO metadata scope for a node's recompute ops (zero runtime
+        cost; names profiler rows after SP-dag nodes).  Sanitized to the
+        charset ``jax.named_scope`` / HLO metadata accepts."""
+        name = nd.name or nd.kind
+        return "".join(c if (c.isalnum() or c in "._-") else "_"
+                       for c in name) or "node"
+
+    # ------------------------------------------------------------------
+    # Deep-mode per-level driver (trace="deep")
+    # ------------------------------------------------------------------
+    def _deep_level_impl(self, vals, carries, ch_masks, new_inputs,
+                         in_masks, node_masks, *, li, plan):
+        """One level as a standalone executable: incoming changed sets
+        arrive as per-node masks (lossless for both dirty reps — masks
+        are exact for MaskDirty, and IntervalDirty is a contiguous hull,
+        so from_mask(to_mask(d)) == d), the level body is the shared
+        ``_planned_level``, and the level's own changed sets leave as
+        masks for the next level."""
+        D = self._dirty_cls
+        vals = list(vals)
+        carries = dict(carries)
+        changed: List[Any] = [None] * len(self.nodes)
+        for k, m in ch_masks.items():
+            changed[int(k)] = D.from_mask(m)
+        r, a, di = self._planned_level(
+            li, vals, carries, changed, new_inputs, in_masks,
+            node_masks, plan)
+        out_masks = dict(ch_masks)
+        for idx in self.schedule[li]:
+            out_masks[str(idx)] = changed[idx].to_mask()
+        return tuple(vals), carries, out_masks, (r, a, di)
+
+    def _deep_boundary_impl(self, ch_masks):
+        D = self._dirty_cls
+        changed: List[Any] = [None] * len(self.nodes)
+        for k, m in ch_masks.items():
+            changed[int(k)] = D.from_mask(m)
+        return self._boundary_stats(changed)
+
+    def _deep_level_fn(self, plan, li: int):
+        key = (plan, li)
+        fn = self._deep_fns.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                self._deep_level_impl, li=li, plan=plan))
+            self._deep_fns[key] = fn
+        return fn
+
+    def _propagate_deep(self, state, inputs, in_masks, node_masks, plan,
+                        rec):
+        """Planned propagation, one fenced executable per level:
+        TraceAnnotation-bracketed dispatch + block_until_ready gives the
+        real per-level wall-clock the profile view shows.  Values cross
+        level boundaries unfused and undonated — deep mode is the
+        diagnostic path, not the fast path."""
+        vals, carries = state["v"], state["c"]
+        ch_masks: Dict[str, jax.Array] = {}
+        recs: List[jax.Array] = []
+        affs: List[jax.Array] = []
+        level_ms: List[float] = []
+        di_total = None
+        for li in range(self.num_levels):
+            t0 = rec.clock()
+            with jax.profiler.TraceAnnotation(f"propagate/L{li}"):
+                vals, carries, ch_masks, (r, a, di) = self._deep_level_fn(
+                    plan, li)(vals, carries, ch_masks, inputs, in_masks,
+                              node_masks)
+                syncpoints.fence((vals, r, a), f"level_{li}")
+            level_ms.append((rec.clock() - t0) * 1e3)
+            recs.append(r)
+            affs.append(a)
+            di_total = di if di_total is None else di_total + di
+        rec_v = jnp.stack(recs)
+        aff_v = jnp.stack(affs)
+        stats = {"recomputed": jnp.sum(rec_v), "affected": jnp.sum(aff_v),
+                 "dirty_inputs": di_total,
+                 "rec_per_level": rec_v, "aff_per_level": aff_v,
+                 **self._deep_boundary_fn(ch_masks)}
+        return {"v": tuple(vals), "c": dict(carries)}, stats, level_ms
 
     def _boundary_stats(self, changed: List[Any]) -> Dict[str, Any]:
         """Per-output changed masks and per-input dirty counts — the
@@ -538,6 +763,8 @@ class CompiledGraph:
         recomputed = jnp.int32(0)
         affected = jnp.int32(0)
         dirty_inputs = jnp.int32(0)
+        rec_lvls: List[jax.Array] = []
+        aff_lvls: List[jax.Array] = []
 
         for lvl, groups in zip(self.schedule, self._level_groups):
             ops = [i for i in lvl if self.nodes[i].kind != "input"]
@@ -555,6 +782,8 @@ class CompiledGraph:
                 changed[idx] = ch
                 dirty_inputs += ch.count()
             if not ops:
+                rec_lvls.append(jnp.int32(0))
+                aff_lvls.append(jnp.int32(0))
                 continue
 
             # Incoming dirty sets (cheap O(nb) mask pushing), then one
@@ -630,9 +859,13 @@ class CompiledGraph:
                 carries[str(i)] = st
             recomputed += rec
             affected += aff
+            rec_lvls.append(rec)
+            aff_lvls.append(aff)
 
         stats = {"recomputed": recomputed, "affected": affected,
                  "dirty_inputs": dirty_inputs,
+                 "rec_per_level": jnp.stack(rec_lvls),
+                 "aff_per_level": jnp.stack(aff_lvls),
                  **self._boundary_stats(changed)}
         return {"v": tuple(vals), "c": carries}, stats
 

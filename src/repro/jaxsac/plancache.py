@@ -55,15 +55,26 @@ class PlanEntry:
 
 
 class PlanCache:
-    """Bounded LRU of frozen plans, keyed by dirty signature."""
+    """Bounded LRU of frozen plans, keyed by dirty signature.
 
-    def __init__(self, cap: int = 64):
+    ``on_event``, when given, is called with ``"hit"`` / ``"miss"`` /
+    ``"evict"`` as they happen — the observability layer's bridge into
+    a metric registry without the cache knowing about metrics.
+    """
+
+    def __init__(self, cap: int = 64,
+                 on_event: Callable[[str], None] = None):
         assert cap >= 1, cap
         self.cap = int(cap)
         self._entries: "OrderedDict[Any, PlanEntry]" = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.on_event = on_event
+
+    def _fire(self, kind: str) -> None:
+        if self.on_event is not None:
+            self.on_event(kind)
 
     def lookup(self, sig) -> Any:
         """The entry for ``sig`` (refreshing its LRU slot), or None."""
@@ -72,16 +83,19 @@ class PlanCache:
             return None
         self._entries.move_to_end(sig)
         self.hits += 1
+        self._fire("hit")
         return entry
 
     def insert(self, sig, entry: PlanEntry) -> PlanEntry:
         """Record a freshly frozen plan; evicts the LRU entry past cap."""
         self.misses += 1
+        self._fire("miss")
         self._entries[sig] = entry
         self._entries.move_to_end(sig)
         while len(self._entries) > self.cap:
             self._entries.popitem(last=False)
             self.evictions += 1
+            self._fire("evict")
         return entry
 
     def __len__(self) -> int:

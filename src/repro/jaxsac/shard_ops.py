@@ -101,6 +101,7 @@ class _Changed:
 
     def full(self, D):
         if self._full is None:
+            self.sh._count("all_gather")
             m = jax.lax.all_gather(self._local, self.sh.axis, axis=0,
                                    tiled=True)
             self._full = D.from_mask(m)
@@ -145,6 +146,23 @@ class ShardedPropagator:
                       for k in state["c"]}
         self.state_spec = {"v": self.vspec, "c": self.cspec}
         self._mark_fns: Dict[Any, Any] = {}  # edited-input key set -> jit
+        # ---- static collective tallies (observability) ----------------
+        # shard_map programs are traced once per plan / edited-input key;
+        # counting at the collective CALL SITES during that trace yields
+        # the exact per-update-per-shard collective schedule with zero
+        # runtime cost.  Tallies are overwritten at each (re)trace, so a
+        # retrace can't double-count.
+        self.tallies: Dict[Any, Dict[str, int]] = {}        # plan -> tally
+        self.mark_tallies: Dict[Any, Dict[str, int]] = {}   # key -> tally
+        self._cur_tally: Optional[Dict[str, int]] = None
+        self._cur_kind = "?"
+
+    def _count(self, op: str) -> None:
+        """Tally one collective at trace time, keyed ``<edge-kind>:<op>``
+        (no-op outside a tallied trace)."""
+        if self._cur_tally is not None:
+            k = f"{self._cur_kind}:{op}"
+            self._cur_tally[k] = self._cur_tally.get(k, 0) + 1
 
     # ------------------------------------------------------------------
     # State placement
@@ -190,6 +208,9 @@ class ShardedPropagator:
     def _mark_body(self, state, new_inputs):
         cg = self.cg
         D = cg._dirty_cls
+        tally: Dict[str, int] = {}
+        self.mark_tallies[frozenset(new_inputs)] = tally
+        self._cur_tally, self._cur_kind = tally, "mark"
         dirty = [None] * len(cg.nodes)
         masks = {}
         node_masks = {}
@@ -201,6 +222,7 @@ class ShardedPropagator:
                         old.dtype)
                     dm = dirty_from_diff(old, new, nd.block)
                     if self.sharded[nd.idx]:
+                        self._count("all_gather")
                         dm = jax.lax.all_gather(dm, self.axis, axis=0,
                                                 tiled=True)
                     ch = D.from_mask(dm)
@@ -215,6 +237,7 @@ class ShardedPropagator:
                     nd, [dirty[d] for d in nd.deps], pv)
                 node_masks[str(nd.idx)] = dirty[nd.idx].to_mask()
         counts = jnp.stack([dirty[nd.idx].count() for nd in cg.nodes])
+        self._cur_tally = None
         return masks, counts, node_masks
 
     def planned_fn(self, plan):
@@ -232,6 +255,7 @@ class ShardedPropagator:
                        if isinstance(p, tuple)]
         stats_spec = {
             "recomputed": P(), "affected": P(), "dirty_inputs": P(),
+            "rec_per_level": P(), "aff_per_level": P(),
             "recomputed_per_shard": P(self.axis),
             "out_changed": {str(i): P() for i in cg.outputs},
             "in_dirty": {name: P() for name in cg.input_names},
@@ -262,6 +286,7 @@ class ShardedPropagator:
         """The full value of node ``d`` on every shard (all-gather a
         sharded chunk; replicated values already are full)."""
         if self.sharded[d]:
+            self._count("all_gather")
             return jax.lax.all_gather(vals[d], self.axis, axis=0,
                                       tiled=True)
         return vals[d]
@@ -297,6 +322,7 @@ class ShardedPropagator:
         lnb = lmask.shape[0]
         pos = self._sidx() * lnb + jnp.arange(lnb)
         lmin = jnp.min(jnp.where(lmask, pos, nb)).astype(jnp.int32)
+        self._count("pmin")
         return jax.lax.pmin(lmin, self.axis)
 
     def _transfer_local(self, nd, changed):
@@ -338,6 +364,7 @@ class ShardedPropagator:
         lnb = x_local.shape[0]
         j = jnp.clip(gidx - self._sidx() * lnb, 0, lnb - 1)
         cand = jnp.take(x_local, j, axis=0)
+        self._count("all_gather")
         rows = jax.lax.all_gather(cand, self.axis)          # [S, *feat]
         src = jnp.clip(gidx, 0, self.S * lnb - 1) // lnb
         row = jnp.take(rows, src, axis=0)
@@ -388,8 +415,10 @@ class ShardedPropagator:
         x = vals[nd.deps[0]]
         xb = x.reshape((lnb, p.block) + x.shape[1:])
         r, S = nd.radius, self.S
+        self._count("ppermute")
         left = jax.lax.ppermute(xb[lnb - r:], self.axis,
                                 [(j, j + 1) for j in range(S - 1)])
+        self._count("ppermute")
         right = jax.lax.ppermute(xb[:r], self.axis,
                                  [(j, j - 1) for j in range(1, S)])
         if nd.fill is None:              # clamp to the global edge block
@@ -421,6 +450,7 @@ class ShardedPropagator:
         ident = _identity_row(nd, contrib)
         masked = jnp.where(_bc(in_suffix, contrib), contrib, ident)
         local = jax.lax.associative_scan(nd.op, masked, axis=0)
+        self._count("all_gather")
         tots = jax.lax.all_gather(local[-1], self.axis)     # [S, *feat]
         incl = jax.lax.associative_scan(nd.op, tots, axis=0)
         sidx = self._sidx()
@@ -440,6 +470,7 @@ class ShardedPropagator:
         from the cached carries."""
         agg_local = self._chunk(nd.deps[0], vals)
         ident = _identity_row(nd, agg_local)
+        self._count("ppermute")
         prev = jax.lax.ppermute(agg_local[-1], self.axis,
                                 [(j, j + 1) for j in range(self.S - 1)])
         first = jnp.where(self._sidx() == 0,
@@ -596,11 +627,15 @@ class ShardedPropagator:
         counts (local masks partition the global mask)."""
         cg = self.cg
         D = cg._dirty_cls
+        tally: Dict[str, int] = {}
+        self.tallies[plan] = tally
+        self._cur_tally, self._cur_kind = tally, "input"
         # Local-mask shortcuts are exact only for the exact per-block
         # mask rep; the interval rep's transfers are hulls, so parity
         # requires running its (full-set) algebra verbatim.
         local_ok = cg.dirty_rep == "mask"
         nodes = cg.nodes
+        L = cg.num_levels
         vals = list(state["v"])
         carries = dict(state["c"])
         changed: List[Optional[_Changed]] = [None] * len(nodes)
@@ -611,11 +646,19 @@ class ShardedPropagator:
         dirty_inputs = jnp.int32(0)
         local_rec = jnp.int32(0)         # per-shard work stat
         any_local = False
+        # Per-level twins of the four accumulators above; merged by the
+        # SAME single psum (stacked alongside the totals), so the
+        # observability columns cost zero extra collectives.
+        rl_repl = [jnp.int32(0) for _ in range(L)]
+        al_repl = [jnp.int32(0) for _ in range(L)]
+        rl_loc = [jnp.int32(0) for _ in range(L)]
+        al_loc = [jnp.int32(0) for _ in range(L)]
 
         def full_of(e):
             return e.full(D)
 
-        for lvl in cg.schedule:
+        for li, lvl in enumerate(cg.schedule):
+            self._cur_kind = "input"
             for idx in lvl:
                 nd = nodes[idx]
                 if nd.kind != "input":
@@ -634,6 +677,7 @@ class ShardedPropagator:
                 nd = nodes[i]
                 if nd.kind == "input":
                     continue
+                self._cur_kind = nd.kind
                 if plan[i] == "skip":
                     changed[i] = _Changed(self, nd.num_blocks,
                                           full=D.none(nd.num_blocks))
@@ -646,12 +690,16 @@ class ShardedPropagator:
                     lrec = jnp.sum(lmask.astype(jnp.int32))
                     if repl_count is not None:   # suffix edge: exact
                         rec_repl += repl_count
+                        rl_repl[li] += repl_count
                     else:
                         rec_loc += lrec
+                        rl_loc[li] += lrec
                     nv, chl, st = self._recompute_local(
                         i, vals, carries, lmask, start, plan[i])
                     changed[i] = _Changed(self, nd.num_blocks, local=chl)
-                    aff_loc += jnp.sum(chl.astype(jnp.int32))
+                    laff = jnp.sum(chl.astype(jnp.int32))
+                    aff_loc += laff
+                    al_loc[li] += laff
                     any_local = True
                     local_rec += lrec
                 else:
@@ -660,6 +708,7 @@ class ShardedPropagator:
                     dirty = graph_ops.edge_dirty(
                         nd, [full_of(changed[d]) for d in nd.deps], pv)
                     rec_repl += dirty.count()
+                    rl_repl[li] += dirty.count()
                     if self.sharded[i]:
                         lmask = self._local_mask(dirty.to_mask(), lnb)
                         nv, chl, st = self._recompute_local(
@@ -668,7 +717,9 @@ class ShardedPropagator:
                         if local_ok:
                             changed[i] = _Changed(self, nd.num_blocks,
                                                   local=chl)
-                            aff_loc += jnp.sum(chl.astype(jnp.int32))
+                            laff = jnp.sum(chl.astype(jnp.int32))
+                            aff_loc += laff
+                            al_loc[li] += laff
                             any_local = True
                         else:
                             # Interval parity: hull the changed set on
@@ -678,6 +729,7 @@ class ShardedPropagator:
                             changed[i] = _Changed(self, nd.num_blocks,
                                                   full=ch)
                             aff_repl += ch.count()
+                            al_repl[li] += ch.count()
                         local_rec += jnp.sum(lmask.astype(jnp.int32))
                     else:
                         nv, ch, st = self._recompute_repl(
@@ -685,25 +737,40 @@ class ShardedPropagator:
                         changed[i] = _Changed(self, nd.num_blocks,
                                               full=ch)
                         aff_repl += ch.count()
+                        al_repl[li] += ch.count()
                         local_rec += dirty.count()
                 vals[i] = nv
                 if st is not None:
                     carries[str(i)] = st
 
+        self._cur_kind = "stats"
         if any_local:
-            tot = jax.lax.psum(jnp.stack([rec_loc, aff_loc]), self.axis)
-            recomputed = rec_repl + tot[0]
-            affected = aff_repl + tot[1]
+            # One psum folds the scalar totals (column 0 — bitwise the
+            # pre-observability [2]-vector psum) and the per-level
+            # columns together.
+            loc = jnp.stack([jnp.stack([rec_loc] + rl_loc),
+                             jnp.stack([aff_loc] + al_loc)])
+            self._count("psum")
+            tot = jax.lax.psum(loc, self.axis)
+            recomputed = rec_repl + tot[0, 0]
+            affected = aff_repl + tot[1, 0]
+            rec_per_level = jnp.stack(rl_repl) + tot[0, 1:]
+            aff_per_level = jnp.stack(al_repl) + tot[1, 1:]
         else:
             recomputed, affected = rec_repl, aff_repl
+            rec_per_level = jnp.stack(rl_repl)
+            aff_per_level = jnp.stack(al_repl)
 
         stats = {
             "recomputed": recomputed, "affected": affected,
             "dirty_inputs": dirty_inputs,
+            "rec_per_level": rec_per_level,
+            "aff_per_level": aff_per_level,
             "recomputed_per_shard": local_rec[None],
             "out_changed": {str(i): full_of(changed[i]).to_mask()
                             for i in cg.outputs},
             "in_dirty": {name: full_of(changed[idx]).count()
                          for name, idx in cg.input_names.items()},
         }
+        self._cur_tally = None
         return {"v": tuple(vals), "c": carries}, stats

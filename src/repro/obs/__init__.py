@@ -1,0 +1,36 @@
+"""Propagation telemetry: records, capture modes, exporters.
+
+One update on any substrate — jitted graph, host engine, hybrid
+fragments, mesh-sharded — yields one ``PropagationRecord``: phase
+timings (mark, plan freeze, execute), per-level dirty/recomputed
+counts with the regime each node ran under, plan-cache hit/miss, and
+(under a mesh) the per-edge-kind collective tally.  Capture is opt-in
+via ``compile(trace=...)``:
+
+  * ``trace="counters"`` — near-zero overhead: host timestamps only at
+    sync points the planned propagate already has (the one mark-counts
+    read), device counters harvested lazily.  The sync-point rule —
+    counters mode adds ZERO host syncs to the planned path — is
+    enforced by test through ``syncpoints.py``'s monkeypatchable hook.
+  * ``trace="deep"`` — per-level executables fenced between levels
+    (real per-level wall-clock) wrapped in ``jax.profiler``
+    TraceAnnotations, so an XLA profile lines up with SP-dag structure.
+
+Consumers: ``chrometrace.chrome_trace`` (Perfetto-loadable JSON, also
+``handle.profile()``), ``metrics.MetricRegistry`` (counters /
+histograms / bounded event log with a JSONL sink — also the supervisor
+path), the recorder's bounded flight ring, and the per-level
+attribution report (``python -m benchmarks.report``).
+"""
+from .chrometrace import chrome_trace, write_chrome_trace
+from .metrics import (Counter, EventLog, Histogram, JsonlSink,
+                      MetricRegistry)
+from .record import LevelRecord, PhaseSpan, PropagationRecord, merge_records
+from .recorder import PropagationRecorder, TraceMethods
+
+__all__ = [
+    "PropagationRecord", "LevelRecord", "PhaseSpan", "merge_records",
+    "PropagationRecorder", "TraceMethods",
+    "chrome_trace", "write_chrome_trace",
+    "MetricRegistry", "Counter", "Histogram", "EventLog", "JsonlSink",
+]

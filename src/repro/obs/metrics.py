@@ -1,0 +1,152 @@
+"""Counter/histogram registry + bounded event log + JSONL sink.
+
+The unified metrics layer: propagation recorders, the training
+supervisor (straggler / checkpoint / restart events), and the future
+serving layer's p50/p99 hooks all write through one ``MetricRegistry``
+so a process has a single place to scrape.  Everything is plain host
+Python — observing a metric never touches the device.
+
+``JsonlSink`` streams events (and final snapshots) as one JSON object
+per line; attach it to a registry to get a durable event log without
+holding records in memory.
+"""
+from __future__ import annotations
+
+import json
+import math
+from collections import deque
+from typing import Any, Dict, IO, List, Optional, Union
+
+__all__ = ["Counter", "Histogram", "EventLog", "MetricRegistry",
+           "JsonlSink"]
+
+
+class Counter:
+    """Monotonic counter."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Histogram:
+    """Sampled distribution: count/sum/min/max exact, percentiles from
+    a bounded sample window (last ``window`` observations)."""
+
+    __slots__ = ("name", "count", "total", "min", "max", "_samples")
+
+    def __init__(self, name: str, window: int = 4096):
+        self.name = name
+        self.count = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._samples: deque = deque(maxlen=window)
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+        self._samples.append(v)
+
+    def percentile(self, p: float) -> float:
+        """p in [0, 100], over the sample window; NaN when empty."""
+        if not self._samples:
+            return math.nan
+        s = sorted(self._samples)
+        i = min(len(s) - 1, max(0, round(p / 100 * (len(s) - 1))))
+        return s[i]
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else math.nan
+
+    def snapshot(self) -> Dict[str, float]:
+        return {"count": self.count, "sum": self.total,
+                "min": self.min if self.count else math.nan,
+                "max": self.max if self.count else math.nan,
+                "p50": self.percentile(50), "p99": self.percentile(99)}
+
+
+class EventLog:
+    """Bounded structured event log (newest-kept ring)."""
+
+    def __init__(self, cap: int = 1024):
+        self._events: deque = deque(maxlen=cap)
+
+    def emit(self, event: str, **fields) -> Dict[str, Any]:
+        e = {"event": event, **fields}
+        self._events.append(e)
+        return e
+
+    def events(self, event: Optional[str] = None) -> List[Dict[str, Any]]:
+        if event is None:
+            return list(self._events)
+        return [e for e in self._events if e["event"] == event]
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+
+class JsonlSink:
+    """One JSON object per line, flushed per write."""
+
+    def __init__(self, target: Union[str, IO]):
+        if hasattr(target, "write"):
+            self._fh, self._own = target, False
+        else:
+            self._fh, self._own = open(target, "a"), True
+
+    def write(self, obj: Dict[str, Any]) -> None:
+        self._fh.write(json.dumps(obj) + "\n")
+        self._fh.flush()
+
+    def close(self) -> None:
+        if self._own:
+            self._fh.close()
+
+
+class MetricRegistry:
+    """Named counters + histograms + one event log, with an optional
+    JSONL sink that sees every event as it is emitted."""
+
+    def __init__(self, event_cap: int = 1024, sink: Optional[JsonlSink] = None):
+        self.counters: Dict[str, Counter] = {}
+        self.histograms: Dict[str, Histogram] = {}
+        self.log = EventLog(cap=event_cap)
+        self.sink = sink
+
+    def counter(self, name: str) -> Counter:
+        c = self.counters.get(name)
+        if c is None:
+            c = self.counters[name] = Counter(name)
+        return c
+
+    def histogram(self, name: str) -> Histogram:
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = Histogram(name)
+        return h
+
+    def event(self, event: str, **fields) -> None:
+        e = self.log.emit(event, **fields)
+        if self.sink is not None:
+            self.sink.write(e)
+
+    def events(self, event: Optional[str] = None) -> List[Dict[str, Any]]:
+        return self.log.events(event)
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "counters": {k: c.value for k, c in self.counters.items()},
+            "histograms": {k: h.snapshot()
+                           for k, h in self.histograms.items()},
+            "events": len(self.log),
+        }

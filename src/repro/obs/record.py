@@ -1,0 +1,144 @@
+"""The per-propagate record schema, shared by every substrate.
+
+One ``PropagationRecord`` per update: wall-clock phases, per-level
+counts + regime labels, substrate counters, plan-cache state, and —
+under a mesh — the static per-edge-kind collective tally.  The graph
+backend fills levels from the frozen plan and the mark counts; the
+host backend from its reader re-execution counts; the hybrid backend
+merges one record per executed fragment into a single parent record
+(``merge_records``), so a consumer sees one record per update
+regardless of backend.
+
+Counters may arrive as device scalars (counters mode must not sync);
+``finalize()`` materializes them — and distributes the per-level
+``rec_per_level`` / ``aff_per_level`` vectors into the level records —
+the first time a consumer actually reads the record.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["PhaseSpan", "LevelRecord", "PropagationRecord",
+           "merge_records"]
+
+
+@dataclasses.dataclass
+class PhaseSpan:
+    """One timed phase; ``t0`` is seconds on the recorder clock."""
+
+    name: str
+    t0: float
+    dur: float
+
+
+@dataclasses.dataclass
+class LevelRecord:
+    """One dag level of one propagate."""
+
+    level: int
+    nodes: int                          # op nodes scheduled in the level
+    regimes: Dict[str, int]             # regime label -> node count
+    dirty: Optional[int] = None         # mark-pass dirty upper bound
+    recomputed: Optional[int] = None    # realized recomputed blocks
+    affected: Optional[int] = None      # post-cutoff changed blocks
+    ms: Optional[float] = None          # fenced wall-clock (deep mode)
+    fragment: Optional[str] = None      # hybrid: owning fragment
+
+
+def _conv(v):
+    if hasattr(v, "dtype") or isinstance(v, np.ndarray):
+        a = np.asarray(v)
+        return a.item() if a.ndim == 0 else a.tolist()
+    if isinstance(v, dict):
+        return {k: _conv(x) for k, x in v.items()}
+    return v
+
+
+@dataclasses.dataclass
+class PropagationRecord:
+    """One update's telemetry (see module docstring)."""
+
+    substrate: str                      # "graph" | "host" | "hybrid"
+    seq: int                            # recorder-local sequence number
+    mode: str                           # "counters" | "deep"
+    t_start: float
+    phases: List[PhaseSpan] = dataclasses.field(default_factory=list)
+    levels: List[LevelRecord] = dataclasses.field(default_factory=list)
+    counters: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    plan_cache: Optional[Dict[str, Any]] = None
+    collectives: Optional[Dict[str, Dict[str, int]]] = None
+    shards: int = 1
+    fenced: bool = False                # were phase/level timings fenced?
+    fragments: List["PropagationRecord"] = dataclasses.field(
+        default_factory=list)
+    _final: bool = dataclasses.field(default=False, repr=False)
+
+    # ------------------------------------------------------------------
+    @property
+    def duration_ms(self) -> float:
+        if not self.phases:
+            return 0.0
+        end = max(p.t0 + p.dur for p in self.phases)
+        return (end - self.t_start) * 1e3
+
+    def finalize(self) -> "PropagationRecord":
+        """Materialize device-resident counters (this is where a
+        counters-mode record finally syncs — on read, not on update)."""
+        if self._final:
+            return self
+        self.counters = {k: _conv(v) for k, v in self.counters.items()}
+        rpl = self.counters.get("rec_per_level")
+        apl = self.counters.get("aff_per_level")
+        for lv in self.levels:
+            if lv.fragment is None:     # merged levels were finalized
+                if rpl is not None and lv.level < len(rpl):
+                    lv.recomputed = int(rpl[lv.level])
+                if apl is not None and lv.level < len(apl):
+                    lv.affected = int(apl[lv.level])
+        for fr in self.fragments:
+            fr.finalize()
+        self._final = True
+        return self
+
+    def to_dict(self) -> Dict[str, Any]:
+        self.finalize()
+        d = dataclasses.asdict(self)
+        d.pop("_final", None)
+        for fr in d["fragments"]:
+            fr.pop("_final", None)
+        return d
+
+
+def merge_records(children: List[PropagationRecord], *, substrate: str,
+                  seq: int, mode: str, t_start: float,
+                  phases: Optional[List[PhaseSpan]] = None,
+                  plan_cache: Optional[Dict[str, Any]] = None,
+                  ) -> PropagationRecord:
+    """Fold per-fragment records into one parent record: counters
+    summed, levels concatenated with their fragment tag, children kept
+    under ``fragments`` for drill-down."""
+    counters: Dict[str, Any] = {}
+    levels: List[LevelRecord] = []
+    coll: Dict[str, Dict[str, int]] = {}
+    for fi, ch in enumerate(children):
+        ch.finalize()
+        tag = f"f{fi}"
+        for k, v in ch.counters.items():
+            if isinstance(v, (int, float)):
+                counters[k] = counters.get(k, 0) + v
+        for lv in ch.levels:
+            levels.append(dataclasses.replace(lv, fragment=tag))
+        for ph, ops in (ch.collectives or {}).items():
+            dst = coll.setdefault(ph, {})
+            for op, n in ops.items():
+                dst[op] = dst.get(op, 0) + n
+    return PropagationRecord(
+        substrate=substrate, seq=seq, mode=mode, t_start=t_start,
+        phases=list(phases or []), levels=levels, counters=counters,
+        plan_cache=plan_cache, collectives=coll or None,
+        shards=max([c.shards for c in children], default=1),
+        fenced=all(c.fenced for c in children) if children else False,
+        fragments=list(children))

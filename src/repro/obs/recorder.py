@@ -1,0 +1,147 @@
+"""PropagationRecorder: flight ring + metrics bridge + handle mixin.
+
+A recorder is attached to a compiled handle (``compile(trace=...)``)
+and collects one ``PropagationRecord`` per update into a bounded ring
+(the flight recorder: the last N updates are always dumpable, e.g.
+from a failure handler).  Emission also feeds the recorder's
+``MetricRegistry`` — propagate count, plan-cache hit/miss counters,
+and a wall-clock histogram — using only host-known values, so emitting
+never syncs with the device.
+
+``TraceMethods`` is the facade mixin every backend handle inherits:
+``.record`` (last update, finalized), ``.records()``, and
+``.profile(edits) -> chrome trace`` which forces one deep-mode update
+regardless of how the handle was compiled.
+"""
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+from .metrics import MetricRegistry
+from .record import PropagationRecord
+
+__all__ = ["PropagationRecorder", "TraceMethods", "regime_label"]
+
+MODES = ("counters", "deep")
+
+
+def regime_label(p) -> str:
+    """Human label of one node's frozen plan entry."""
+    if isinstance(p, tuple):
+        return f"sparse({p[1]})"
+    return str(p)
+
+
+class PropagationRecorder:
+    """Collects per-propagate records; see module docstring."""
+
+    def __init__(self, mode: str = "counters", flight: int = 64,
+                 registry: Optional[MetricRegistry] = None):
+        assert mode in MODES, f"trace mode {mode!r} (expected {MODES})"
+        self.mode = mode
+        self.registry = registry if registry is not None else MetricRegistry()
+        self._ring: deque = deque(maxlen=flight if flight else None)
+        self._seq = 0
+
+    # host wall clock; records and phase spans all use this one
+    clock = staticmethod(time.perf_counter)
+
+    def next_seq(self) -> int:
+        s = self._seq
+        self._seq += 1
+        return s
+
+    def emit(self, record: PropagationRecord) -> PropagationRecord:
+        self._ring.append(record)
+        reg = self.registry
+        reg.counter("propagates").inc()
+        reg.histogram(f"propagate_ms.{record.substrate}").observe(
+            record.duration_ms)
+        pc = record.plan_cache
+        if pc is not None and "hits" in pc:
+            # snapshot counters are cumulative; keep registry gauges in
+            # step by overwriting instead of accumulating deltas
+            reg.counter("plan_cache.hits").value = int(pc["hits"])
+            reg.counter("plan_cache.misses").value = int(pc["misses"])
+        return record
+
+    # ------------------------------------------------------------------
+    @property
+    def last(self) -> Optional[PropagationRecord]:
+        return self._ring[-1] if self._ring else None
+
+    def records(self) -> List[PropagationRecord]:
+        return list(self._ring)
+
+    def drain(self) -> List[PropagationRecord]:
+        out = list(self._ring)
+        self._ring.clear()
+        return out
+
+    def clear(self) -> None:
+        self._ring.clear()
+
+    def dump(self, path: Optional[str] = None) -> List[Dict[str, Any]]:
+        """Flight-recorder dump: the ring as plain dicts (finalized);
+        written as JSON when ``path`` is given."""
+        out = [r.to_dict() for r in self._ring]
+        if path is not None:
+            with open(path, "w") as fh:
+                json.dump(out, fh, indent=2)
+        return out
+
+
+class TraceMethods:
+    """Record/profile facade shared by GraphHandle / HostHandle /
+    HybridHandle.  Handles implement ``_attach_recorder``."""
+
+    _recorder: Optional[PropagationRecorder] = None
+
+    def _attach_recorder(self, rec: Optional[PropagationRecorder]) -> None:
+        self._recorder = rec
+
+    @property
+    def recorder(self) -> Optional[PropagationRecorder]:
+        return self._recorder
+
+    @property
+    def record(self) -> Optional[PropagationRecord]:
+        """The last update's record (finalized), or None."""
+        r = self._recorder
+        if r is None or r.last is None:
+            return None
+        return r.last.finalize()
+
+    def records(self) -> List[PropagationRecord]:
+        r = self._recorder
+        return [x.finalize() for x in r.records()] if r is not None else []
+
+    def profile(self, inputs: Optional[Dict[str, Any]] = None,
+                path: Optional[str] = None, **changed) -> Dict[str, Any]:
+        """Run ONE update in deep mode (fenced per-level timings) and
+        return its Chrome-trace dict — Perfetto/chrome://tracing
+        loadable — writing it to ``path`` when given.  Works on any
+        handle; a handle compiled without ``trace=`` gets a temporary
+        recorder for the call."""
+        from .chrometrace import chrome_trace, write_chrome_trace
+
+        rec, temp = self._recorder, False
+        if rec is None:
+            rec = PropagationRecorder(mode="deep", flight=4)
+            self._attach_recorder(rec)
+            temp = True
+        old_mode, rec.mode = rec.mode, "deep"
+        try:
+            self.update(inputs or {}, **changed)
+        finally:
+            rec.mode = old_mode
+            if temp:
+                self._attach_recorder(None)
+        assert rec.last is not None, "profile(): update emitted no record"
+        trace = chrome_trace([rec.last])
+        if path is not None:
+            write_chrome_trace(trace, path)
+        return trace

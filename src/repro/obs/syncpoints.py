@@ -1,0 +1,43 @@
+"""Host sync points, centralized and countable.
+
+The planned propagate makes exactly ONE host read per update — the
+mark-counts transfer that freezes the plan.  That invariant is the
+latency model's foundation (DESIGN.md §Propagation-cost-model), so
+every host sync the runtime performs is routed through this module:
+``host_read`` for device->host transfers, ``fence`` for
+``block_until_ready`` barriers.  Tests install ``HOOK`` and assert the
+call count is identical with tracing off and with ``trace="counters"``
+— the sync-point rule ("counters mode adds no new host syncs") held by
+construction AND by measurement.
+
+``trace="deep"`` fences on purpose (per-level wall-clock needs a
+barrier per level); those fences go through here too, tagged, so a
+profile shows exactly where the mode paid for its timings.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["host_read", "fence", "HOOK"]
+
+# Test/diagnostic hook: called as HOOK(tag, kind) before every sync,
+# kind in {"host_read", "fence"}.  None (the default) costs one global
+# load per sync — nothing on the no-sync path.
+HOOK: Optional[Callable[[str, str], None]] = None
+
+
+def host_read(x, tag: str) -> np.ndarray:
+    """Device->host transfer (blocks on ``x``)."""
+    if HOOK is not None:
+        HOOK(tag, "host_read")
+    return np.asarray(x)
+
+
+def fence(x, tag: str):
+    """Barrier: block until every leaf of ``x`` is computed."""
+    if HOOK is not None:
+        HOOK(tag, "fence")
+    return jax.block_until_ready(x)

@@ -14,6 +14,11 @@ slower than ``straggler_factor`` x the mean; the supervisor records the
 event and (configurably) triggers a checkpoint so the launcher can evict
 the slow host and resume elastically — the remesh itself is
 ``repro.runtime.elastic``.
+
+Both the timer and the supervisor route their events through a
+``repro.obs.MetricRegistry`` when one is passed (straggler / restart /
+checkpoint events, ``step_ms`` histogram) — the same registry the
+propagation recorder feeds, so one JSONL sink captures the whole run.
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 
 from .. import ckpt as ckpt_lib
+from ..obs.metrics import MetricRegistry
 
 __all__ = ["Supervisor", "FaultInjector", "StepTimer"]
 
@@ -47,16 +53,20 @@ class StepTimer:
     """EWMA step timer; flags stragglers."""
 
     def __init__(self, alpha: float = 0.2, straggler_factor: float = 3.0,
-                 warmup: int = 3):
+                 warmup: int = 3,
+                 registry: Optional[MetricRegistry] = None):
         self.alpha = alpha
         self.factor = straggler_factor
         self.warmup = warmup
         self.mean: Optional[float] = None
         self.count = 0
         self.straggler_steps: List[int] = []
+        self.registry = registry
 
     def observe(self, step: int, dt: float) -> bool:
         self.count += 1
+        if self.registry is not None:
+            self.registry.histogram("step_ms").observe(dt * 1e3)
         if self.mean is None:
             self.mean = dt
             return False
@@ -64,6 +74,10 @@ class StepTimer:
                         and dt > self.factor * self.mean)
         if is_straggler:
             self.straggler_steps.append(step)
+            if self.registry is not None:
+                self.registry.counter("stragglers").inc()
+                self.registry.event("straggler", step=step, dt_ms=dt * 1e3,
+                                    mean_ms=self.mean * 1e3)
         else:
             # stragglers don't pollute the baseline
             self.mean = (1 - self.alpha) * self.mean + self.alpha * dt
@@ -83,11 +97,17 @@ class Supervisor:
     fault_injector: Optional[FaultInjector] = None
     max_restarts: int = 10
     on_straggler: Optional[Callable[[int], None]] = None
+    registry: Optional[MetricRegistry] = None
 
     def __post_init__(self):
-        self.timer = StepTimer()
+        self.timer = StepTimer(registry=self.registry)
         self.restarts = 0
         self.metrics_log: List[Dict] = []
+
+    def _emit(self, event: str, **fields) -> None:
+        if self.registry is not None:
+            self.registry.counter(event + "s").inc()
+            self.registry.event(event, **fields)
 
     # ------------------------------------------------------------------
     def _restore_or_init(self):
@@ -121,12 +141,15 @@ class Supervisor:
                 if step % self.ckpt_every == 0:
                     ckpt_lib.save_async(self.ckpt_dir, state, step)
                     ckpt_lib.gc_old(self.ckpt_dir, keep=self.keep)
+                    self._emit("checkpoint", step=step, kind="async")
             except Exception:
                 self.restarts += 1
                 if self.restarts > self.max_restarts:
                     raise
                 ckpt_lib.wait_for_async_saves()
                 state, step = self._restore_or_init()
+                self._emit("restart", step=step, restarts=self.restarts)
         ckpt_lib.wait_for_async_saves()
         ckpt_lib.save(self.ckpt_dir, state, total_steps)
+        self._emit("checkpoint", step=total_steps, kind="final")
         return state

@@ -50,9 +50,38 @@ import numpy as np
 
 from repro.core.engine import Engine
 from repro.jaxsac.graph import GNode, GraphBuilder, Handle, level_schedule
+from repro.obs.record import LevelRecord, PhaseSpan, PropagationRecord
+from repro.obs.recorder import TraceMethods
 from .tracer import BlockArray
 
 __all__ = ["HostHandle", "EngineFragment"]
+
+
+class _LevelCountingEngine:
+    """Engine facade that attributes reader (re-)executions to one dag
+    level: every reader registered through it increments the shared
+    per-level counter when it runs.  This is the host backend's exact
+    per-level recompute attribution — pure host Python, always on (the
+    engine is synchronous; one list increment per reader execution)."""
+
+    __slots__ = ("eng", "counts", "level")
+
+    def __init__(self, eng, counts: List[int], level: int):
+        self.eng = eng
+        self.counts = counts
+        self.level = level
+
+    def read(self, mods, reader):
+        counts, lvl = self.counts, self.level
+
+        def counting(*vals):
+            counts[lvl] += 1
+            return reader(*vals)
+
+        return self.eng.read(mods, counting)
+
+    def __getattr__(self, name):
+        return getattr(self.eng, name)
 
 
 class _Blk:
@@ -84,7 +113,7 @@ def _store(nd: GNode, res) -> _Blk:
     return _Blk(a)
 
 
-class HostHandle:
+class HostHandle(TraceMethods):
     """Compiled program on the host engine (same facade as GraphHandle)."""
 
     backend = "host"
@@ -104,6 +133,13 @@ class HostHandle:
         self._mods: List[List] = []
         self._inputs_np: Dict[str, np.ndarray] = {}
         self._stats: Dict[str, Any] = {}
+        # Per-level reader-execution counts (always maintained; a
+        # recorder reads update deltas out of them).
+        self._reexec: List[int] = [0] * len(self.schedule)
+
+    def _eng_for(self, idx: int) -> _LevelCountingEngine:
+        return _LevelCountingEngine(self._eng, self._reexec,
+                                    self.level_of[idx])
 
     # ------------------------------------------------------------------
     # Initial run
@@ -114,6 +150,7 @@ class HostHandle:
             f"inputs {sorted(inputs)} != declared "
             f"{sorted(self.input_names)}")
         self._eng = eng = Engine()
+        self._reexec = [0] * len(self.schedule)
         self._mods = [[eng.mod(f"{nd.name}[{i}]")
                        for i in range(nd.num_blocks)] for nd in self.nodes]
         for name, idx in self.input_names.items():
@@ -146,7 +183,7 @@ class HostHandle:
     # ------------------------------------------------------------------
     def _lower(self, idx: int) -> None:
         nd = self.nodes[idx]
-        eng = self._eng
+        eng = self._eng_for(idx)
         out = self._mods[idx]
         par0 = self._mods[nd.deps[0]]
 
@@ -353,7 +390,7 @@ class HostHandle:
         ``rows=True`` treats values as one-row blocks (``v.a[0]``,
         escan); ``rows=False`` combines raw state arrays (carry-causal).
         """
-        eng = self._eng
+        eng = self._eng_for(nd.idx)
         op = nd.op
 
         def combine(a, b, name):
@@ -409,6 +446,9 @@ class HostHandle:
         changed = {**(inputs or {}), **changed}
         unknown = set(changed) - set(self.input_names)
         assert not unknown, f"unknown inputs {sorted(unknown)}"
+        rec = self._recorder
+        t_start = rec.clock() if rec is not None else 0.0
+        pre = list(self._reexec)
         eng = self._eng
         dirty_inputs = 0
         for name, new in changed.items():
@@ -424,6 +464,7 @@ class HostHandle:
                     dirty_inputs += 1
                 eng.write(self._mods[idx][i], _Blk(blk.copy()))
             self._inputs_np[name] = arr.copy()
+        t_mark = rec.clock() if rec is not None else 0.0
         st = self._comp.propagate()
         self._stats = {
             "phase": "update",
@@ -433,7 +474,41 @@ class HostHandle:
             "work": st.work, "span": st.span, "reads": st.reads,
             "mark_work": st.mark_work,
         }
+        if rec is not None:
+            rec.emit(self._build_record(rec, t_start, t_mark, rec.clock(),
+                                        pre, dirty_inputs, st))
         return self.outputs()
+
+    def _build_record(self, rec, t_start, t_mark, t_end, pre,
+                      dirty_inputs, st) -> PropagationRecord:
+        """One PropagationRecord in the shared schema: per-level
+        ``recomputed`` is the exact count of re-executed readers per dag
+        level (the ``_LevelCountingEngine`` deltas), and the engine is
+        synchronous, so every timing is real wall-clock — host records
+        are always 'fenced'."""
+        deltas = [self._reexec[li] - pre[li]
+                  for li in range(len(self.schedule))]
+        levels = []
+        for li, lvl in enumerate(self.schedule):
+            ops = [i for i in lvl if self.nodes[i].kind != "input"]
+            levels.append(LevelRecord(
+                level=li, nodes=len(ops),
+                regimes=({"readers": len(ops)} if ops
+                         else {"input": len(lvl)}),
+                recomputed=deltas[li]))
+        return PropagationRecord(
+            substrate="host", seq=rec.next_seq(), mode=rec.mode,
+            t_start=t_start,
+            phases=[PhaseSpan("mark", t_start, t_mark - t_start),
+                    PhaseSpan("execute", t_mark, t_end - t_mark)],
+            levels=levels,
+            counters={"recomputed": st.affected_readers,
+                      "affected": st.changed_writes,
+                      "dirty_inputs": dirty_inputs,
+                      "work": st.work, "span": st.span,
+                      "reads": st.reads, "mark_work": st.mark_work,
+                      "rec_per_level": deltas},
+            fenced=True)
 
     # ------------------------------------------------------------------
     @property

@@ -43,6 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.jaxsac.graph import GraphBuilder, Handle
+from repro.obs.record import PhaseSpan, merge_records
+from repro.obs.recorder import PropagationRecorder, TraceMethods
 from .tracer import BlockArray
 
 __all__ = ["HybridHandle", "partition_regions", "Region"]
@@ -93,7 +95,7 @@ def partition_regions(nodes) -> List[Region]:
             sorted(groups.items(), key=lambda kv: (kv[0][1], kv[1][0]))]
 
 
-class HybridHandle:
+class HybridHandle(TraceMethods):
     """Compiled program on the hybrid runtime (same facade as
     GraphHandle / HostHandle)."""
 
@@ -133,6 +135,34 @@ class HybridHandle:
         self._inp: Dict[str, jax.Array] = {}
         self._bvals: Dict[int, jax.Array] = {}
         self._stats: Dict[str, Any] = {}
+        self._child_rec: Optional[PropagationRecorder] = None
+
+    def _attach_recorder(self, rec) -> None:
+        """The hybrid handle records through ONE shared child recorder
+        attached to every fragment's CompiledGraph; each update drains
+        the per-fragment records and merges them into a single parent
+        record (the consumer sees one record per update, fragments as
+        drill-down children)."""
+        super()._attach_recorder(rec)
+        if rec is None:
+            self._child_rec = None
+            for reg in self.regions:
+                reg.cg.attach_recorder(None)
+            return
+        self._child_rec = PropagationRecorder(mode=rec.mode, flight=0)
+        for reg in self.regions:
+            reg.cg.attach_recorder(self._child_rec)
+
+    def _plan_cache_merged(self) -> Dict[str, Any]:
+        """The fragments' plan caches as one stats entry: cumulative
+        hit/miss/eviction counters summed, size/cap reported per
+        fragment (summing capacities would suggest one shared LRU)."""
+        snaps = [reg.cg.plan_cache_snapshot() for reg in self.regions]
+        return {"hits": sum(s["hits"] for s in snaps),
+                "misses": sum(s["misses"] for s in snaps),
+                "evictions": sum(s["evictions"] for s in snaps),
+                "size": [s["size"] for s in snaps],
+                "cap": [s["cap"] for s in snaps]}
 
     # ------------------------------------------------------------------
     def _build_fragment(self, reg: Region, exported) -> None:
@@ -199,6 +229,11 @@ class HybridHandle:
         changed = {**(inputs or {}), **changed}
         unknown = set(changed) - set(self.input_names)
         assert not unknown, f"unknown inputs {sorted(unknown)}"
+        parent = self._recorder
+        t_start = parent.clock() if parent is not None else 0.0
+        if self._child_rec is not None:
+            self._child_rec.mode = parent.mode   # profile() may flip it
+            self._child_rec.clear()
         new_inp = dict(self._inp)
         for k, v in changed.items():
             new_inp[k] = jnp.asarray(v)
@@ -243,7 +278,23 @@ class HybridHandle:
             "phase": "update", "recomputed": rec, "affected": aff,
             "dirty_inputs": sum(in_dirty.values()),
             "fragments_run": frags_run,
+            "plan_cache": self._plan_cache_merged(),
         }
+        if parent is not None:
+            children = (self._child_rec.drain()
+                        if self._child_rec is not None else [])
+            t_end = parent.clock()
+            merged = merge_records(
+                children, substrate="hybrid", seq=parent.next_seq(),
+                mode=parent.mode, t_start=t_start,
+                phases=[PhaseSpan("execute", t_start, t_end - t_start)],
+                plan_cache=self._stats["plan_cache"])
+            # The merged child counters sum per-fragment dirty_inputs,
+            # which also counts boundary (inter-fragment) inputs; the
+            # program-level number is the real-input one.
+            merged.counters["dirty_inputs"] = self._stats["dirty_inputs"]
+            merged.counters["fragments_run"] = frags_run
+            parent.emit(merged)
         return self.outputs()
 
     def _count_diff(self, name: str, old, new) -> int:

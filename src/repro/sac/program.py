@@ -29,6 +29,8 @@ from typing import Any, Dict, List, Optional, Tuple, Union
 import jax
 
 from repro.jaxsac.graph import GraphBuilder, Handle
+from repro.obs import PropagationRecorder
+from repro.obs.recorder import MODES, TraceMethods
 from . import tracer as _tracer
 from .tracer import BlockArray
 
@@ -116,7 +118,8 @@ class IncrementalProgram:
                 pallas_tile: int = 8, dirty: str = "mask",
                 donate: bool = True, block_skip="auto", plan: bool = True,
                 mesh=None, shards: Optional[int] = None,
-                plan_cache: int = 64, **input_specs):
+                plan_cache: int = 64, trace: Optional[str] = None,
+                trace_flight: int = 64, **input_specs):
         """Trace and lower.  ``input_specs`` give every input's leading
         size (int, shape tuple, or example array); remaining kwargs are
         backend options (see ``GraphBuilder.compile``).  ``backend``
@@ -140,39 +143,54 @@ class IncrementalProgram:
         ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
         ``plan_cache`` bounds the dirty-signature LRU of frozen
         propagation plans (``stats["plan_cache"]`` reports
-        hits/misses/evictions)."""
+        hits/misses/evictions).
+
+        ``trace="counters"`` attaches a ``PropagationRecorder`` (one
+        ``PropagationRecord`` per update in a bounded flight ring of
+        ``trace_flight``; zero extra host syncs on the planned path) and
+        ``trace="deep"`` additionally fences per-level executions for
+        real per-level wall-clock; ``handle.record`` / ``.records()`` /
+        ``.profile()`` read them back (repro.obs)."""
         if shards is not None:
             assert mesh is None, "pass shards= or mesh=, not both"
             from repro.shardlib import block_mesh
 
             mesh = block_mesh(shards)
+        if trace is not None:
+            assert trace in MODES, (
+                f"trace={trace!r} (expected one of {MODES} or None)")
         g, outs, single = self.trace(**input_specs)
         if backend == "graph":
             cg = g.compile(max_sparse=max_sparse, use_pallas=use_pallas,
                            interpret=interpret, pallas_tile=pallas_tile,
                            dirty=dirty, donate=donate, block_skip=block_skip,
                            plan=plan, mesh=mesh, plan_cache=plan_cache)
-            return GraphHandle(cg, outs, single)
-        if backend == "host":
+            handle = GraphHandle(cg, outs, single)
+        elif backend == "host":
             assert mesh is None, (
                 "backend='host' runs on the host engine; sharding applies "
                 "to the graph and hybrid backends")
             from .host import HostHandle
 
-            return HostHandle(g, outs, single)
-        if backend == "hybrid":
+            handle = HostHandle(g, outs, single)
+        elif backend == "hybrid":
             from .hybrid import HybridHandle
 
-            return HybridHandle(g, outs, single, max_sparse=max_sparse,
-                                use_pallas=use_pallas, interpret=interpret,
-                                pallas_tile=pallas_tile, dirty=dirty,
-                                donate=donate, block_skip=block_skip,
-                                plan=plan, mesh=mesh, plan_cache=plan_cache)
-        raise ValueError(f"unknown backend {backend!r} "
-                         "(expected 'graph', 'host', or 'hybrid')")
+            handle = HybridHandle(g, outs, single, max_sparse=max_sparse,
+                                  use_pallas=use_pallas, interpret=interpret,
+                                  pallas_tile=pallas_tile, dirty=dirty,
+                                  donate=donate, block_skip=block_skip,
+                                  plan=plan, mesh=mesh, plan_cache=plan_cache)
+        else:
+            raise ValueError(f"unknown backend {backend!r} "
+                             "(expected 'graph', 'host', or 'hybrid')")
+        if trace is not None:
+            handle._attach_recorder(
+                PropagationRecorder(mode=trace, flight=trace_flight))
+        return handle
 
 
-class GraphHandle:
+class GraphHandle(TraceMethods):
     """Compiled program on the jitted graph runtime (stateful facade)."""
 
     backend = "graph"
@@ -183,6 +201,10 @@ class GraphHandle:
         self._single = single
         self._state = None
         self._stats: Dict[str, Any] = {}
+
+    def _attach_recorder(self, rec) -> None:
+        super()._attach_recorder(rec)
+        self.cg.attach_recorder(rec)
 
     # ------------------------------------------------------------------
     def run(self, inputs: Optional[Dict[str, Any]] = None, **kw):

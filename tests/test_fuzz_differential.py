@@ -371,5 +371,42 @@ def test_fuzz_differential_hypothesis(spec):
     check_spec(spec)
 
 
+# ---------------------------------------------------------------------------
+# Deep-trace lane: the fenced per-level executables must be bitwise
+# identical to the single planned executable they replace.
+# ---------------------------------------------------------------------------
+def test_fuzz_corpus_deep_trace():
+    """One corpus case under ``trace='deep'``: outputs and stats must be
+    bitwise identical to the untraced run (the per-level jits cross the
+    level boundary as dirty masks — lossless for both dirty reps), and
+    every level must carry a real fenced wall-clock."""
+    files = _corpus_files()
+    assert files, "no fuzz corpus checked in"
+    spec = json.loads(files[0].read_text())["spec"]
+    prog, n, _block = build_program(spec)
+    plain = prog.compile(x0=n, x1=n, max_sparse=4)
+    deep = prog.compile(x0=n, x1=n, max_sparse=4, trace="deep")
+    x0, x1 = _inputs(spec)
+    ref = plain.run(x0=x0, x1=x1)
+    out = deep.run(x0=x0, x1=x1)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for r, edit in enumerate(spec["edits"]):
+        x0, x1 = _apply_edit(x0, x1, edit, n)
+        ref = plain.update(x0=x0, x1=x1)
+        out = deep.update(x0=x0, x1=x1)
+        for a, b in zip(ref, out):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"deep-trace edit {r}, spec={spec}")
+        sp, sd = plain.stats, deep.stats
+        for key in ("recomputed", "affected", "dirty_inputs"):
+            assert int(sp[key]) == int(sd[key]), (key, r, sp, sd)
+        rec = deep.record
+        assert rec is not None and rec.fenced
+        d = rec.to_dict()
+        assert all(lv["ms"] is not None for lv in d["levels"]), d["levels"]
+
+
 if HAVE_HYPOTHESIS:  # keep the shim import "used" for linters
     pass

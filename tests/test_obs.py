@@ -1,0 +1,340 @@
+"""Observability layer: records, sync-point rule, Chrome trace, metrics.
+
+The contract under test (DESIGN.md §Observability):
+
+  * every backend — graph, host, hybrid, and the mesh-sharded graph —
+    emits one ``PropagationRecord`` per update with phase timings,
+    per-level counts + regime labels, and plan-cache state;
+  * ``trace="counters"`` adds ZERO host sync points to the planned
+    propagate (asserted by counting ``repro.obs.syncpoints`` calls with
+    tracing off vs on) and leaves stats bitwise unchanged;
+  * ``trace="deep"`` fences per level and records real per-level ms;
+  * the Chrome-trace export is valid JSON with per-row monotonic
+    timestamps and one complete event per phase and per level;
+  * the metric registry / flight ring / JSONL sink and the supervisor's
+    straggler + checkpoint/restart events all round-trip.
+"""
+import io
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.sac as sac
+from repro.obs import (JsonlSink, MetricRegistry, PropagationRecorder,
+                       chrome_trace, syncpoints)
+from repro.obs.record import (LevelRecord, PhaseSpan, PropagationRecord,
+                              merge_records)
+
+N, BLOCK = 256, 16
+
+
+@sac.incremental(block=BLOCK)
+def pipeline(x):
+    y = x * 2.0 + 1.0
+    s = sac.stencil(lambda w: w[BLOCK:2 * BLOCK]
+                    + 0.5 * (w[:BLOCK] + w[2 * BLOCK:]), y, radius=1)
+    return sac.reduce(jnp.add, s, identity=0.0)
+
+
+def _data(seed=0):
+    rng = np.random.default_rng(seed)
+    x0 = rng.integers(-5, 6, N).astype(np.float32)
+    x1 = x0.copy()
+    x1[3] += 1.0
+    x1[200] += 2.0
+    return x0, x1
+
+
+BACKENDS = [("graph", {}), ("graph", {"shards": 2}),
+            ("host", {}), ("hybrid", {}), ("hybrid", {"shards": 2})]
+
+
+@pytest.mark.parametrize("backend,kw", BACKENDS,
+                         ids=[f"{b}{'-sh' if k else ''}" for b, k in BACKENDS])
+def test_record_per_backend(backend, kw):
+    """One update on every substrate yields a record with phases,
+    per-level counts, and regime labels — and outputs stay bitwise
+    identical to the untraced handle."""
+    mode = "counters" if backend == "host" else "deep"
+    x0, x1 = _data()
+    h = pipeline.compile(backend=backend, trace=mode, x=N, **kw)
+    h.run(x=x0)
+    out = h.update(x=x1)
+    plain = pipeline.compile(backend=backend, x=N, **kw)
+    plain.run(x=x0)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(plain.update(x=x1)))
+    rec = h.record
+    assert rec is not None
+    d = rec.to_dict()
+    assert d["substrate"] == backend
+    assert d["mode"] == mode
+    assert [p["name"] for p in d["phases"]]
+    assert d["counters"]["dirty_inputs"] == 2
+    assert d["counters"]["recomputed"] == int(plain.stats["recomputed"])
+    lvls = d["levels"]
+    assert lvls and all("regimes" in lv for lv in lvls)
+    assert sum(lv["recomputed"] or 0 for lv in lvls) \
+        == d["counters"]["recomputed"]
+    assert any(lv["regimes"] for lv in lvls)
+    if mode == "deep" and backend == "graph" and not kw:
+        assert d["fenced"]
+        assert all(lv["ms"] is not None for lv in lvls)
+    if kw.get("shards"):
+        assert d["collectives"], d
+    # the export is always valid JSON
+    json.dumps(chrome_trace([rec]))
+
+
+def test_counters_mode_adds_zero_host_syncs():
+    """The sync-point rule: the planned propagate makes exactly the
+    same sequence of host syncs with ``trace='counters'`` as with
+    tracing off — and stats are bitwise unchanged."""
+    x0, x1 = _data()
+
+    def syncs_of(h):
+        h.run(x=x0)
+        h.update(x=x1)          # warm: plan freeze + compile
+        h.update(x=x0)
+        calls = []
+        old = syncpoints.HOOK
+        syncpoints.HOOK = lambda tag, kind: calls.append((tag, kind))
+        try:
+            h.update(x=x1)
+            st = h.stats
+        finally:
+            syncpoints.HOOK = old
+        return calls, st
+
+    plain_calls, plain_stats = syncs_of(pipeline.compile(x=N))
+    traced_calls, traced_stats = syncs_of(
+        pipeline.compile(x=N, trace="counters"))
+    assert traced_calls == plain_calls
+    assert plain_calls == [("mark_counts", "host_read")]
+    for key in ("recomputed", "affected", "dirty_inputs"):
+        assert plain_stats[key] == traced_stats[key], key
+
+
+def test_deep_mode_fences_are_tagged():
+    """Deep mode pays for per-level wall-clock with per-level fences —
+    all routed through syncpoints, tagged with the level."""
+    x0, x1 = _data()
+    h = pipeline.compile(x=N, trace="deep")
+    h.run(x=x0)
+    h.update(x=x1)
+    h.update(x=x0)
+    calls = []
+    old = syncpoints.HOOK
+    syncpoints.HOOK = lambda tag, kind: calls.append((tag, kind))
+    try:
+        h.update(x=x1)
+    finally:
+        syncpoints.HOOK = old
+    fences = [t for t, k in calls if k == "fence"]
+    assert any(t.startswith("level_") for t in fences), calls
+    assert ("mark_counts", "host_read") in calls
+
+
+def test_chrome_trace_schema():
+    """Valid trace-event JSON: thread-name metadata per row, one
+    complete event per phase and per level, monotonic ts per row."""
+    x0, x1 = _data()
+    h = pipeline.compile(x=N, trace="deep")
+    h.run(x=x0)
+    h.update(x=x1)
+    trace = json.loads(json.dumps(chrome_trace([h.record])))
+    evs = trace["traceEvents"]
+    metas = [e for e in evs if e["ph"] == "M"]
+    assert metas and all(e["name"] == "thread_name" for e in metas)
+    X = [e for e in evs if e["ph"] == "X"]
+    names = {e["name"] for e in X}
+    assert {"mark", "plan", "execute"} <= names
+    n_levels = len(h.record.levels)
+    assert sum(1 for e in X if e["name"].startswith("L")) == n_levels
+    for e in X:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+    by_tid = {}
+    for e in X:
+        if e["cat"] == "level":
+            by_tid.setdefault(e["tid"], []).append(e["ts"])
+    for tids in by_tid.values():
+        assert tids == sorted(tids)
+        assert len(set(tids)) == len(tids), "level ts not strictly increasing"
+
+
+def test_profile_api(tmp_path):
+    """``handle.profile()`` works on a handle compiled WITHOUT trace=
+    (temporary deep recorder), writes the trace file, and detaches."""
+    x0, x1 = _data()
+    h = pipeline.compile(x=N)
+    h.run(x=x0)
+    out = tmp_path / "trace.json"
+    trace = h.profile({"x": x1}, path=str(out))
+    assert h.recorder is None                 # temp recorder detached
+    assert trace["traceEvents"]
+    disk = json.loads(out.read_text())
+    assert disk == json.loads(json.dumps(trace))
+    # deep mode was forced: levels carry fenced ms
+    lvl = [e for e in trace["traceEvents"]
+           if e.get("cat") == "level"]
+    assert lvl and any(e["dur"] > 0 for e in lvl)
+
+
+def test_flight_recorder_bounded():
+    """The flight ring keeps the last N records; dump() is JSON-able."""
+    x0, x1 = _data()
+    h = pipeline.compile(x=N, trace="counters", trace_flight=3)
+    h.run(x=x0)
+    for i in range(5):
+        h.update(x=x1 if i % 2 == 0 else x0)
+    recs = h.records()
+    assert len(recs) == 3
+    assert [r.seq for r in recs] == [2, 3, 4]
+    dump = h.recorder.dump()
+    json.dumps(dump)
+    assert len(dump) == 3 and dump[-1]["seq"] == 4
+
+
+def test_hybrid_merged_plan_cache_shape():
+    """Satellite pin: the hybrid backend's ``stats['plan_cache']`` is
+    the merged per-fragment summary — scalar hit/miss/eviction sums,
+    per-fragment size/cap lists — and is always present."""
+    x0, x1 = _data()
+    h = pipeline.compile(backend="hybrid", x=N)
+    h.run(x=x0)
+    h.update(x=x1)
+    pc = h.stats["plan_cache"]
+    assert set(pc) == {"hits", "misses", "evictions", "size", "cap"}
+    for k in ("hits", "misses", "evictions"):
+        assert isinstance(pc[k], int), (k, pc)
+    assert isinstance(pc["size"], list) and isinstance(pc["cap"], list)
+    assert len(pc["size"]) == len(pc["cap"]) >= 1
+    assert pc["misses"] >= 1
+    h.update(x=x0)
+    h.update(x=x1)
+    assert h.stats["plan_cache"]["hits"] >= 1
+
+
+def test_merge_records_sums_and_tags():
+    a = PropagationRecord(
+        substrate="graph", seq=0, mode="counters", t_start=0.0,
+        levels=[LevelRecord(level=0, nodes=1, regimes={"dense": 1},
+                            recomputed=3)],
+        counters={"recomputed": 3}, collectives={"mark": {"x:psum": 1}})
+    b = PropagationRecord(
+        substrate="graph", seq=0, mode="counters", t_start=0.0,
+        levels=[LevelRecord(level=0, nodes=2, regimes={"skip": 2},
+                            recomputed=4)],
+        counters={"recomputed": 4}, collectives={"mark": {"x:psum": 2}})
+    m = merge_records([a, b], substrate="hybrid", seq=7, mode="counters",
+                      t_start=0.0,
+                      phases=[PhaseSpan("execute", 0.0, 1.0)])
+    assert m.counters["recomputed"] == 7
+    assert [lv.fragment for lv in m.levels] == ["f0", "f1"]
+    assert m.collectives == {"mark": {"x:psum": 3}}
+    assert len(m.fragments) == 2
+
+
+# ---------------------------------------------------------------------------
+# Metric registry + sink + supervisor routing
+# ---------------------------------------------------------------------------
+def test_metric_registry_and_sink():
+    buf = io.StringIO()
+    reg = MetricRegistry(sink=JsonlSink(buf))
+    reg.counter("c").inc()
+    reg.counter("c").inc(2)
+    assert reg.counter("c").value == 3
+    for v in (1.0, 2.0, 3.0, 4.0, 100.0):
+        reg.histogram("h").observe(v)
+    assert reg.histogram("h").count == 5
+    assert reg.histogram("h").percentile(50) == 3.0
+    reg.event("straggler", step=6)
+    reg.event("restart", step=7)
+    assert [e["event"] for e in reg.events()] == ["straggler", "restart"]
+    assert reg.events("restart") == [{"event": "restart", "step": 7}]
+    lines = [json.loads(l) for l in buf.getvalue().splitlines()]
+    assert lines == [{"event": "straggler", "step": 6},
+                     {"event": "restart", "step": 7}]
+    snap = reg.snapshot()
+    assert snap["counters"]["c"] == 3
+    assert snap["histograms"]["h"]["max"] == 100.0
+
+
+def test_recorder_feeds_registry():
+    x0, x1 = _data()
+    reg = MetricRegistry()
+    h = pipeline.compile(x=N)
+    h._attach_recorder(PropagationRecorder(mode="counters", registry=reg))
+    h.run(x=x0)
+    h.update(x=x1)
+    h.update(x=x0)
+    assert reg.counter("propagates").value == 2
+    assert reg.histogram("propagate_ms.graph").count == 2
+    # edit + revert share one dirty signature: one freeze, one hit
+    assert reg.counter("plan_cache.misses").value == 1
+    assert reg.counter("plan_cache.hits").value == 1
+    # the cache's live event bridge fires as they happen too
+    assert reg.counter("plan_cache.miss_events").value == 1
+    assert reg.counter("plan_cache.hit_events").value == 1
+
+
+def test_step_timer_registry_routing():
+    """Straggler events flow through the registry; the public
+    ``straggler_steps`` list is unchanged."""
+    from repro.runtime.supervisor import StepTimer
+
+    reg = MetricRegistry()
+    t = StepTimer(straggler_factor=3.0, warmup=2, registry=reg)
+    for s in range(6):
+        assert not t.observe(s, 0.1)
+    assert t.observe(6, 1.0)
+    assert t.straggler_steps == [6]
+    assert reg.counter("stragglers").value == 1
+    (ev,) = reg.events("straggler")
+    assert ev["step"] == 6
+    assert reg.histogram("step_ms").count == 7
+
+
+def test_supervisor_emits_checkpoint_and_restart_events(tmp_path):
+    from repro.data import DataPipeline
+    from repro.runtime.supervisor import FaultInjector, Supervisor
+
+    def init_state():
+        return {"w": jnp.zeros(4), "step": jnp.asarray(0)}
+
+    def step_fn(state, batch):
+        return ({"w": state["w"] + 1.0, "step": state["step"] + 1},
+                {"loss": jnp.float32(0.0)})
+
+    reg = MetricRegistry()
+    sup = Supervisor(step_fn=step_fn,
+                     pipeline=DataPipeline(512, 4, 16, seed=0),
+                     ckpt_dir=str(tmp_path), init_state=init_state,
+                     ckpt_every=5, fault_injector=FaultInjector([7]),
+                     registry=reg)
+    sup.run(10)
+    assert sup.restarts == 1
+    assert reg.counter("restarts").value == 1
+    (rs,) = reg.events("restart")
+    assert rs["step"] == 5                  # resumed from the step-5 ckpt
+    kinds = [e["kind"] for e in reg.events("checkpoint")]
+    assert kinds.count("final") == 1
+    assert reg.counter("checkpoints").value == len(kinds)
+
+
+# ---------------------------------------------------------------------------
+# Bench provenance
+# ---------------------------------------------------------------------------
+def test_bench_rows_carry_provenance():
+    import benchmarks.graph_pipeline as bench
+
+    rows = bench.bench_pipeline(1 << 10, 16, [1])
+    (r,) = rows
+    assert r["fence"] == "block_until_ready"
+    assert r["estimator"] == "best_of_reps"
+    assert r["reps"] == 5 and r["paired_interleave"] is False
+    assert r["devices"] >= 1
+    committed = json.loads(bench.BASELINE.read_text())
+    assert all("fence" in row and "estimator" in row for row in committed)
