@@ -3,7 +3,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-all test-sharded fuzz cov bench bench-graph bench-check \
-	profile
+	bench-serve test-serve profile
 
 test:
 	$(PY) -m pytest -x -q
@@ -46,6 +46,19 @@ bench-graph:
 # single-device update on the n=2^21 row, 8 host devices).
 bench-check:
 	$(PY) -m benchmarks.graph_pipeline --check
+
+# Serving lane: the COW-forest + session-server suites (fork isolation,
+# cross-session batching, evict/revive) plus the fork-corpus fuzz case.
+test-serve:
+	$(PY) -m pytest -q tests/test_forest.py tests/test_serve.py \
+	  tests/test_fuzz_differential.py -k fork
+
+# Serving-layer load benchmark + gates: 8-session batched p99 <= 2x the
+# single-session median, and fork <= 10% of a full state copy.  Rows
+# merge into results/bench/BENCH_graph.json (serve-single, serve-multi8,
+# serve-fork).
+bench-serve:
+	$(PY) -m benchmarks.serve_latency
 
 # Per-level attribution of one deep-traced update (trace="deep"): the
 # per-level table on stdout, the structured record at

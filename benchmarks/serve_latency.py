@@ -1,0 +1,246 @@
+"""Serving-layer load benchmark: session-server latency + fork cost.
+
+Three row families merge into ``results/bench/BENCH_graph.json`` (same
+app/n/block/k key space as the graph rows):
+
+  * ``serve-single``  — one session, unbatched: steady-state median
+    update latency through the server path (admission + plan +
+    commit).  This is the baseline the multi-session gate is measured
+    against.
+  * ``serve-multi8``  — 8 concurrent sessions branching one warm base,
+    same-shaped sparse edits streaming in waves so cross-session
+    batching engages.  ``update_ms`` is the p99 *service* latency
+    (plan + propagate spans per request), ``scratch_ms`` the
+    single-session median it is gated against; the row also carries
+    the end-to-end (queue-wait-included) p50/p99, throughput and
+    batch-hit-rate.
+
+  * ``serve-fork``    — COW fork cost vs a full state copy
+    (``jnp.copy`` of every leaf, the ``donate=False``-style price a
+    session would otherwise pay).  ``update_ms`` is the fork,
+    ``scratch_ms`` the copy it displaces.
+
+Both latency phases measure a steady-state window: every session first
+absorbs ``WARM_ROUNDS`` warm-up edits (paying its one-time
+copy-on-first-scatter burst and the per-signature plan freezes — costs
+that are forest/plan-cache design properties, priced by the
+``serve-fork`` row and the forest tests, not serving-tail properties),
+then ``SessionServer.reset_metrics()`` opens the measured window.
+
+Gates (CI `make bench-serve`):
+
+  * batched multi-session service p99 <= GATE_P99_X (2.0) x
+    single-session median — per-request work must stay flat under
+    8-way concurrency (batching pays the plan freeze once).  Queue
+    wait is reported but not gated: under closed-loop saturation of
+    the single executor it is ~sessions x service time by Little's
+    law, a property of the offered load, not of the serving layer;
+  * fork <= GATE_FORK_FRAC (0.10) x full state copy — branching a warm
+    base must be near-free, the premise of the whole serving layer.
+
+Usage:  PYTHONPATH=src python -m benchmarks.serve_latency [--no-gate]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.graph_pipeline import (_provenance, pipeline_program,
+                                       write_json)
+
+GATE_P99_X = 2.0
+GATE_FORK_FRAC = 0.10
+
+N, BLOCK = 1 << 15, 64
+FORK_N = 1 << 18                  # fork row: a state big enough that a
+SESSIONS, ROUNDS = 8, 6           # full copy is decisively non-trivial
+
+
+def _edit_streams(n, n_sessions, rounds, seed=0):
+    """Same-shaped sparse load: one edited lane per round, pinned to a
+    block interior so every edit quantizes to the same dirty signature
+    (a boundary lane dirties the neighbor block too — a different
+    signature, i.e. a different service class, not this load)."""
+    rng = np.random.default_rng(seed)
+    x0 = rng.standard_normal(n).astype(np.float32)
+    streams = []
+    for i in range(n_sessions):
+        x, edits = x0.copy(), []
+        for _ in range(rounds):
+            x = x.copy()
+            lane = int(rng.integers(0, n // BLOCK)) * BLOCK + BLOCK // 2
+            x[lane] += 1.0
+            edits.append({"x": x.copy()})
+        streams.append(edits)
+    return x0, streams
+
+
+WARM_ROUNDS = 2   # covers both dirty-signature classes this load emits
+
+
+def _measured_run(h, streams):
+    """Open one session per stream, absorb each stream's first
+    ``WARM_ROUNDS`` edits as warm-up (the per-session
+    copy-on-first-scatter burst plus one plan freeze per signature
+    class), then measure the rest through a fresh metrics window.  A
+    plan freeze inside the window would bury the steady-state p99
+    under a one-time compile — asserted against, not filtered out.
+    Returns (registry, summary, measured_wall_s)."""
+    import asyncio
+
+    async def _main():
+        async with h.serve() as server:
+            sids = [await server.open() for _ in streams]
+            for w in range(WARM_ROUNDS):
+                await asyncio.gather(*[server.submit(sid, **streams[i][w])
+                                       for i, sid in enumerate(sids)])
+            server.reset_metrics()
+            reg = server.registry
+            misses0 = server.cg.plan_cache_snapshot()["misses"]
+
+            async def drive(i, sid):
+                for edit in streams[i][WARM_ROUNDS:]:
+                    await server.submit(sid, **edit)
+
+            t0 = time.perf_counter()
+            await asyncio.gather(*[drive(i, sid)
+                                   for i, sid in enumerate(sids)])
+            wall_s = time.perf_counter() - t0
+            summary = server.summary()
+            assert summary["plan_cache"]["misses"] == misses0, \
+                "plan freeze inside the measured window (warm-up too short)"
+            await server.shutdown()
+            return reg, summary, wall_s
+
+    return asyncio.run(_main())
+
+
+def bench_single(reps: int = 40, seed: int = 0):
+    """Single-session steady-state median request latency through the
+    server path (no contention: total latency ~= service)."""
+    x0, streams = _edit_streams(N, 1, reps + WARM_ROUNDS, seed)
+    h = pipeline_program(BLOCK).compile(x=N, max_sparse=64)
+    h.run(x=x0)
+    reg, summary, _wall = _measured_run(h, streams)
+    h.close()
+    assert summary["requests"] == reps
+    med = reg.histogram("serve.total_ms").percentile(50)
+    return med, {
+        "app": "serve-single", "n": N, "block": BLOCK, "k_blocks": 1,
+        "update_ms": round(med, 3), "p50_ms": round(med, 3),
+        "p99_ms": round(reg.histogram("serve.total_ms").percentile(99), 3),
+        "scratch_ms": round(med, 3), "speedup": 1.0,
+        "sessions": 1,
+        **_provenance(reps, paired=False, estimator="median"),
+    }
+
+
+def bench_multi(single_med_ms: float, seed: int = 0):
+    """8 concurrent sessions, cross-session batching, p50/p99 +
+    throughput from the server's own metric registry."""
+    x0, streams = _edit_streams(N, SESSIONS, ROUNDS + WARM_ROUNDS, seed)
+    h = pipeline_program(BLOCK).compile(x=N, max_sparse=64)
+    h.run(x=x0)
+    reg, summary, wall_s = _measured_run(h, streams)
+    h.close()
+    n_req = summary["requests"]
+    assert n_req == SESSIONS * ROUNDS
+    assert summary["batch_joins"] > 0, "load pattern failed to batch"
+    # Service time per request: the work the server does for it (plan +
+    # propagate), i.e. end-to-end latency minus queue wait.
+    service = [e["plan_ms"] + e["propagate_ms"]
+               for e in reg.events("serve.request")]
+    svc_p99 = float(np.percentile(service, 99))
+    row = {
+        "app": f"serve-multi{SESSIONS}", "n": N, "block": BLOCK,
+        "k_blocks": 1,
+        # update_ms carries the gated number: batched p99 service latency.
+        "update_ms": round(svc_p99, 3),
+        "service_p99_ms": round(svc_p99, 3),
+        "p50_ms": round(summary["p50_ms"], 3),
+        "p99_ms": round(summary["p99_ms"], 3),
+        "scratch_ms": round(single_med_ms, 3),
+        "speedup": round(single_med_ms / max(svc_p99, 1e-9), 2),
+        "sessions": SESSIONS,
+        "requests": n_req,
+        "throughput_rps": round(n_req / wall_s, 1),
+        "batch_hit_rate": round(summary["batch_hit_rate"], 3),
+        **_provenance(ROUNDS, paired=False, estimator="p99"),
+    }
+    return row
+
+
+def bench_fork(reps: int = 30, seed: int = 0):
+    """COW fork vs full state copy, same warm state."""
+    rng = np.random.default_rng(seed)
+    h = pipeline_program(BLOCK).compile(x=FORK_N, max_sparse=64)
+    h.run(x=rng.standard_normal(FORK_N).astype(np.float32))
+    base = h._forest()
+
+    fork_ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        child = base.fork()
+        fork_ts.append(time.perf_counter() - t0)
+        child.release()
+
+    state = base.state
+    copy_ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        copied = jax.tree.map(jnp.copy, state)
+        jax.block_until_ready(copied)
+        copy_ts.append(time.perf_counter() - t0)
+    h.close()
+
+    fork_ms = float(np.median(fork_ts)) * 1e3
+    copy_ms = float(np.median(copy_ts)) * 1e3
+    row = {
+        "app": "serve-fork", "n": FORK_N, "block": BLOCK, "k_blocks": 0,
+        "update_ms": round(fork_ms, 4),       # the fork
+        "scratch_ms": round(copy_ms, 3),      # the copy it displaces
+        "speedup": round(copy_ms / max(fork_ms, 1e-9), 1),
+        "fork_frac_of_copy": round(fork_ms / copy_ms, 4),
+        **_provenance(reps, paired=False, estimator="median"),
+    }
+    return fork_ms, copy_ms, row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-gate", action="store_true",
+                    help="emit rows without asserting the gates")
+    args = ap.parse_args()
+
+    single_med, row_single = bench_single()
+    row_multi = bench_multi(single_med)
+    fork_ms, copy_ms, row_fork = bench_fork()
+    rows = [row_single, row_multi, row_fork]
+    for r in rows:
+        print("  " + ", ".join(f"{k}={v}" for k, v in r.items()))
+    print(f"  -> {write_json(rows)}")
+
+    if args.no_gate:
+        return
+    bad = 0
+    p99, med = row_multi["service_p99_ms"], row_multi["scratch_ms"]
+    ok = p99 <= GATE_P99_X * med
+    print(f"  {'ok' if ok else 'FAIL'} serve gate: {SESSIONS}-session "
+          f"batched service p99 {p99}ms vs single-session median {med}ms "
+          f"(need <= {GATE_P99_X}x)")
+    bad += 0 if ok else 1
+    ok = fork_ms <= GATE_FORK_FRAC * copy_ms
+    print(f"  {'ok' if ok else 'FAIL'} fork gate: fork {fork_ms:.4f}ms vs "
+          f"full copy {copy_ms:.3f}ms "
+          f"({fork_ms / copy_ms:.1%}, need <= {GATE_FORK_FRAC:.0%})")
+    bad += 0 if ok else 1
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -35,7 +35,7 @@ import jax
 import numpy as np
 
 __all__ = ["save", "save_async", "restore", "latest_step", "list_steps",
-           "gc_old"]
+           "load_meta", "gc_old"]
 
 _MANIFEST = "MANIFEST.json"
 _COMMITTED = "COMMITTED"
@@ -51,8 +51,15 @@ def _step_dir(directory: Path, step: int) -> Path:
 
 
 def save(directory: str | os.PathLike, state: Any, step: int,
-         process_index: Optional[int] = None) -> Path:
-    """Write a committed checkpoint for ``state`` at ``step``."""
+         process_index: Optional[int] = None,
+         meta: Optional[Dict[str, Any]] = None) -> Path:
+    """Write a committed checkpoint for ``state`` at ``step``.
+
+    ``meta``, when given, is JSON-serializable side data stored in the
+    manifest — non-array parts of the state (e.g. a serving session's
+    dirty representation and warmed plan signatures) that ride the same
+    commit protocol as the arrays.
+    """
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     pidx = jax.process_index() if process_index is None else process_index
@@ -68,6 +75,7 @@ def save(directory: str | os.PathLike, state: Any, step: int,
         "num_leaves": len(leaves),
         "leaves": [],
         "process_count": jax.process_count(),
+        "meta": meta or {},
     }
     for i, (key, leaf) in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
@@ -94,14 +102,14 @@ class _AsyncSaver:
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
-    def submit(self, directory, state, step):
+    def submit(self, directory, state, step, meta=None):
         self.join()
         host_state = jax.tree.map(lambda l: np.asarray(jax.device_get(l)),
                                   state)
 
         def work():
             try:
-                save(directory, host_state, step)
+                save(directory, host_state, step, meta=meta)
             except BaseException as e:  # pragma: no cover
                 self._error = e
 
@@ -120,9 +128,9 @@ class _AsyncSaver:
 _SAVER = _AsyncSaver()
 
 
-def save_async(directory, state, step) -> None:
+def save_async(directory, state, step, meta=None) -> None:
     """Device->host copy now, disk I/O on a background thread."""
-    _SAVER.submit(directory, state, step)
+    _SAVER.submit(directory, state, step, meta=meta)
 
 
 def wait_for_async_saves() -> None:
@@ -144,6 +152,21 @@ def list_steps(directory) -> List[int]:
 def latest_step(directory) -> Optional[int]:
     steps = list_steps(directory)
     return steps[-1] if steps else None
+
+
+def load_meta(directory, step: Optional[int] = None) -> Dict[str, Any]:
+    """The ``meta`` side data of a committed checkpoint (``{}`` for
+    checkpoints written before meta existed)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {directory}")
+    d = _step_dir(directory, step)
+    if not (d / _COMMITTED).exists():
+        raise FileNotFoundError(f"checkpoint {d} not committed")
+    manifest = json.loads((d / _MANIFEST).read_text())
+    return manifest.get("meta", {})
 
 
 def restore(directory, abstract_state: Any, step: Optional[int] = None,

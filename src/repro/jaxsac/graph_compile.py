@@ -74,6 +74,7 @@ distance W_delta), ``stats['affected']`` the value-changed blocks.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -93,7 +94,26 @@ from .graph import (ELEMENTWISE_KINDS, GNode, GraphBuilder, Handle,
                     level_schedule)
 from .plancache import PlanCache, PlanEntry, next_pow2
 
-__all__ = ["CompiledGraph"]
+__all__ = ["CompiledGraph", "PendingUpdate"]
+
+
+@dataclasses.dataclass
+class PendingUpdate:
+    """A marked-but-not-executed update: the owned inputs, the mark
+    masks, and the frozen quantized plan (the dirty signature).
+
+    The two-phase currency of the serving layer (``repro.serve``):
+    ``CompiledGraph.plan_update`` produces one without touching the
+    state, and equal ``plan`` fields across *different sessions* of one
+    trace mean the updates are batch-compatible — they dispatch through
+    one plan-cache entry, so a batch pays the executable freeze at most
+    once."""
+
+    inputs: Dict[str, jax.Array]
+    in_masks: Dict[str, jax.Array]
+    node_masks: Dict[str, jax.Array]
+    counts: np.ndarray
+    plan: Tuple[Any, ...]
 
 
 def _feat_size(shape: Tuple[int, ...]) -> int:
@@ -211,6 +231,12 @@ class CompiledGraph:
         self._mark_fn = jax.jit(self._mark_impl)
         self._plan_cache = PlanCache(cap=plan_cache)
         self._sharder = None             # built at init under a mesh
+        # Non-donating propagate for the COW forest's fallback paths
+        # (built lazily) and the abstract state spec recorded at first
+        # init (checkpoint restore needs the leaf shapes/dtypes without
+        # a live state in hand).
+        self._prop_copy_fn = None
+        self._abstract = None
         # ---- observability (repro.obs) --------------------------------
         # Recorder is OFF by default: with no recorder attached the
         # planned path takes zero extra host syncs (the only host read
@@ -285,6 +311,9 @@ class CompiledGraph:
             assert got == nd.n, (
                 f"input {name!r}: leading size {got}, traced with {nd.n}")
         state = self._init_fn(_own_inputs(inputs))
+        if self._abstract is None:
+            self._abstract = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
         if self._ks is None:             # auto crossover: calibrate once
             # escan always takes a dense/block-skip carry pass, so its
             # crossover is dead — don't pay timed runs for it.
@@ -318,6 +347,12 @@ class CompiledGraph:
     def result(self, state, handle: Optional[Handle] = None) -> jax.Array:
         idx = self.outputs[0] if handle is None else handle.idx
         return state["v"][idx]
+
+    def abstract_state(self):
+        """ShapeDtypeStruct pytree of the propagation state (recorded at
+        first ``init``) — the restore spec for checkpointed sessions."""
+        assert self._abstract is not None, "abstract_state() before init()"
+        return self._abstract
 
     def attach_recorder(self, recorder) -> None:
         """Attach (or detach with ``None``) a ``PropagationRecorder``;
@@ -536,15 +571,14 @@ class CompiledGraph:
                                            nd.num_blocks)))
         return tuple(plan)
 
-    def _prop_planned_impl(self, state, new_inputs, in_masks, node_masks,
-                           plan):
-        """Plan-specialized recompute: one straight-line executable per
-        distinct plan (each owned by its plan-cache entry).  Skipped
-        nodes pass through untouched; nothing branches at runtime, and
-        sparse gather indices come from the mark masks on device
-        (``mask_indices``), never from a host read."""
-        vals = list(state["v"])
-        carries = dict(state["c"])
+    def _run_planned(self, vals, carries, new_inputs, in_masks,
+                     node_masks, plan):
+        """Drive every level of the plan-specialized recompute, mutating
+        ``vals`` / ``carries`` in place, and return the stats dict.
+        Shared verbatim by the whole-state executable
+        (``_prop_planned_impl``) and the split donated/kept COW
+        executable (``_prop_cow_impl``), so forest propagation is the
+        same math by construction."""
         changed: List[Any] = [None] * len(self.nodes)
         rec_lvls: List[jax.Array] = []
         aff_lvls: List[jax.Array] = []
@@ -564,12 +598,125 @@ class CompiledGraph:
             affected += a
             dirty_inputs += di
 
-        stats = {"recomputed": recomputed, "affected": affected,
-                 "dirty_inputs": dirty_inputs,
-                 "rec_per_level": jnp.stack(rec_lvls),
-                 "aff_per_level": jnp.stack(aff_lvls),
-                 **self._boundary_stats(changed)}
+        return {"recomputed": recomputed, "affected": affected,
+                "dirty_inputs": dirty_inputs,
+                "rec_per_level": jnp.stack(rec_lvls),
+                "aff_per_level": jnp.stack(aff_lvls),
+                **self._boundary_stats(changed)}
+
+    def _prop_planned_impl(self, state, new_inputs, in_masks, node_masks,
+                           plan):
+        """Plan-specialized recompute: one straight-line executable per
+        distinct plan (each owned by its plan-cache entry).  Skipped
+        nodes pass through untouched; nothing branches at runtime, and
+        sparse gather indices come from the mark masks on device
+        (``mask_indices``), never from a host read."""
+        vals = list(state["v"])
+        carries = dict(state["c"])
+        stats = self._run_planned(vals, carries, new_inputs, in_masks,
+                                  node_masks, plan)
         return {"v": tuple(vals), "c": carries}, stats
+
+    # ------------------------------------------------------------------
+    # Two-phase / copy-on-write propagation (the serving layer's API:
+    # repro.serve.forest drives these)
+    # ------------------------------------------------------------------
+    def plan_update(self, state, new_inputs) -> Optional[PendingUpdate]:
+        """Phase 1 of a split update: run the mark pass and freeze the
+        quantized plan WITHOUT touching the state (the mark jit neither
+        donates nor writes, so it is safe on a state whose buffers are
+        aliased by other forest nodes).  Returns a ``PendingUpdate`` the
+        caller executes later — or ``None`` when this compiled graph has
+        no single-device planned path (``plan=False`` or ``mesh=``) and
+        the caller must fall back to ``propagate_copy``."""
+        unknown = set(new_inputs) - set(self.input_names)
+        assert not unknown, f"unknown inputs {sorted(unknown)}"
+        assert self._ks is not None, "plan_update() before init()"
+        if not self.plan_mode or self.mesh is not None:
+            return None
+        inputs = _own_inputs(new_inputs)
+        masks, counts, node_masks = self._mark_fn(state, inputs)
+        counts_np = syncpoints.host_read(counts, "mark_counts")
+        plan = self._make_plan(counts_np, frozenset(inputs))
+        return PendingUpdate(inputs=inputs, in_masks=masks,
+                             node_masks=node_masks, counts=counts_np,
+                             plan=plan)
+
+    def cow_touched_keys(self, plan) -> Tuple[Tuple[str, ...],
+                                              Tuple[str, ...]]:
+        """``(donated, touched)`` leaf keys for ``plan`` over the flat
+        leaf namespace ``"v<i>"`` (node values) / ``"c<i>"`` (carry
+        caches).  ``touched`` is every leaf the plan writes — the leaves
+        a forest propagate must own exclusively and the executable's
+        outputs; ``donated`` excludes updated *inputs*, whose old value
+        is only read (the new value arrives via ``new_inputs``), so a
+        shared input leaf is never copied just to be overwritten."""
+        donated: List[str] = []
+        touched: List[str] = []
+        for i, nd in enumerate(self.nodes):
+            if plan[i] == "skip":
+                continue
+            touched.append(f"v{i}")
+            if nd.kind != "input":
+                donated.append(f"v{i}")
+            if _is_carry(nd):
+                touched.append(f"c{i}")
+                donated.append(f"c{i}")
+        return tuple(donated), tuple(touched)
+
+    def cow_entry(self, plan) -> Tuple[PlanEntry, bool]:
+        """``(entry, hit)`` — the plan-cache entry of the split
+        donated/kept COW executable for ``plan``, compiled on miss.  COW
+        entries share the LRU with the whole-state entries under a
+        distinct key, so forked sessions of one handle share frozen
+        plans exactly like repeated edits on one state do."""
+        key = ("cow", plan)
+        entry = self._plan_cache.lookup(key)
+        hit = entry is not None
+        if entry is None:
+            fn = jax.jit(functools.partial(self._prop_cow_impl, plan=plan),
+                         donate_argnums=(0,))
+            entry = self._plan_cache.insert(key, PlanEntry(plan, fn))
+        return entry, hit
+
+    def _prop_cow_impl(self, donated, kept, new_inputs, in_masks,
+                       node_masks, *, plan):
+        """Split-state planned recompute for the COW forest: ``donated``
+        holds exactly the leaves the plan scatters into (donated, so the
+        update stays in place), ``kept`` every other leaf, passed
+        read-only — their python arrays stay live in the caller's state,
+        which is what lets forest nodes alias them freely.  Returns only
+        the touched leaves: untouched ones never cross the executable,
+        so a small edit moves O(changed nodes) buffers, not O(state)."""
+        leaves = {**kept, **donated}
+        vals: List[Any] = [leaves[f"v{i}"] for i in range(len(self.nodes))]
+        carries: Dict[str, jax.Array] = {
+            str(i): leaves[f"c{i}"] for i in self.carry_nodes}
+        stats = self._run_planned(vals, carries, new_inputs, in_masks,
+                                  node_masks, plan)
+        _, touched = self.cow_touched_keys(plan)
+        out = {key: (carries[key[1:]] if key[0] == "c"
+                     else vals[int(key[1:])])
+               for key in touched}
+        return out, stats
+
+    def propagate_copy(self, state, new_inputs):
+        """Non-donating propagate: every output leaf is a fresh buffer
+        and the passed state stays fully valid afterwards — the COW
+        forest's fallback for compiled graphs without a single-device
+        planned path (``plan=False``, or ``mesh=`` where the sharded
+        planned executable donates whole-state, which an aliased forest
+        state cannot allow)."""
+        unknown = set(new_inputs) - set(self.input_names)
+        assert not unknown, f"unknown inputs {sorted(unknown)}"
+        inputs = _own_inputs(new_inputs)
+        if "c" not in state:
+            state = {**state, "c": {}}
+        if self.mesh is not None:
+            return self._prop_mesh_fn(state, inputs)
+        if self._prop_copy_fn is None:
+            self._prop_copy_fn = jax.jit(self._propagate_impl)
+        return self._prop_copy_fn(state, inputs)
 
     def _planned_level(self, li: int, vals, carries, changed, new_inputs,
                        in_masks, node_masks, plan):

@@ -38,12 +38,25 @@ import dataclasses
 from collections import OrderedDict
 from typing import Any, Callable, Dict, Tuple
 
-__all__ = ["PlanEntry", "PlanCache", "next_pow2"]
+__all__ = ["PlanEntry", "PlanCache", "next_pow2",
+           "plan_to_json", "plan_from_json"]
 
 
 def next_pow2(c: int) -> int:
     """Smallest power of two >= c (c >= 1)."""
     return 1 << (int(c) - 1).bit_length()
+
+
+def plan_to_json(plan: Tuple[Any, ...]) -> list:
+    """A plan signature as JSON-safe data: regime strings pass through,
+    ``("sparse", k)`` becomes ``["sparse", k]``.  Used by session
+    checkpoints to persist which signatures a session had warmed."""
+    return [list(p) if isinstance(p, tuple) else p for p in plan]
+
+
+def plan_from_json(sig: list) -> Tuple[Any, ...]:
+    """Inverse of ``plan_to_json`` — back to the hashable cache key."""
+    return tuple(tuple(p) if isinstance(p, list) else p for p in sig)
 
 
 @dataclasses.dataclass

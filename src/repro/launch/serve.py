@@ -1,13 +1,26 @@
-"""Serving steps: prefill and decode wrappers used by the dry-run and the
-serving example.  Pure functions over (params, batch/cache)."""
+"""Serving entry points.
+
+Two layers live here:
+
+  * prefill / decode step wrappers used by the dry-run and the serving
+    example — pure functions over (params, batch/cache);
+  * ``run_session_workload`` — the launcher for the multi-tenant
+    session server (repro.serve): open one session per concurrent
+    editor over a warm handle, stream each editor's edits through the
+    admission queue, return per-session results plus the server's
+    latency/batching summary.  The serving example's ``--server`` mode
+    and the serve smoke test drive this one function.
+"""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+import asyncio
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["make_prefill_step", "make_decode_step"]
+__all__ = ["make_prefill_step", "make_decode_step",
+           "run_session_workload"]
 
 
 def make_prefill_step(model, *, impl: str = "blocked") -> Callable:
@@ -19,6 +32,39 @@ def make_prefill_step(model, *, impl: str = "blocked") -> Callable:
         return logits, cache
 
     return prefill_step
+
+
+def run_session_workload(handle, edit_streams: List[List[Dict[str, Any]]],
+                         **server_opts) -> Tuple[List[List[Dict]], Dict]:
+    """Serve N concurrent editors against one warm handle.
+
+    ``edit_streams[i]`` is editor i's ordered list of edits (each a
+    ``{input_name: array}`` dict).  Each editor gets its own session
+    (a COW fork of the handle's warm state) and submits its edits in
+    order; *across* editors the submissions race, so same-round edits
+    land in one admission wave and batch when their dirty signatures
+    match.  Returns (per-editor result lists, server summary).
+
+    Synchronous facade over the asyncio server — safe to call from
+    ordinary scripts/tests (no running loop required).
+    """
+
+    async def _editor(server, stream):
+        sid = await server.open()
+        results = []
+        for edit in stream:
+            results.append(await server.submit(sid, edit))
+        return results
+
+    async def _main():
+        async with handle.serve(**server_opts) as server:
+            results = await asyncio.gather(
+                *[_editor(server, s) for s in edit_streams])
+            summary = server.summary()
+            await server.shutdown()
+        return list(results), summary
+
+    return asyncio.run(_main())
 
 
 def make_decode_step(model, *, decode_impl: str = "naive") -> Callable:

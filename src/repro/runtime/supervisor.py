@@ -98,6 +98,12 @@ class Supervisor:
     max_restarts: int = 10
     on_straggler: Optional[Callable[[int], None]] = None
     registry: Optional[MetricRegistry] = None
+    # Pluggable restore: (ckpt_dir, step) -> state.  Defaults to the
+    # train-shaped path (eval_shape over init_state + ckpt.restore);
+    # states whose abstract shape is not derivable from init_state —
+    # e.g. a serving session's propagation state — pass their own
+    # (repro.serve.forest.restore_session is the serving one).
+    restore_fn: Optional[Callable[[str, int], Any]] = None
 
     def __post_init__(self):
         self.timer = StepTimer(registry=self.registry)
@@ -115,6 +121,8 @@ class Supervisor:
         if step is None:
             state = self.init_state()
             return state, 0
+        if self.restore_fn is not None:
+            return self.restore_fn(self.ckpt_dir, step), step
         abstract = jax.eval_shape(self.init_state)
         state = ckpt_lib.restore(self.ckpt_dir, abstract, step=step)
         return state, step

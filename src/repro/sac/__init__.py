@@ -33,6 +33,17 @@ plain operators and intercepted numpy ufuncs (``np.tanh(x)`` lowers to
 ``jnp.tanh`` per block).  ``GraphBuilder`` — the imperative,
 method-per-op builder this frontend replaces — remains available as a
 deprecated shim (it is the IR the tracer records into).
+
+Handles are also *forkable* and *servable* (repro.serve)::
+
+    child = h.fork()          # COW branch: buffers alias until written
+    h.snapshot(); h.update(...); h.undo()     # speculative edit
+    server = h.serve()        # async multi-tenant session server
+    sid = await server.open(); await server.submit(sid, text=edited)
+
+``fork()`` on the graph backend is host metadata only — the COW state
+forest copies a node's buffers on first write, so many sessions branch
+one warm base without full state copies (``repro.serve.forest``).
 """
 from .program import GraphHandle, IncrementalProgram, incremental
 from .host import EngineFragment, HostHandle

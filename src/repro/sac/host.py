@@ -519,6 +519,25 @@ class HostHandle(TraceMethods):
         ``work``/``span`` are the paper's exact accounting."""
         return dict(self._stats)
 
+    # ------------------------------------------------------------------
+    def fork(self) -> "HostHandle":
+        """An independent handle over the same traced dag, seeded with
+        this handle's current inputs.  The host engine is the reference
+        semantics: fork = rebuild from the current inputs (the engine is
+        deterministic, so the child's values are bitwise this handle's),
+        at full re-run cost — the COW forest's O(changed-nodes) fork is
+        the graph runtime's optimization of exactly this operation."""
+        if self._eng is None:
+            raise RuntimeError("fork() before run()")
+        import types
+
+        shim = types.SimpleNamespace(nodes=self.nodes,
+                                     inputs=self.input_names)
+        child = HostHandle(shim, self.out_handles, self._single)
+        child._recorder = None           # reference fork: not recorded
+        child.run(**{k: v.copy() for k, v in self._inputs_np.items()})
+        return child
+
     def value(self, out) -> jax.Array:
         h = out._h if isinstance(out, BlockArray) else out
         return self._node_value(h.idx)

@@ -199,7 +199,7 @@ class HybridHandle(TraceMethods):
             f"inputs {sorted(inputs)} != declared "
             f"{sorted(self.input_names)}")
         self._inp = {k: jnp.asarray(v) for k, v in inputs.items()}
-        self._states = []
+        self._release_states()
         self._bvals = {}
         for reg in self.regions:
             ins = {name: self._fresh(d) for d, name in reg.ext_inputs}
@@ -255,8 +255,12 @@ class HybridHandle(TraceMethods):
             if not ins:
                 continue        # skeleton skip: no upstream change
             frags_run += 1
-            st, stats = reg.cg.propagate(self._states[pos], ins)
-            self._states[pos] = st
+            st = self._states[pos]
+            if isinstance(st, dict):
+                st, stats = reg.cg.propagate(st, ins)
+                self._states[pos] = st
+            else:               # forest node (after fork): COW propagate
+                stats = st.propagate(ins)
             rec += int(stats["recomputed"])
             aff += int(stats["affected"])
             for d, name in reg.ext_inputs:
@@ -296,6 +300,41 @@ class HybridHandle(TraceMethods):
             merged.counters["fragments_run"] = frags_run
             parent.emit(merged)
         return self.outputs()
+
+    # ------------------------------------------------------------------
+    # COW forest
+    # ------------------------------------------------------------------
+    def fork(self):
+        """A new independent hybrid handle branching this one's state:
+        every fragment's propagation state becomes a COW forest node and
+        the child forks each (buffers alias until first write).  The
+        skeleton metadata (boundary values, current inputs) is
+        host-side and copied by reference-swap dicts."""
+        from repro.serve.forest import ForestState
+
+        if not self._states:
+            raise RuntimeError("fork() before run()")
+        for pos, st in enumerate(self._states):
+            if isinstance(st, dict):
+                self._states[pos] = ForestState.adopt(
+                    self.regions[pos].cg, st)
+        child = object.__new__(HybridHandle)
+        child.__dict__.update(self.__dict__)   # shares fragments/recorder
+        child._states = [st.fork() for st in self._states]
+        child._inp = dict(self._inp)
+        child._bvals = dict(self._bvals)       # values replaced, never
+        child._stats = dict(self._stats)       # mutated -> safe to alias
+        return child
+
+    def close(self) -> None:
+        """Release forest claims held by this handle's fragments."""
+        self._release_states()
+
+    def _release_states(self) -> None:
+        for st in self._states:
+            if not isinstance(st, dict):
+                st.release()
+        self._states = []
 
     def _count_diff(self, name: str, old, new) -> int:
         nd = self.nodes[self.input_names[name]]

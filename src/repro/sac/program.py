@@ -199,8 +199,9 @@ class GraphHandle(TraceMethods):
         self.cg = cg                     # underlying CompiledGraph
         self.out_handles = outs
         self._single = single
-        self._state = None
+        self._state = None               # raw dict or serve.ForestState
         self._stats: Dict[str, Any] = {}
+        self._undo: List[Any] = []       # snapshot() stack (forest nodes)
 
     def _attach_recorder(self, rec) -> None:
         super()._attach_recorder(rec)
@@ -209,6 +210,7 @@ class GraphHandle(TraceMethods):
     # ------------------------------------------------------------------
     def run(self, inputs: Optional[Dict[str, Any]] = None, **kw):
         """Initial run: forward every node, memoize every block."""
+        self._release_states()
         self._state = self.cg.init({**(inputs or {}), **kw})
         self._stats = {"phase": "run",
                        "recomputed": self.cg.total_blocks,
@@ -219,12 +221,91 @@ class GraphHandle(TraceMethods):
         """Change propagation; omitted inputs are taken unchanged."""
         if self._state is None:
             raise RuntimeError("update() before run()")
-        self._state, st = self.cg.propagate(
-            self._state, {**(inputs or {}), **changed})
+        ins = {**(inputs or {}), **changed}
+        if isinstance(self._state, dict):
+            self._state, st = self.cg.propagate(self._state, ins)
+        else:                            # forest node: COW propagate
+            st = self._state.propagate(ins)
         # Keep the device-resident scalars: converting here would block
         # on the async propagate even when stats are never read.
         self._stats = {"phase": "update", **st}
         return self.outputs()
+
+    # ------------------------------------------------------------------
+    # COW forest: forking, speculative edit / undo, serving
+    # ------------------------------------------------------------------
+    def _forest(self):
+        """Promote this handle's state into the COW forest (first fork /
+        snapshot pays one O(#nodes) host-side wrap; no device copies)."""
+        from repro.serve.forest import ForestState
+
+        if self._state is None:
+            raise RuntimeError("state operation before run()")
+        if isinstance(self._state, dict):
+            self._state = ForestState.adopt(self.cg, self._state)
+        return self._state
+
+    def fork(self):
+        """A new independent handle branching this one's current state.
+
+        The child's per-node buffers alias this handle's until either
+        side first writes them (copy-on-first-scatter in the planned
+        propagate), so forking a warm base is host metadata only —
+        no ``donate=False`` full copy.  Both handles keep full
+        ``update``/``fork``/``undo`` capability."""
+        base = self._forest()
+        child = GraphHandle(self.cg, self.out_handles, self._single)
+        child._state = base.fork()
+        child._stats = dict(self._stats)
+        # Share the recorder python-side only; the cg-level attachment
+        # is already in place (same CompiledGraph).
+        child._recorder = self._recorder
+        return child
+
+    def snapshot(self) -> None:
+        """Mark the current state restorable by ``undo()`` (speculative
+        edit): keeps the current forest node and continues on a fork."""
+        base = self._forest()
+        self._undo.append(base)
+        self._state = base.fork()
+
+    def undo(self) -> None:
+        """Discard every update since the last ``snapshot()`` — a fork
+        discard: the speculative node releases its buffer claims and the
+        snapshot becomes current again."""
+        if not self._undo:
+            raise RuntimeError("undo() without snapshot()")
+        self._state.release()
+        self._state = self._undo.pop()
+
+    def commit(self) -> None:
+        """Accept the updates since the last ``snapshot()``: drops the
+        saved node (its exclusively-held buffers free)."""
+        if not self._undo:
+            raise RuntimeError("commit() without snapshot()")
+        self._undo.pop().release()
+
+    def serve(self, **opts):
+        """A ``repro.serve.SessionServer`` over this handle's warm
+        state: many concurrent sessions fork the base, edits stream
+        through an asyncio admission queue with cross-session batching
+        of compatible dirty signatures (see repro/serve)."""
+        from repro.serve import SessionServer
+
+        return SessionServer(self, **opts)
+
+    def close(self) -> None:
+        """Release forest claims held by this handle (no-op for a plain
+        linear-state handle)."""
+        self._release_states()
+
+    def _release_states(self) -> None:
+        if self._state is not None and not isinstance(self._state, dict):
+            self._state.release()
+        for st in self._undo:
+            st.release()
+        self._undo = []
+        self._state = None
 
     # ------------------------------------------------------------------
     @property

@@ -1,0 +1,37 @@
+"""repro.serve — propagation-as-a-service.
+
+The serving subsystem turns a warm compiled handle into shared
+infrastructure (the Incoop framing: incremental computation pays off
+when it is *a service*, not a library call):
+
+  * ``forest``  — the COW state forest: ``fork()`` a donated
+    propagation state in O(host metadata), copy-on-first-scatter only
+    the nodes the frozen plan touches, ``release()`` as undo; durable
+    via ``save_session`` / ``restore_session`` (repro.ckpt);
+  * ``session`` — one tenant: a forest node plus live/evicted/closed
+    lifecycle;
+  * ``batcher`` — the compatibility predicate and grouping: same trace
+    + same quantized dirty signature → one shared plan-cache entry;
+  * ``server``  — the asyncio admission queue: concurrent ``submit()``s
+    admitted in waves, batched across sessions, latency-accounted
+    through ``repro.obs``.
+
+Entry point: ``handle.serve()`` on a graph-backend ``sac`` handle, or
+``SessionServer(handle)`` directly.
+"""
+from .batcher import Batch, EditBatcher, EditRequest, compatible
+from .forest import ForestState, restore_session, save_session
+from .server import SessionServer
+from .session import Session
+
+__all__ = [
+    "ForestState",
+    "save_session",
+    "restore_session",
+    "Session",
+    "SessionServer",
+    "EditBatcher",
+    "EditRequest",
+    "Batch",
+    "compatible",
+]

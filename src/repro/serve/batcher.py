@@ -1,0 +1,106 @@
+"""Cross-session edit batching: group compatible pending updates.
+
+Two pending edits are *compatible* — may share one plan-cache entry and
+therefore one plan freeze — iff they target the same compiled trace
+(the same ``CompiledGraph``) and their mark passes quantized to the
+same dirty signature (``PendingUpdate.plan``).  Compatibility says
+nothing about the edited *values*: the signature is the per-node
+skip/sparse/dense regime plan, so two sessions editing different
+blocks of the same input with the same sparsity bucket still batch.
+
+The batcher is pure host logic (no asyncio, no jax): the server drains
+its admission queue, plans every admitted request (the jitted mark pass
+per session — states differ, plans often don't), hands the planned
+requests here, and executes batch by batch.  Within a batch the first
+commit freezes (or LRU-hits) the shared ``("cow", plan)`` executable
+and every subsequent member dispatches straight into it — the freeze
+cost is paid once per batch, not once per request, and since the plan
+cache is owned by the ``CompiledGraph`` the entry stays shared across
+later batches and across sessions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["EditRequest", "Batch", "EditBatcher", "compatible"]
+
+
+@dataclasses.dataclass
+class EditRequest:
+    """One admitted edit: the session it belongs to, the raw inputs, and
+    the planned (marked) update — ``pending=None`` means the graph has
+    no planned path and the request takes the unbatched fallback."""
+
+    session: Any                       # serve.session.Session
+    inputs: Dict[str, Any]
+    pending: Optional[Any] = None      # jaxsac.graph_compile.PendingUpdate
+    t_enqueue: float = 0.0
+    t_admit: float = 0.0
+    plan_ms: float = 0.0               # this request's own mark/plan span
+
+
+@dataclasses.dataclass
+class Batch:
+    """Requests sharing one (trace, dirty-signature) plan-cache key."""
+
+    key: Optional[Tuple[Any, ...]]
+    requests: List[EditRequest]
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+
+def _key_of(req: EditRequest) -> Optional[Tuple[Any, ...]]:
+    if req.pending is None:
+        return None
+    return (req.session.cg, req.pending.plan)
+
+
+def compatible(a: EditRequest, b: EditRequest) -> bool:
+    """The batching predicate: same compiled trace, same quantized
+    dirty signature (documented in DESIGN.md §Serving-layer)."""
+    ka, kb = _key_of(a), _key_of(b)
+    return ka is not None and ka == kb
+
+
+class EditBatcher:
+    """Group planned requests into batches of compatible edits.
+
+    Grouping is stable (first-arrival order decides batch order and
+    order within a batch) and bounded: a signature with more than
+    ``max_batch`` requests splits, so one hot signature cannot starve
+    the rest of a drain cycle indefinitely.  Unplannable requests
+    (``pending=None``) are singleton batches.
+    """
+
+    def __init__(self, max_batch: int = 16):
+        assert max_batch >= 1, max_batch
+        self.max_batch = int(max_batch)
+        self.batches_formed = 0
+        self.requests_batched = 0      # members beyond each batch's first
+
+    def group(self, requests: List[EditRequest]) -> List[Batch]:
+        order: List[Optional[Tuple[Any, ...]]] = []
+        groups: Dict[Any, List[EditRequest]] = {}
+        singles: List[Batch] = []
+        for req in requests:
+            key = _key_of(req)
+            if key is None:
+                singles.append(Batch(None, [req]))
+                continue
+            if key not in groups:
+                groups[key] = []
+                order.append(key)
+            groups[key].append(req)
+        out: List[Batch] = []
+        for key in order:
+            members = groups[key]
+            for i in range(0, len(members), self.max_batch):
+                chunk = members[i:i + self.max_batch]
+                out.append(Batch(key, chunk))
+                self.batches_formed += 1
+                self.requests_batched += len(chunk) - 1
+        out.extend(singles)
+        self.batches_formed += len(singles)
+        return out

@@ -1,0 +1,290 @@
+"""Copy-on-write state forest: cheap forks of donated propagation state.
+
+The source paper's propagation state is nothing but node values plus
+dirty metadata, so *branching* a live computation is conceptually O(1):
+a fork shares every buffer with its parent until one of them writes.
+This module makes that real for ``CompiledGraph``'s donated state:
+
+  * a ``ForestState`` wraps the ``{"v": ..., "c": ...}`` propagation
+    state as a flat leaf map (``"v<i>"`` node values, ``"c<i>"`` carry
+    caches) with one shared refcount cell per buffer;
+  * ``fork()`` is pure host metadata — the child aliases every leaf and
+    bumps the refcells (no device work at all), which is what lets many
+    sessions branch one warm base state, and what makes *undo* a fork
+    discard (``release()``);
+  * ``propagate()`` keeps the donation fast path: the mark pass freezes
+    the quantized plan (``CompiledGraph.plan_update``), and only the
+    leaves the plan actually touches are materialized — a touched leaf
+    that is still shared is copied exactly once (copy-on-first-scatter),
+    then donated to the split planned executable
+    (``CompiledGraph.cow_entry``), whose in-place scatters run exactly
+    as in the non-forest path.  Untouched leaves never cross the
+    executable, so an edit moves O(changed nodes) buffers, not O(state).
+
+Graphs without a single-device planned path (``plan=False`` or
+``mesh=``) fall back to ``CompiledGraph.propagate_copy`` — a
+non-donating propagate whose outputs are all fresh buffers, so
+isolation holds there too (at full-copy cost; the sharded planned
+executable donates whole-state, which an aliased state cannot allow).
+
+Checkpoint/restore (``save_session`` / ``restore_session``) round-trips
+a forest node through ``repro.ckpt`` — the array pytree bitwise, plus
+the non-array parts a restored session needs to resume identically:
+the dirty-representation name and the plan signatures it had warmed, so
+the first post-restore propagate replans on the same algebra and hits
+the shared plan cache instead of re-freezing.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import ckpt as ckpt_lib
+from repro.jaxsac.graph_compile import CompiledGraph, PendingUpdate
+from repro.jaxsac.plancache import plan_from_json, plan_to_json
+from repro.obs import syncpoints
+
+__all__ = ["ForestState", "save_session", "restore_session"]
+
+
+class _RefCell:
+    """Shared refcount of one device buffer: every ForestState whose
+    leaf aliases the buffer holds the same cell."""
+
+    __slots__ = ("count",)
+
+    def __init__(self, count: int = 1):
+        self.count = count
+
+
+class ForestState:
+    """One node of the COW forest — a propagation state whose leaves may
+    alias other forest nodes' leaves until first write."""
+
+    def __init__(self, cg: CompiledGraph, leaves: Dict[str, jax.Array],
+                 cells: Dict[str, _RefCell],
+                 parent: Optional["ForestState"] = None):
+        self.cg = cg
+        self._leaves = leaves
+        self._cells = cells
+        self.parent = parent
+        self.alive = True
+        self.cow_copies = 0              # leaves copied-on-write, total
+        self.updates = 0
+        self.plan_history: List[Tuple[Any, ...]] = []
+
+    # ------------------------------------------------------------------
+    # Construction / structure
+    # ------------------------------------------------------------------
+    @classmethod
+    def adopt(cls, cg: CompiledGraph, state: Dict[str, Any],
+              ) -> "ForestState":
+        """Wrap a raw ``init``/``propagate`` state.  The caller must
+        stop using the raw state afterwards (the forest now owns its
+        buffers and will donate them on propagate)."""
+        assert isinstance(state, dict) and "v" in state, state
+        leaves: Dict[str, jax.Array] = {
+            f"v{i}": arr for i, arr in enumerate(state["v"])}
+        for k, arr in state.get("c", {}).items():
+            leaves[f"c{k}"] = arr
+        cells = {key: _RefCell(1) for key in leaves}
+        return cls(cg, leaves, cells)
+
+    @property
+    def state(self) -> Dict[str, Any]:
+        """The raw ``{"v": tuple, "c": dict}`` view (python-side only —
+        reassembling it moves no device data)."""
+        n = len(self.cg.nodes)
+        return {"v": tuple(self._leaves[f"v{i}"] for i in range(n)),
+                "c": {str(i): self._leaves[f"c{i}"]
+                      for i in self.cg.carry_nodes}}
+
+    def __getitem__(self, key: str):
+        # Duck-types the raw state dict, so ``CompiledGraph.value`` and
+        # the handle facades read through a ForestState unchanged.
+        return self.state[key]
+
+    # ------------------------------------------------------------------
+    # Forking
+    # ------------------------------------------------------------------
+    def fork(self) -> "ForestState":
+        """O(leaves) host metadata, zero device work: the child aliases
+        every buffer; refcells record the sharing so either side copies
+        on its first write to a shared leaf."""
+        assert self.alive, "fork() of a released ForestState"
+        for cell in self._cells.values():
+            cell.count += 1
+        return ForestState(self.cg, dict(self._leaves), dict(self._cells),
+                           parent=self)
+
+    def release(self) -> None:
+        """Discard this forest node (undo = fork + release): drops its
+        claim on every shared buffer.  Idempotent."""
+        if not self.alive:
+            return
+        self.alive = False
+        for cell in self._cells.values():
+            cell.count -= 1
+        self._leaves = {}
+        self._cells = {}
+
+    # ------------------------------------------------------------------
+    # Introspection (tests, benchmarks, server accounting)
+    # ------------------------------------------------------------------
+    def shared_keys(self) -> List[str]:
+        return [k for k, c in self._cells.items() if c.count > 1]
+
+    def aliased_keys(self, other: "ForestState") -> List[str]:
+        """Leaves physically shared with ``other`` (same buffer)."""
+        return [k for k, arr in self._leaves.items()
+                if other._leaves.get(k) is arr]
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self._leaves)
+
+    # ------------------------------------------------------------------
+    # Propagation
+    # ------------------------------------------------------------------
+    def plan(self, new_inputs: Dict[str, Any]) -> Optional[PendingUpdate]:
+        """Phase 1: mark + freeze the plan without touching state (safe
+        on aliased leaves).  ``None`` means no planned path — use
+        ``propagate`` which takes the copy fallback."""
+        assert self.alive, "plan() on a released ForestState"
+        return self.cg.plan_update(self.state, new_inputs)
+
+    def commit(self, pending: PendingUpdate, *, t_start: float = 0.0,
+               t_mark: float = 0.0) -> Dict[str, Any]:
+        """Phase 2: execute a pending update through the split COW
+        executable.  Copies exactly the touched-and-shared leaves first
+        (each copy is then donated, so the scatter lands in the private
+        buffer), dispatches, and swaps the touched leaves in."""
+        assert self.alive, "commit() on a released ForestState"
+        cg = self.cg
+        rec = cg._recorder
+        entry, hit = cg.cow_entry(pending.plan)
+        t_plan = rec.clock() if rec is not None else 0.0
+        donated_keys, _touched = cg.cow_touched_keys(pending.plan)
+        donated: Dict[str, jax.Array] = {}
+        copies = 0
+        for key in donated_keys:
+            arr = self._leaves[key]
+            cell = self._cells[key]
+            if cell.count > 1:           # copy-on-first-scatter
+                cell.count -= 1
+                self._cells[key] = _RefCell(1)
+                arr = jnp.copy(arr)
+                copies += 1
+            donated[key] = arr
+        kept = {k: v for k, v in self._leaves.items() if k not in donated}
+        out, stats = entry.fn(donated, kept, pending.inputs,
+                              pending.in_masks, pending.node_masks)
+        for key, arr in out.items():
+            cell = self._cells[key]
+            if cell.count > 1:           # updated-input leaf still shared
+                cell.count -= 1
+                self._cells[key] = _RefCell(1)
+            self._leaves[key] = arr
+        self.cow_copies += copies
+        self.updates += 1
+        self._remember_plan(pending.plan)
+        stats = {**stats, "cow_copies": copies,
+                 "plan_cache": cg.plan_cache_snapshot()}
+        if rec is not None:
+            if rec.mode == "deep":
+                syncpoints.fence(out, "execute")
+            rec.emit(cg._build_record(
+                rec, plan=pending.plan, counts_np=pending.counts, hit=hit,
+                t_start=t_start or t_plan, t_mark=t_mark or t_plan,
+                t_plan=t_plan, t_end=rec.clock(), stats=stats,
+                level_ms=None, input_key=frozenset(pending.inputs)))
+        return stats
+
+    def propagate(self, new_inputs: Dict[str, Any]) -> Dict[str, Any]:
+        """One full COW update: plan, then commit (or the non-donating
+        copy fallback when the graph has no planned path)."""
+        assert self.alive, "propagate() on a released ForestState"
+        cg = self.cg
+        rec = cg._recorder
+        t_start = rec.clock() if rec is not None else 0.0
+        pending = self.plan(new_inputs)
+        if pending is None:
+            new_state, stats = cg.propagate_copy(self.state, new_inputs)
+            self._replace_all(new_state)
+            self.updates += 1
+            if rec is not None:
+                if rec.mode == "deep":
+                    syncpoints.fence(new_state, "execute")
+                rec.emit(cg._build_record(
+                    rec, plan=None, counts_np=None, hit=None,
+                    t_start=t_start, t_mark=t_start, t_plan=t_start,
+                    t_end=rec.clock(), stats=stats, level_ms=None,
+                    input_key=frozenset(new_inputs)))
+            return stats
+        t_mark = rec.clock() if rec is not None else 0.0
+        return self.commit(pending, t_start=t_start, t_mark=t_mark)
+
+    # ------------------------------------------------------------------
+    def _replace_all(self, new_state: Dict[str, Any]) -> None:
+        """Swap in a fully fresh state (every leaf a new buffer): the
+        copy-fallback epilogue.  Old claims on shared buffers drop."""
+        for i, arr in enumerate(new_state["v"]):
+            self._set_leaf(f"v{i}", arr)
+        for k, arr in new_state.get("c", {}).items():
+            self._set_leaf(f"c{k}", arr)
+
+    def _set_leaf(self, key: str, arr: jax.Array) -> None:
+        cell = self._cells[key]
+        if cell.count > 1:
+            cell.count -= 1
+            self._cells[key] = _RefCell(1)
+        self._leaves[key] = arr
+
+    def _remember_plan(self, plan, cap: int = 16) -> None:
+        if plan in self.plan_history:
+            self.plan_history.remove(plan)
+        self.plan_history.append(plan)
+        del self.plan_history[:-cap]
+
+
+# ---------------------------------------------------------------------------
+# Durable sessions: checkpoint / restore of a forest node
+# ---------------------------------------------------------------------------
+def save_session(directory: str | os.PathLike, fstate: ForestState,
+                 step: int = 0, meta: Optional[Dict[str, Any]] = None):
+    """Checkpoint a forest node: the state pytree (bitwise, via
+    ``repro.ckpt``'s committed-atomic protocol) plus the non-array parts
+    of propagation state — dirty representation and the warmed plan
+    signatures — in the manifest's ``meta``."""
+    m = {"kind": "forest_session",
+         "dirty_rep": fstate.cg.dirty_rep,
+         "updates": fstate.updates,
+         "plan_sigs": [plan_to_json(p) for p in fstate.plan_history],
+         **(meta or {})}
+    return ckpt_lib.save(directory, fstate.state, step, meta=m)
+
+
+def restore_session(cg: CompiledGraph, directory: str | os.PathLike,
+                    step: Optional[int] = None,
+                    ) -> Tuple[ForestState, Dict[str, Any]]:
+    """Restore a checkpointed session onto ``cg``.  The restored state
+    is bitwise the saved one (every leaf a fresh exclusive buffer), and
+    the saved plan signatures are re-inserted into the shared plan
+    cache, so the session's next same-shaped edit is a signature hit
+    even in a fresh process."""
+    meta = ckpt_lib.load_meta(directory, step=step)
+    rep = meta.get("dirty_rep", cg.dirty_rep)
+    assert rep == cg.dirty_rep, (
+        f"session saved under dirty rep {rep!r}, restoring onto a graph "
+        f"compiled with {cg.dirty_rep!r} — plans would not be comparable")
+    state = ckpt_lib.restore(directory, cg.abstract_state(), step=step)
+    fstate = ForestState.adopt(cg, state)
+    fstate.updates = int(meta.get("updates", 0))
+    for sig in meta.get("plan_sigs", []):
+        plan = plan_from_json(sig)
+        fstate.plan_history.append(plan)
+        cg.cow_entry(plan)               # re-warm the shared signature LRU
+    return fstate, meta

@@ -1,0 +1,306 @@
+"""Async multi-tenant session server over one warm compiled handle.
+
+Propagation-as-a-service: many logical sessions — each a COW fork of
+one warm base state — with edits streaming in concurrently.  The server
+is a single-process asyncio component:
+
+  * **admission queue** — ``submit()`` enqueues an edit and parks on a
+    future; the drain loop admits everything queued at once (one drain
+    cycle = one admission wave), so concurrent submitters are batched
+    by arrival, not serialized by lock order;
+  * **cross-session batching** — every admitted edit runs its (cheap,
+    non-mutating) mark pass, then the ``EditBatcher`` groups requests
+    whose (trace, quantized dirty signature) match: the batch shares
+    one ``("cow", plan)`` plan-cache entry, so the freeze is paid once
+    per batch and hot signatures stop freezing entirely — across
+    sessions, because the cache belongs to the ``CompiledGraph``;
+  * **eviction** — sessions idle past ``evict_idle_s`` are checkpointed
+    to disk (committed ``repro.ckpt`` protocol) and their device
+    buffers released; the next edit revives them bitwise, plan
+    signatures re-warmed.  ``runtime.Supervisor`` restores the same
+    checkpoints through its pluggable ``restore_fn``;
+  * **latency accounting** — per-request queue-wait / plan / propagate
+    spans flow into a ``repro.obs.MetricRegistry`` (histograms for
+    p50/p99, one ``serve.request`` event per request for JSONL sinks).
+
+The jax work itself (mark, commit) runs synchronously on the loop
+thread: propagation is the service's unit of work, not something to
+overlap against itself — concurrency buys admission batching and
+fairness, not parallel device mutation.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs.metrics import MetricRegistry
+
+from .batcher import EditBatcher, EditRequest
+from .session import Session
+
+__all__ = ["SessionServer"]
+
+
+class SessionServer:
+    """Serve a compiled graph handle to many concurrent sessions.
+
+    ``handle`` must be a graph-backend handle with a warm state
+    (``run()`` already called); it becomes the forest base every
+    session forks.  Use as an async context manager::
+
+        async with handle.serve(ckpt_dir=d) as server:
+            sid = await server.open()
+            res = await server.submit(sid, x=edited)
+            res["outputs"], res["stats"], res["latency"]
+    """
+
+    def __init__(self, handle, *, max_batch: int = 16,
+                 max_sessions: int = 256,
+                 evict_idle_s: Optional[float] = None,
+                 ckpt_dir: Optional[str] = None,
+                 registry: Optional[MetricRegistry] = None):
+        assert getattr(handle, "backend", None) == "graph", (
+            "serve() runs on the graph backend (the COW forest lives in "
+            "the compiled runtime's donated state)")
+        self.handle = handle
+        self.cg = handle.cg
+        self.base = handle._forest()     # warm base every session forks
+        self.registry = registry if registry is not None else MetricRegistry()
+        self.batcher = EditBatcher(max_batch=max_batch)
+        self.max_sessions = int(max_sessions)
+        self.evict_idle_s = evict_idle_s
+        self.ckpt_dir = ckpt_dir
+        self.sessions: Dict[str, Session] = {}
+        self._queue: List[Tuple[EditRequest, asyncio.Future]] = []
+        self._wake: Optional[asyncio.Event] = None
+        self._task: Optional[asyncio.Task] = None
+        self._running = False
+        self._next_sid = 0
+
+    # ------------------------------------------------------------------
+    # Lifecycle
+    # ------------------------------------------------------------------
+    async def __aenter__(self) -> "SessionServer":
+        self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    def start(self) -> None:
+        assert self._task is None, "server already started"
+        self._wake = asyncio.Event()
+        self._running = True
+        self._task = asyncio.get_running_loop().create_task(
+            self._drain_loop())
+
+    async def stop(self) -> None:
+        """Drain outstanding requests, then stop; sessions stay usable
+        for reads (``outputs``) until ``shutdown``."""
+        if self._task is None:
+            return
+        self._running = False
+        self._wake.set()
+        await self._task
+        self._task = None
+
+    async def shutdown(self) -> None:
+        """Stop and release every session's forest claims."""
+        await self.stop()
+        for s in list(self.sessions.values()):
+            s.close()
+        self.sessions.clear()
+
+    # ------------------------------------------------------------------
+    # Session management
+    # ------------------------------------------------------------------
+    async def open(self, sid: Optional[str] = None) -> str:
+        """Admit a new session: a COW fork of the warm base (host
+        metadata only — no device copies until its first edit)."""
+        live = sum(1 for s in self.sessions.values()
+                   if s.status != "closed")
+        if live >= self.max_sessions:
+            raise RuntimeError(
+                f"session limit reached ({self.max_sessions})")
+        if sid is None:
+            sid = f"s{self._next_sid}"
+            self._next_sid += 1
+        assert sid not in self.sessions, f"duplicate session id {sid!r}"
+        ck = (f"{self.ckpt_dir}/{sid}" if self.ckpt_dir is not None
+              else None)
+        self.sessions[sid] = Session(
+            sid, self.base.fork(), self.handle.out_handles,
+            self.handle._single, ckpt_dir=ck)
+        self.registry.counter("serve.sessions_opened").inc()
+        return sid
+
+    async def close_session(self, sid: str) -> None:
+        self.sessions.pop(sid).close()
+
+    async def evict(self, sid: str) -> str:
+        """Checkpoint a live session to disk and release its buffers."""
+        return self.sessions[sid].evict()
+
+    def evict_idle(self) -> List[str]:
+        """Evict every live session idle past ``evict_idle_s`` (called
+        by the drain loop each cycle; callable manually too)."""
+        if self.evict_idle_s is None or self.ckpt_dir is None:
+            return []
+        victims = [s for s in self.sessions.values()
+                   if s.status == "live" and s.idle_s > self.evict_idle_s]
+        for s in victims:
+            s.evict()
+            self.registry.counter("serve.evictions").inc()
+            self.registry.event("serve.evict", session=s.id,
+                                updates=s.updates)
+        return [s.id for s in victims]
+
+    def reset_metrics(self,
+                      registry: Optional[MetricRegistry] = None) -> None:
+        """Open a fresh measurement window: new registry (or the given
+        one) and fresh batcher counters.  For steady-state benching —
+        e.g. after a warm-up wave has paid each session's one-time
+        copy-on-first-scatter — so percentiles and batch rates describe
+        only the window.  Plan-cache counters are *not* reset: the
+        cache belongs to the compiled graph, not to the window."""
+        self.registry = (registry if registry is not None
+                         else MetricRegistry())
+        self.batcher = EditBatcher(max_batch=self.batcher.max_batch)
+
+    def outputs(self, sid: str):
+        """A session's current outputs (revives it if evicted)."""
+        s = self.sessions[sid]
+        if s.status == "evicted":
+            s.revive()
+            self.registry.counter("serve.revivals").inc()
+        return s.outputs()
+
+    # ------------------------------------------------------------------
+    # The service path
+    # ------------------------------------------------------------------
+    async def submit(self, sid: str, inputs: Optional[Dict[str, Any]] = None,
+                     **changed) -> Dict[str, Any]:
+        """Submit one edit to a session; resolves when propagated with
+        ``{"outputs", "stats", "latency", "batch_size"}``."""
+        assert self._task is not None, "submit() before start()"
+        s = self.sessions[sid]
+        req = EditRequest(session=s, inputs={**(inputs or {}), **changed},
+                          t_enqueue=time.perf_counter())
+        fut = asyncio.get_running_loop().create_future()
+        self._queue.append((req, fut))
+        self._wake.set()
+        return await fut
+
+    async def _drain_loop(self) -> None:
+        while True:
+            await self._wake.wait()
+            self._wake.clear()
+            while self._queue:
+                admitted, self._queue = self._queue, []
+                self._serve_wave(admitted)
+                # Yield between waves so submitters queued during the
+                # last wave are admitted together in the next one.
+                await asyncio.sleep(0)
+            self.evict_idle()
+            if not self._running:
+                return
+
+    def _serve_wave(self, admitted) -> None:
+        """One admission wave: revive, plan, batch, execute, resolve."""
+        reg = self.registry
+        t_admit = time.perf_counter()
+        ready: List[EditRequest] = []
+        futures: Dict[int, asyncio.Future] = {}
+        for req, fut in admitted:
+            req.t_admit = t_admit
+            futures[id(req)] = fut
+            s = req.session
+            try:
+                if s.status == "evicted":
+                    s.revive()
+                    reg.counter("serve.revivals").inc()
+                t0 = time.perf_counter()
+                req.pending = s.plan(req.inputs)   # mark pass, no writes
+                req.plan_ms = (time.perf_counter() - t0) * 1e3
+                ready.append(req)
+            except Exception as e:
+                fut.set_exception(e)
+        for batch in self.batcher.group(ready):
+            if len(batch) > 1:
+                reg.counter("serve.batch_joins").inc(len(batch) - 1)
+                reg.event("serve.batch", size=len(batch),
+                          sessions=[r.session.id for r in batch.requests])
+            for req in batch.requests:
+                fut = futures[id(req)]
+                try:
+                    fut.set_result(self._execute(req, len(batch)))
+                except Exception as e:
+                    fut.set_exception(e)
+
+    def _execute(self, req: EditRequest, batch_size: int) -> Dict[str, Any]:
+        reg = self.registry
+        s = req.session
+        t_exec = time.perf_counter()
+        if req.pending is None:          # no planned path: copy fallback
+            stats = s.propagate(req.inputs)
+        else:
+            stats = s.commit(req.pending)
+        t_done = time.perf_counter()
+        # Service spans bound the request's *own* work (its mark pass,
+        # its commit); everything else — admission wait plus the wave's
+        # serialization behind other requests — is queue wait, so
+        # total == queue_wait + plan + propagate holds per request.
+        total_ms = (t_done - req.t_enqueue) * 1e3
+        propagate_ms = (t_done - t_exec) * 1e3
+        lat = {
+            "queue_wait_ms": total_ms - req.plan_ms - propagate_ms,
+            "plan_ms": req.plan_ms,
+            "propagate_ms": propagate_ms,
+            "total_ms": total_ms,
+        }
+        reg.counter("serve.requests").inc()
+        for k, v in lat.items():
+            reg.histogram(f"serve.{k}").observe(v)
+        reg.event("serve.request", session=s.id, batch_size=batch_size,
+                  **lat)
+        # Responses own their buffers: a session's next commit donates
+        # the output leaf in place, so a live view handed to the caller
+        # would be deleted under them.  Output nodes are small (the
+        # program's results, not its state) — the copy is the response
+        # serialization cost.
+        outputs = jax.tree.map(jnp.copy, s.outputs())
+        return {"outputs": outputs, "stats": stats,
+                "latency": lat, "batch_size": batch_size}
+
+    # ------------------------------------------------------------------
+    def summary(self) -> Dict[str, Any]:
+        """Service-level numbers: request percentiles, batching
+        effectiveness, session census, shared plan-cache counters."""
+        reg = self.registry
+        total = reg.histograms.get("serve.total_ms")
+        prop = reg.histograms.get("serve.propagate_ms")
+        queue = reg.histograms.get("serve.queue_wait_ms")
+        requests = reg.counters.get("serve.requests")
+        n_req = requests.value if requests is not None else 0
+        census: Dict[str, int] = {}
+        for s in self.sessions.values():
+            census[s.status] = census.get(s.status, 0) + 1
+        return {
+            "requests": n_req,
+            "batches": self.batcher.batches_formed,
+            "batch_joins": self.batcher.requests_batched,
+            "batch_hit_rate": (self.batcher.requests_batched / n_req
+                               if n_req else 0.0),
+            "p50_ms": total.percentile(50) if total is not None else None,
+            "p99_ms": total.percentile(99) if total is not None else None,
+            "propagate_p50_ms": (prop.percentile(50)
+                                 if prop is not None else None),
+            "queue_wait_p50_ms": (queue.percentile(50)
+                                  if queue is not None else None),
+            "sessions": census,
+            "plan_cache": self.cg.plan_cache_snapshot(),
+        }

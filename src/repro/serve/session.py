@@ -1,0 +1,112 @@
+"""One tenant of the session server: a forest node plus lifecycle.
+
+A ``Session`` owns one ``ForestState`` forked off the server's warm
+base.  Its propagation work is exactly the forest's (plan → commit,
+COW on first write); what this layer adds is the *lifecycle* the server
+manages:
+
+  * ``live``     — forest node resident on device, edits stream in;
+  * ``evicted``  — state checkpointed to disk (``forest.save_session``)
+    and the device buffers released; a later edit revives it
+    (``forest.restore_session``) bitwise, with its warmed plan
+    signatures re-inserted into the shared plan cache so the first
+    post-revival edit of a familiar shape is still a signature hit.
+
+Eviction uses the same committed-checkpoint protocol as training
+(``repro.ckpt``), which is what makes sessions durable: a server crash
+loses at most the edits since each session's last eviction/checkpoint,
+and ``runtime.Supervisor`` can restore one via its pluggable
+``restore_fn``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+from .forest import ForestState, restore_session, save_session
+
+__all__ = ["Session"]
+
+
+class Session:
+    """One served tenant: id, forest node, lifecycle, edit accounting."""
+
+    def __init__(self, sid: str, fstate: ForestState, out_handles: List[Any],
+                 single: bool, ckpt_dir: Optional[str] = None):
+        self.id = sid
+        self.fstate: Optional[ForestState] = fstate
+        self.cg = fstate.cg
+        self.out_handles = out_handles
+        self._single = single
+        self.ckpt_dir = ckpt_dir
+        self.status = "live"
+        self.updates = 0
+        self.revivals = 0
+        self.last_active = time.monotonic()
+        self.last_stats: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------------
+    def touch(self) -> None:
+        self.last_active = time.monotonic()
+
+    @property
+    def idle_s(self) -> float:
+        return time.monotonic() - self.last_active
+
+    # ------------------------------------------------------------------
+    # Propagation (delegates to the forest node)
+    # ------------------------------------------------------------------
+    def plan(self, inputs: Dict[str, Any]):
+        assert self.status == "live", self.status
+        return self.fstate.plan(inputs)
+
+    def commit(self, pending) -> Dict[str, Any]:
+        assert self.status == "live", self.status
+        stats = self.fstate.commit(pending)
+        self.updates += 1
+        self.last_stats = stats
+        self.touch()
+        return stats
+
+    def propagate(self, inputs: Dict[str, Any]) -> Dict[str, Any]:
+        """Unbatched path (also the ``pending=None`` fallback)."""
+        assert self.status == "live", self.status
+        stats = self.fstate.propagate(inputs)
+        self.updates += 1
+        self.last_stats = stats
+        self.touch()
+        return stats
+
+    def outputs(self):
+        assert self.status == "live", self.status
+        vals = tuple(self.cg.value(self.fstate, h) for h in self.out_handles)
+        return vals[0] if self._single else vals
+
+    # ------------------------------------------------------------------
+    # Eviction / revival
+    # ------------------------------------------------------------------
+    def evict(self) -> str:
+        """Checkpoint this session's state and release its buffers."""
+        assert self.status == "live", self.status
+        assert self.ckpt_dir is not None, (
+            "session eviction needs a ckpt_dir")
+        save_session(self.ckpt_dir, self.fstate, step=self.updates,
+                     meta={"session": self.id})
+        self.fstate.release()
+        self.fstate = None
+        self.status = "evicted"
+        return self.ckpt_dir
+
+    def revive(self) -> None:
+        """Restore an evicted session bitwise from its checkpoint."""
+        assert self.status == "evicted", self.status
+        self.fstate, _meta = restore_session(self.cg, self.ckpt_dir)
+        self.status = "live"
+        self.revivals += 1
+        self.touch()
+
+    def close(self) -> None:
+        if self.fstate is not None:
+            self.fstate.release()
+            self.fstate = None
+        self.status = "closed"

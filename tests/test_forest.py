@@ -1,0 +1,282 @@
+"""COW state forest semantics: isolation, aliasing, undo, durability.
+
+The forest's contract (repro/serve/forest.py):
+
+  * ``fork()`` never moves device data; buffers alias until first write;
+  * edits to one forest node are invisible to every other — bitwise —
+    in both directions, across graph (shards 1 and 2), hybrid, and the
+    host reference backend;
+  * a chain of ``snapshot()``/``undo()`` replays exactly what a
+    ``donate=False`` linear handle computes — the COW split executable
+    is the same math, only the buffer ownership differs;
+  * copy-on-first-scatter is *observable*: after a fork, leaves the
+    plan skipped stay physically shared, touched ones diverge;
+  * ``save_session``/``restore_session`` round-trip a session bitwise —
+    the restored session's next propagate matches the never-evicted
+    one's, and its warmed plan signatures hit the shared plan cache.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.sac as sac
+from repro.serve.forest import ForestState, restore_session, save_session
+
+from test_fuzz_differential import (SHARD_COUNTS, _apply_edit, _inputs,
+                                    build_program, random_spec)
+
+
+@sac.incremental(block=16)
+def _prog(x):
+    y = x * 2.0 + 1.0
+    s = sac.stencil(lambda w: w[16:32] + 0.5 * (w[:16] + w[32:]),
+                    y, radius=1)
+    return sac.reduce(jnp.add, s, identity=0.0)
+
+
+def _edits(n, rounds=3, seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.arange(n, dtype=np.float32)
+    out = [x.copy()]
+    for r in range(rounds):
+        x = x.copy()
+        x[int(rng.integers(0, n))] += float(r + 1)
+        out.append(x.copy())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Bidirectional bitwise isolation, all backends
+# ---------------------------------------------------------------------------
+def _check_isolation(parent, child, update_kw, frozen_outputs):
+    got = np.asarray(child.update(**update_kw))
+    assert np.array_equal(np.asarray(parent.outputs()), frozen_outputs), \
+        "child edit perturbed parent"
+    return got
+
+
+@pytest.mark.parametrize("backend", ["graph", "hybrid", "host"])
+def test_fork_isolation_backends(backend):
+    xs = _edits(256)
+    h = _prog.compile(backend, x=256)
+    base = np.asarray(h.run(x=xs[0]))
+    child = h.fork()
+    # Child edits: parent bitwise frozen; child matches a fresh replay.
+    ref = _prog.compile(backend, x=256)
+    ref.run(x=xs[0])
+    for x in xs[1:]:
+        got = _check_isolation(h, child, {"x": x}, base)
+        want = np.asarray(ref.update(x=x))
+        assert np.array_equal(want, got), backend
+    # Parent edits: child bitwise frozen (isolation is bidirectional).
+    child_now = np.asarray(child.outputs())
+    h.update(x=xs[1])
+    assert np.array_equal(np.asarray(child.outputs()), child_now)
+
+
+@pytest.mark.skipif(2 not in SHARD_COUNTS, reason="needs 2 devices")
+def test_fork_isolation_shards2():
+    xs = _edits(256)
+    h = _prog.compile(x=256, shards=2)
+    base = np.asarray(h.run(x=xs[0]))
+    child = h.fork()
+    ref = _prog.compile(x=256)
+    ref.run(x=xs[0])
+    for x in xs[1:]:
+        got = _check_isolation(h, child, {"x": x}, base)
+        assert np.array_equal(np.asarray(ref.update(x=x)), got)
+
+
+def test_fork_isolation_random_specs():
+    """Random fuzz specs: fork the graph handle mid-stream, edit both
+    sides, and check bidirectional bitwise isolation."""
+    for seed in range(3):
+        spec = random_spec(np.random.default_rng(seed + 3000))
+        prog, n, _block = build_program(spec)
+        hg = prog.compile(x0=n, x1=n, max_sparse=4)
+        x0, x1 = _inputs(spec)
+        hg.run(x0=x0, x1=x1)
+        # Warm one edit, then branch.
+        x0, x1 = _apply_edit(x0, x1, spec["edits"][0], n)
+        hg.update(x0=x0, x1=x1)
+        parent_out = [np.asarray(v) for v in hg.outputs()]
+        child = hg.fork()
+        for edit in spec["edits"][1:]:
+            x0, x1 = _apply_edit(x0, x1, edit, n)
+            child.update(x0=x0, x1=x1)
+            for a, b in zip(parent_out, hg.outputs()):
+                np.testing.assert_array_equal(a, np.asarray(b),
+                                              err_msg=f"spec={spec}")
+        child_out = [np.asarray(v) for v in child.outputs()]
+        hg.update(x0=x0 + 1.0, x1=x1)
+        for a, b in zip(child_out, child.outputs()):
+            np.testing.assert_array_equal(a, np.asarray(b),
+                                          err_msg=f"spec={spec}")
+
+
+# ---------------------------------------------------------------------------
+# snapshot/undo chain == donate=False linear replay
+# ---------------------------------------------------------------------------
+def test_snapshot_undo_chain_matches_copies():
+    xs = _edits(256, rounds=3)
+    h = _prog.compile(x=256)
+    ref = _prog.compile(x=256, donate=False)
+    h.run(x=xs[0])
+    ref.run(x=xs[0])
+    checkpoints = [np.asarray(h.outputs())]
+    for x in xs[1:]:
+        h.snapshot()
+        got = np.asarray(h.update(x=x))
+        want = np.asarray(ref.update(x=x))
+        assert np.array_equal(want, got)
+        checkpoints.append(got)
+    for want in reversed(checkpoints[:-1]):
+        h.undo()
+        assert np.array_equal(np.asarray(h.outputs()), want)
+    with pytest.raises(RuntimeError):
+        h.undo()
+
+
+def test_snapshot_commit_drops_restore_point():
+    xs = _edits(256, rounds=2)
+    h = _prog.compile(x=256)
+    h.run(x=xs[0])
+    h.snapshot()
+    after = np.asarray(h.update(x=xs[1]))
+    h.commit()
+    assert np.array_equal(np.asarray(h.outputs()), after)
+    with pytest.raises(RuntimeError):
+        h.undo()
+
+
+# ---------------------------------------------------------------------------
+# COW mechanics are observable: aliasing + refcounts
+# ---------------------------------------------------------------------------
+def test_fork_aliases_until_write_and_copies_only_touched():
+    xs = _edits(512)
+    h = _prog.compile(x=512)
+    h.run(x=xs[0])
+    base = h._forest()
+    child_state = base.fork()
+    # Fork is pure aliasing: every leaf shared, zero device copies.
+    assert len(child_state.aliased_keys(base)) == child_state.num_leaves
+    assert child_state.cow_copies == 0
+    # One sparse edit: only plan-touched leaves diverge.
+    pending = child_state.plan({"x": xs[1]})
+    assert pending is not None
+    donated, touched = base.cg.cow_touched_keys(pending.plan)
+    child_state.commit(pending)
+    still = set(child_state.aliased_keys(base))
+    assert set(touched).isdisjoint(still), "touched leaf still aliased"
+    untouched = set(child_state._leaves) - set(touched)
+    assert untouched <= still, "untouched leaf was copied"
+    assert 0 < child_state.cow_copies <= len(donated)
+    # Release drops the child's claims: the base is exclusive again.
+    child_state.release()
+    assert base.shared_keys() == []
+
+
+def test_forest_state_duck_types_raw_state():
+    xs = _edits(128)
+    h = _prog.compile(x=128)
+    h.run(x=xs[0])
+    fs = h._forest()
+    raw = fs.state
+    assert isinstance(raw["v"], tuple)
+    np.testing.assert_array_equal(np.asarray(fs["v"][0]),
+                                  np.asarray(raw["v"][0]))
+
+
+# ---------------------------------------------------------------------------
+# Durability: ckpt round-trip is bitwise; signatures re-warm the cache
+# ---------------------------------------------------------------------------
+def test_session_ckpt_roundtrip_bitwise(tmp_path):
+    xs = _edits(256, rounds=4)
+    h = _prog.compile(x=256)
+    h.run(x=xs[0])
+    fs = h._forest()
+    fs.propagate({"x": xs[1]})
+
+    # Branch the timeline: `live` continues unevicted; `restored` goes
+    # through disk.  Their *next* propagate must be bitwise identical.
+    live = fs.fork()
+    save_session(tmp_path, fs, step=fs.updates)
+    restored, meta = restore_session(h.cg, tmp_path)
+    assert meta["kind"] == "forest_session"
+    assert meta["updates"] == fs.updates
+
+    # Restored state is bitwise the saved one, leaf by leaf.
+    for key, arr in restored._leaves.items():
+        np.testing.assert_array_equal(np.asarray(arr),
+                                      np.asarray(live._leaves[key]),
+                                      err_msg=key)
+
+    s_live = live.propagate({"x": xs[2]})
+    s_rest = restored.propagate({"x": xs[2]})
+    for key, arr in restored._leaves.items():
+        np.testing.assert_array_equal(np.asarray(arr),
+                                      np.asarray(live._leaves[key]),
+                                      err_msg=f"post-propagate {key}")
+    for key in ("recomputed", "affected", "dirty_inputs"):
+        assert int(np.asarray(s_live[key])) == int(np.asarray(s_rest[key]))
+
+
+def test_restore_rewarms_plan_signatures(tmp_path):
+    xs = _edits(256, rounds=3)
+    h = _prog.compile(x=256)
+    h.run(x=xs[0])
+    fs = h._forest()
+    fs.propagate({"x": xs[1]})          # warms one ("cow", plan) entry
+    assert fs.plan_history
+    save_session(tmp_path, fs, step=1)
+
+    # Fresh graph (fresh empty plan cache) = the restart scenario.
+    h2 = _prog.compile(x=256)
+    h2.run(x=xs[0])
+    before = h2.cg.plan_cache_snapshot()
+    restored, _ = restore_session(h2.cg, tmp_path)
+    after = h2.cg.plan_cache_snapshot()
+    assert after["size"] == before["size"] + len(fs.plan_history)
+    # Same-shaped edit on the restored session: signature HIT, not a
+    # re-freeze — the serving steady state survives eviction.
+    restored.propagate({"x": xs[2]})
+    final = h2.cg.plan_cache_snapshot()
+    assert final["hits"] == after["hits"] + 1
+    assert final["misses"] == after["misses"]
+
+
+def test_restore_rejects_mismatched_dirty_rep(tmp_path):
+    xs = _edits(128)
+    h = _prog.compile(x=128, dirty="mask")
+    h.run(x=xs[0])
+    save_session(tmp_path, h._forest(), step=0)
+    h2 = _prog.compile(x=128, dirty="interval")
+    h2.run(x=xs[0])
+    with pytest.raises(AssertionError, match="dirty rep"):
+        restore_session(h2.cg, tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# Supervisor reuse: the pluggable restore path
+# ---------------------------------------------------------------------------
+def test_supervisor_pluggable_restore(tmp_path):
+    from repro.runtime.supervisor import Supervisor
+
+    xs = _edits(128)
+    h = _prog.compile(x=128)
+    h.run(x=xs[0])
+    fs = h._forest()
+    fs.propagate({"x": xs[1]})
+    save_session(tmp_path, fs, step=fs.updates)
+
+    sup = Supervisor(
+        step_fn=None, pipeline=None, ckpt_dir=str(tmp_path),
+        init_state=lambda: (_ for _ in ()).throw(
+            AssertionError("restore_fn must bypass init_state")),
+        restore_fn=lambda d, step: restore_session(h.cg, d, step=step)[0])
+    state, step = sup._restore_or_init()
+    assert step == fs.updates
+    assert isinstance(state, ForestState)
+    for key, arr in state._leaves.items():
+        np.testing.assert_array_equal(np.asarray(arr),
+                                      np.asarray(fs._leaves[key]))

@@ -333,6 +333,49 @@ def test_plan_donate_parity_seeded(seed):
 
 
 # ---------------------------------------------------------------------------
+# COW fork lane under the same corpus (serving-layer satellite): a fork
+# replaying the edit stream must match a donate=False linear handle
+# bitwise, the forked-from parent must stay bitwise frozen throughout,
+# and stats must agree — the COW split executable is the same math.
+# ---------------------------------------------------------------------------
+def check_spec_fork(spec):
+    prog, n, _block = build_program(spec)
+    hg = prog.compile(x0=n, x1=n, max_sparse=4)
+    ref = prog.compile(x0=n, x1=n, max_sparse=4, donate=False)
+    x0, x1 = _inputs(spec)
+    base = [np.asarray(v) for v in hg.run(x0=x0, x1=x1)]
+    ref.run(x0=x0, x1=x1)
+    child = hg.fork()
+    for r, edit in enumerate(spec["edits"]):
+        x0, x1 = _apply_edit(x0, x1, edit, n)
+        want = ref.update(x0=x0, x1=x1)
+        got = child.update(x0=x0, x1=x1)
+        for a, b in zip(want, got):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"fork edit {r}, spec={spec}")
+        for a, b in zip(base, hg.outputs()):
+            np.testing.assert_array_equal(
+                a, np.asarray(b),
+                err_msg=f"parent perturbed at edit {r}, spec={spec}")
+        for key in ("recomputed", "affected", "dirty_inputs"):
+            assert int(child.stats[key]) == int(ref.stats[key]), (
+                key, r, child.stats, ref.stats, spec)
+
+
+@pytest.mark.parametrize("path", _corpus_files(),
+                         ids=lambda p: p.stem)
+def test_fuzz_fork_corpus(path):
+    case = json.loads(path.read_text())
+    check_spec_fork(case["spec"])
+
+
+@pytest.mark.parametrize("seed", range(min(FUZZ_CASES, 6)))
+def test_fuzz_fork_seeded(seed):
+    check_spec_fork(random_spec(np.random.default_rng(seed + 2000)))
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis strategy (drives the same checker with real shrinking)
 # ---------------------------------------------------------------------------
 @st.composite
