@@ -168,20 +168,28 @@ class ForestState:
         entry, hit = cg.cow_entry(pending.plan)
         t_plan = rec.clock() if rec is not None else 0.0
         donated_keys, _touched = cg.cow_touched_keys(pending.plan)
+        # Copies and ownership changes are staged in temporaries and
+        # applied only after the executable returns: if it raises, this
+        # node still aliases the shared buffers under the old refcounts
+        # (the staged private copies are simply discarded), so a failed
+        # commit cannot leave a leaf claiming exclusive ownership of a
+        # buffer siblings still alias.
         donated: Dict[str, jax.Array] = {}
+        privatized: Dict[str, _RefCell] = {}
         copies = 0
         for key in donated_keys:
             arr = self._leaves[key]
-            cell = self._cells[key]
-            if cell.count > 1:           # copy-on-first-scatter
-                cell.count -= 1
-                self._cells[key] = _RefCell(1)
+            if self._cells[key].count > 1:   # copy-on-first-scatter
                 arr = jnp.copy(arr)
+                privatized[key] = _RefCell(1)
                 copies += 1
             donated[key] = arr
         kept = {k: v for k, v in self._leaves.items() if k not in donated}
         out, stats = entry.fn(donated, kept, pending.inputs,
                               pending.in_masks, pending.node_masks)
+        for key, cell in privatized.items():
+            self._cells[key].count -= 1  # drop the shared claim
+            self._cells[key] = cell
         for key, arr in out.items():
             cell = self._cells[key]
             if cell.count > 1:           # updated-input leaf still shared

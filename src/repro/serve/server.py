@@ -172,12 +172,15 @@ class SessionServer:
         self.batcher = EditBatcher(max_batch=self.batcher.max_batch)
 
     def outputs(self, sid: str):
-        """A session's current outputs (revives it if evicted)."""
+        """A session's current outputs (revives it if evicted).  Copied,
+        like ``submit`` responses: the session's next commit donates the
+        touched output leaves in place, which would delete a live view
+        under the caller."""
         s = self.sessions[sid]
         if s.status == "evicted":
             s.revive()
             self.registry.counter("serve.revivals").inc()
-        return s.outputs()
+        return jax.tree.map(jnp.copy, s.outputs())
 
     # ------------------------------------------------------------------
     # The service path
@@ -196,50 +199,91 @@ class SessionServer:
         return await fut
 
     async def _drain_loop(self) -> None:
+        # The loop must survive anything: a dead drain task would leave
+        # every later submit() parked on a future nobody resolves.
+        # _serve_wave resolves its futures per request, so an exception
+        # escaping it is a server-side bug (batcher, accounting) — fail
+        # the wave's unresolved futures and keep serving.
         while True:
             await self._wake.wait()
             self._wake.clear()
             while self._queue:
                 admitted, self._queue = self._queue, []
-                self._serve_wave(admitted)
+                try:
+                    self._serve_wave(admitted)
+                except Exception as e:
+                    for _req, fut in admitted:
+                        if not fut.done():
+                            fut.set_exception(e)
+                    self.registry.counter("serve.wave_errors").inc()
+                    self.registry.event("serve.error", where="wave",
+                                        error=repr(e))
                 # Yield between waves so submitters queued during the
                 # last wave are admitted together in the next one.
                 await asyncio.sleep(0)
-            self.evict_idle()
+            try:
+                self.evict_idle()
+            except Exception as e:
+                self.registry.counter("serve.evict_errors").inc()
+                self.registry.event("serve.error", where="evict_idle",
+                                    error=repr(e))
             if not self._running:
                 return
 
     def _serve_wave(self, admitted) -> None:
-        """One admission wave: revive, plan, batch, execute, resolve."""
+        """One admission wave: revive, plan, batch, execute, resolve.
+
+        Requests to the *same* session are serialized: a round takes at
+        most one request per session (arrival order), and each request
+        is planned only in its own round — i.e. after the session's
+        previous commit has executed.  Planning a second edit against
+        pre-commit state would freeze stale mark masks that call
+        freshly-recomputed nodes clean, silently dropping part of the
+        edit.  Cross-session batching is unaffected: round k still
+        groups every session's k-th request by (trace, signature).
+        """
         reg = self.registry
         t_admit = time.perf_counter()
-        ready: List[EditRequest] = []
-        futures: Dict[int, asyncio.Future] = {}
+        per_session: Dict[int, List[Tuple[EditRequest, asyncio.Future]]] = {}
+        session_order: List[int] = []
         for req, fut in admitted:
             req.t_admit = t_admit
-            futures[id(req)] = fut
-            s = req.session
-            try:
-                if s.status == "evicted":
-                    s.revive()
-                    reg.counter("serve.revivals").inc()
-                t0 = time.perf_counter()
-                req.pending = s.plan(req.inputs)   # mark pass, no writes
-                req.plan_ms = (time.perf_counter() - t0) * 1e3
-                ready.append(req)
-            except Exception as e:
-                fut.set_exception(e)
-        for batch in self.batcher.group(ready):
-            if len(batch) > 1:
-                reg.counter("serve.batch_joins").inc(len(batch) - 1)
-                reg.event("serve.batch", size=len(batch),
-                          sessions=[r.session.id for r in batch.requests])
-            for req in batch.requests:
-                fut = futures[id(req)]
+            key = id(req.session)
+            if key not in per_session:
+                per_session[key] = []
+                session_order.append(key)
+            per_session[key].append((req, fut))
+        while any(per_session.values()):
+            ready: List[EditRequest] = []
+            futures: Dict[int, asyncio.Future] = {}
+            for key in session_order:
+                if not per_session[key]:
+                    continue
+                req, fut = per_session[key].pop(0)
+                futures[id(req)] = fut
+                s = req.session
                 try:
-                    fut.set_result(self._execute(req, len(batch)))
+                    if s.status == "evicted":
+                        s.revive()
+                        reg.counter("serve.revivals").inc()
+                    t0 = time.perf_counter()
+                    req.pending = s.plan(req.inputs)  # mark pass, no writes
+                    req.plan_ms = (time.perf_counter() - t0) * 1e3
+                    ready.append(req)
                 except Exception as e:
                     fut.set_exception(e)
+            for batch in self.batcher.group(ready):
+                if len(batch) > 1:
+                    reg.counter("serve.batch_joins").inc(len(batch) - 1)
+                    reg.event("serve.batch", size=len(batch),
+                              sessions=[r.session.id
+                                        for r in batch.requests])
+                for req in batch.requests:
+                    fut = futures[id(req)]
+                    try:
+                        fut.set_result(self._execute(req, len(batch)))
+                    except Exception as e:
+                        fut.set_exception(e)
 
     def _execute(self, req: EditRequest, batch_size: int) -> Dict[str, Any]:
         reg = self.registry

@@ -176,6 +176,47 @@ def test_fork_aliases_until_write_and_copies_only_touched():
     assert base.shared_keys() == []
 
 
+def test_commit_failure_preserves_sharing():
+    """A commit whose executable raises must leave the node's aliasing
+    metadata untouched: if the copy-on-first-scatter refcount changes
+    landed before the failure, the node would believe it owns a still-
+    shared buffer exclusively, and the *retried* commit would donate the
+    base's buffer — corrupting the parent."""
+    xs = _edits(256)
+    h = _prog.compile(x=256)
+    base_out = np.asarray(h.run(x=xs[0]))
+    base = h._forest()
+    child = base.fork()
+    pending = child.plan({"x": xs[1]})
+    assert pending is not None
+
+    class _FailingEntry:
+        def fn(self, *_a, **_k):
+            raise RuntimeError("dispatch boom")
+
+    orig = child.cg.cow_entry
+    child.cg.cow_entry = lambda plan: (_FailingEntry(), False)
+    try:
+        with pytest.raises(RuntimeError, match="dispatch boom"):
+            child.commit(pending)
+    finally:
+        child.cg.cow_entry = orig
+    # Nothing moved: every leaf still aliases the base, refcounts say so.
+    assert len(child.aliased_keys(base)) == child.num_leaves
+    assert set(child.shared_keys()) == set(child._leaves)
+    assert child.cow_copies == 0 and child.updates == 0
+    # The retried commit copies-on-first-scatter properly: the child
+    # matches a clean replay and the base is bitwise unperturbed (the
+    # old bug donated the base's buffer here).
+    child.commit(pending)
+    ref = _prog.compile(x=256)
+    ref.run(x=xs[0])
+    want = np.asarray(ref.update(x=xs[1]))
+    got = np.asarray(child.cg.value(child, h.out_handles[0]))
+    assert np.array_equal(want, got)
+    assert np.array_equal(np.asarray(h.outputs()), base_out)
+
+
 def test_forest_state_duck_types_raw_state():
     xs = _edits(128)
     h = _prog.compile(x=128)

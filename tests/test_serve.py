@@ -150,6 +150,97 @@ def test_server_same_edit_batches_across_sessions(tmp_path):
     assert summary["plan_cache"]["misses"] == 1
 
 
+def test_server_concurrent_same_session_submits_serialize():
+    """Two concurrent submits to ONE session land in one admission wave;
+    the server must serialize them — the second edit planned only after
+    the first commit — or the second plan's mark masks are computed
+    against pre-commit state and skip nodes that are actually dirty.
+    The edits are independent (B leaves A's index at its base value), so
+    a stale plan would produce a state that is neither A nor B."""
+    n = 512
+    x0 = np.arange(n, dtype=np.float32)
+    a = x0.copy()
+    a[3] += 1.0
+    b = x0.copy()
+    b[400] += 2.0
+    h = _prog.compile(x=n)
+    h.run(x=x0)
+
+    async def main():
+        async with h.serve() as server:
+            sid = await server.open()
+            r1, r2 = await asyncio.gather(server.submit(sid, x=a),
+                                          server.submit(sid, x=b))
+            final = server.outputs(sid)
+            await server.shutdown()
+            return r1, r2, np.asarray(final)
+
+    r1, r2, final = asyncio.run(main())
+    ref = _prog.compile(x=n)
+    ref.run(x=x0)
+    assert np.array_equal(np.asarray(ref.update(x=a)),
+                          np.asarray(r1["outputs"]))
+    want = np.asarray(ref.update(x=b))
+    assert np.array_equal(want, np.asarray(r2["outputs"]))
+    assert np.array_equal(want, final)
+
+
+def test_server_outputs_copy_survives_next_commit():
+    """``outputs()`` hands back owned buffers: the session's next commit
+    donates the touched output leaves in place, which must not delete a
+    previously read result under the caller."""
+    x0, streams = _streams(1, 2)
+    e1, e2 = streams[0]
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+
+    async def main():
+        async with h.serve() as server:
+            sid = await server.open()
+            await server.submit(sid, **e1)
+            snap = server.outputs(sid)
+            await server.submit(sid, **e2)   # donates the output leaf
+            await server.shutdown()
+            return np.asarray(snap)
+
+    snap = asyncio.run(main())
+    ref = _prog.compile(x=512)
+    ref.run(x=x0)
+    assert np.array_equal(np.asarray(ref.update(**e1)), snap)
+
+
+def test_server_drain_loop_survives_internal_errors():
+    """An exception escaping the wave (server-side bug) or the idle
+    sweep must fail that wave's futures — not kill the drain task and
+    hang every later submit forever."""
+    x0, streams = _streams(1, 1)
+    edit = streams[0][0]
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+
+    def _boom(*_a, **_k):
+        raise RuntimeError("boom")
+
+    async def main():
+        async with h.serve() as server:
+            sid = await server.open()
+            orig_group = server.batcher.group
+            server.batcher.group = _boom
+            with pytest.raises(RuntimeError, match="boom"):
+                await server.submit(sid, **edit)
+            server.batcher.group = orig_group
+            server.evict_idle = _boom    # sweep errors must not kill it
+            res = await server.submit(sid, **edit)
+            await server.shutdown()
+            return res
+
+    res = asyncio.run(main())
+    ref = _prog.compile(x=512)
+    ref.run(x=x0)
+    assert np.array_equal(np.asarray(ref.update(**edit)),
+                          np.asarray(res["outputs"]))
+
+
 # ---------------------------------------------------------------------------
 # Eviction / revival
 # ---------------------------------------------------------------------------
