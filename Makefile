@@ -3,7 +3,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-all test-sharded fuzz cov bench bench-graph bench-check \
-	bench-serve test-serve profile
+	bench-serve test-serve test-chaos profile
 
 test:
 	$(PY) -m pytest -x -q
@@ -53,10 +53,20 @@ test-serve:
 	$(PY) -m pytest -q tests/test_forest.py tests/test_serve.py \
 	  tests/test_fuzz_differential.py -k fork
 
+# Chaos lane: deterministic fault injection over the serving stack —
+# retry/degrade/quarantine ladder, crash-consistent checkpoints,
+# supervisor restart budget, device-loss remesh (the `slow` sharded
+# integration test included), capped by the multi-session soak that
+# asserts surviving sessions bitwise against a fault-free replay.
+test-chaos:
+	$(PY) -m pytest -q tests/test_chaos.py -m "slow or not slow"
+
 # Serving-layer load benchmark + gates: 8-session batched p99 <= 2x the
-# single-session median, and fork <= 10% of a full state copy.  Rows
-# merge into results/bench/BENCH_graph.json (serve-single, serve-multi8,
-# serve-fork).
+# single-session median, fork <= 10% of a full state copy, and the MTTR
+# rows — evict-crash-revive p50 <= 50x / quarantine-rollback p50 <= 5x
+# the steady-state single-session median.  Rows merge into
+# results/bench/BENCH_graph.json (serve-single, serve-multi8,
+# serve-fork, serve-mttr).
 bench-serve:
 	$(PY) -m benchmarks.serve_latency
 

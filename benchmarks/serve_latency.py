@@ -20,6 +20,13 @@ app/n/block/k key space as the graph rows):
     session would otherwise pay).  ``update_ms`` is the fork,
     ``scratch_ms`` the copy it displaces.
 
+  * ``serve-mttr``    — mean-time-to-recovery of the two repair paths
+    vs the steady-state single-session median: evict-crash-revive
+    (checkpoint restore + re-adopt on the next edit) and
+    quarantine-rollback (release + re-fork of the last good snapshot
+    under injected fatal faults).  ``update_ms`` is the revive MTTR
+    p50, ``scratch_ms`` the steady-state median it is gated against.
+
 Both latency phases measure a steady-state window: every session first
 absorbs ``WARM_ROUNDS`` warm-up edits (paying its one-time
 copy-on-first-scatter burst and the per-signature plan freezes — costs
@@ -36,7 +43,11 @@ Gates (CI `make bench-serve`):
     the single executor it is ~sessions x service time by Little's
     law, a property of the offered load, not of the serving layer;
   * fork <= GATE_FORK_FRAC (0.10) x full state copy — branching a warm
-    base must be near-free, the premise of the whole serving layer.
+    base must be near-free, the premise of the whole serving layer;
+  * revive MTTR p50 <= GATE_MTTR_REVIVE_X (50) x steady-state median,
+    quarantine-rollback p50 <= GATE_MTTR_QUAR_X (5) x — recovery must
+    stay a small constant number of requests' worth of latency, never
+    a recompile or a from-scratch rerun.
 
 Usage:  PYTHONPATH=src python -m benchmarks.serve_latency [--no-gate]
 """
@@ -55,6 +66,8 @@ from benchmarks.graph_pipeline import (_provenance, pipeline_program,
 
 GATE_P99_X = 2.0
 GATE_FORK_FRAC = 0.10
+GATE_MTTR_REVIVE_X = 50.0
+GATE_MTTR_QUAR_X = 5.0
 
 N, BLOCK = 1 << 15, 64
 FORK_N = 1 << 18                  # fork row: a state big enough that a
@@ -211,6 +224,79 @@ def bench_fork(reps: int = 30, seed: int = 0):
     return fork_ms, copy_ms, row
 
 
+def bench_mttr(single_med_ms: float, cycles: int = 6, seed: int = 0):
+    """MTTR of the two repair paths, from the server's own
+    ``serve.recovery_ms`` histogram:
+
+      * evict-crash-revive — evict the session, then submit: the server
+        revives it (verified checkpoint restore + forest re-adopt)
+        before serving;
+      * quarantine-rollback — injected fatal faults on both the planned
+        commit and the oracle fail the request, tripping
+        ``quarantine_after=1``: rollback to the last good snapshot,
+        then ``reinstate()``.
+
+    Both are p50 over ``cycles`` repetitions against the steady-state
+    single-session median."""
+    import asyncio
+    import tempfile
+
+    from repro.runtime.faults import ChaosInjector, FaultSpec
+
+    x0, streams = _edit_streams(N, 1, 2 * cycles + WARM_ROUNDS + 1, seed)
+    edits = streams[0]
+    h = pipeline_program(BLOCK).compile(x=N, max_sparse=64)
+    h.run(x=x0)
+    tmp = tempfile.mkdtemp(prefix="serve_mttr_")
+
+    async def _main():
+        async with h.serve(ckpt_dir=tmp, quarantine_after=1) as server:
+            sid = await server.open()
+            k = 0
+            for _ in range(WARM_ROUNDS):
+                await server.submit(sid, **edits[k])
+                k += 1
+            server.reset_metrics()
+            for _ in range(cycles):
+                await server.evict(sid)
+                await server.submit(sid, **edits[k])   # auto-revive
+                k += 1
+            revive_ms = server.registry.histogram(
+                "serve.recovery_ms").percentile(50)
+            server.reset_metrics()
+            for c in range(cycles):
+                with ChaosInjector(
+                        [FaultSpec("forest.commit", at=(1,), kind="fatal"),
+                         FaultSpec("forest.oracle", at=(1,), kind="fatal")],
+                        seed=c):
+                    try:
+                        await server.submit(sid, **edits[k])
+                    except Exception:
+                        pass
+                    k += 1
+                await server.reinstate(sid)
+            quar_ms = server.registry.histogram(
+                "serve.recovery_ms").percentile(50)
+            await server.submit(sid, **edits[k])       # post-chaos health
+            await server.shutdown()
+            return revive_ms, quar_ms
+
+    revive_ms, quar_ms = asyncio.run(_main())
+    h.close()
+    row = {
+        "app": "serve-mttr", "n": N, "block": BLOCK, "k_blocks": 1,
+        # update_ms carries the gated number: evict-crash-revive MTTR p50.
+        "update_ms": round(revive_ms, 3),
+        "revive_p50_ms": round(revive_ms, 3),
+        "quarantine_p50_ms": round(quar_ms, 3),
+        "scratch_ms": round(single_med_ms, 3),
+        "speedup": round(single_med_ms / max(revive_ms, 1e-9), 3),
+        "cycles": cycles,
+        **_provenance(cycles, paired=False, estimator="median"),
+    }
+    return revive_ms, quar_ms, row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--no-gate", action="store_true",
@@ -220,7 +306,8 @@ def main() -> None:
     single_med, row_single = bench_single()
     row_multi = bench_multi(single_med)
     fork_ms, copy_ms, row_fork = bench_fork()
-    rows = [row_single, row_multi, row_fork]
+    revive_ms, quar_ms, row_mttr = bench_mttr(single_med)
+    rows = [row_single, row_multi, row_fork, row_mttr]
     for r in rows:
         print("  " + ", ".join(f"{k}={v}" for k, v in r.items()))
     print(f"  -> {write_json(rows)}")
@@ -238,6 +325,16 @@ def main() -> None:
     print(f"  {'ok' if ok else 'FAIL'} fork gate: fork {fork_ms:.4f}ms vs "
           f"full copy {copy_ms:.3f}ms "
           f"({fork_ms / copy_ms:.1%}, need <= {GATE_FORK_FRAC:.0%})")
+    bad += 0 if ok else 1
+    ok = revive_ms <= GATE_MTTR_REVIVE_X * single_med
+    print(f"  {'ok' if ok else 'FAIL'} mttr gate: evict-crash-revive p50 "
+          f"{revive_ms:.3f}ms vs steady median {single_med:.3f}ms "
+          f"(need <= {GATE_MTTR_REVIVE_X:.0f}x)")
+    bad += 0 if ok else 1
+    ok = quar_ms <= GATE_MTTR_QUAR_X * single_med
+    print(f"  {'ok' if ok else 'FAIL'} mttr gate: quarantine-rollback p50 "
+          f"{quar_ms:.3f}ms vs steady median {single_med:.3f}ms "
+          f"(need <= {GATE_MTTR_QUAR_X:.0f}x)")
     bad += 0 if ok else 1
     sys.exit(1 if bad else 0)
 

@@ -14,6 +14,20 @@ either a complete committed checkpoint or an ignorable partial one —
 restart always finds the newest committed step (checkpoint/restart fault
 tolerance; exercised by tests/test_runtime.py::test_supervisor_restart).
 
+Integrity (crash-consistent *reads*): the manifest records a CRC32 per
+leaf.  ``restore`` verifies every leaf as it loads and raises
+:class:`CorruptCheckpoint` on a mismatch, a truncated manifest, or an
+unreadable leaf file; when no explicit ``step`` was requested it then
+falls back to the previous committed step, so bit rot or a torn write
+costs the edits since the prior checkpoint, never a wrong restore.
+``latest_step(..., verify=True)`` applies the same check up front and
+only returns verified steps.  Skipped checkpoints are counted as
+``ckpt.corrupt_skipped`` on the registry passed to ``set_registry``.
+
+Fault-injection sites (``repro.runtime.faults``): ``ckpt.save`` before
+leaf I/O, ``ckpt.commit`` just before the atomic rename (a fault there
+leaves an ignorable partial), ``ckpt.load`` before reads.
+
 On a multi-host pod each process saves only the leaf shards it owns
 (``process_index`` names the files); restore device_puts with the target
 sharding, so a checkpoint written on one mesh can be read onto another
@@ -28,6 +42,7 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -35,10 +50,43 @@ import jax
 import numpy as np
 
 __all__ = ["save", "save_async", "restore", "latest_step", "list_steps",
-           "load_meta", "gc_old"]
+           "load_meta", "gc_old", "CorruptCheckpoint", "set_registry"]
 
 _MANIFEST = "MANIFEST.json"
 _COMMITTED = "COMMITTED"
+
+
+class CorruptCheckpoint(RuntimeError):
+    """A committed checkpoint failed verification at load: truncated or
+    unparsable manifest, missing leaf file, or a leaf whose bytes no
+    longer match the manifest's recorded CRC32."""
+
+
+# Optional metrics routing (one registry per process is the obs-layer
+# convention): corrupt-skip events surface as ``ckpt.corrupt_skipped``.
+_REGISTRY = None
+
+
+def set_registry(registry) -> None:
+    """Route checkpoint-integrity events through a
+    ``repro.obs.MetricRegistry`` (or ``None`` to detach)."""
+    global _REGISTRY
+    _REGISTRY = registry
+
+
+def _note_corrupt(directory: Path, step: int, why: str) -> None:
+    if _REGISTRY is not None:
+        _REGISTRY.counter("ckpt.corrupt_skipped").inc()
+        _REGISTRY.event("ckpt.corrupt", dir=str(directory), step=step,
+                        error=why)
+
+
+def _inject(site: str, **ctx) -> None:
+    # Late import: repro.runtime.__init__ imports the supervisor, which
+    # imports this module — a top-level import here would cycle.
+    from repro.runtime.faults import inject
+
+    inject(site, **ctx)
 
 
 def _leaf_paths(tree) -> List[Tuple[str, Any]]:
@@ -69,6 +117,7 @@ def save(directory: str | os.PathLike, state: Any, step: int,
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
 
+    _inject("ckpt.save", step=step)
     leaves = _leaf_paths(state)
     manifest = {
         "step": step,
@@ -83,11 +132,16 @@ def save(directory: str | os.PathLike, state: Any, step: int,
         np.save(tmp / fname, arr)
         manifest["leaves"].append(
             {"key": key, "file": fname, "shape": list(arr.shape),
-             "dtype": str(arr.dtype)})
+             "dtype": str(arr.dtype),
+             "crc32": zlib.crc32(arr.tobytes())})
     with (tmp / _MANIFEST).open("w") as f:
         json.dump(manifest, f, indent=1)
         f.flush()
         os.fsync(f.fileno())
+    # A fault between here and COMMITTED leaves step_N.tmp (or an
+    # unmarked step_N): both invisible to the loader — the atomic-commit
+    # crash window the chaos suite exercises.
+    _inject("ckpt.commit", step=step)
     if final.exists():  # pragma: no cover - overwrite semantics
         shutil.rmtree(final)
     os.replace(tmp, final)
@@ -137,7 +191,30 @@ def wait_for_async_saves() -> None:
     _SAVER.join()
 
 
-def list_steps(directory) -> List[int]:
+def _verify_step(directory: Path, step: int) -> None:
+    """Integrity check of a committed step: manifest parses and every
+    leaf file loads with its recorded CRC32.  Raises
+    :class:`CorruptCheckpoint` (committedness itself is the caller's
+    listing concern)."""
+    d = _step_dir(directory, step)
+    try:
+        manifest = json.loads((d / _MANIFEST).read_text())
+        leaves = manifest["leaves"]
+    except Exception as e:
+        raise CorruptCheckpoint(f"{d}: unreadable manifest ({e!r})") from e
+    for entry in leaves:
+        try:
+            arr = np.load(d / entry["file"])
+        except Exception as e:
+            raise CorruptCheckpoint(
+                f"{d}: unreadable leaf {entry['file']} ({e!r})") from e
+        want = entry.get("crc32")
+        if want is not None and zlib.crc32(arr.tobytes()) != want:
+            raise CorruptCheckpoint(
+                f"{d}: leaf {entry['file']} checksum mismatch")
+
+
+def list_steps(directory, verify: bool = False) -> List[int]:
     directory = Path(directory)
     if not directory.exists():
         return []
@@ -146,11 +223,25 @@ def list_steps(directory) -> List[int]:
         if d.is_dir() and d.name.startswith("step_") and \
                 (d / _COMMITTED).exists():
             steps.append(int(d.name.split("_")[1]))
-    return sorted(steps)
+    steps = sorted(steps)
+    if not verify:
+        return steps
+    ok = []
+    for s in steps:
+        try:
+            _verify_step(directory, s)
+        except CorruptCheckpoint as e:
+            _note_corrupt(directory, s, str(e))
+        else:
+            ok.append(s)
+    return ok
 
 
-def latest_step(directory) -> Optional[int]:
-    steps = list_steps(directory)
+def latest_step(directory, verify: bool = False) -> Optional[int]:
+    """Newest committed step; with ``verify=True``, newest committed
+    step that passes manifest + per-leaf checksum verification (corrupt
+    ones are skipped and counted as ``ckpt.corrupt_skipped``)."""
+    steps = list_steps(directory, verify=verify)
     return steps[-1] if steps else None
 
 
@@ -176,31 +267,70 @@ def restore(directory, abstract_state: Any, step: Optional[int] = None,
     ``shardings`` (same pytree structure, or None) controls device_put —
     pass shardings resolved on the *current* mesh to restore onto a
     different topology than the one that saved (elastic restart).
+
+    Every leaf is checksum-verified as it loads.  With an explicit
+    ``step``, corruption raises :class:`CorruptCheckpoint`; with
+    ``step=None`` corrupt steps are skipped (counted as
+    ``ckpt.corrupt_skipped``) and the previous committed step restores
+    instead — a torn or rotted newest checkpoint costs the updates
+    since the prior one, never a wrong restore.
     """
     directory = Path(directory)
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint under {directory}")
+    if step is not None:
+        if not (_step_dir(directory, step) / _COMMITTED).exists():
+            raise FileNotFoundError(
+                f"checkpoint {_step_dir(directory, step)} not committed")
+        return _restore_step(directory, abstract_state, step, shardings,
+                             process_index)
+    steps = list_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoint under {directory}")
+    last_err: Optional[CorruptCheckpoint] = None
+    for st in reversed(steps):
+        try:
+            return _restore_step(directory, abstract_state, st, shardings,
+                                 process_index)
+        except CorruptCheckpoint as e:
+            _note_corrupt(directory, st, str(e))
+            last_err = e
+    raise CorruptCheckpoint(
+        f"every committed checkpoint under {directory} failed "
+        f"verification") from last_err
+
+
+def _restore_step(directory: Path, abstract_state: Any, step: int,
+                  shardings: Any, process_index: Optional[int]) -> Any:
     d = _step_dir(directory, step)
-    if not (d / _COMMITTED).exists():
-        raise FileNotFoundError(f"checkpoint {d} not committed")
-    manifest = json.loads((d / _MANIFEST).read_text())
+    _inject("ckpt.load", step=step)
+    try:
+        manifest = json.loads((d / _MANIFEST).read_text())
+        entries = manifest["leaves"]
+        num_leaves = manifest["num_leaves"]
+    except Exception as e:
+        raise CorruptCheckpoint(f"{d}: unreadable manifest ({e!r})") from e
     pidx = jax.process_index() if process_index is None else process_index
 
     flat, treedef = jax.tree_util.tree_flatten(abstract_state)
-    if len(flat) != manifest["num_leaves"]:
+    if len(flat) != num_leaves:
         raise ValueError(
-            f"checkpoint has {manifest['num_leaves']} leaves, "
+            f"checkpoint has {num_leaves} leaves, "
             f"state expects {len(flat)}")
     shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
                   if shardings is not None else [None] * len(flat))
     out = []
     for i, (spec, sh) in enumerate(zip(flat, shard_flat)):
-        entry = manifest["leaves"][i]
+        entry = entries[i]
         fname = entry["file"].replace("p0_", f"p{pidx}_") \
             if jax.process_count() > 1 else entry["file"]
-        arr = np.load(d / fname)
+        try:
+            arr = np.load(d / fname)
+        except Exception as e:
+            raise CorruptCheckpoint(
+                f"{d}: unreadable leaf {fname} ({e!r})") from e
+        want_crc = entry.get("crc32")
+        if want_crc is not None and zlib.crc32(arr.tobytes()) != want_crc:
+            raise CorruptCheckpoint(
+                f"{d}: leaf {fname} checksum mismatch")
         want_shape = tuple(getattr(spec, "shape", arr.shape))
         if tuple(arr.shape) != want_shape:
             raise ValueError(

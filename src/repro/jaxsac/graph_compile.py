@@ -120,6 +120,17 @@ def _feat_size(shape: Tuple[int, ...]) -> int:
     return int(math.prod(shape[1:]))
 
 
+def _inject_device_loss() -> None:
+    """Chaos site ``device.loss``: fired before every sharded (mesh)
+    propagate dispatch — the stand-in for a shard/device failure, whose
+    recovery path is checkpoint-restore onto a smaller mesh
+    (``runtime.elastic.remesh_shards`` + ``Supervisor.remesh_fn``).
+    Late import: jaxsac must not depend on repro.runtime at load."""
+    from repro.runtime.faults import inject
+
+    inject("device.loss")
+
+
 def _own_inputs(inputs: Dict[str, Any]) -> Dict[str, Any]:
     """Copy numpy-backed inputs before dispatch.
 
@@ -403,6 +414,8 @@ class CompiledGraph:
                 return self._prop_fn(state, inputs)
             t0 = rec.clock() if rec is not None else 0.0
             fn = self._prop_mesh_fn if self.mesh is not None else self._prop_fn
+            if self.mesh is not None:
+                _inject_device_loss()
             new_state, stats = fn(state, inputs)
             if rec is not None:
                 if rec.mode == "deep":
@@ -460,6 +473,8 @@ class CompiledGraph:
             new_state, stats, level_ms = self._propagate_deep(
                 state, inputs, masks, node_masks, plan, rec)
         else:
+            if self.mesh is not None:
+                _inject_device_loss()
             new_state, stats = entry.fn(state, inputs, masks, node_masks)
             if deep:                     # mesh: fence the one executable
                 syncpoints.fence(new_state, "execute")
@@ -713,6 +728,7 @@ class CompiledGraph:
         if "c" not in state:
             state = {**state, "c": {}}
         if self.mesh is not None:
+            _inject_device_loss()
             return self._prop_mesh_fn(state, inputs)
         if self._prop_copy_fn is None:
             self._prop_copy_fn = jax.jit(self._propagate_impl)

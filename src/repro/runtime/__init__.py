@@ -8,10 +8,18 @@
     mesh (scale down after failures / scale up after repair).
   * ``compression`` — gradient compression hooks for the cross-pod
     all-reduce (top-k with error feedback, int8 quantization).
+  * ``faults``      — deterministic chaos injection: a seeded,
+    schedule-driven ``ChaosInjector`` firing at named sites threaded
+    through the stack (host syncs, forest commits, checkpoint I/O,
+    session evict/revive, simulated device loss).
 """
 from .supervisor import Supervisor, FaultInjector, StepTimer
-from .elastic import reshard_state, remesh_plan
+from .elastic import reshard_state, remesh_plan, remesh_shards
 from .compression import make_compressor
+from .faults import (ChaosInjector, DeviceLost, FatalInjectedFault,
+                     FaultSpec, InjectedFault, is_transient)
 
 __all__ = ["Supervisor", "FaultInjector", "StepTimer", "reshard_state",
-           "remesh_plan", "make_compressor"]
+           "remesh_plan", "remesh_shards", "make_compressor",
+           "ChaosInjector", "FaultSpec", "InjectedFault",
+           "FatalInjectedFault", "DeviceLost", "is_transient"]

@@ -26,7 +26,19 @@ from jax.sharding import Mesh, NamedSharding
 
 from ..shardlib import ShardCtx, rules_for_mode
 
-__all__ = ["remesh_plan", "reshard_state"]
+__all__ = ["remesh_plan", "remesh_shards", "reshard_state"]
+
+
+def remesh_shards(surviving_devices: int, num_blocks: int) -> int:
+    """New shard count for a block-sharded propagation handle after
+    device loss: the largest count ≤ ``surviving_devices`` that divides
+    ``num_blocks`` (the mesh axis must divide the block grid), down to
+    1 (single-device fallback always works)."""
+    assert surviving_devices >= 1, surviving_devices
+    s = max(1, min(int(surviving_devices), int(num_blocks)))
+    while s > 1 and num_blocks % s != 0:
+        s -= 1
+    return s
 
 
 def remesh_plan(surviving_chips: int, model_parallel: int,

@@ -1,0 +1,223 @@
+"""Deterministic chaos injection: seeded, schedule-driven fault sites.
+
+The paper's determinism contract — change propagation reproduces the
+from-scratch run exactly — makes recovery *verifiable*: after any
+crash, retry, or rollback the served state must be bitwise identical
+to a fault-free replay.  Verifying that needs faults that are
+themselves reproducible, so this module injects them from a **seeded
+schedule** rather than ad-hoc monkeypatching: the same
+``(schedule, seed)`` fires the same faults at the same site visits on
+every run, and a chaos test that fails replays exactly.
+
+Named injection sites are threaded through the stack (each is one
+``inject(site)`` call, a no-op global load when no injector is
+installed):
+
+=================  ========================================================
+``sync.<tag>``     every host sync (``obs.syncpoints.HOOK`` — the injector
+                   chains onto the existing hook while installed)
+``forest.commit``  COW commit dispatch, *before* the split executable runs
+                   (a fault here is side-effect-free by the forest's
+                   staged-refcount contract, hence retryable)
+``forest.oracle``  the ``plan=False`` copy-oracle fallback dispatch
+``ckpt.save``      checkpoint write entry (before leaf I/O)
+``ckpt.commit``    just before the atomic rename — a fault here leaves a
+                   partial ``step_N.tmp`` the loader must ignore
+``ckpt.load``      checkpoint read entry
+``session.evict``  session checkpoint-out (before ``save_session``)
+``session.revive`` session restore (before ``restore_session``)
+``device.loss``    sharded (``mesh=``) propagate dispatch — the simulated
+                   shard/device failure (raises :class:`DeviceLost`)
+=================  ========================================================
+
+Schedules are lists of :class:`FaultSpec`: fire at the n-th visit of a
+site (``at=``), with per-visit probability (``p=``), bounded by
+``times=``.  Probability draws are keyed on ``(seed, spec, site,
+visit)`` — not on a shared stream — so the decision for a given site
+visit is independent of how other sites interleave: concurrency or
+scheduling changes elsewhere cannot shift which faults fire.
+
+Usage::
+
+    schedule = [FaultSpec("forest.commit", p=0.25),
+                FaultSpec("ckpt.commit", at=(2,))]
+    inj = ChaosInjector(schedule, seed=7)
+    with inj:            # installs the global injector + sync hook
+        ...serve under chaos...
+    inj.fired            # the reproducible fault log
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import zlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["InjectedFault", "FatalInjectedFault", "DeviceLost",
+           "FaultSpec", "ChaosInjector", "inject", "install", "uninstall",
+           "is_transient"]
+
+
+class InjectedFault(RuntimeError):
+    """A scheduled fault.  ``transient=True``: the operation is safe to
+    retry (the site guarantees failure before side effects)."""
+
+    transient = True
+    device_loss = False
+
+    def __init__(self, site: str, visit: int):
+        super().__init__(f"injected fault at {site} (visit {visit})")
+        self.site = site
+        self.visit = visit
+
+
+class FatalInjectedFault(InjectedFault):
+    """A scheduled non-retryable fault (poison request / corrupt-state
+    class of failure): retry must NOT be attempted."""
+
+    transient = False
+
+
+class DeviceLost(InjectedFault):
+    """Simulated device/shard loss: not retryable in place — recovery
+    is restore-from-checkpoint onto a surviving mesh
+    (``runtime.elastic.remesh_shards`` + ``Supervisor.remesh_fn``)."""
+
+    transient = False
+    device_loss = True
+
+
+_KINDS = {"transient": InjectedFault, "fatal": FatalInjectedFault,
+          "device_loss": DeviceLost}
+
+
+def is_transient(exc: BaseException) -> bool:
+    """Retry policy predicate: an exception is retryable iff it marks
+    itself so (``exc.transient``).  Injected transient faults qualify;
+    anything else — including real runtime errors of unknown
+    provenance — defaults to non-retryable."""
+    return bool(getattr(exc, "transient", False))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One line of a chaos schedule.
+
+    ``site`` is an ``fnmatch`` pattern over site names (``"sync.*"``
+    matches every host sync).  The spec fires at the listed 1-based
+    ``at`` visit numbers of each matching site, and/or with per-visit
+    probability ``p``; ``times`` bounds total fires (default: ``len(at)``
+    when only ``at`` is given, unlimited otherwise)."""
+
+    site: str
+    at: Tuple[int, ...] = ()
+    p: float = 0.0
+    times: Optional[int] = None
+    kind: str = "transient"          # transient | fatal | device_loss
+
+    def __post_init__(self):
+        assert self.kind in _KINDS, self.kind
+        assert 0.0 <= self.p <= 1.0, self.p
+        if self.times is None and not self.p:
+            object.__setattr__(self, "times", len(self.at) or None)
+
+
+class ChaosInjector:
+    """Fires a seeded :class:`FaultSpec` schedule at named sites.
+
+    Use as a context manager: ``__enter__`` installs it as the global
+    injector (``inject(site)`` routes here) and chains onto
+    ``obs.syncpoints.HOOK`` so every host sync becomes a ``sync.<tag>``
+    site; ``__exit__`` restores both.  ``fired`` is the fault log:
+    ``(site, visit, kind)`` in fire order — identical across runs with
+    the same schedule, seed and per-site visit sequences."""
+
+    def __init__(self, schedule: Sequence[FaultSpec], seed: int = 0):
+        self.schedule = list(schedule)
+        self.seed = int(seed)
+        self.visits: Dict[str, int] = {}
+        self.fired: List[Tuple[str, int, str]] = []
+        self._remaining = [s.times for s in self.schedule]
+        self._prev_hook: Any = None
+        self._installed = False
+
+    # -- deterministic per-(spec, site, visit) probability draw --------
+    def _draw(self, spec_idx: int, site: str, visit: int) -> float:
+        key = (self.seed, spec_idx, zlib.crc32(site.encode()), visit)
+        return float(np.random.default_rng(key).random())
+
+    def fire(self, site: str, **ctx) -> None:
+        """Visit ``site``; raise if the schedule says so."""
+        visit = self.visits.get(site, 0) + 1
+        self.visits[site] = visit
+        for i, spec in enumerate(self.schedule):
+            if self._remaining[i] == 0:
+                continue
+            if not fnmatch.fnmatchcase(site, spec.site):
+                continue
+            hit = visit in spec.at or (
+                spec.p > 0.0 and self._draw(i, site, visit) < spec.p)
+            if not hit:
+                continue
+            if self._remaining[i] is not None:
+                self._remaining[i] -= 1
+            self.fired.append((site, visit, spec.kind))
+            raise _KINDS[spec.kind](site, visit)
+
+    def fired_sites(self) -> set:
+        return {site for site, _v, _k in self.fired}
+
+    # -- installation --------------------------------------------------
+    def __enter__(self) -> "ChaosInjector":
+        install(self)
+        from repro.obs import syncpoints
+
+        self._prev_hook = syncpoints.HOOK
+        prev = self._prev_hook
+
+        def hook(tag: str, kind: str) -> None:
+            if prev is not None:
+                prev(tag, kind)
+            self.fire(f"sync.{tag}")
+
+        syncpoints.HOOK = hook
+        self._installed = True
+        return self
+
+    def __exit__(self, *exc) -> None:
+        from repro.obs import syncpoints
+
+        if self._installed:
+            syncpoints.HOOK = self._prev_hook
+            self._installed = False
+        uninstall(self)
+
+
+# ---------------------------------------------------------------------------
+# The global injection point.  Module-global (not a contextvar): faults
+# must reach code running on worker threads too (the async checkpoint
+# saver), and chaos tests install exactly one injector at a time.
+# ---------------------------------------------------------------------------
+_INJECTOR: Optional[ChaosInjector] = None
+
+
+def install(injector: ChaosInjector) -> None:
+    global _INJECTOR
+    assert _INJECTOR is None or _INJECTOR is injector, \
+        "another ChaosInjector is already installed"
+    _INJECTOR = injector
+
+
+def uninstall(injector: Optional[ChaosInjector] = None) -> None:
+    global _INJECTOR
+    if injector is None or _INJECTOR is injector:
+        _INJECTOR = None
+
+
+def inject(site: str, **ctx) -> None:
+    """The per-site hook: a no-op global load unless a
+    :class:`ChaosInjector` is installed."""
+    if _INJECTOR is not None:
+        _INJECTOR.fire(site, **ctx)

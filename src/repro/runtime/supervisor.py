@@ -86,7 +86,20 @@ class StepTimer:
 
 @dataclasses.dataclass
 class Supervisor:
-    """Run ``total_steps`` of ``step_fn`` with checkpoint/restart."""
+    """Run ``total_steps`` of ``step_fn`` with checkpoint/restart.
+
+    Restart discipline: restarts are budgeted over a **sliding window**
+    (``max_restarts`` within ``restart_window_s``), not over the
+    process lifetime — a long healthy run does not accumulate license
+    to hot-loop later — and consecutive failures back off
+    exponentially (``restart_backoff_s`` doubling up to
+    ``restart_backoff_max_s``) so a persistent fault cannot spin the
+    restore path.  Device loss (an exception flagging
+    ``device_loss=True``, e.g. ``runtime.faults.DeviceLost``) routes
+    through ``remesh_fn`` first, which rebuilds the execution context
+    on the surviving topology (``elastic.remesh_shards`` picks the new
+    shard count) before the checkpoint restore replays onto it.
+    """
 
     step_fn: Callable[[Any, Dict], tuple]     # (state, batch) -> (state, metrics)
     pipeline: Any                             # repro.data.DataPipeline
@@ -96,6 +109,9 @@ class Supervisor:
     keep: int = 3
     fault_injector: Optional[FaultInjector] = None
     max_restarts: int = 10
+    restart_window_s: float = 300.0
+    restart_backoff_s: float = 0.05
+    restart_backoff_max_s: float = 2.0
     on_straggler: Optional[Callable[[int], None]] = None
     registry: Optional[MetricRegistry] = None
     # Pluggable restore: (ckpt_dir, step) -> state.  Defaults to the
@@ -104,11 +120,17 @@ class Supervisor:
     # e.g. a serving session's propagation state — pass their own
     # (repro.serve.forest.restore_session is the serving one).
     restore_fn: Optional[Callable[[str, int], Any]] = None
+    # Device-loss hook: rebuild the execution context (smaller mesh,
+    # re-frozen plans) before restore.  Receives the exception.
+    remesh_fn: Optional[Callable[[BaseException], None]] = None
 
     def __post_init__(self):
         self.timer = StepTimer(registry=self.registry)
         self.restarts = 0
+        self.device_losses = 0
         self.metrics_log: List[Dict] = []
+        self._restart_times: List[float] = []
+        self._failstreak = 0
 
     def _emit(self, event: str, **fields) -> None:
         if self.registry is not None:
@@ -117,7 +139,10 @@ class Supervisor:
 
     # ------------------------------------------------------------------
     def _restore_or_init(self):
-        step = ckpt_lib.latest_step(self.ckpt_dir)
+        # verify=True: a corrupt/partial newest checkpoint is skipped
+        # (and counted) in favor of the previous committed step, so a
+        # crash during save can never wedge the restart path.
+        step = ckpt_lib.latest_step(self.ckpt_dir, verify=True)
         if step is None:
             state = self.init_state()
             return state, 0
@@ -125,6 +150,45 @@ class Supervisor:
             return self.restore_fn(self.ckpt_dir, step), step
         abstract = jax.eval_shape(self.init_state)
         state = ckpt_lib.restore(self.ckpt_dir, abstract, step=step)
+        return state, step
+
+    def _log_metrics(self, step: int, metrics: Dict) -> None:
+        # Replay after a restore re-runs steps already logged: truncate
+        # the tail at the replay point so the log holds one entry per
+        # step (the final, surviving trajectory — which determinism
+        # makes bitwise equal to the discarded one anyway).
+        while self.metrics_log and self.metrics_log[-1]["step"] >= step:
+            self.metrics_log.pop()
+        self.metrics_log.append(
+            {"step": step, **{k: float(v) for k, v in metrics.items()}})
+
+    def _recover(self, exc: BaseException):
+        """One rung of the restart ladder: budget check, backoff,
+        optional remesh, restore."""
+        now = time.monotonic()
+        self.restarts += 1
+        self._failstreak += 1
+        self._restart_times.append(now)
+        cutoff = now - self.restart_window_s
+        self._restart_times = [t for t in self._restart_times if t >= cutoff]
+        if len(self._restart_times) > self.max_restarts:
+            raise exc
+        backoff = min(self.restart_backoff_s * (2 ** (self._failstreak - 1)),
+                      self.restart_backoff_max_s)
+        time.sleep(backoff)
+        ckpt_lib.wait_for_async_saves()
+        if getattr(exc, "device_loss", False):
+            self.device_losses += 1
+            if self.registry is not None:
+                self.registry.counter("device_losses").inc()
+                self.registry.event("device_loss", error=repr(exc))
+            if self.remesh_fn is not None:
+                self.remesh_fn(exc)
+        t0 = time.perf_counter()
+        state, step = self._restore_or_init()
+        self._emit("restart", step=step, restarts=self.restarts,
+                   backoff_s=backoff,
+                   recovery_ms=(time.perf_counter() - t0) * 1e3)
         return state, step
 
     def run(self, total_steps: int) -> Any:
@@ -142,21 +206,20 @@ class Supervisor:
                 dt = time.perf_counter() - t0
                 if self.timer.observe(step, dt) and self.on_straggler:
                     self.on_straggler(step)
-                self.metrics_log.append(
-                    {"step": step,
-                     **{k: float(v) for k, v in metrics.items()}})
+                self._log_metrics(step, metrics)
                 step += 1
-                if step % self.ckpt_every == 0:
-                    ckpt_lib.save_async(self.ckpt_dir, state, step)
-                    ckpt_lib.gc_old(self.ckpt_dir, keep=self.keep)
-                    self._emit("checkpoint", step=step, kind="async")
-            except Exception:
-                self.restarts += 1
-                if self.restarts > self.max_restarts:
-                    raise
-                ckpt_lib.wait_for_async_saves()
-                state, step = self._restore_or_init()
-                self._emit("restart", step=step, restarts=self.restarts)
+            except Exception as e:
+                state, step = self._recover(e)
+                continue
+            self._failstreak = 0
+            # Checkpoint I/O runs outside the step's try scope: a save
+            # failure is an operator problem, not a step failure — the
+            # restart path must not re-run (and double-log) a step that
+            # already succeeded.
+            if step % self.ckpt_every == 0:
+                ckpt_lib.save_async(self.ckpt_dir, state, step)
+                ckpt_lib.gc_old(self.ckpt_dir, keep=self.keep)
+                self._emit("checkpoint", step=step, kind="async")
         ckpt_lib.wait_for_async_saves()
         ckpt_lib.save(self.ckpt_dir, state, total_steps)
         self._emit("checkpoint", step=total_steps, kind="final")

@@ -14,12 +14,16 @@ when it is *a service*, not a library call):
     + same quantized dirty signature → one shared plan-cache entry;
   * ``server``  — the asyncio admission queue: concurrent ``submit()``s
     admitted in waves, batched across sessions, latency-accounted
-    through ``repro.obs``.
+    through ``repro.obs``; hardened with backpressure, deadlines,
+    retry, degradation, and quarantine (``errors`` is the typed
+    failure vocabulary).
 
 Entry point: ``handle.serve()`` on a graph-backend ``sac`` handle, or
 ``SessionServer(handle)`` directly.
 """
 from .batcher import Batch, EditBatcher, EditRequest, compatible
+from .errors import (DeadlineExceeded, ServeError, ServerClosed,
+                     ServerOverloaded, SessionQuarantined, UnknownSession)
 from .forest import ForestState, restore_session, save_session
 from .server import SessionServer
 from .session import Session
@@ -34,4 +38,10 @@ __all__ = [
     "EditRequest",
     "Batch",
     "compatible",
+    "ServeError",
+    "UnknownSession",
+    "ServerOverloaded",
+    "ServerClosed",
+    "DeadlineExceeded",
+    "SessionQuarantined",
 ]

@@ -38,6 +38,8 @@ class EditRequest:
     t_enqueue: float = 0.0
     t_admit: float = 0.0
     plan_ms: float = 0.0               # this request's own mark/plan span
+    deadline: Optional[float] = None   # perf_counter() instant; None = never
+    use_oracle: bool = False           # route to the copy oracle (degraded)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,67 @@
+"""Typed serving errors — the session server's failure vocabulary.
+
+Every error a caller can see from ``SessionServer`` is one of these (or
+a propagated application error from their own edit).  The types carry
+the retry contract: ``retryable=True`` means the request had no effect
+and resubmitting is safe (and, for :class:`ServerOverloaded`, expected
+— it is backpressure, not failure).
+"""
+from __future__ import annotations
+
+__all__ = ["ServeError", "UnknownSession", "ServerOverloaded",
+           "ServerClosed", "DeadlineExceeded", "SessionQuarantined"]
+
+
+class ServeError(RuntimeError):
+    """Base of every server-raised error."""
+
+    retryable = False
+
+
+class UnknownSession(ServeError):
+    """The session id does not exist or was closed."""
+
+    def __init__(self, sid):
+        super().__init__(f"unknown or closed session {sid!r}")
+        self.sid = sid
+
+
+class ServerOverloaded(ServeError):
+    """Backpressure: the admission queue is full.  The request was never
+    enqueued — retry after a backoff."""
+
+    retryable = True
+
+    def __init__(self, queued: int, max_queue: int):
+        super().__init__(
+            f"admission queue full ({queued}/{max_queue}) — retry later")
+        self.queued = queued
+        self.max_queue = max_queue
+
+
+class ServerClosed(ServeError):
+    """submit() before ``start()`` or after ``stop()``."""
+
+
+class DeadlineExceeded(ServeError):
+    """The request's deadline expired before its plan/commit ran; no
+    propagation work was paid and the session state is untouched."""
+
+    def __init__(self, sid, waited_ms: float):
+        super().__init__(
+            f"deadline exceeded for session {sid!r} after "
+            f"{waited_ms:.1f}ms in queue")
+        self.sid = sid
+        self.waited_ms = waited_ms
+
+
+class SessionQuarantined(ServeError):
+    """The session's commits failed repeatedly; it was rolled back to
+    its last good snapshot and quarantined.  Reads still serve the
+    rolled-back state; ``SessionServer.reinstate()`` re-admits edits."""
+
+    def __init__(self, sid):
+        super().__init__(
+            f"session {sid!r} is quarantined (rolled back to its last "
+            f"good snapshot) — reinstate() to resume edits")
+        self.sid = sid

@@ -46,6 +46,7 @@ from repro import ckpt as ckpt_lib
 from repro.jaxsac.graph_compile import CompiledGraph, PendingUpdate
 from repro.jaxsac.plancache import plan_from_json, plan_to_json
 from repro.obs import syncpoints
+from repro.runtime import faults
 
 __all__ = ["ForestState", "save_session", "restore_session"]
 
@@ -185,6 +186,9 @@ class ForestState:
                 copies += 1
             donated[key] = arr
         kept = {k: v for k, v in self._leaves.items() if k not in donated}
+        # Chaos site: a fault here (or inside the dispatch) aborts with
+        # the staged state intact — the retry-safety contract.
+        faults.inject("forest.commit")
         out, stats = entry.fn(donated, kept, pending.inputs,
                               pending.in_masks, pending.node_masks)
         for key, cell in privatized.items():
@@ -220,20 +224,34 @@ class ForestState:
         t_start = rec.clock() if rec is not None else 0.0
         pending = self.plan(new_inputs)
         if pending is None:
-            new_state, stats = cg.propagate_copy(self.state, new_inputs)
-            self._replace_all(new_state)
-            self.updates += 1
-            if rec is not None:
-                if rec.mode == "deep":
-                    syncpoints.fence(new_state, "execute")
-                rec.emit(cg._build_record(
-                    rec, plan=None, counts_np=None, hit=None,
-                    t_start=t_start, t_mark=t_start, t_plan=t_start,
-                    t_end=rec.clock(), stats=stats, level_ms=None,
-                    input_key=frozenset(new_inputs)))
-            return stats
+            return self.propagate_oracle(new_inputs, t_start=t_start)
         t_mark = rec.clock() if rec is not None else 0.0
         return self.commit(pending, t_start=t_start, t_mark=t_mark)
+
+    def propagate_oracle(self, new_inputs: Dict[str, Any], *,
+                         t_start: float = 0.0) -> Dict[str, Any]:
+        """The ``plan=False`` copy-oracle path: non-donating propagate,
+        every output leaf a fresh buffer.  Also the server's degraded
+        mode — correct whenever the planned COW path misbehaves, at
+        full-copy cost."""
+        assert self.alive, "propagate_oracle() on a released ForestState"
+        cg = self.cg
+        rec = cg._recorder
+        if rec is not None and not t_start:
+            t_start = rec.clock()
+        faults.inject("forest.oracle")
+        new_state, stats = cg.propagate_copy(self.state, new_inputs)
+        self._replace_all(new_state)
+        self.updates += 1
+        if rec is not None:
+            if rec.mode == "deep":
+                syncpoints.fence(new_state, "execute")
+            rec.emit(cg._build_record(
+                rec, plan=None, counts_np=None, hit=None,
+                t_start=t_start, t_mark=t_start, t_plan=t_start,
+                t_end=rec.clock(), stats=stats, level_ms=None,
+                input_key=frozenset(new_inputs)))
+        return stats
 
     # ------------------------------------------------------------------
     def _replace_all(self, new_state: Dict[str, Any]) -> None:
@@ -283,6 +301,13 @@ def restore_session(cg: CompiledGraph, directory: str | os.PathLike,
     the saved plan signatures are re-inserted into the shared plan
     cache, so the session's next same-shaped edit is a signature hit
     even in a fresh process."""
+    if step is None:
+        # Pin a verified step up front so the meta and the arrays come
+        # from the same checkpoint even when the newest one is corrupt.
+        step = ckpt_lib.latest_step(directory, verify=True)
+        if step is None:
+            raise FileNotFoundError(
+                f"no verifiable session checkpoint under {directory}")
     meta = ckpt_lib.load_meta(directory, step=step)
     rep = meta.get("dirty_rep", cg.dirty_rep)
     assert rep == cg.dirty_rep, (

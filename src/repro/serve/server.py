@@ -7,13 +7,28 @@ is a single-process asyncio component:
   * **admission queue** — ``submit()`` enqueues an edit and parks on a
     future; the drain loop admits everything queued at once (one drain
     cycle = one admission wave), so concurrent submitters are batched
-    by arrival, not serialized by lock order;
+    by arrival, not serialized by lock order.  The queue is bounded
+    (``max_queue``): a full queue rejects fast with a retryable
+    :class:`ServerOverloaded` instead of buffering unbounded latency;
+  * **deadlines** — a request carrying a deadline that expires while
+    queued resolves with :class:`DeadlineExceeded` *before* paying its
+    plan or commit, and session state is untouched;
   * **cross-session batching** — every admitted edit runs its (cheap,
     non-mutating) mark pass, then the ``EditBatcher`` groups requests
     whose (trace, quantized dirty signature) match: the batch shares
     one ``("cow", plan)`` plan-cache entry, so the freeze is paid once
     per batch and hot signatures stop freezing entirely — across
     sessions, because the cache belongs to the ``CompiledGraph``;
+  * **the failure ladder** — transient faults (``faults.is_transient``)
+    retry with exponential backoff, safe because the forest stages a
+    commit's refcount changes: a failed commit is side-effect-free.
+    A planned path that keeps failing degrades to the ``plan=False``
+    copy oracle (counted ``serve.degraded``; sticky per session after
+    ``degrade_after`` plan failures).  A session whose requests fail
+    ``quarantine_after`` times in a row is rolled back to its last
+    good snapshot and quarantined — reads still serve, edits fail fast
+    with :class:`SessionQuarantined` until ``reinstate()`` — while
+    every other session's rounds proceed untouched;
   * **eviction** — sessions idle past ``evict_idle_s`` are checkpointed
     to disk (committed ``repro.ckpt`` protocol) and their device
     buffers released; the next edit revives them bitwise, plan
@@ -21,7 +36,11 @@ is a single-process asyncio component:
     checkpoints through its pluggable ``restore_fn``;
   * **latency accounting** — per-request queue-wait / plan / propagate
     spans flow into a ``repro.obs.MetricRegistry`` (histograms for
-    p50/p99, one ``serve.request`` event per request for JSONL sinks).
+    p50/p99, one ``serve.request`` event per request for JSONL sinks),
+    plus the hardening counters: ``serve.retries``, ``serve.rejected``,
+    ``serve.deadline_exceeded``, ``serve.quarantines``,
+    ``serve.degraded``, and ``serve.recovery_ms`` spans for revival
+    and quarantine rollback.
 
 The jax work itself (mark, commit) runs synchronously on the loop
 thread: propagation is the service's unit of work, not something to
@@ -37,9 +56,13 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import ckpt as ckpt_lib
 from repro.obs.metrics import MetricRegistry
+from repro.runtime import faults
 
 from .batcher import EditBatcher, EditRequest
+from .errors import (DeadlineExceeded, ServerClosed, ServerOverloaded,
+                     SessionQuarantined, UnknownSession)
 from .session import Session
 
 __all__ = ["SessionServer"]
@@ -62,7 +85,13 @@ class SessionServer:
                  max_sessions: int = 256,
                  evict_idle_s: Optional[float] = None,
                  ckpt_dir: Optional[str] = None,
-                 registry: Optional[MetricRegistry] = None):
+                 registry: Optional[MetricRegistry] = None,
+                 max_queue: Optional[int] = None,
+                 default_deadline_s: Optional[float] = None,
+                 max_retries: int = 2,
+                 retry_backoff_s: float = 0.005,
+                 degrade_after: int = 2,
+                 quarantine_after: int = 3):
         assert getattr(handle, "backend", None) == "graph", (
             "serve() runs on the graph backend (the COW forest lives in "
             "the compiled runtime's donated state)")
@@ -70,10 +99,17 @@ class SessionServer:
         self.cg = handle.cg
         self.base = handle._forest()     # warm base every session forks
         self.registry = registry if registry is not None else MetricRegistry()
+        ckpt_lib.set_registry(self.registry)
         self.batcher = EditBatcher(max_batch=max_batch)
         self.max_sessions = int(max_sessions)
         self.evict_idle_s = evict_idle_s
         self.ckpt_dir = ckpt_dir
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.default_deadline_s = default_deadline_s
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.degrade_after = int(degrade_after)
+        self.quarantine_after = int(quarantine_after)
         self.sessions: Dict[str, Session] = {}
         self._queue: List[Tuple[EditRequest, asyncio.Future]] = []
         self._wake: Optional[asyncio.Event] = None
@@ -99,8 +135,10 @@ class SessionServer:
             self._drain_loop())
 
     async def stop(self) -> None:
-        """Drain outstanding requests, then stop; sessions stay usable
-        for reads (``outputs``) until ``shutdown``."""
+        """Drain outstanding requests, then stop: every future parked at
+        stop() time resolves (served or failed, never abandoned).
+        Sessions stay usable for reads (``outputs``) until
+        ``shutdown``."""
         if self._task is None:
             return
         self._running = False
@@ -118,6 +156,12 @@ class SessionServer:
     # ------------------------------------------------------------------
     # Session management
     # ------------------------------------------------------------------
+    def _session(self, sid: str) -> Session:
+        s = self.sessions.get(sid)
+        if s is None or s.status == "closed":
+            raise UnknownSession(sid)
+        return s
+
     async def open(self, sid: Optional[str] = None) -> str:
         """Admit a new session: a COW fork of the warm base (host
         metadata only — no device copies until its first edit)."""
@@ -129,7 +173,9 @@ class SessionServer:
         if sid is None:
             sid = f"s{self._next_sid}"
             self._next_sid += 1
-        assert sid not in self.sessions, f"duplicate session id {sid!r}"
+        assert (sid not in self.sessions
+                or self.sessions[sid].status == "closed"), \
+            f"duplicate session id {sid!r}"
         ck = (f"{self.ckpt_dir}/{sid}" if self.ckpt_dir is not None
               else None)
         self.sessions[sid] = Session(
@@ -139,11 +185,27 @@ class SessionServer:
         return sid
 
     async def close_session(self, sid: str) -> None:
-        self.sessions.pop(sid).close()
+        """Close a session.  Idempotent: closing an already-closed (or
+        unknown) sid is a no-op."""
+        s = self.sessions.get(sid)
+        if s is None:
+            return
+        s.close()
 
     async def evict(self, sid: str) -> str:
-        """Checkpoint a live session to disk and release its buffers."""
-        return self.sessions[sid].evict()
+        """Checkpoint a live session to disk and release its buffers.
+        Idempotent for an already-evicted session."""
+        s = self._session(sid)
+        if s.status == "evicted":
+            return s.ckpt_dir
+        return s.evict()
+
+    async def reinstate(self, sid: str) -> None:
+        """Re-admit edits on a quarantined session (it keeps serving the
+        rolled-back last-good state until its next accepted edit)."""
+        s = self._session(sid)
+        if s.status == "quarantined":
+            s.reinstate()
 
     def evict_idle(self) -> List[str]:
         """Evict every live session idle past ``evict_idle_s`` (called
@@ -152,12 +214,14 @@ class SessionServer:
             return []
         victims = [s for s in self.sessions.values()
                    if s.status == "live" and s.idle_s > self.evict_idle_s]
+        evicted = []
         for s in victims:
-            s.evict()
+            s.evict()        # raises before releasing: a failed evict
+            evicted.append(s.id)        # leaves the session live
             self.registry.counter("serve.evictions").inc()
             self.registry.event("serve.evict", session=s.id,
                                 updates=s.updates)
-        return [s.id for s in victims]
+        return evicted
 
     def reset_metrics(self,
                       registry: Optional[MetricRegistry] = None) -> None:
@@ -169,30 +233,50 @@ class SessionServer:
         cache belongs to the compiled graph, not to the window."""
         self.registry = (registry if registry is not None
                          else MetricRegistry())
+        ckpt_lib.set_registry(self.registry)
         self.batcher = EditBatcher(max_batch=self.batcher.max_batch)
 
     def outputs(self, sid: str):
-        """A session's current outputs (revives it if evicted).  Copied,
+        """A session's current outputs (revives it if evicted;
+        quarantined sessions serve their rolled-back state).  Copied,
         like ``submit`` responses: the session's next commit donates the
         touched output leaves in place, which would delete a live view
         under the caller."""
-        s = self.sessions[sid]
+        s = self._session(sid)
         if s.status == "evicted":
-            s.revive()
-            self.registry.counter("serve.revivals").inc()
+            self._revive(s)
         return jax.tree.map(jnp.copy, s.outputs())
 
     # ------------------------------------------------------------------
     # The service path
     # ------------------------------------------------------------------
     async def submit(self, sid: str, inputs: Optional[Dict[str, Any]] = None,
+                     *, deadline_s: Optional[float] = None,
                      **changed) -> Dict[str, Any]:
         """Submit one edit to a session; resolves when propagated with
-        ``{"outputs", "stats", "latency", "batch_size"}``."""
-        assert self._task is not None, "submit() before start()"
-        s = self.sessions[sid]
-        req = EditRequest(session=s, inputs={**(inputs or {}), **changed},
-                          t_enqueue=time.perf_counter())
+        ``{"outputs", "stats", "latency", "batch_size"}``.
+
+        Fails fast — before enqueueing anything — with
+        :class:`ServerClosed` (not running), :class:`UnknownSession`,
+        :class:`SessionQuarantined`, or :class:`ServerOverloaded`
+        (queue full; retryable).  ``deadline_s`` (or the server's
+        ``default_deadline_s``) bounds total latency: an expired request
+        resolves with :class:`DeadlineExceeded` without paying its
+        plan/commit."""
+        if self._task is None or not self._running:
+            raise ServerClosed("submit() on a stopped server")
+        s = self._session(sid)
+        if s.status == "quarantined":
+            raise SessionQuarantined(sid)
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self.registry.counter("serve.rejected").inc()
+            raise ServerOverloaded(len(self._queue), self.max_queue)
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        now = time.perf_counter()
+        req = EditRequest(
+            session=s, inputs={**(inputs or {}), **changed}, t_enqueue=now,
+            deadline=(now + deadline_s) if deadline_s is not None else None)
         fut = asyncio.get_running_loop().create_future()
         self._queue.append((req, fut))
         self._wake.set()
@@ -262,16 +346,39 @@ class SessionServer:
                 req, fut = per_session[key].pop(0)
                 futures[id(req)] = fut
                 s = req.session
+                if self._expired(req, fut):
+                    continue
+                if s.status == "quarantined":
+                    # Quarantined between submit and this round (an
+                    # earlier request of the same wave tripped it).
+                    fut.set_exception(SessionQuarantined(s.id))
+                    continue
                 try:
                     if s.status == "evicted":
-                        s.revive()
-                        reg.counter("serve.revivals").inc()
+                        self._revive(s)
+                except Exception as e:
+                    # Revival failed: the checkpoint is intact and the
+                    # session stays evicted — not a health strike.
+                    fut.set_exception(e)
+                    continue
+                if s.degraded:
+                    req.use_oracle = True   # sticky: skip planning
+                    ready.append(req)
+                    continue
+                try:
                     t0 = time.perf_counter()
-                    req.pending = s.plan(req.inputs)  # mark pass, no writes
+                    req.pending = self._plan(s, req.inputs)
                     req.plan_ms = (time.perf_counter() - t0) * 1e3
                     ready.append(req)
+                except AssertionError as e:
+                    fut.set_exception(e)    # client error (bad inputs)
                 except Exception as e:
-                    fut.set_exception(e)
+                    # Plan-path failure: degrade this request to the
+                    # copy oracle instead of failing it.
+                    self._note_plan_failure(s, e)
+                    req.pending = None
+                    req.use_oracle = True
+                    ready.append(req)
             for batch in self.batcher.group(ready):
                 if len(batch) > 1:
                     reg.counter("serve.batch_joins").inc(len(batch) - 1)
@@ -280,19 +387,137 @@ class SessionServer:
                                         for r in batch.requests])
                 for req in batch.requests:
                     fut = futures[id(req)]
+                    if self._expired(req, fut):
+                        continue
                     try:
                         fut.set_result(self._execute(req, len(batch)))
                     except Exception as e:
                         fut.set_exception(e)
+                        self._note_request_failure(req.session, e)
+
+    # ------------------------------------------------------------------
+    # The failure ladder
+    # ------------------------------------------------------------------
+    def _backoff(self, attempt: int) -> None:
+        # Exponential, synchronous: the loop thread owns all device
+        # mutation, so there is nothing useful to overlap the wait with.
+        time.sleep(self.retry_backoff_s * (2 ** attempt))
+
+    def _plan(self, s: Session, inputs: Dict[str, Any]):
+        attempt = 0
+        while True:
+            try:
+                return s.plan(inputs)     # mark pass, no writes
+            except Exception as e:
+                if faults.is_transient(e) and attempt < self.max_retries:
+                    self.registry.counter("serve.retries").inc()
+                    self._backoff(attempt)
+                    attempt += 1
+                    continue
+                raise
+
+    def _revive(self, s: Session) -> None:
+        attempt = 0
+        t0 = time.perf_counter()
+        while True:
+            try:
+                s.revive()
+                break
+            except Exception as e:
+                if faults.is_transient(e) and attempt < self.max_retries:
+                    self.registry.counter("serve.retries").inc()
+                    self._backoff(attempt)
+                    attempt += 1
+                    continue
+                raise
+        ms = (time.perf_counter() - t0) * 1e3
+        self.registry.counter("serve.revivals").inc()
+        self.registry.histogram("serve.recovery_ms").observe(ms)
+
+    def _run_edit(self, req: EditRequest) -> Tuple[Dict[str, Any], bool]:
+        """Apply one edit through the ladder.  Returns ``(stats,
+        degraded)`` — ``degraded=True`` when the copy oracle served it."""
+        s = req.session
+        if req.use_oracle or s.degraded:
+            return self._oracle(s, req.inputs), True
+        attempt = 0
+        while True:
+            try:
+                if req.pending is None:
+                    return s.propagate(req.inputs), False
+                return s.commit(req.pending), False
+            except Exception as e:
+                if faults.is_transient(e) and attempt < self.max_retries:
+                    # Safe: a failed commit is side-effect-free (the
+                    # forest stages refcounts), so the same pending
+                    # update can re-dispatch as-is.
+                    self.registry.counter("serve.retries").inc()
+                    self._backoff(attempt)
+                    attempt += 1
+                    continue
+                if (req.pending is not None
+                        and not isinstance(e, AssertionError)
+                        and not getattr(e, "device_loss", False)):
+                    # Planned path exhausted its retries: degrade this
+                    # request to the oracle rather than failing it.
+                    self._note_plan_failure(s, e)
+                    return self._oracle(s, req.inputs), True
+                raise
+
+    def _oracle(self, s: Session, inputs: Dict[str, Any]) -> Dict[str, Any]:
+        attempt = 0
+        while True:
+            try:
+                return s.propagate_oracle(inputs)
+            except Exception as e:
+                if faults.is_transient(e) and attempt < self.max_retries:
+                    self.registry.counter("serve.retries").inc()
+                    self._backoff(attempt)
+                    attempt += 1
+                    continue
+                raise
+
+    def _note_plan_failure(self, s: Session, e: BaseException) -> None:
+        s.plan_failures += 1
+        if not s.degraded and s.plan_failures >= self.degrade_after:
+            s.degraded = True            # sticky: plan no more
+            self.registry.event("serve.degrade", session=s.id,
+                                error=repr(e))
+
+    def _note_request_failure(self, s: Session, e: BaseException) -> None:
+        if isinstance(e, AssertionError):
+            return                       # client error, not session health
+        s.failures += 1
+        self.registry.event("serve.request_error", session=s.id,
+                            error=repr(e))
+        if s.status == "live" and s.failures >= self.quarantine_after:
+            t0 = time.perf_counter()
+            s.quarantine()               # rollback to last good snapshot
+            ms = (time.perf_counter() - t0) * 1e3
+            self.registry.counter("serve.quarantines").inc()
+            self.registry.histogram("serve.recovery_ms").observe(ms)
+            self.registry.event("serve.quarantine", session=s.id,
+                                updates=s.updates, rollback_ms=ms)
+
+    def _expired(self, req: EditRequest, fut: asyncio.Future) -> bool:
+        """Resolve an expired request with DeadlineExceeded — *before*
+        its plan or commit runs, so no propagation work is paid and the
+        session is untouched."""
+        if req.deadline is None or time.perf_counter() <= req.deadline:
+            return False
+        waited = (time.perf_counter() - req.t_enqueue) * 1e3
+        if not fut.done():
+            fut.set_exception(DeadlineExceeded(req.session.id, waited))
+        self.registry.counter("serve.deadline_exceeded").inc()
+        return True
 
     def _execute(self, req: EditRequest, batch_size: int) -> Dict[str, Any]:
         reg = self.registry
         s = req.session
         t_exec = time.perf_counter()
-        if req.pending is None:          # no planned path: copy fallback
-            stats = s.propagate(req.inputs)
-        else:
-            stats = s.commit(req.pending)
+        stats, degraded = self._run_edit(req)
+        if degraded:
+            reg.counter("serve.degraded").inc()
         t_done = time.perf_counter()
         # Service spans bound the request's *own* work (its mark pass,
         # its commit); everything else — admission wait plus the wave's
@@ -310,7 +535,7 @@ class SessionServer:
         for k, v in lat.items():
             reg.histogram(f"serve.{k}").observe(v)
         reg.event("serve.request", session=s.id, batch_size=batch_size,
-                  **lat)
+                  degraded=degraded, **lat)
         # Responses own their buffers: a session's next commit donates
         # the output leaf in place, so a live view handed to the caller
         # would be deleted under them.  Output nodes are small (the

@@ -5,23 +5,39 @@ base.  Its propagation work is exactly the forest's (plan → commit,
 COW on first write); what this layer adds is the *lifecycle* the server
 manages:
 
-  * ``live``     — forest node resident on device, edits stream in;
-  * ``evicted``  — state checkpointed to disk (``forest.save_session``)
+  * ``live``        — forest node resident on device, edits stream in;
+  * ``evicted``     — state checkpointed to disk (``forest.save_session``)
     and the device buffers released; a later edit revives it
     (``forest.restore_session``) bitwise, with its warmed plan
     signatures re-inserted into the shared plan cache so the first
-    post-revival edit of a familiar shape is still a signature hit.
+    post-revival edit of a familiar shape is still a signature hit;
+  * ``quarantined`` — the session's commits failed repeatedly, so it was
+    rolled back to its last *good* snapshot (a COW fork refreshed after
+    every accepted edit — O(leaves) host metadata, no device copies
+    until a commit actually touches a shared leaf).  Reads still serve
+    the rolled-back state; ``reinstate()`` re-admits edits.
+
+The good snapshot is what makes quarantine *verifiable*: a failed
+commit is side-effect-free (the forest stages refcount changes), so the
+snapshot taken after the last accepted edit is bitwise the state a
+fault-free replay of the accepted edits would produce — rollback never
+serves a half-applied update.
 
 Eviction uses the same committed-checkpoint protocol as training
 (``repro.ckpt``), which is what makes sessions durable: a server crash
 loses at most the edits since each session's last eviction/checkpoint,
 and ``runtime.Supervisor`` can restore one via its pluggable
-``restore_fn``.
+``restore_fn``.  ``save_session`` runs *before* any buffer is released,
+so an injected ``session.evict`` fault leaves the session live and
+untouched; ``session.revive`` faults surface to the caller with the
+checkpoint intact.
 """
 from __future__ import annotations
 
 import time
 from typing import Any, Dict, List, Optional
+
+from repro.runtime import faults
 
 from .forest import ForestState, restore_session, save_session
 
@@ -42,8 +58,15 @@ class Session:
         self.status = "live"
         self.updates = 0
         self.revivals = 0
+        self.quarantines = 0
+        self.failures = 0        # consecutive failed requests (ladder input)
+        self.plan_failures = 0   # consecutive planned-path failures
+        self.degraded = False    # sticky: plan no more, commit via oracle
         self.last_active = time.monotonic()
         self.last_stats: Dict[str, Any] = {}
+        # The rollback anchor: a fork of the state after the last
+        # accepted edit (initially the fresh fork off the base).
+        self.good: Optional[ForestState] = fstate.fork()
 
     # ------------------------------------------------------------------
     def touch(self) -> None:
@@ -63,24 +86,66 @@ class Session:
     def commit(self, pending) -> Dict[str, Any]:
         assert self.status == "live", self.status
         stats = self.fstate.commit(pending)
-        self.updates += 1
-        self.last_stats = stats
-        self.touch()
+        self._accepted(stats, planned=True)
         return stats
 
     def propagate(self, inputs: Dict[str, Any]) -> Dict[str, Any]:
         """Unbatched path (also the ``pending=None`` fallback)."""
         assert self.status == "live", self.status
         stats = self.fstate.propagate(inputs)
-        self.updates += 1
-        self.last_stats = stats
-        self.touch()
+        self._accepted(stats, planned=True)
         return stats
 
-    def outputs(self):
+    def propagate_oracle(self, inputs: Dict[str, Any]) -> Dict[str, Any]:
+        """Degraded path: the non-donating ``plan=False`` copy oracle —
+        correct whenever the planned COW path misbehaves."""
         assert self.status == "live", self.status
+        stats = self.fstate.propagate_oracle(inputs)
+        self._accepted(stats, planned=False)
+        return stats
+
+    def _accepted(self, stats: Dict[str, Any], *, planned: bool) -> None:
+        """An edit landed: refresh the rollback anchor and reset the
+        consecutive-failure ladder (a planned-path success also clears
+        the plan-failure streak; an oracle success says nothing about
+        the planned path)."""
+        self.updates += 1
+        self.last_stats = stats
+        self.failures = 0
+        if planned:
+            self.plan_failures = 0
+        old, self.good = self.good, self.fstate.fork()
+        if old is not None:
+            old.release()
+        self.touch()
+
+    def outputs(self):
+        # Quarantined sessions still serve reads — the rolled-back
+        # last-good state, not an error and not a half-applied update.
+        assert self.status in ("live", "quarantined"), self.status
         vals = tuple(self.cg.value(self.fstate, h) for h in self.out_handles)
         return vals[0] if self._single else vals
+
+    # ------------------------------------------------------------------
+    # Quarantine (rollback to the last good snapshot)
+    # ------------------------------------------------------------------
+    def quarantine(self) -> None:
+        """Roll back to the last accepted state and stop taking edits.
+        The good snapshot itself is kept, so a still-failing session can
+        be rolled back again after ``reinstate()``."""
+        assert self.status == "live", self.status
+        assert self.good is not None
+        self.fstate.release()
+        self.fstate = self.good.fork()
+        self.status = "quarantined"
+        self.quarantines += 1
+        self.failures = 0
+
+    def reinstate(self) -> None:
+        """Re-admit edits on a quarantined session."""
+        assert self.status == "quarantined", self.status
+        self.status = "live"
+        self.touch()
 
     # ------------------------------------------------------------------
     # Eviction / revival
@@ -90,17 +155,25 @@ class Session:
         assert self.status == "live", self.status
         assert self.ckpt_dir is not None, (
             "session eviction needs a ckpt_dir")
+        faults.inject("session.evict", sid=self.id)
+        # Save first: a failure anywhere above this line leaves the
+        # session live with every buffer intact.
         save_session(self.ckpt_dir, self.fstate, step=self.updates,
                      meta={"session": self.id})
         self.fstate.release()
         self.fstate = None
+        if self.good is not None:
+            self.good.release()
+            self.good = None
         self.status = "evicted"
         return self.ckpt_dir
 
     def revive(self) -> None:
         """Restore an evicted session bitwise from its checkpoint."""
         assert self.status == "evicted", self.status
+        faults.inject("session.revive", sid=self.id)
         self.fstate, _meta = restore_session(self.cg, self.ckpt_dir)
+        self.good = self.fstate.fork()
         self.status = "live"
         self.revivals += 1
         self.touch()
@@ -109,4 +182,7 @@ class Session:
         if self.fstate is not None:
             self.fstate.release()
             self.fstate = None
+        if self.good is not None:
+            self.good.release()
+            self.good = None
         self.status = "closed"

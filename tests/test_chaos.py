@@ -1,0 +1,637 @@
+"""Chaos suite: deterministic fault injection across the serving stack.
+
+The paper's determinism contract — propagation reproduces the
+from-scratch run exactly — makes recovery *verifiable*: after any
+retry, rollback, revival, or remesh, the served state must be bitwise
+identical to a fault-free replay of the accepted edits.  Every test
+here asserts that, under a seeded ``ChaosInjector`` schedule
+(repro.runtime.faults) whose firing pattern replays exactly.
+
+Per-fault-class regressions (each fails or hangs without its fix):
+
+  * transient commit fault      -> bounded retry (side-effect-free
+    commits make the same PendingUpdate re-dispatchable)
+  * persistent planned-path
+    failure                     -> degrade to the copy oracle, sticky
+    per session after ``degrade_after``
+  * repeated request failure    -> quarantine: rollback to the last
+    good snapshot, other sessions untouched, reinstate() resumes
+  * expired deadline            -> resolved before paying plan/commit
+  * full admission queue        -> fail-fast retryable backpressure
+  * evict/revive faults         -> evict leaves the session live;
+    revive retries; checkpoint is never half-released
+  * ckpt commit/load faults     -> partial checkpoints invisible,
+    corrupt ones skipped for the previous verified step
+  * device loss (``shards=N``)  -> supervisor remesh onto fewer
+    devices + checkpoint restore, bitwise
+
+The capstone soak drives N concurrent sessions under a schedule that
+hits every site (sync points, commit dispatch, the oracle, ckpt
+save/commit/load, evict/revive — device loss has its own sharded
+test) and asserts every session's final outputs bitwise against a
+fault-free dedicated-handle replay of its accepted edits, with the
+server still live afterwards.
+"""
+import asyncio
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.sac as sac
+from repro import ckpt
+from repro.obs.metrics import MetricRegistry
+from repro.runtime import (ChaosInjector, DeviceLost, FaultSpec,
+                           InjectedFault, Supervisor, is_transient,
+                           remesh_shards)
+from repro.runtime import faults as faults_mod
+from repro.serve import (DeadlineExceeded, ServerClosed, ServerOverloaded,
+                         SessionQuarantined, UnknownSession)
+
+
+@sac.incremental(block=16)
+def _prog(x):
+    y = x * 2.0 + 1.0
+    s = sac.stencil(lambda w: w[16:32] + 0.5 * (w[:16] + w[32:]),
+                    y, radius=1)
+    return sac.reduce(jnp.add, s, identity=0.0)
+
+
+def _streams(n_sessions, rounds, n=512, seed=0):
+    rng = np.random.default_rng(seed)
+    x0 = np.arange(n, dtype=np.float32)
+    streams = []
+    for i in range(n_sessions):
+        x = x0.copy()
+        edits = []
+        for r in range(rounds):
+            x = x.copy()
+            x[int(rng.integers(0, n))] += float(i + r + 1)
+            edits.append({"x": x.copy()})
+        streams.append(edits)
+    return x0, streams
+
+
+def _replay(x0, edits, n=512):
+    """Fault-free dedicated-handle replay: the bitwise oracle."""
+    ref = _prog.compile(x=n)
+    ref.run(x=x0)
+    out = np.asarray(ref.outputs())
+    for e in edits:
+        out = np.asarray(ref.update(**e))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The injector itself: schedules, determinism, installation
+# ---------------------------------------------------------------------------
+def test_fault_spec_fires_at_visits():
+    inj = ChaosInjector([FaultSpec("a.site", at=(2, 4))], seed=0)
+    log = []
+    for _ in range(6):
+        try:
+            inj.fire("a.site")
+            log.append("ok")
+        except InjectedFault:
+            log.append("boom")
+    assert log == ["ok", "boom", "ok", "boom", "ok", "ok"]
+    assert inj.fired == [("a.site", 2, "transient"), ("a.site", 4, "transient")]
+
+
+def test_fault_spec_patterns_and_kinds():
+    inj = ChaosInjector([FaultSpec("sync.*", at=(1,), kind="device_loss")],
+                        seed=0)
+    inj.fire("forest.commit")            # no match: silent
+    with pytest.raises(DeviceLost) as ei:
+        inj.fire("sync.mark_counts")
+    assert ei.value.device_loss and not is_transient(ei.value)
+    assert is_transient(InjectedFault("s", 1))
+    assert not is_transient(RuntimeError("plain"))
+
+
+def test_probabilistic_schedule_replays_exactly():
+    """Same (schedule, seed) -> same fired log; draws are keyed per
+    (spec, site, visit), so interleaving other sites cannot shift which
+    faults fire."""
+    sched = [FaultSpec("s.a", p=0.3), FaultSpec("s.b", p=0.5, times=2)]
+
+    def drive(inj, interleave):
+        for i in range(40):
+            for site in (["s.a", "s.b", "s.noise"] if interleave
+                         else ["s.a", "s.b"]):
+                try:
+                    inj.fire(site)
+                except InjectedFault:
+                    pass
+        return [(s, v, k) for (s, v, k) in inj.fired if s != "s.noise"]
+
+    a = drive(ChaosInjector(sched, seed=7), interleave=False)
+    b = drive(ChaosInjector(sched, seed=7), interleave=True)
+    c = drive(ChaosInjector(sched, seed=8), interleave=False)
+    assert a == b and len(a) > 0
+    assert a != c                        # the seed matters
+    assert sum(1 for s, _, _ in a if s == "s.b") <= 2   # times= bound
+
+
+def test_inject_is_noop_without_installed_injector():
+    faults_mod.inject("any.site")        # must not raise
+    with ChaosInjector([FaultSpec("x", at=(1,))], seed=0) as inj:
+        with pytest.raises(InjectedFault):
+            faults_mod.inject("x")
+    faults_mod.inject("x")               # uninstalled on exit
+    assert inj.visits["x"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Serving regressions, one per fault class
+# ---------------------------------------------------------------------------
+def _serve_one(h, edits, schedule, seed=0, **opts):
+    """Run one session's edits under a chaos schedule; returns
+    (results-or-exceptions, final outputs, server, injector)."""
+    async def main():
+        res = []
+        async with h.serve(**opts) as server:
+            with ChaosInjector(schedule, seed=seed) as inj:
+                sid = await server.open()
+                for e in edits:
+                    try:
+                        res.append(await server.submit(sid, **e))
+                    except Exception as exc:
+                        res.append(exc)
+            final = np.asarray(server.outputs(sid))
+            summary = server.summary()
+            session = server.sessions[sid]
+            await server.stop()
+        return res, final, summary, session, inj
+
+    return asyncio.run(main())
+
+
+def test_transient_commit_fault_is_retried():
+    """A transient fault at commit dispatch is absorbed by bounded
+    retry — safe because the staged-refcount commit is side-effect-free
+    on failure.  Without the retry the submit raises InjectedFault."""
+    x0, streams = _streams(1, 2)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+    reg = MetricRegistry()
+    res, final, _summary, session, inj = _serve_one(
+        h, streams[0], [FaultSpec("forest.commit", at=(1,))], registry=reg)
+    assert all(isinstance(r, dict) for r in res), res
+    assert inj.fired_sites() == {"forest.commit"}
+    assert reg.counters["serve.retries"].value >= 1
+    assert not session.degraded
+    assert np.array_equal(final, _replay(x0, streams[0]))
+
+
+def test_fatal_commit_faults_degrade_to_oracle():
+    """A non-retryable planned-path failure falls back to the copy
+    oracle (request still served, counted serve.degraded); after
+    ``degrade_after`` consecutive plan failures the session goes sticky
+    degraded and stops paying for planning at all."""
+    x0, streams = _streams(1, 3)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+    reg = MetricRegistry()
+    res, final, _summary, session, _inj = _serve_one(
+        h, streams[0], [FaultSpec("forest.commit", p=1.0, kind="fatal")],
+        registry=reg, degrade_after=2)
+    assert all(isinstance(r, dict) for r in res), res
+    assert session.degraded              # sticky after 2 plan failures
+    assert reg.counters["serve.degraded"].value == 3
+    assert np.array_equal(final, _replay(x0, streams[0]))
+
+
+def test_quarantine_rolls_back_and_reinstates(tmp_path):
+    """When even the oracle fails, the request fails; after
+    ``quarantine_after`` consecutive failures the session rolls back to
+    its last good snapshot and quarantines.  Reads serve the rolled-back
+    state, edits fail fast, other sessions are untouched, and
+    reinstate() resumes — all bitwise against the accepted-edit
+    replay."""
+    x0, streams = _streams(2, 2, seed=3)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+    reg = MetricRegistry()
+    schedule = [FaultSpec("forest.commit", at=(1,), kind="fatal"),
+                FaultSpec("forest.oracle", at=(1,), kind="fatal")]
+
+    async def main():
+        async with h.serve(registry=reg, quarantine_after=1,
+                           degrade_after=99) as server:
+            with ChaosInjector(schedule, seed=0):
+                sa = await server.open()
+                sb = await server.open()
+                # sa's first edit: commit fatal -> oracle fatal -> fails
+                with pytest.raises(InjectedFault):
+                    await server.submit(sa, **streams[0][0])
+                assert server.sessions[sa].status == "quarantined"
+                # fail-fast while quarantined; reads serve rolled-back state
+                with pytest.raises(SessionQuarantined):
+                    await server.submit(sa, **streams[0][1])
+                quarantined_view = np.asarray(server.outputs(sa))
+                # the other tenant is untouched (faults exhausted: times=1)
+                rb = await server.submit(sb, **streams[1][0])
+                await server.reinstate(sa)
+                ra = await server.submit(sa, **streams[0][1])
+            await server.stop()
+            return quarantined_view, np.asarray(ra["outputs"]), \
+                np.asarray(rb["outputs"])
+
+    qview, ra, rb = asyncio.run(main())
+    assert reg.counters["serve.quarantines"].value == 1
+    assert np.array_equal(qview, _replay(x0, []))        # zero accepted edits
+    assert np.array_equal(ra, _replay(x0, [streams[0][1]]))
+    assert np.array_equal(rb, _replay(x0, [streams[1][0]]))
+
+
+def test_deadline_expires_before_paying_work():
+    x0, streams = _streams(1, 1)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+    reg = MetricRegistry()
+
+    async def main():
+        async with h.serve(registry=reg) as server:
+            sid = await server.open()
+            with pytest.raises(DeadlineExceeded):
+                await server.submit(sid, **streams[0][0], deadline_s=0.0)
+            s = server.sessions[sid]
+            assert s.updates == 0        # no plan/commit was paid
+            # a deadline that fits still serves
+            r = await server.submit(sid, **streams[0][0], deadline_s=60.0)
+            await server.stop()
+            return np.asarray(r["outputs"])
+
+    out = asyncio.run(main())
+    assert reg.counters["serve.deadline_exceeded"].value == 1
+    assert np.array_equal(out, _replay(x0, streams[0]))
+
+
+def test_backpressure_rejects_when_queue_full():
+    """With max_queue=1, concurrent submits beyond the first are
+    rejected synchronously (never enqueued) with a retryable error —
+    and a later retry succeeds."""
+    x0, streams = _streams(4, 1)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+    reg = MetricRegistry()
+
+    async def main():
+        async with h.serve(registry=reg, max_queue=1) as server:
+            sids = [await server.open() for _ in range(4)]
+            res = await asyncio.gather(
+                *[server.submit(sids[i], **streams[i][0]) for i in range(4)],
+                return_exceptions=True)
+            served = [r for r in res if isinstance(r, dict)]
+            rejected = [r for r in res if isinstance(r, ServerOverloaded)]
+            assert len(served) == 1 and len(rejected) == 3
+            assert all(r.retryable for r in rejected)
+            retry = await server.submit(sids[1], **streams[1][0])
+            await server.stop()
+            return retry
+
+    retry = asyncio.run(main())
+    assert reg.counters["serve.rejected"].value == 3
+    assert np.array_equal(np.asarray(retry["outputs"]),
+                          _replay(x0, streams[1]))
+
+
+def test_evict_fault_leaves_session_live(tmp_path):
+    """A fault during evict (before or inside save_session) must leave
+    the session live with every buffer intact — never a half-released
+    tenant."""
+    x0, streams = _streams(1, 2)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+
+    async def main():
+        async with h.serve(ckpt_dir=str(tmp_path)) as server:
+            with ChaosInjector([FaultSpec("session.evict", at=(1,))],
+                               seed=0):
+                sid = await server.open()
+                await server.submit(sid, **streams[0][0])
+                with pytest.raises(InjectedFault):
+                    await server.evict(sid)
+                assert server.sessions[sid].status == "live"
+                # the session keeps serving, and a later evict works
+                r2 = await server.submit(sid, **streams[0][1])
+                await server.evict(sid)
+                assert server.sessions[sid].status == "evicted"
+            await server.stop()
+            return np.asarray(r2["outputs"])
+
+    out = asyncio.run(main())
+    assert np.array_equal(out, _replay(x0, streams[0]))
+
+
+def test_revive_fault_is_retried(tmp_path):
+    x0, streams = _streams(1, 2)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+    reg = MetricRegistry()
+
+    async def main():
+        async with h.serve(ckpt_dir=str(tmp_path), registry=reg) as server:
+            sid = await server.open()
+            await server.submit(sid, **streams[0][0])
+            await server.evict(sid)
+            with ChaosInjector([FaultSpec("session.revive", at=(1,))],
+                               seed=0):
+                r2 = await server.submit(sid, **streams[0][1])  # auto-revive
+            assert server.sessions[sid].status == "live"
+            assert server.sessions[sid].revivals == 1
+            await server.stop()
+            return np.asarray(r2["outputs"])
+
+    out = asyncio.run(main())
+    assert reg.counters["serve.retries"].value >= 1
+    assert np.array_equal(out, _replay(x0, streams[0]))
+
+
+def test_sync_site_fault_retried_at_plan(tmp_path):
+    """The injector chains onto obs.syncpoints.HOOK: the planned path's
+    one host sync (mark_counts) becomes a fault site, and a transient
+    fault there retries the plan."""
+    x0, streams = _streams(1, 1)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+    reg = MetricRegistry()
+    res, final, _summary, _session, inj = _serve_one(
+        h, streams[0], [FaultSpec("sync.mark_counts", at=(1,))],
+        registry=reg)
+    assert all(isinstance(r, dict) for r in res), res
+    assert "sync.mark_counts" in inj.fired_sites()
+    assert reg.counters["serve.retries"].value >= 1
+    assert np.array_equal(final, _replay(x0, streams[0]))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint crash consistency
+# ---------------------------------------------------------------------------
+def _save_two(tmp_path):
+    s1 = {"w": jnp.arange(8, dtype=jnp.float32)}
+    s2 = {"w": jnp.arange(8, dtype=jnp.float32) * 3.0}
+    ckpt.save(tmp_path, s1, 1)
+    ckpt.save(tmp_path, s2, 2)
+    return s1, s2
+
+
+def test_ckpt_commit_fault_leaves_invisible_partial(tmp_path):
+    state = {"w": jnp.ones(4)}
+    with ChaosInjector([FaultSpec("ckpt.commit", at=(1,))], seed=0):
+        with pytest.raises(InjectedFault):
+            ckpt.save(tmp_path, state, 1)
+        assert ckpt.latest_step(tmp_path) is None   # partial is invisible
+        ckpt.save(tmp_path, state, 1)               # clean retry commits
+    assert ckpt.latest_step(tmp_path) == 1
+
+
+def test_corrupt_truncated_manifest_falls_back(tmp_path):
+    reg = MetricRegistry()
+    ckpt.set_registry(reg)
+    s1, _s2 = _save_two(tmp_path)
+    man = tmp_path / "step_00000002" / "MANIFEST.json"
+    man.write_text(man.read_text()[: len(man.read_text()) // 2])  # torn write
+    assert ckpt.latest_step(tmp_path) == 2          # committed, but...
+    assert ckpt.latest_step(tmp_path, verify=True) == 1
+    restored = ckpt.restore(
+        tmp_path, {"w": jnp.zeros(8, dtype=jnp.float32)})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(s1["w"]))
+    assert reg.counters["ckpt.corrupt_skipped"].value >= 1
+    ckpt.set_registry(None)
+
+
+def test_corrupt_flipped_leaf_byte_falls_back(tmp_path):
+    s1, _s2 = _save_two(tmp_path)
+    d2 = tmp_path / "step_00000002"
+    leaf = sorted(d2.glob("*.npy"))[0]
+    raw = bytearray(leaf.read_bytes())
+    raw[-1] ^= 0xFF                                  # bit rot in the data
+    leaf.write_bytes(bytes(raw))
+    assert ckpt.latest_step(tmp_path, verify=True) == 1
+    restored = ckpt.restore(
+        tmp_path, {"w": jnp.zeros(8, dtype=jnp.float32)})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(s1["w"]))
+    # an explicit request for the corrupt step is an error, not a guess
+    with pytest.raises(ckpt.CorruptCheckpoint):
+        ckpt.restore(tmp_path, {"w": jnp.zeros(8, dtype=jnp.float32)},
+                     step=2)
+
+
+# ---------------------------------------------------------------------------
+# Supervisor: window budget, device loss -> remesh
+# ---------------------------------------------------------------------------
+class _EditSource:
+    """Deterministic pipeline stub: batch_at(step) is pure in step."""
+
+    def __init__(self, edits):
+        self.edits = edits
+        self.step = 0
+
+    def batch_at(self, step):
+        return self.edits[step]
+
+
+def test_supervisor_restart_budget_is_sliding_window(tmp_path):
+    """Old restarts outside the window don't count against the budget
+    (the lifetime counter hot-looped: a long healthy run accumulated
+    license to spin).  Rapid failures inside the window still trip."""
+    sup = Supervisor(step_fn=lambda s, b: (s, {}),
+                     pipeline=_EditSource([]), ckpt_dir=str(tmp_path),
+                     init_state=lambda: {"w": jnp.zeros(2)},
+                     max_restarts=2, restart_window_s=10.0,
+                     restart_backoff_s=0.0)
+    # Ancient history: many restarts, all far outside the window.
+    sup._restart_times = [time.monotonic() - 1000.0] * 50
+    sup.restarts = 50
+    state, step = sup._recover(RuntimeError("blip"))     # must NOT give up
+    assert step == 0
+    sup._recover(RuntimeError("blip"))
+    with pytest.raises(RuntimeError, match="blip"):      # 3rd in-window
+        sup._recover(RuntimeError("blip"))
+
+
+def test_supervisor_metrics_log_dedupes_replayed_steps(tmp_path):
+    """Replay after restore must not leave duplicate step entries in
+    metrics_log (the pre-fix log double-counted every replayed step)."""
+    target = jnp.asarray(np.random.default_rng(0).standard_normal(8),
+                         dtype=jnp.float32)
+
+    def init_state():
+        return {"w": jnp.zeros(8, dtype=jnp.float32)}
+
+    def step_fn(state, batch):
+        w = state["w"] + 0.1 * (target - state["w"])
+        return {"w": w}, {"loss": jnp.sum((target - w) ** 2)}
+
+    from repro.data import DataPipeline
+    from repro.runtime import FaultInjector
+    sup = Supervisor(step_fn=step_fn,
+                     pipeline=DataPipeline(512, global_batch=4, seq_len=16,
+                                           seed=0),
+                     ckpt_dir=str(tmp_path), init_state=init_state,
+                     ckpt_every=5, fault_injector=FaultInjector([7, 13]),
+                     restart_backoff_s=0.001)
+    sup.run(20)
+    steps = [m["step"] for m in sup.metrics_log]
+    assert steps == list(range(20))      # one entry per step, no dupes
+    assert sup.restarts == 2
+
+
+def test_remesh_shards_picks_largest_divisor():
+    assert remesh_shards(4, 32) == 4
+    assert remesh_shards(3, 32) == 2     # 3 does not divide 32
+    assert remesh_shards(5, 32) == 4
+    assert remesh_shards(1, 32) == 1
+    assert remesh_shards(7, 30) == 6
+    assert remesh_shards(64, 32) == 32   # never more shards than blocks
+
+
+@pytest.mark.slow
+def test_device_loss_remesh_restores_bitwise(tmp_path):
+    """Injected device loss on a ``shards=4`` handle: the supervisor
+    remeshes onto the surviving devices (shards=2 via remesh_shards),
+    restores the sharded propagation state from the last committed
+    checkpoint, re-freezes plans on the new topology, and the final
+    trajectory is bitwise the fault-free one."""
+    n, blocks = 512, 512 // 16
+    x0, streams = _streams(1, 5, n=n, seed=9)
+    edits = streams[0]
+
+    ctx = {}
+
+    def build(shards):
+        h = _prog.compile(x=n, shards=shards)
+        h.run(x=x0)
+        ctx["h"] = h
+        return h
+
+    build(4)
+
+    def init_state():
+        # Fresh propagation state laid out on the current topology.
+        return ctx["h"].cg.init(x=x0)
+
+    def step_fn(state, edit):
+        cg = ctx["h"].cg
+        new_state, _stats = cg.propagate(state, edit)
+        return new_state, {"out": cg.result(new_state).sum()}
+
+    def restore_fn(ckpt_dir, step):
+        cg = ctx["h"].cg
+        st = ckpt.restore(ckpt_dir, cg.abstract_state(), step=step)
+        # Lay the restored (host-resident) leaves out over the new mesh.
+        return cg._sharder.place(st) if cg._sharder is not None else st
+
+    def remesh_fn(exc):
+        assert isinstance(exc, DeviceLost)
+        surviving = 2                    # half the mesh is gone
+        build(remesh_shards(surviving, blocks))
+
+    sup = Supervisor(step_fn=step_fn, pipeline=_EditSource(edits),
+                     ckpt_dir=str(tmp_path), init_state=init_state,
+                     ckpt_every=1, restore_fn=restore_fn,
+                     remesh_fn=remesh_fn, restart_backoff_s=0.001)
+    with ChaosInjector(
+            [FaultSpec("device.loss", at=(3,), kind="device_loss")],
+            seed=0) as inj:
+        final = sup.run(len(edits))
+    assert inj.fired_sites() == {"device.loss"}
+    assert sup.device_losses == 1
+    assert ctx["h"].cg.num_shards == 2   # re-meshed onto the survivors
+
+    want = _replay(x0, edits, n=n)
+    got = np.asarray(ctx["h"].cg.result(final))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# The capstone soak
+# ---------------------------------------------------------------------------
+def test_chaos_soak_every_site_bitwise_survivors(tmp_path):
+    """N concurrent sessions, R rounds, a seeded schedule that hits
+    every injection site reachable on a single-device server.  Outcome:
+    every submit resolves (no wedged futures), every session's final
+    outputs are bitwise a fault-free dedicated-handle replay of its
+    accepted edits, and the drain loop still serves after the chaos
+    window closes."""
+    N, R = 4, 5
+    x0, streams = _streams(N, R, seed=11)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+    reg = MetricRegistry()
+    schedule = [
+        # deterministic one-shots so every site provably fires
+        FaultSpec("sync.mark_counts", at=(4,)),
+        FaultSpec("forest.commit", at=(2,)),
+        FaultSpec("forest.commit", at=(6,), kind="fatal"),  # -> oracle
+        FaultSpec("forest.oracle", at=(1,)),
+        FaultSpec("session.evict", at=(1,)),
+        FaultSpec("ckpt.commit", at=(1,)),
+        FaultSpec("ckpt.save", at=(2,)),
+        FaultSpec("session.revive", at=(1,)),
+        FaultSpec("ckpt.load", at=(1,)),
+        # plus background probabilistic noise the retry ladder absorbs
+        FaultSpec("forest.commit", p=0.08, times=3),
+        FaultSpec("sync.*", p=0.02, times=2),
+    ]
+    accepted = {i: [] for i in range(N)}
+    inj = ChaosInjector(schedule, seed=23)
+
+    async def main():
+        async with h.serve(ckpt_dir=str(tmp_path), registry=reg,
+                           max_retries=3) as server:
+            sids = [await server.open() for _ in range(N)]
+            with inj:
+                for r in range(R):
+                    res = await asyncio.gather(
+                        *[server.submit(sids[i], **streams[i][r])
+                          for i in range(N)],
+                        return_exceptions=True)
+                    for i, x in enumerate(res):
+                        assert not isinstance(x, asyncio.CancelledError)
+                        if isinstance(x, dict):
+                            accepted[i].append(streams[i][r])
+                    if r == 1:
+                        # mid-soak eviction sweep: hits the evict +
+                        # ckpt save/commit sites; failures leave the
+                        # session live by contract
+                        for sid in sids:
+                            try:
+                                await server.evict(sid)
+                            except Exception:
+                                pass
+            # chaos window closed: the server must still be serving
+            heal = await server.submit(sids[0], **streams[0][0])
+            assert isinstance(heal, dict)
+            accepted[0].append(streams[0][0])
+            finals = [np.asarray(server.outputs(sids[i])) for i in range(N)]
+            statuses = [server.sessions[sids[i]].status for i in range(N)]
+            summary = server.summary()
+            await server.stop()
+            return finals, statuses, summary
+
+    finals, statuses, summary = asyncio.run(main())
+
+    # Every single-device site fired under the pinned (schedule, seed).
+    assert {"sync.mark_counts", "forest.commit", "forest.oracle",
+            "session.evict", "session.revive", "ckpt.save", "ckpt.commit",
+            "ckpt.load"} <= inj.fired_sites(), inj.fired_sites()
+    # The fault log is the reproducible artifact: re-running this test
+    # replays it exactly (same schedule, same seed, same visit order).
+    assert len(inj.fired) >= 8
+
+    # Bitwise: every session == fault-free replay of its accepted edits.
+    for i in range(N):
+        want = _replay(x0, accepted[i])
+        np.testing.assert_array_equal(finals[i], want, err_msg=f"session {i}")
+        assert statuses[i] in ("live", "quarantined", "evicted")
+
+    assert summary["requests"] >= 1
+    assert reg.counters["serve.retries"].value >= 1

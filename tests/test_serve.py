@@ -349,3 +349,134 @@ def test_server_bad_input_name_rejected_per_request():
     ref.run(x=x0)
     assert np.array_equal(np.asarray(ref.update(**streams[0][0])),
                           np.asarray(res["outputs"]))
+
+
+# ---------------------------------------------------------------------------
+# Typed session errors
+# ---------------------------------------------------------------------------
+def test_unknown_session_typed_errors():
+    """Unknown or closed sids get a typed UnknownSession on every
+    session-addressed call — not a KeyError from the internals."""
+    from repro.serve import UnknownSession
+
+    x0, streams = _streams(1, 1)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+
+    async def main():
+        async with h.serve() as server:
+            with pytest.raises(UnknownSession, match="nope"):
+                await server.submit("nope", **streams[0][0])
+            with pytest.raises(UnknownSession):
+                server.outputs("nope")
+            with pytest.raises(UnknownSession):
+                await server.evict("nope")
+            sid = await server.open()
+            await server.close_session(sid)
+            # a closed sid is gone for edits/reads...
+            with pytest.raises(UnknownSession):
+                await server.submit(sid, **streams[0][0])
+            # ...but close is idempotent (retried teardown is a no-op)
+            await server.close_session(sid)
+            await server.shutdown()
+
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# Shutdown paths
+# ---------------------------------------------------------------------------
+def test_server_stop_resolves_parked_futures():
+    """stop() with a non-empty queue serves (never abandons) every
+    parked future before returning."""
+    x0, streams = _streams(4, 1)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+
+    async def main():
+        async with h.serve() as server:
+            sids = [await server.open() for _ in range(4)]
+            # Park the submits: suppress the drain wake-up so the queue
+            # fills without being served.
+            real_set = server._wake.set
+            server._wake.set = lambda: None
+            tasks = [asyncio.ensure_future(
+                server.submit(sids[i], **streams[i][0])) for i in range(4)]
+            await asyncio.sleep(0.01)
+            assert len(server._queue) == 4     # parked, unserved
+            server._wake.set = real_set
+            await server.stop()                # must drain, then stop
+            res = await asyncio.gather(*tasks)
+            assert all("outputs" in r for r in res)
+            return [np.asarray(r["outputs"]) for r in res]
+
+    outs = asyncio.run(main())
+    for i, out in enumerate(outs):
+        ref = _prog.compile(x=512)
+        ref.run(x=x0)
+        assert np.array_equal(np.asarray(ref.update(**streams[i][0])), out)
+
+
+def test_server_shutdown_with_inflight_submits():
+    """shutdown() while submits are in flight: every future resolves
+    (served — they were admitted before the stop), then sessions are
+    released."""
+    x0, streams = _streams(1, 2)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+
+    async def main():
+        server = h.serve()
+        async with server:
+            sid = await server.open()
+            t1 = asyncio.ensure_future(server.submit(sid, **streams[0][0]))
+            t2 = asyncio.ensure_future(server.submit(sid, **streams[0][1]))
+            await asyncio.sleep(0)             # enqueue both
+            await server.shutdown()
+            r1, r2 = await asyncio.gather(t1, t2)
+            assert "outputs" in r1 and "outputs" in r2
+            assert server.sessions == {}       # released, not leaked
+        return np.asarray(r2["outputs"])
+
+    out = asyncio.run(main())
+    ref = _prog.compile(x=512)
+    ref.run(x=x0)
+    ref.update(**streams[0][0])
+    assert np.array_equal(np.asarray(ref.update(**streams[0][1])), out)
+
+
+def test_server_double_start_rejected():
+    x0, _ = _streams(1, 1)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+
+    async def main():
+        async with h.serve() as server:
+            with pytest.raises(AssertionError, match="already started"):
+                server.start()
+            await server.shutdown()
+
+    asyncio.run(main())
+
+
+def test_server_submit_after_stop_clean_error():
+    from repro.serve import ServerClosed
+
+    x0, streams = _streams(1, 1)
+    h = _prog.compile(x=512)
+    h.run(x=x0)
+
+    async def main():
+        server = h.serve()
+        async with server:
+            sid = await server.open()
+        # exited: stopped but sessions still readable
+        out = np.asarray(server.outputs(sid))
+        with pytest.raises(ServerClosed):
+            await server.submit(sid, **streams[0][0])
+        return out
+
+    out = asyncio.run(main())
+    ref = _prog.compile(x=512)
+    ref.run(x=x0)
+    assert np.array_equal(np.asarray(ref.outputs()), out)
